@@ -1,0 +1,53 @@
+//! Fig. 3 workload as a runnable example: Lasso path on the Leukemia-shaped
+//! synthetic dataset (n = 72, p = 7129), comparing screening strategies.
+//!
+//! Run: cargo run --release --example lasso_path [-- --small]
+
+use gapsafe::coordinator::{active_fraction_experiment, report, time_to_convergence};
+use gapsafe::data::synth;
+use gapsafe::screening::Rule;
+use gapsafe::solver::path::{lambda_grid, WarmStart};
+use gapsafe::{build_problem, Task};
+
+fn main() {
+    let small = std::env::args().any(|a| a == "--small");
+    let ds = if small {
+        synth::leukemia_like_scaled(48, 800, 42, false)
+    } else {
+        synth::leukemia_like(42, false)
+    };
+    println!("dataset: {}", ds.name);
+    let prob = build_problem(ds, Task::Lasso).unwrap();
+    let n_lambdas = if small { 30 } else { 100 };
+    let delta = 3.0;
+
+    // Left panel: fraction of active variables per (K, lambda).
+    let budgets: Vec<usize> = (1..=9).map(|e| 1usize << e).collect();
+    let rows =
+        active_fraction_experiment(&prob, Rule::GapSafeFull, &budgets, n_lambdas, delta, 10);
+    let lambdas = lambda_grid(prob.lambda_max(), n_lambdas, delta);
+    report::print_active_fraction("Lasso / leukemia-like", &lambdas, &rows);
+    report::write_active_fraction_csv(
+        std::path::Path::new("results/example_lasso_active_fraction.csv"),
+        &lambdas,
+        &rows,
+    )
+    .unwrap();
+
+    // Right panel: path time per strategy and tolerance.
+    let eps_list = if small { vec![1e-2, 1e-4, 1e-6] } else { vec![1e-2, 1e-4, 1e-6, 1e-8] };
+    let strategies = [
+        (Rule::None, WarmStart::Standard),
+        (Rule::StaticElGhaoui, WarmStart::Standard),
+        (Rule::Dst3, WarmStart::Standard),
+        (Rule::GapSafeSeq, WarmStart::Standard),
+        (Rule::GapSafeFull, WarmStart::Standard),
+        (Rule::GapSafeFull, WarmStart::Active),
+        (Rule::Strong, WarmStart::Strong),
+    ];
+    let cells =
+        time_to_convergence(&prob, &strategies, &eps_list, n_lambdas, delta, 20_000);
+    report::print_timing("Lasso / leukemia-like", &cells);
+    report::write_timing_csv(std::path::Path::new("results/example_lasso_timing.csv"), &cells)
+        .unwrap();
+}

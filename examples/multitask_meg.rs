@@ -1,0 +1,52 @@
+//! Fig. 5 workload as a runnable example: multi-task Lasso on the MEG/EEG-
+//! like dataset (n = 360, p = 5000, q = 20 time instants by default; the
+//! paper's full p = 22494 via --full).
+//!
+//! Run: cargo run --release --example multitask_meg [-- --small|--full]
+
+use gapsafe::coordinator::{active_fraction_experiment, report, time_to_convergence};
+use gapsafe::data::synth;
+use gapsafe::screening::Rule;
+use gapsafe::solver::path::{lambda_grid, WarmStart};
+use gapsafe::{build_problem, Task};
+
+fn main() {
+    let small = std::env::args().any(|a| a == "--small");
+    let full = std::env::args().any(|a| a == "--full");
+    let ds = if small {
+        synth::meg_like(60, 400, 8, 42)
+    } else if full {
+        synth::meg_like(360, 22_494, 20, 42)
+    } else {
+        synth::meg_like(360, 5000, 20, 42)
+    };
+    println!("dataset: {}", ds.name);
+    let prob = build_problem(ds, Task::MultiTask).unwrap();
+    let n_lambdas = if small { 20 } else { 60 };
+    let delta = 2.0;
+
+    let budgets: Vec<usize> = (1..=8).map(|e| 1usize << e).collect();
+    let rows =
+        active_fraction_experiment(&prob, Rule::GapSafeFull, &budgets, n_lambdas, delta, 10);
+    let lambdas = lambda_grid(prob.lambda_max(), n_lambdas, delta);
+    report::print_active_fraction("multi-task / MEG-like", &lambdas, &rows);
+    report::write_active_fraction_csv(
+        std::path::Path::new("results/example_meg_active_fraction.csv"),
+        &lambdas,
+        &rows,
+    )
+    .unwrap();
+
+    let eps_list = if small { vec![1e-2, 1e-4] } else { vec![1e-2, 1e-4, 1e-6] };
+    let strategies = [
+        (Rule::None, WarmStart::Standard),
+        (Rule::DynamicBonnefoy, WarmStart::Standard),
+        (Rule::GapSafeSeq, WarmStart::Standard),
+        (Rule::GapSafeFull, WarmStart::Standard),
+        (Rule::GapSafeFull, WarmStart::Active),
+    ];
+    let cells = time_to_convergence(&prob, &strategies, &eps_list, n_lambdas, delta, 10_000);
+    report::print_timing("multi-task / MEG-like", &cells);
+    report::write_timing_csv(std::path::Path::new("results/example_meg_timing.csv"), &cells)
+        .unwrap();
+}

@@ -1,0 +1,77 @@
+//! Quickstart: fit a Lasso path with dynamic Gap Safe screening and show
+//! the screening benefit on a single lambda.
+//!
+//! Run: cargo run --release --example quickstart
+
+use gapsafe::prelude::*;
+use gapsafe::screening::NoScreening;
+use gapsafe::solver::path::scaled_eps;
+use gapsafe::util::Stopwatch;
+
+fn main() {
+    // 1. A synthetic regression workload (100 samples, 500 features,
+    //    20-sparse planted signal). Swap in your own data with
+    //    gapsafe::data::io::load_csv.
+    let ds = synth::leukemia_like_scaled(100, 500, 42, false);
+    println!("dataset: {}", ds.name);
+
+    // 2. Assemble the problem and inspect lambda_max (Prop. 3).
+    let prob = build_problem(ds, Task::Lasso).unwrap();
+    let lam_max = prob.lambda_max();
+    println!("lambda_max = {lam_max:.4e}");
+
+    // 3. Solve one lambda with and without screening.
+    let lam = 0.05 * lam_max;
+    let opts = SolveOptions {
+        eps: scaled_eps(&prob, 1e-8),
+        ..Default::default()
+    };
+    let sw = Stopwatch::start();
+    let mut none = NoScreening;
+    let base = solve_fixed_lambda(&prob, lam, &mut none, &opts);
+    let t_none = sw.secs();
+
+    let sw = Stopwatch::start();
+    let mut rule = Rule::GapSafeDyn.build();
+    let fast = solve_fixed_lambda(&prob, lam, rule.as_mut(), &opts);
+    let t_gap = sw.secs();
+
+    println!(
+        "no screening : {:>8.4}s  gap={:.2e} epochs={} nnz={}",
+        t_none, base.gap, base.epochs, base.beta.nnz()
+    );
+    println!(
+        "gap safe dyn : {:>8.4}s  gap={:.2e} epochs={} nnz={} active={}/{} ({:.1}x)",
+        t_gap,
+        fast.gap,
+        fast.epochs,
+        fast.beta.nnz(),
+        fast.active.n_active_feats(),
+        prob.p(),
+        t_none / t_gap.max(1e-12)
+    );
+    // Safety: both solutions coincide.
+    let max_diff = (0..prob.p())
+        .map(|j| (base.beta[(j, 0)] - fast.beta[(j, 0)]).abs())
+        .fold(0.0_f64, f64::max);
+    println!("max |beta_none - beta_gap| = {max_diff:.2e}");
+    assert!(max_diff < 1e-6);
+
+    // 4. Full path with active warm start (Alg. 1).
+    let cfg = PathConfig {
+        n_lambdas: 50,
+        delta: 2.0,
+        rule: Rule::GapSafeFull,
+        warm: WarmStart::Active,
+        eps: 1e-6,
+        ..Default::default()
+    };
+    let sw = Stopwatch::start();
+    let res = solve_path(&prob, &cfg);
+    println!(
+        "path: {} lambdas in {:.3}s; support sizes {:?} ...",
+        res.points.len(),
+        sw.secs(),
+        res.points.iter().map(|p| p.nnz).take(10).collect::<Vec<_>>()
+    );
+}

@@ -1,0 +1,121 @@
+"""AOT compile path: lower every (task, shape) gap graph to HLO *text*.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+
+Emits one ``<name>.hlo.txt`` per registry entry plus ``manifest.json``
+describing shapes / dtypes / output arity so the Rust runtime can bind
+buffers without re-deriving anything from Python.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+# (name, task, n, p, q, group_size).  Names are referenced from the Rust
+# artifact registry (rust/src/runtime/artifact.rs) and from examples/benches.
+REGISTRY = [
+    # small shapes used by unit / integration tests on both sides
+    ("lasso_small", "lasso", 16, 40, 1, 1),
+    ("logreg_small", "logreg", 16, 40, 1, 1),
+    ("multitask_small", "multitask", 16, 40, 4, 1),
+    ("sgl_small", "sgl", 16, 40, 1, 4),
+    # quickstart-scale
+    ("lasso_quickstart", "lasso", 100, 500, 1, 1),
+    # Fig. 3 / Fig. 4 — Leukemia-shaped (n = 72, p = 7129)
+    ("lasso_leukemia", "lasso", 72, 7129, 1, 1),
+    ("logreg_leukemia", "logreg", 72, 7129, 1, 1),
+    # Fig. 5 — MEG/EEG-shaped (bench default n = 360, p = 5000, q = 20)
+    ("multitask_meg", "multitask", 360, 5000, 20, 1),
+    # Fig. 6 — NCEP/NCAR-shaped (bench default n = 200, p = 7000, gs = 7)
+    ("sgl_climate", "sgl", 200, 7000, 1, 7),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(task: str, n: int, p: int, q: int, gs: int) -> str:
+    fn = model.gap_fn(task, gs)
+    args = model.example_args(task, n, p, q, gs)
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def n_outputs(task: str) -> int:
+    return 8 if task == "sgl" else 6
+
+
+def input_names(task: str) -> list[str]:
+    if task in ("lasso", "logreg"):
+        return ["X", "y", "beta", "lam"]
+    if task == "multitask":
+        return ["X", "Y", "B", "lam"]
+    return ["X", "y", "beta", "lam", "tau", "w"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated entry names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    entries = []
+    for name, task, n, p, q, gs in REGISTRY:
+        if only is not None and name not in only:
+            continue
+        text = lower_entry(task, n, p, q, gs)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        entries.append(
+            {
+                "name": name,
+                "task": task,
+                "file": fname,
+                "n": n,
+                "p": p,
+                "q": q,
+                "group_size": gs,
+                "dtype": "f64",
+                "inputs": input_names(task),
+                "n_outputs": n_outputs(task),
+                "sha256_16": digest,
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars, sha {digest})", file=sys.stderr)
+
+    manifest = {"version": 1, "artifacts": entries}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(entries)} artifacts -> {args.out}/manifest.json", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Pure-jnp oracle implementations used to validate the Pallas kernels and
+the L2 gap graphs (pytest / hypothesis compare against these).
+
+Also hosts the shared numerical building blocks of the paper:
+
+* soft-thresholding  S_tau (Sec. 2.1),
+* the epsilon-norm of Eq. (25) (Burdakov), computed by a fixed-iteration
+  bisection on the strictly decreasing map
+  ``phi(nu) = ||S_{(1-eps) nu}(x)||_2 - eps * nu``  — JAX-friendly
+  (static iteration count) and correct for every eps in [0, 1],
+* the Sparse-Group Lasso dual norm of Prop. 7.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BISECT_ITERS = 100  # 2^-100 relative bracket: beyond f64 resolution.
+
+
+def xtv_ref(X: jax.Array, v: jax.Array) -> jax.Array:
+    """Oracle for kernels.screen.xtv: plain ``X.T @ v``."""
+    return X.T @ v
+
+
+def xtm_ref(X: jax.Array, V: jax.Array) -> jax.Array:
+    """Oracle for kernels.screen.xtm: plain ``X.T @ V``."""
+    return X.T @ V
+
+
+def l1_scores_ref(X, v, col_norms, inv_alpha, radius):
+    """Oracle for kernels.screen.l1_scores."""
+    return jnp.abs(X.T @ v) * inv_alpha + radius * col_norms
+
+
+def soft_threshold(x: jax.Array, tau) -> jax.Array:
+    """Elementwise soft-thresholding  S_tau(x) = sign(x) (|x| - tau)_+."""
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - tau, 0.0)
+
+
+def epsilon_norm(x: jax.Array, eps, axis: int = -1) -> jax.Array:
+    """Epsilon-norm ||x||_eps of Eq. (25): unique nu >= 0 solving
+
+        sum_i (|x_i| - (1 - eps) nu)_+^2 = (eps nu)^2 ,
+
+    with the conventions ||x||_{eps=0} = ||x||_inf and ||x||_{eps=1} = ||x||_2.
+
+    Vectorised over leading axes; ``eps`` broadcasts against the reduced
+    shape.  Uses bisection on phi(nu) = ||S_{(1-eps)nu}(x)||_2 - eps*nu,
+    which is strictly decreasing (phi' <= -eps), bracketed by
+    [||x||_inf * (1-eps), ||x||_2 / max(eps, tiny)].
+    """
+    ax = jnp.abs(x)
+    linf = jnp.max(ax, axis=axis)
+    l2 = jnp.sqrt(jnp.sum(ax * ax, axis=axis))
+    eps = jnp.asarray(eps, dtype=x.dtype)
+    eps_c = jnp.clip(eps, 1e-12, 1.0)
+    eps_e = jnp.expand_dims(jnp.broadcast_to(eps_c, linf.shape), axis)
+
+    def phi(nu):
+        nu_e = jnp.expand_dims(nu, axis)
+        s = jnp.maximum(ax - (1.0 - eps_e) * nu_e, 0.0)
+        return jnp.sqrt(jnp.sum(s * s, axis=axis)) - eps_c * nu
+
+    lo = jnp.zeros_like(l2)
+    hi = l2 / eps_c + 1e-30
+
+    def body(_, state):
+        lo, hi = state
+        mid = 0.5 * (lo + hi)
+        pos = phi(mid) > 0.0
+        return jnp.where(pos, mid, lo), jnp.where(pos, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, BISECT_ITERS, body, (lo, hi))
+    nu = 0.5 * (lo + hi)
+    # eps == 0 limit: the infimum is ||x||_inf.
+    return jnp.where(eps <= 1e-12, linf, nu)
+
+
+def sgl_epsilons(tau, w: jax.Array) -> jax.Array:
+    """Per-group eps_g = (1 - tau) w_g / (tau + (1 - tau) w_g)  (Prop. 7)."""
+    return (1.0 - tau) * w / (tau + (1.0 - tau) * w)
+
+
+def sgl_dual_norm(xi_groups: jax.Array, tau, w: jax.Array) -> jax.Array:
+    """Sparse-Group Lasso dual norm (Prop. 7) for uniformly sized groups.
+
+    Args:
+      xi_groups: shape (G, gs) — xi reshaped to one row per group.
+      tau: ell_1 trade-off in [0, 1].
+      w: group weights, shape (G,).
+
+    Returns:
+      Omega^D(xi) = max_g ||xi_g||_{eps_g} / (tau + (1 - tau) w_g).
+    """
+    eps = sgl_epsilons(tau, w)
+    nrm = epsilon_norm(xi_groups, eps, axis=-1)
+    return jnp.max(nrm / (tau + (1.0 - tau) * w))
+
+
+def sgl_penalty(beta_groups: jax.Array, tau, w: jax.Array) -> jax.Array:
+    """Omega_{tau,w}(beta) = tau ||beta||_1 + (1-tau) sum_g w_g ||beta_g||_2."""
+    l1 = jnp.sum(jnp.abs(beta_groups))
+    l2 = jnp.sum(w * jnp.sqrt(jnp.sum(beta_groups * beta_groups, axis=-1)))
+    return tau * l1 + (1.0 - tau) * l2
+
+
+def negative_entropy(x: jax.Array) -> jax.Array:
+    """Binary negative entropy Nh (Eq. 28), elementwise, with 0 log 0 = 0.
+
+    Returns +inf outside [0, 1] in exact arithmetic; here inputs are always
+    feasible by construction (Remark 14), so we clamp for numerical safety.
+    """
+    xc = jnp.clip(x, 1e-300, 1.0)
+    xm = jnp.clip(1.0 - x, 1e-300, 1.0)
+    return xc * jnp.log(xc) + xm * jnp.log(xm)

@@ -1,0 +1,155 @@
+"""Layer-1 Pallas kernels for the Gap Safe screening hot spot.
+
+The O(np) cost of one screening / duality-gap pass is the correlation of
+every feature (column of X) with the current residual / dual point:
+``c = X^T v`` (Lasso, logistic) or ``C = X^T V`` (multi-task).  These are
+expressed as column-block-tiled Pallas kernels: the grid walks tiles of
+``BP`` columns, each tile performs a ``(BP, n) x (n,)`` contraction.
+
+On a real TPU each tile is sized to VMEM (8 * n * BP bytes for f64) and the
+contraction maps to the MXU; on this testbed the kernels run under
+``interpret=True`` (the CPU PJRT plugin cannot execute Mosaic custom-calls),
+so we optimise the *structure* (tiling, single pass over X, fusion with the
+downstream score computation) rather than interpret-mode wallclock.
+
+Columns are zero-padded up to a multiple of the block size inside the jitted
+graph (padded columns contribute exact zeros and are sliced off), so any
+``p`` — including the prime p = 7129 of the Leukemia workload — is supported.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default number of columns per tile (perf pass: 256 -> 1024, a 3.1x
+# artifact-execution win; see EXPERIMENTS.md §Perf — fewer grid steps in the
+# interpret-lowered while-loop, and an f64 tile of n=814 x 1024 is 6.7 MB,
+# still inside a 16 MB VMEM budget with double buffering on a real TPU.
+# BP = 2048 bought a further 23% of interpret wallclock but its 13.3 MB
+# tile leaves no room to double-buffer at n = 814 — rejected, see §Perf).
+DEFAULT_BLOCK_P = 1024
+
+
+def _xtv_kernel(x_ref, v_ref, o_ref):
+    """One tile: o = X_tile^T v  with X_tile in VMEM, shape (n, BP)."""
+    o_ref[...] = x_ref[...].T @ v_ref[...]
+
+
+def _xtm_kernel(x_ref, v_ref, o_ref):
+    """One tile: O = X_tile^T V  for the multi-task case, V of shape (n, q)."""
+    o_ref[...] = x_ref[...].T @ v_ref[...]
+
+
+def _pad_cols(X: jax.Array, bp: int) -> tuple[jax.Array, int]:
+    n, p = X.shape
+    pp = ((p + bp - 1) // bp) * bp
+    if pp != p:
+        X = jnp.pad(X, ((0, 0), (0, pp - p)))
+    return X, pp
+
+
+@functools.partial(jax.jit, static_argnames=("block_p",))
+def xtv(X: jax.Array, v: jax.Array, block_p: int = DEFAULT_BLOCK_P) -> jax.Array:
+    """Compute ``X.T @ v`` with a column-tiled Pallas kernel.
+
+    Args:
+      X: design matrix, shape (n, p).
+      v: vector, shape (n,).
+      block_p: columns per tile (static).
+
+    Returns:
+      Vector of shape (p,), equal to ``X.T @ v``.
+    """
+    n, p = X.shape
+    bp = min(block_p, max(p, 1))
+    Xp, pp = _pad_cols(X, bp)
+    out = pl.pallas_call(
+        _xtv_kernel,
+        grid=(pp // bp,),
+        in_specs=[
+            pl.BlockSpec((n, bp), lambda j: (0, j)),
+            pl.BlockSpec((n,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bp,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((pp,), X.dtype),
+        interpret=True,
+    )(Xp, v)
+    return out[:p]
+
+
+@functools.partial(jax.jit, static_argnames=("block_p",))
+def xtm(X: jax.Array, V: jax.Array, block_p: int = DEFAULT_BLOCK_P) -> jax.Array:
+    """Compute ``X.T @ V`` (multi-task correlation) with a column-tiled kernel.
+
+    Args:
+      X: design matrix, shape (n, p).
+      V: residual matrix, shape (n, q).
+
+    Returns:
+      Matrix of shape (p, q).
+    """
+    n, p = X.shape
+    q = V.shape[1]
+    bp = min(block_p, max(p, 1))
+    Xp, pp = _pad_cols(X, bp)
+    out = pl.pallas_call(
+        _xtm_kernel,
+        grid=(pp // bp,),
+        in_specs=[
+            pl.BlockSpec((n, bp), lambda j: (0, j)),
+            pl.BlockSpec((n, q), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bp, q), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((pp, q), X.dtype),
+        interpret=True,
+    )(Xp, V)
+    return out[:p]
+
+
+def _score_kernel(x_ref, v_ref, nrm_ref, scal_ref, o_ref):
+    """Fused screening-score tile: o = |X^T v| * inv_alpha + radius * ||X_j||.
+
+    Fuses the correlation, the dual rescaling and the sphere-test bound of
+    Eq. (8) so X is read exactly once per screening pass.  ``scal_ref``
+    carries the two runtime scalars [1/alpha, radius].
+    """
+    c = x_ref[...].T @ v_ref[...]
+    o_ref[...] = jnp.abs(c) * scal_ref[0] + scal_ref[1] * nrm_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_p",))
+def l1_scores(
+    X: jax.Array,
+    v: jax.Array,
+    col_norms: jax.Array,
+    inv_alpha: jax.Array,
+    radius: jax.Array,
+    block_p: int = DEFAULT_BLOCK_P,
+) -> jax.Array:
+    """Fused ℓ1 sphere-test scores ``|X_j^T v|/alpha + r * ||X_j||_2``.
+
+    A feature j is Gap-Safe screened iff the returned score is < 1.
+    """
+    n, p = X.shape
+    bp = min(block_p, max(p, 1))
+    Xp, pp = _pad_cols(X, bp)
+    nrm = jnp.pad(col_norms, (0, pp - p)) if pp != p else col_norms
+    scal = jnp.stack([inv_alpha, radius]).astype(X.dtype)
+    out = pl.pallas_call(
+        _score_kernel,
+        grid=(pp // bp,),
+        in_specs=[
+            pl.BlockSpec((n, bp), lambda j: (0, j)),
+            pl.BlockSpec((n,), lambda j: (0,)),
+            pl.BlockSpec((bp,), lambda j: (j,)),
+            pl.BlockSpec((2,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bp,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((pp,), X.dtype),
+        interpret=True,
+    )(Xp, v, nrm, scal)
+    return out[:p]

@@ -1,0 +1,195 @@
+"""Layer-2 JAX graphs: one fused duality-gap / screening pass per estimator.
+
+Each ``*_gap`` function implements, for one estimator of Table 1, the whole
+computation a Gap Safe screening step needs (Alg. 2, lines 3-4):
+
+  1. generalized residual      rho   = -G(X beta)            (Remark 2)
+  2. dual rescaling            theta = rho / max(lambda, Omega^D(X^T rho))
+                                                             (Eq. 9 / 18)
+  3. primal objective          P_lambda(beta)                (Eq. 1)
+  4. dual objective            D_lambda(theta)               (Eq. 4)
+  5. duality gap + Gap Safe radius  r = sqrt(2 Gap / (gamma lambda^2))
+                                                             (Thm. 2)
+  6. per-group screening statistics Omega_g^D(X_g^T theta)   (Eq. 8 / Prop. 8)
+
+The O(np) correlation X^T rho goes through the Layer-1 Pallas kernel
+(kernels.screen.xtv / xtm) so the whole pass is a single lowered HLO module;
+everything downstream of the correlation is O(p). ``aot.py`` lowers these
+functions for a registry of named shapes to ``artifacts/*.hlo.txt`` which
+the Rust runtime loads and executes via PJRT (Python is never on the
+request path).
+
+All graphs are pure f64 (the Rust coordinator screens with exact tests; a
+safe rule evaluated in f32 could discard a feature whose score is within
+f32 rounding of 1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels import ref
+from .kernels import screen
+
+# ---------------------------------------------------------------------------
+# Lasso  (Sec. 4.1):  f_i(z) = (y_i - z)^2 / 2,  Omega = ||.||_1,  gamma = 1.
+# ---------------------------------------------------------------------------
+
+
+def lasso_gap(X, y, beta, lam):
+    """Gap pass for the Lasso.
+
+    Returns (primal, dual, gap, radius, theta, cg) where
+    ``cg[j] = |X_j^T theta|`` is the screening statistic of Eq. (8): the
+    coordinator screens feature j iff ``cg[j] + radius * ||X_j||_2 < 1``.
+    """
+    rho = y - X @ beta  # -G(X beta) for the quadratic fit
+    corr = screen.xtv(X, rho)
+    dnorm = jnp.max(jnp.abs(corr))
+    alpha = jnp.maximum(lam, dnorm)
+    theta = rho / alpha
+    primal = 0.5 * jnp.sum(rho * rho) + lam * jnp.sum(jnp.abs(beta))
+    # D(theta) = (||y||^2 - ||y - lam theta||^2) / 2
+    dual = 0.5 * (jnp.sum(y * y) - jnp.sum((y - lam * theta) ** 2))
+    gap = jnp.maximum(primal - dual, 0.0)
+    radius = jnp.sqrt(2.0 * gap) / lam  # gamma = 1
+    cg = jnp.abs(corr) / alpha
+    return primal, dual, gap, radius, theta, cg
+
+
+# ---------------------------------------------------------------------------
+# l1 binary logistic regression (Sec. 4.4):
+#   f_i(z) = -y_i z + log(1 + e^z),  f_i^*(u) = Nh(u + y_i),  gamma = 4.
+# ---------------------------------------------------------------------------
+
+
+def logreg_gap(X, y, beta, lam):
+    """Gap pass for l1-regularized binary logistic regression (labels in {0,1})."""
+    z = X @ beta
+    sig = jax.nn.sigmoid(z)
+    rho = y - sig  # -G(X beta) = -(sigma(z) - y)
+    corr = screen.xtv(X, rho)
+    dnorm = jnp.max(jnp.abs(corr))
+    alpha = jnp.maximum(lam, dnorm)
+    theta = rho / alpha
+    # primal: softplus(z) - y z, numerically stable
+    primal = jnp.sum(jax.nn.softplus(z) - y * z) + lam * jnp.sum(jnp.abs(beta))
+    # dual: -sum Nh(-lam theta_i + y_i)
+    dual = -jnp.sum(ref.negative_entropy(y - lam * theta))
+    gap = jnp.maximum(primal - dual, 0.0)
+    radius = jnp.sqrt(2.0 * gap / 4.0) / lam  # gamma = 4
+    cg = jnp.abs(corr) / alpha
+    return primal, dual, gap, radius, theta, cg
+
+
+# ---------------------------------------------------------------------------
+# l1/l2 multi-task regression (Sec. 4.5):
+#   row-groups of B in R^{p x q},  Omega = sum_j ||B_j||_2,  gamma = 1.
+# ---------------------------------------------------------------------------
+
+
+def multitask_gap(X, Y, B, lam):
+    """Gap pass for the multi-task Lasso.
+
+    Returns (primal, dual, gap, radius, Theta, cg) with
+    ``cg[j] = ||X_j^T Theta||_2`` (the l_inf/l_2 dual norm statistic).
+    """
+    R = Y - X @ B  # (n, q) residual
+    C = screen.xtm(X, R)  # (p, q) correlations
+    row_norms = jnp.sqrt(jnp.sum(C * C, axis=1))
+    dnorm = jnp.max(row_norms)
+    alpha = jnp.maximum(lam, dnorm)
+    Theta = R / alpha
+    pen = jnp.sum(jnp.sqrt(jnp.sum(B * B, axis=1)))
+    primal = 0.5 * jnp.sum(R * R) + lam * pen
+    dual = 0.5 * (jnp.sum(Y * Y) - jnp.sum((Y - lam * Theta) ** 2))
+    gap = jnp.maximum(primal - dual, 0.0)
+    radius = jnp.sqrt(2.0 * gap) / lam
+    cg = row_norms / alpha
+    return primal, dual, gap, radius, Theta, cg
+
+
+# ---------------------------------------------------------------------------
+# Sparse-Group Lasso (Sec. 4.3): Omega_{tau,w}, two-level screening (Prop. 8).
+# Uniform group size gs (the climate workload has gs = 7); the Rust native
+# path additionally supports ragged groups.
+# ---------------------------------------------------------------------------
+
+
+def sgl_gap(X, y, beta, lam, tau, w, group_size: int):
+    """Gap pass for the Sparse-Group Lasso.
+
+    Returns (primal, dual, gap, radius, theta, cf, sg, mg):
+      cf[j] = |X_j^T theta|                      — feature-level statistic,
+      sg[g] = ||S_tau(X_g^T theta)||_2           — group-level statistic,
+      mg[g] = ||X_g^T theta||_inf                — for the T_g bound branch.
+    The coordinator applies Prop. 8 with its precomputed column/group norms.
+    """
+    p = X.shape[1]
+    G = p // group_size
+    rho = y - X @ beta
+    corr = screen.xtv(X, rho)  # (p,)
+    corr_g = corr.reshape(G, group_size)
+    dnorm = ref.sgl_dual_norm(corr_g, tau, w)
+    alpha = jnp.maximum(lam, dnorm)
+    theta = rho / alpha
+    beta_g = beta.reshape(G, group_size)
+    primal = 0.5 * jnp.sum(rho * rho) + lam * ref.sgl_penalty(beta_g, tau, w)
+    dual = 0.5 * (jnp.sum(y * y) - jnp.sum((y - lam * theta) ** 2))
+    gap = jnp.maximum(primal - dual, 0.0)
+    radius = jnp.sqrt(2.0 * gap) / lam
+    ctheta = corr_g / alpha
+    st = ref.soft_threshold(ctheta, tau)
+    sg = jnp.sqrt(jnp.sum(st * st, axis=1))
+    mg = jnp.max(jnp.abs(ctheta), axis=1)
+    cf = jnp.abs(corr) / alpha
+    return primal, dual, gap, radius, theta, cf, sg, mg
+
+
+# ---------------------------------------------------------------------------
+# Registry used by aot.py — names, example-arg builders, metadata.
+# ---------------------------------------------------------------------------
+
+
+def example_args(task: str, n: int, p: int, q: int = 1, group_size: int = 1):
+    """Build ShapeDtypeStructs for lowering one (task, shape) artifact."""
+    f64 = jnp.float64
+    Xs = jax.ShapeDtypeStruct((n, p), f64)
+    if task == "lasso":
+        return (Xs, jax.ShapeDtypeStruct((n,), f64), jax.ShapeDtypeStruct((p,), f64), jax.ShapeDtypeStruct((), f64))
+    if task == "logreg":
+        return (Xs, jax.ShapeDtypeStruct((n,), f64), jax.ShapeDtypeStruct((p,), f64), jax.ShapeDtypeStruct((), f64))
+    if task == "multitask":
+        return (
+            Xs,
+            jax.ShapeDtypeStruct((n, q), f64),
+            jax.ShapeDtypeStruct((p, q), f64),
+            jax.ShapeDtypeStruct((), f64),
+        )
+    if task == "sgl":
+        G = p // group_size
+        return (
+            Xs,
+            jax.ShapeDtypeStruct((n,), f64),
+            jax.ShapeDtypeStruct((p,), f64),
+            jax.ShapeDtypeStruct((), f64),
+            jax.ShapeDtypeStruct((), f64),
+            jax.ShapeDtypeStruct((G,), f64),
+        )
+    raise ValueError(f"unknown task {task!r}")
+
+
+def gap_fn(task: str, group_size: int = 1):
+    """Return the jittable gap function for ``task``."""
+    if task == "lasso":
+        return lasso_gap
+    if task == "logreg":
+        return logreg_gap
+    if task == "multitask":
+        return multitask_gap
+    if task == "sgl":
+        return lambda X, y, b, lam, tau, w: sgl_gap(X, y, b, lam, tau, w, group_size)
+    raise ValueError(f"unknown task {task!r}")

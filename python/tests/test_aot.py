@@ -1,0 +1,65 @@
+"""AOT path: HLO text emission is deterministic, parseable metadata, and the
+small-registry artifacts can be produced end-to-end into a tmp dir."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import aot, model
+
+
+def test_lower_small_entries_deterministic():
+    for name, task, n, p, q, gs in aot.REGISTRY:
+        if not name.endswith("_small"):
+            continue
+        t1 = aot.lower_entry(task, n, p, q, gs)
+        t2 = aot.lower_entry(task, n, p, q, gs)
+        assert t1 == t2, f"non-deterministic lowering for {name}"
+        assert "ENTRY" in t1 and "HloModule" in t1
+
+
+def test_hlo_text_mentions_f64():
+    t = aot.lower_entry("lasso", 8, 12, 1, 1)
+    assert "f64" in t
+
+
+def test_registry_covers_all_tasks_and_paper_shapes():
+    tasks = {e[1] for e in aot.REGISTRY}
+    assert tasks == {"lasso", "logreg", "multitask", "sgl"}
+    by_name = {e[0]: e for e in aot.REGISTRY}
+    # Leukemia shape of Figs. 3-4
+    assert by_name["lasso_leukemia"][2:4] == (72, 7129)
+    assert by_name["logreg_leukemia"][2:4] == (72, 7129)
+    # climate groups of 7 (Fig. 6)
+    assert by_name["sgl_climate"][5] == 7
+
+
+def test_cli_writes_manifest(tmp_path):
+    out = str(tmp_path)
+    env = dict(os.environ)
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", out, "--only",
+         "lasso_small,sgl_small"],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+    )
+    with open(os.path.join(out, "manifest.json")) as f:
+        man = json.load(f)
+    names = {a["name"] for a in man["artifacts"]}
+    assert names == {"lasso_small", "sgl_small"}
+    for a in man["artifacts"]:
+        assert os.path.exists(os.path.join(out, a["file"]))
+        assert a["dtype"] == "f64"
+        assert a["n_outputs"] in (6, 8)
+
+
+def test_example_args_arity():
+    assert len(model.example_args("lasso", 4, 6)) == 4
+    assert len(model.example_args("multitask", 4, 6, q=3)) == 4
+    assert len(model.example_args("sgl", 4, 6, group_size=2)) == 6

@@ -1,0 +1,114 @@
+"""The epsilon-norm (Eq. 25) and the SGL dual norm (Prop. 7)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    d=st.integers(1, 20),
+    eps=st.floats(1e-6, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_defining_equation(d, eps, seed):
+    """nu = ||x||_eps satisfies sum (|x_i| - (1-eps) nu)_+^2 = (eps nu)^2."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(d))
+    nu = float(ref.epsilon_norm(x, eps))
+    lhs = float(jnp.sum(jnp.maximum(jnp.abs(x) - (1 - eps) * nu, 0.0) ** 2))
+    rhs = (eps * nu) ** 2
+    assert abs(lhs - rhs) <= 1e-9 * max(1.0, rhs)
+
+
+@settings(max_examples=30, deadline=None)
+@given(d=st.integers(1, 20), seed=st.integers(0, 2**31 - 1))
+def test_limits(d, seed):
+    """eps = 0 -> sup norm, eps = 1 -> l2 norm (conventions below Eq. 25)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(d))
+    np.testing.assert_allclose(ref.epsilon_norm(x, 0.0), jnp.max(jnp.abs(x)), rtol=1e-12)
+    np.testing.assert_allclose(ref.epsilon_norm(x, 1.0), jnp.linalg.norm(x), rtol=1e-10)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    d=st.integers(1, 16),
+    eps=st.floats(1e-4, 1.0),
+    scale=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_homogeneity_and_bounds(d, eps, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(d))
+    nu = float(ref.epsilon_norm(x, eps))
+    nus = float(ref.epsilon_norm(scale * x, eps))
+    assert abs(nus - scale * nu) <= 1e-8 * max(1.0, scale * nu)
+    # sandwich: ||x||_inf <= ||x||_eps... actually ||x||_eps >= ||x||_2 >= ||x||_inf? No:
+    # monotone: ||x||_eps decreases as eps grows from 0 ... it interpolates between
+    # ||x||_inf (eps=0) and ||x||_2 (eps=1); both bounds hold:
+    lo = min(float(jnp.max(jnp.abs(x))), float(jnp.linalg.norm(x)))
+    hi = max(float(jnp.max(jnp.abs(x))), float(jnp.linalg.norm(x)))
+    assert lo - 1e-9 <= nu <= hi + 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(1, 12),
+    eps=st.floats(1e-4, 1.0 - 1e-9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dual_norm_identity_eq26(d, eps, seed):
+    """Holder: <z, xi> <= ||z||_eps * (eps ||xi||_2 + (1-eps) ||xi||_1)  (Eq. 26)."""
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.standard_normal(d))
+    xi = jnp.asarray(rng.standard_normal(d))
+    lhs = float(jnp.dot(z, xi))
+    dual = eps * float(jnp.linalg.norm(xi)) + (1 - eps) * float(jnp.sum(jnp.abs(xi)))
+    nu = float(ref.epsilon_norm(z, eps))
+    assert lhs <= nu * dual + 1e-9 * max(1.0, abs(lhs))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    G=st.integers(1, 8),
+    gs=st.integers(1, 8),
+    tau=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sgl_primal_identity_prop7(G, gs, tau, seed):
+    """Prop. 7: Omega = sum_g (tau + (1-tau) w_g) ||beta_g||^D_{eps_g} with
+    the dual epsilon-norm of Eq. (26)."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.uniform(0.5, 2.0, G))
+    if tau == 0.0:
+        w = jnp.maximum(w, 0.5)  # Omega must remain a norm
+    B = jnp.asarray(rng.standard_normal((G, gs)))
+    eps = ref.sgl_epsilons(tau, w)
+    dual_eps = eps * jnp.linalg.norm(B, axis=1) + (1 - eps) * jnp.sum(jnp.abs(B), axis=1)
+    lhs = float(jnp.sum((tau + (1 - tau) * w) * dual_eps))
+    rhs = float(ref.sgl_penalty(B, tau, w))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-12)
+
+
+def test_sgl_dual_norm_reduces_to_linf_and_group():
+    rng = np.random.default_rng(3)
+    G, gs = 5, 4
+    xi = jnp.asarray(rng.standard_normal((G, gs)))
+    w = jnp.ones(G)
+    # tau = 1 -> Lasso: Omega^D = ||.||_inf
+    np.testing.assert_allclose(
+        ref.sgl_dual_norm(xi, 1.0, w), jnp.max(jnp.abs(xi)), rtol=1e-10
+    )
+    # tau = 0 -> Group Lasso: Omega^D = max_g ||xi_g||_2 / w_g
+    np.testing.assert_allclose(
+        ref.sgl_dual_norm(xi, 0.0, w),
+        jnp.max(jnp.linalg.norm(xi, axis=1) / w),
+        rtol=1e-10,
+    )

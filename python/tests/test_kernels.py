@@ -1,0 +1,96 @@
+"""L1 Pallas kernels vs the pure-jnp oracle (hypothesis sweeps shapes/dtypes)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, screen
+
+F64 = jnp.float64
+F32 = jnp.float32
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _tol(dtype):
+    return dict(rtol=1e-10, atol=1e-10) if dtype == F64 else dict(rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 48),
+    p=st.integers(1, 300),
+    bp=st.sampled_from([1, 3, 16, 64, 256]),
+    dtype=st.sampled_from([F32, F64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_xtv_matches_ref(n, p, bp, dtype, seed):
+    rng = _rng(seed)
+    X = jnp.asarray(rng.standard_normal((n, p)), dtype=dtype)
+    v = jnp.asarray(rng.standard_normal(n), dtype=dtype)
+    got = screen.xtv(X, v, block_p=bp)
+    want = ref.xtv_ref(X, v)
+    np.testing.assert_allclose(got, want, **_tol(dtype))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 32),
+    p=st.integers(1, 200),
+    q=st.integers(1, 12),
+    bp=st.sampled_from([1, 8, 64]),
+    dtype=st.sampled_from([F32, F64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_xtm_matches_ref(n, p, q, bp, dtype, seed):
+    rng = _rng(seed)
+    X = jnp.asarray(rng.standard_normal((n, p)), dtype=dtype)
+    V = jnp.asarray(rng.standard_normal((n, q)), dtype=dtype)
+    got = screen.xtm(X, V, block_p=bp)
+    want = ref.xtm_ref(X, V)
+    np.testing.assert_allclose(got, want, **_tol(dtype))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 32),
+    p=st.integers(1, 200),
+    bp=st.sampled_from([1, 8, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_l1_scores_matches_ref(n, p, bp, seed):
+    rng = _rng(seed)
+    X = jnp.asarray(rng.standard_normal((n, p)), dtype=F64)
+    v = jnp.asarray(rng.standard_normal(n), dtype=F64)
+    nrm = jnp.sqrt(jnp.sum(X * X, axis=0))
+    inv_alpha = jnp.float64(rng.uniform(0.1, 2.0))
+    radius = jnp.float64(rng.uniform(0.0, 1.0))
+    got = screen.l1_scores(X, v, nrm, inv_alpha, radius, block_p=bp)
+    want = ref.l1_scores_ref(X, v, nrm, inv_alpha, radius)
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+
+def test_xtv_prime_p_leukemia_shape():
+    """p = 7129 is prime: exercises the zero-padding path on the real shape."""
+    rng = _rng(0)
+    X = jnp.asarray(rng.standard_normal((8, 7129)), dtype=F64)
+    v = jnp.asarray(rng.standard_normal(8), dtype=F64)
+    got = screen.xtv(X, v)
+    np.testing.assert_allclose(got, ref.xtv_ref(X, v), rtol=1e-10, atol=1e-10)
+
+
+@pytest.mark.parametrize("p,bp", [(0o1, 1), (5, 5), (256, 256), (257, 256)])
+def test_xtv_block_boundaries(p, bp):
+    rng = _rng(p * 1000 + bp)
+    X = jnp.asarray(rng.standard_normal((4, p)), dtype=F64)
+    v = jnp.asarray(rng.standard_normal(4), dtype=F64)
+    np.testing.assert_allclose(
+        screen.xtv(X, v, block_p=bp), ref.xtv_ref(X, v), rtol=1e-10, atol=1e-10
+    )

@@ -1,0 +1,168 @@
+"""L2 gap graphs: weak duality, feasibility of the rescaled dual point,
+radius formula, cross-estimator consistency, convergence of the gap to 0
+at an (ISTA-computed) optimum."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _data(n, p, seed=0):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.standard_normal((n, p)))
+    y = jnp.asarray(rng.standard_normal(n))
+    return X, y
+
+
+def _ista_lasso(X, y, lam, iters=4000):
+    """Plain ISTA oracle solver for the Lasso (test-only)."""
+    L = float(jnp.linalg.norm(X, 2) ** 2)
+    beta = jnp.zeros(X.shape[1])
+    for _ in range(iters):
+        grad = X.T @ (X @ beta - y)
+        beta = ref.soft_threshold(beta - grad / L, lam / L)
+    return beta
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(2, 24),
+    p=st.integers(2, 60),
+    frac=st.floats(0.05, 0.99),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lasso_weak_duality_and_feasibility(n, p, frac, seed):
+    X, y = _data(n, p, seed)
+    rng = np.random.default_rng(seed + 1)
+    beta = jnp.asarray(rng.standard_normal(p)) * (rng.random(p) < 0.3)
+    lam_max = float(jnp.max(jnp.abs(X.T @ y)))
+    lam = frac * lam_max + 1e-12
+    primal, dual, gap, radius, theta, cg = model.lasso_gap(X, y, beta, lam)
+    assert float(dual) <= float(primal) + 1e-9
+    assert float(gap) >= 0.0
+    # theta in Delta_X: ||X^T theta||_inf <= 1
+    assert float(jnp.max(jnp.abs(X.T @ theta))) <= 1.0 + 1e-9
+    # radius matches Thm. 2 with gamma = 1
+    np.testing.assert_allclose(float(radius), np.sqrt(2 * float(gap)) / lam, rtol=1e-12)
+    # cg consistent
+    np.testing.assert_allclose(np.asarray(cg), np.abs(np.asarray(X.T @ theta)), atol=1e-9)
+
+
+def test_lasso_gap_vanishes_at_optimum():
+    X, y = _data(12, 30, seed=5)
+    lam = 0.4 * float(jnp.max(jnp.abs(X.T @ y)))
+    beta = _ista_lasso(X, y, lam)
+    _, _, gap, radius, theta, _ = model.lasso_gap(X, y, beta, lam)
+    assert float(gap) < 1e-8
+    assert float(radius) < 1e-3
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 20), p=st.integers(2, 40), seed=st.integers(0, 2**31 - 1))
+def test_logreg_weak_duality(n, p, seed):
+    X, _ = _data(n, p, seed)
+    rng = np.random.default_rng(seed + 7)
+    y = jnp.asarray((rng.random(n) < 0.5).astype(float))
+    beta = jnp.asarray(rng.standard_normal(p) * 0.1)
+    lam_max = float(jnp.max(jnp.abs(X.T @ (y - 0.5))))
+    lam = 0.5 * lam_max + 1e-12
+    primal, dual, gap, radius, theta, cg = model.logreg_gap(X, y, beta, lam)
+    assert float(dual) <= float(primal) + 1e-9
+    assert float(jnp.max(jnp.abs(X.T @ theta))) <= 1.0 + 1e-9
+    np.testing.assert_allclose(
+        float(radius), np.sqrt(2 * float(gap) / 4.0) / lam, rtol=1e-12
+    )
+
+
+def test_logreg_primal_at_zero():
+    """P(0) = n log 2 for any labels."""
+    X, _ = _data(10, 15, seed=1)
+    y = jnp.asarray((np.random.default_rng(2).random(10) < 0.5).astype(float))
+    primal, *_ = model.logreg_gap(X, y, jnp.zeros(15), 1.0)
+    np.testing.assert_allclose(float(primal), 10 * np.log(2.0), rtol=1e-12)
+
+
+def test_multitask_q1_equals_lasso():
+    X, y = _data(14, 25, seed=9)
+    rng = np.random.default_rng(10)
+    beta = jnp.asarray(rng.standard_normal(25)) * (rng.random(25) < 0.4)
+    lam = 0.3 * float(jnp.max(jnp.abs(X.T @ y)))
+    pl_, dl, gl, rl, tl, cl = model.lasso_gap(X, y, beta, lam)
+    pm, dm, gm, rm, tm, cm = model.multitask_gap(X, y[:, None], beta[:, None], lam)
+    np.testing.assert_allclose(float(pl_), float(pm), rtol=1e-12)
+    np.testing.assert_allclose(float(dl), float(dm), rtol=1e-10, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(cl), np.asarray(cm), atol=1e-10)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.integers(4, 16),
+    p=st.integers(2, 20),
+    q=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_multitask_feasibility(n, p, q, seed):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.standard_normal((n, p)))
+    Y = jnp.asarray(rng.standard_normal((n, q)))
+    B = jnp.asarray(rng.standard_normal((p, q)) * (rng.random((p, 1)) < 0.3))
+    lam = 0.4 * float(jnp.max(jnp.linalg.norm(X.T @ Y, axis=1))) + 1e-12
+    primal, dual, gap, radius, Theta, cg = model.multitask_gap(X, Y, B, lam)
+    assert float(dual) <= float(primal) + 1e-9
+    assert float(jnp.max(jnp.linalg.norm(X.T @ Theta, axis=1))) <= 1.0 + 1e-9
+
+
+def test_sgl_tau1_equals_lasso():
+    X, y = _data(12, 24, seed=3)
+    rng = np.random.default_rng(4)
+    beta = jnp.asarray(rng.standard_normal(24)) * (rng.random(24) < 0.4)
+    w = jnp.ones(6)
+    lam = 0.3 * float(jnp.max(jnp.abs(X.T @ y)))
+    pl_, dl, gl, rl, tl, cl = model.lasso_gap(X, y, beta, lam)
+    ps, ds, gs_, rs, ts, cf, sg, mg = model.sgl_gap(X, y, beta, lam, 1.0, w, 4)
+    np.testing.assert_allclose(float(pl_), float(ps), rtol=1e-12)
+    np.testing.assert_allclose(float(gl), float(gs_), rtol=1e-8, atol=1e-10)
+    np.testing.assert_allclose(np.asarray(cl), np.asarray(cf), atol=1e-9)
+
+
+def test_sgl_tau0_equals_group_lasso_dual_norm():
+    """tau = 0: the SGL statistic sg equals the group-lasso ||X_g^T theta||_2."""
+    X, y = _data(12, 24, seed=13)
+    w = jnp.ones(6)
+    beta = jnp.zeros(24)
+    corr = (X.T @ y).reshape(6, 4)
+    lam = 0.5 * float(jnp.max(jnp.linalg.norm(corr, axis=1)))
+    ps, ds, gs_, rs, ts, cf, sg, mg = model.sgl_gap(X, y, beta, lam, 0.0, w, 4)
+    theta = np.asarray(ts)
+    want = np.linalg.norm((np.asarray(X).T @ theta).reshape(6, 4), axis=1)
+    np.testing.assert_allclose(np.asarray(sg), want, atol=1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    G=st.integers(1, 6),
+    gs=st.integers(1, 6),
+    tau=st.floats(0.05, 0.95),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sgl_feasibility(G, gs, tau, seed):
+    n, p = 10, G * gs
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.standard_normal((n, p)))
+    y = jnp.asarray(rng.standard_normal(n))
+    w = jnp.asarray(rng.uniform(0.5, 1.5, G))
+    beta = jnp.asarray(rng.standard_normal(p) * (rng.random(p) < 0.3))
+    lam_max = float(ref.sgl_dual_norm((X.T @ y).reshape(G, gs), tau, w))
+    lam = 0.6 * lam_max + 1e-12
+    ps, ds, g, r, theta, cf, sg, mg = model.sgl_gap(X, y, beta, lam, tau, w, gs)
+    assert float(ds) <= float(ps) + 1e-9
+    dn = float(ref.sgl_dual_norm((X.T @ theta).reshape(G, gs), tau, w))
+    assert dn <= 1.0 + 1e-9
+    assert float(g) >= 0.0

@@ -1,0 +1,148 @@
+//! Ablations called out in DESIGN.md:
+//!
+//! 1. lambda_critic (Sec. 3.1): measured dead zone of the static El Ghaoui
+//!    rule vs the closed-form prediction.
+//! 2. Screening cadence f_ce: path time as a function of how often the
+//!    duality gap is evaluated (paper fixes f_ce = 10).
+//! 3. Warm-start strategies: standard vs active vs strong (Sec. 3.4/3.6).
+//! 4. Solver-agnosticism (Sec. 3.3): Gap Safe accelerating FISTA, and the
+//!    Blitz-like working-set comparator (Sec. 5.1).
+
+#[path = "common.rs"]
+mod common;
+
+use gapsafe::coordinator::time_to_convergence;
+use gapsafe::data::synth;
+use gapsafe::penalty::ActiveSet;
+use gapsafe::screening::{Rule, StaticElGhaouiRule, ScreeningRule};
+use gapsafe::solver::ista::solve_fista;
+use gapsafe::solver::path::{lambda_grid, scaled_eps, WarmStart};
+use gapsafe::solver::working_set::{solve_working_set, WorkingSetOptions};
+use gapsafe::solver::{solve_fixed_lambda, SolveOptions};
+use gapsafe::util::{write_csv, Stopwatch};
+use gapsafe::{build_problem, Task};
+
+fn main() {
+    common::banner("ablation", "lambda_critic, f_ce cadence, warm starts, solver-agnosticism");
+    let ds = synth::leukemia_like_scaled(72, 1500, 42, false);
+    let prob = build_problem(ds, Task::Lasso).unwrap();
+    let lam_max = prob.lambda_max();
+
+    // ---- 1. lambda_critic ------------------------------------------------
+    println!("\n-- ablation 1: static-rule dead zone (Sec. 3.1) --");
+    let crit = StaticElGhaouiRule::lambda_critic(&prob, lam_max);
+    println!("closed-form lambda_critic / lambda_max = {:.4}", crit / lam_max);
+    let lambdas = lambda_grid(lam_max, 40, 2.0);
+    let mut rows = Vec::new();
+    let mut measured_crit = 0.0f64;
+    for &lam in &lambdas {
+        let mut rule = StaticElGhaouiRule::new();
+        let mut active = ActiveSet::full(prob.pen.groups());
+        rule.begin_lambda(&prob, lam, lam_max, None, &mut active);
+        let frac = active.n_active_feats() as f64 / prob.p() as f64;
+        if frac < 1.0 {
+            measured_crit = lam;
+        }
+        rows.push(vec![format!("{lam}"), format!("{}", lam / lam_max), format!("{frac}")]);
+    }
+    println!("smallest lambda with any static screening / lambda_max = {:.4}", measured_crit / lam_max);
+    write_csv(&common::results_dir().join("ablation_lambda_critic.csv"),
+        &["lambda", "lambda_ratio", "active_fraction"], &rows).unwrap();
+
+    // ---- 2. screening cadence f_ce ---------------------------------------
+    println!("\n-- ablation 2: screening cadence f_ce (paper default 10) --");
+    let mut rows = Vec::new();
+    for fce in [1usize, 2, 5, 10, 20, 50] {
+        let lam = 0.05 * lam_max;
+        let opts = SolveOptions {
+            eps: scaled_eps(&prob, 1e-8),
+            screen_every: fce,
+            ..Default::default()
+        };
+        let (mean, _min) = common::time_it(3, || {
+            let mut rule = Rule::GapSafeDyn.build();
+            let res = solve_fixed_lambda(&prob, lam, rule.as_mut(), &opts);
+            assert!(res.converged);
+        });
+        println!("f_ce = {fce:>3}: {mean:>8.4}s per solve");
+        rows.push(vec![fce.to_string(), format!("{mean}")]);
+    }
+    write_csv(&common::results_dir().join("ablation_fce.csv"), &["f_ce", "seconds"], &rows)
+        .unwrap();
+
+    // ---- 3. warm starts ---------------------------------------------------
+    println!("\n-- ablation 3: warm-start strategies on the path --");
+    let cells = time_to_convergence(
+        &prob,
+        &[
+            (Rule::GapSafeFull, WarmStart::Standard),
+            (Rule::GapSafeFull, WarmStart::Active),
+            (Rule::Strong, WarmStart::Strong),
+        ],
+        &[1e-6],
+        40,
+        3.0,
+        50_000,
+    );
+    for c in &cells {
+        println!(
+            "{:<28} {:>8.3}s (converged: {})",
+            format!("{}+{}", c.rule.label(), c.warm.label()),
+            c.seconds,
+            c.all_converged
+        );
+    }
+    gapsafe::coordinator::report::write_timing_csv(
+        &common::results_dir().join("ablation_warm_start.csv"),
+        &cells,
+    )
+    .unwrap();
+
+    // ---- 4. solver-agnosticism -------------------------------------------
+    println!("\n-- ablation 4: Gap Safe with FISTA / working sets --");
+    let lam = 0.1 * lam_max;
+    let opts = SolveOptions { eps: scaled_eps(&prob, 1e-6), max_epochs: 100_000, ..Default::default() };
+    let mut rows = Vec::new();
+    for (name, f) in [
+        (
+            "fista+none",
+            Box::new(|| {
+                let mut r = Rule::None.build();
+                solve_fista(&prob, lam, r.as_mut(), &opts).converged
+            }) as Box<dyn Fn() -> bool>,
+        ),
+        (
+            "fista+gap-dyn",
+            Box::new(|| {
+                let mut r = Rule::GapSafeDyn.build();
+                solve_fista(&prob, lam, r.as_mut(), &opts).converged
+            }),
+        ),
+        (
+            "cd+gap-dyn",
+            Box::new(|| {
+                let mut r = Rule::GapSafeDyn.build();
+                solve_fixed_lambda(&prob, lam, r.as_mut(), &opts).converged
+            }),
+        ),
+        (
+            "working-set(blitz-like)",
+            Box::new(|| {
+                let ws = WorkingSetOptions { inner: opts.clone(), ..Default::default() };
+                solve_working_set(&prob, lam, &ws).converged
+            }),
+        ),
+    ] {
+        let sw = Stopwatch::start();
+        let ok = f();
+        let secs = sw.secs();
+        println!("{name:<26} {secs:>8.3}s (converged: {ok})");
+        rows.push(vec![name.to_string(), format!("{secs}"), ok.to_string()]);
+    }
+    write_csv(
+        &common::results_dir().join("ablation_solvers.csv"),
+        &["solver", "seconds", "converged"],
+        &rows,
+    )
+    .unwrap();
+}

@@ -1,0 +1,41 @@
+//! Shared bench harness (the offline registry has no criterion): warmup +
+//! repeated timing with mean/min reporting, plus helpers to emit the
+//! paper-style tables and results/*.csv.
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+/// Time a closure `reps` times after one warmup; returns (mean, min) seconds.
+pub fn time_it<F: FnMut()>(reps: usize, mut f: F) -> (f64, f64) {
+    f(); // warmup
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    (mean, min)
+}
+
+/// True when the full-size paper workloads were requested.
+pub fn full_size() -> bool {
+    std::env::var("GAPSAFE_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Results directory (created).
+pub fn results_dir() -> std::path::PathBuf {
+    let d = std::path::PathBuf::from("results");
+    let _ = std::fs::create_dir_all(&d);
+    d
+}
+
+pub fn banner(name: &str, detail: &str) {
+    println!("\n================================================================");
+    println!("bench: {name}");
+    println!("{detail}");
+    println!("(set GAPSAFE_BENCH_FULL=1 for the paper's full-size workloads)");
+    println!("================================================================");
+}

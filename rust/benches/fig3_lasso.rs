@@ -1,0 +1,58 @@
+//! Reproduces Fig. 3: Lasso on the Leukemia-shaped workload.
+//!
+//! Left panel  -> fraction of active variables per (lambda, K) for the
+//!                Gap Safe rule, K = 2..2^9.
+//! Right panel -> time to solve the 100-lambda path (lmax -> lmax/10^3) to
+//!                each duality-gap tolerance, per screening strategy.
+
+#[path = "common.rs"]
+mod common;
+
+use gapsafe::coordinator::{active_fraction_experiment, report, time_to_convergence};
+use gapsafe::data::synth;
+use gapsafe::screening::Rule;
+use gapsafe::solver::path::{lambda_grid, WarmStart};
+use gapsafe::{build_problem, Task};
+
+fn main() {
+    let full = common::full_size();
+    let (ds, n_lambdas, eps_list): (_, usize, Vec<f64>) = if full {
+        (synth::leukemia_like(42, false), 100, vec![1e-2, 1e-4, 1e-6, 1e-8])
+    } else {
+        (synth::leukemia_like_scaled(72, 2000, 42, false), 50, vec![1e-2, 1e-4, 1e-6])
+    };
+    common::banner(
+        "fig3_lasso",
+        &format!("Lasso path on {} ({} lambdas, delta=3)", ds.name, n_lambdas),
+    );
+    let prob = build_problem(ds, Task::Lasso).unwrap();
+    let delta = 3.0;
+
+    // ---- left panel ----
+    let budgets: Vec<usize> = (1..=9).map(|e| 1usize << e).collect();
+    let rows =
+        active_fraction_experiment(&prob, Rule::GapSafeFull, &budgets, n_lambdas, delta, 10);
+    let lambdas = lambda_grid(prob.lambda_max(), n_lambdas, delta);
+    report::print_active_fraction("Fig3-left (Gap Safe dynamic)", &lambdas, &rows);
+    report::write_active_fraction_csv(
+        &common::results_dir().join("fig3_active_fraction.csv"),
+        &lambdas,
+        &rows,
+    )
+    .unwrap();
+
+    // ---- right panel ----
+    let strategies = [
+        (Rule::None, WarmStart::Standard),
+        (Rule::StaticElGhaoui, WarmStart::Standard),
+        (Rule::Dst3, WarmStart::Standard),
+        (Rule::DynamicBonnefoy, WarmStart::Standard),
+        (Rule::GapSafeSeq, WarmStart::Standard),
+        (Rule::GapSafeFull, WarmStart::Standard),
+        (Rule::GapSafeFull, WarmStart::Active),
+        (Rule::Strong, WarmStart::Strong),
+    ];
+    let cells = time_to_convergence(&prob, &strategies, &eps_list, n_lambdas, delta, 20_000);
+    report::print_timing("Fig3-right", &cells);
+    report::write_timing_csv(&common::results_dir().join("fig3_timing.csv"), &cells).unwrap();
+}

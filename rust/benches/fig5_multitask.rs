@@ -1,0 +1,51 @@
+//! Reproduces Fig. 5: l1/l2 multi-task regression on the MEG/EEG-like
+//! workload (q = 20 time instants). Compares Gap Safe against the dynamic
+//! safe rule of Bonnefoy et al. and no screening, over gap tolerances
+//! 1e-2 .. 1e-8 (right panel).
+
+#[path = "common.rs"]
+mod common;
+
+use gapsafe::coordinator::{active_fraction_experiment, report, time_to_convergence};
+use gapsafe::data::synth;
+use gapsafe::screening::Rule;
+use gapsafe::solver::path::{lambda_grid, WarmStart};
+use gapsafe::{build_problem, Task};
+
+fn main() {
+    let full = common::full_size();
+    let (ds, n_lambdas, eps_list): (_, usize, Vec<f64>) = if full {
+        (synth::meg_like(360, 22_494, 20, 42), 100, vec![1e-2, 1e-4, 1e-6, 1e-8])
+    } else {
+        (synth::meg_like(120, 1500, 10, 42), 30, vec![1e-2, 1e-4, 1e-6])
+    };
+    common::banner(
+        "fig5_multitask",
+        &format!("multi-task path on {} ({} lambdas, delta=2)", ds.name, n_lambdas),
+    );
+    let prob = build_problem(ds, Task::MultiTask).unwrap();
+    let delta = 2.0;
+
+    let budgets: Vec<usize> = (1..=8).map(|e| 1usize << e).collect();
+    let rows =
+        active_fraction_experiment(&prob, Rule::GapSafeFull, &budgets, n_lambdas, delta, 10);
+    let lambdas = lambda_grid(prob.lambda_max(), n_lambdas, delta);
+    report::print_active_fraction("Fig5-left (Gap Safe dynamic)", &lambdas, &rows);
+    report::write_active_fraction_csv(
+        &common::results_dir().join("fig5_active_fraction.csv"),
+        &lambdas,
+        &rows,
+    )
+    .unwrap();
+
+    let strategies = [
+        (Rule::None, WarmStart::Standard),
+        (Rule::DynamicBonnefoy, WarmStart::Standard),
+        (Rule::GapSafeSeq, WarmStart::Standard),
+        (Rule::GapSafeFull, WarmStart::Standard),
+        (Rule::GapSafeFull, WarmStart::Active),
+    ];
+    let cells = time_to_convergence(&prob, &strategies, &eps_list, n_lambdas, delta, 20_000);
+    report::print_timing("Fig5-right", &cells);
+    report::write_timing_csv(&common::results_dir().join("fig5_timing.csv"), &cells).unwrap();
+}

@@ -1,0 +1,158 @@
+//! Micro-benchmarks of the numerical hot spots (used by the §Perf pass):
+//! correlation kernel X^T v (native vs PJRT artifact), CD epochs,
+//! epsilon-norm evaluation (sorting vs bisection), and gap passes.
+
+#[path = "common.rs"]
+mod common;
+
+use gapsafe::data::synth;
+use gapsafe::linalg::Mat;
+use gapsafe::penalty::epsilon_norm::{epsilon_norm, epsilon_norm_bisect};
+use gapsafe::penalty::ActiveSet;
+use gapsafe::runtime::PjrtEngine;
+use gapsafe::util::prng::Prng;
+use gapsafe::util::write_csv;
+use gapsafe::{build_problem, Task};
+
+fn main() {
+    common::banner("kernels", "hot-spot micro-benchmarks (native + PJRT)");
+    let mut rows = Vec::new();
+
+    // ---- X^T v (the screening hot spot) -----------------------------------
+    let ds = synth::leukemia_like(42, false);
+    let prob = build_problem(ds, Task::Lasso).unwrap();
+    let (n, p) = (prob.n(), prob.p());
+    let mut rng = Prng::new(1);
+    let v: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+    let mut out = vec![0.0; p];
+    let (mean, min) = common::time_it(20, || {
+        prob.x.xtv(&v, &mut out);
+        std::hint::black_box(&out);
+    });
+    let flops = 2.0 * n as f64 * p as f64;
+    println!(
+        "xtv native     (n={n}, p={p}): mean {:.3} ms  ({:.2} GFLOP/s)",
+        mean * 1e3,
+        flops / min / 1e9
+    );
+    rows.push(vec!["xtv_native".into(), format!("{mean}"), format!("{min}")]);
+
+    // ---- full gap pass native ---------------------------------------------
+    let beta = Mat::zeros(p, 1);
+    let z = prob.predict(&beta);
+    let active = ActiveSet::full(prob.pen.groups());
+    let lam = 0.1 * prob.lambda_max();
+    let (mean, min) = common::time_it(20, || {
+        std::hint::black_box(prob.gap_pass(&beta, &z, lam, &active));
+    });
+    println!("gap pass native (full active): mean {:.3} ms", mean * 1e3);
+    rows.push(vec!["gap_native_full".into(), format!("{mean}"), format!("{min}")]);
+
+    // restricted active set (the Sec. 2.2.2 trick)
+    let mut restricted = ActiveSet::full(prob.pen.groups());
+    for g in 0..prob.n_groups() {
+        if g % 20 != 0 {
+            restricted.kill_group(prob.pen.groups(), g);
+        }
+    }
+    let (mean, _) = common::time_it(20, || {
+        std::hint::black_box(prob.gap_pass(&beta, &z, lam, &restricted));
+    });
+    println!(
+        "gap pass native (5% active):   mean {:.3} ms (active-set trick, Sec. 2.2.2)",
+        mean * 1e3
+    );
+    rows.push(vec!["gap_native_5pct".into(), format!("{mean}"), String::new()]);
+
+    // ---- PJRT gap pass ------------------------------------------------------
+    match PjrtEngine::new(std::path::Path::new("artifacts"))
+        .and_then(|e| e.bind(&prob, "lasso").map(|exe| (e, exe)))
+    {
+        Ok((_engine, exe)) => {
+            let (mean, min) = common::time_it(10, || {
+                std::hint::black_box(exe.gap_pass(&prob, &beta, lam).unwrap());
+            });
+            println!("gap pass PJRT  (artifact {}): mean {:.3} ms", exe.name(), mean * 1e3);
+            rows.push(vec!["gap_pjrt_full".into(), format!("{mean}"), format!("{min}")]);
+        }
+        Err(e) => println!("PJRT gap pass skipped ({e:#}) — run `make artifacts`"),
+    }
+
+    // ---- CD epoch -----------------------------------------------------------
+    use gapsafe::screening::NoScreening;
+    use gapsafe::solver::{solve_fixed_lambda, SolveOptions};
+    let opts = SolveOptions { eps: 0.0, max_epochs: 10, screen_every: 11, ..Default::default() };
+    let (mean, _) = common::time_it(5, || {
+        let mut r = NoScreening;
+        std::hint::black_box(solve_fixed_lambda(&prob, lam, &mut r, &opts));
+    });
+    println!("10 CD epochs (full active set): mean {:.3} ms", mean * 1e3);
+    rows.push(vec!["cd_10_epochs_full".into(), format!("{mean}"), String::new()]);
+
+    // ---- multi-task gap pass (q-fold column traffic) -------------------------
+    {
+        let ds = synth::meg_like(120, 1500, 10, 3);
+        let probm = build_problem(ds, Task::MultiTask).unwrap();
+        let b = Mat::zeros(probm.p(), probm.q());
+        let z = probm.predict(&b);
+        let act = ActiveSet::full(probm.pen.groups());
+        let lamm = 0.2 * probm.lambda_max();
+        let (mean, _) = common::time_it(10, || {
+            std::hint::black_box(probm.gap_pass(&b, &z, lamm, &act));
+        });
+        println!("gap pass multitask (n=120, p=1500, q=10): mean {:.3} ms", mean * 1e3);
+        rows.push(vec!["gap_multitask".into(), format!("{mean}"), String::new()]);
+    }
+
+    // ---- SGL gap pass (epsilon-norm heavy) -----------------------------------
+    {
+        let ds = synth::climate_like(120, 300, 3);
+        let probs = build_problem(ds, Task::SparseGroupLasso { tau: 0.4 }).unwrap();
+        let b = Mat::zeros(probs.p(), 1);
+        let z = probs.predict(&b);
+        let act = ActiveSet::full(probs.pen.groups());
+        let lams = 0.2 * probs.lambda_max();
+        let (mean, _) = common::time_it(10, || {
+            std::hint::black_box(probs.gap_pass(&b, &z, lams, &act));
+        });
+        println!("gap pass SGL (n=120, 300 groups of 7): mean {:.3} ms", mean * 1e3);
+        rows.push(vec!["gap_sgl".into(), format!("{mean}"), String::new()]);
+    }
+
+    // ---- epsilon norm --------------------------------------------------------
+    let xs: Vec<Vec<f64>> = (0..10_000)
+        .map(|i| {
+            let mut r = Prng::new(i as u64);
+            (0..7).map(|_| r.gaussian()).collect()
+        })
+        .collect();
+    let (mean_sort, _) = common::time_it(10, || {
+        let mut acc = 0.0;
+        for x in &xs {
+            acc += epsilon_norm(x, 0.6);
+        }
+        std::hint::black_box(acc);
+    });
+    let (mean_bis, _) = common::time_it(10, || {
+        let mut acc = 0.0;
+        for x in &xs {
+            acc += epsilon_norm_bisect(x, 0.6);
+        }
+        std::hint::black_box(acc);
+    });
+    println!(
+        "epsilon-norm 10k groups of 7: sorting {:.3} ms vs bisection {:.3} ms ({:.1}x)",
+        mean_sort * 1e3,
+        mean_bis * 1e3,
+        mean_bis / mean_sort
+    );
+    rows.push(vec!["epsnorm_sort_10k".into(), format!("{mean_sort}"), String::new()]);
+    rows.push(vec!["epsnorm_bisect_10k".into(), format!("{mean_bis}"), String::new()]);
+
+    write_csv(
+        &common::results_dir().join("kernels_micro.csv"),
+        &["kernel", "mean_seconds", "min_seconds"],
+        &rows,
+    )
+    .unwrap();
+}

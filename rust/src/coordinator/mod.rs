@@ -1,0 +1,204 @@
+//! Experiment coordinator: drives the pathwise solver through the paper's
+//! evaluation protocols (Sec. 5) and collects the series each figure plots.
+
+pub mod cv;
+pub mod report;
+
+use crate::problem::Problem;
+use crate::screening::Rule;
+use crate::solver::path::{lambda_grid, scaled_eps, solve_path, PathConfig, WarmStart};
+use crate::solver::{solve_fixed_lambda_with, SolveOptions};
+use crate::util::Stopwatch;
+
+/// One row of a fraction-of-active-variables experiment (Figs. 3-6 left
+/// panels): for a fixed iteration budget K, the fraction of variables still
+/// active at each lambda of the grid.
+#[derive(Debug, Clone)]
+pub struct ActiveFractionRow {
+    pub k_epochs: usize,
+    /// fraction in [0,1] per lambda index (feature level).
+    pub frac_feats: Vec<f64>,
+    /// group-level fraction (equal to frac_feats for singleton groups).
+    pub frac_groups: Vec<f64>,
+}
+
+/// Run the "fraction of active variables" protocol: solvers run for each
+/// lambda during exactly K epochs (K in `budgets`), with warm starts along
+/// the path, recording the final active-set sizes.
+pub fn active_fraction_experiment(
+    prob: &Problem,
+    rule: Rule,
+    budgets: &[usize],
+    n_lambdas: usize,
+    delta: f64,
+    screen_every: usize,
+) -> Vec<ActiveFractionRow> {
+    let lam_max = prob.lambda_max();
+    let lambdas = lambda_grid(lam_max, n_lambdas, delta);
+    let p = prob.p() as f64;
+    let ng = prob.n_groups() as f64;
+    let mut rows = Vec::new();
+    for &k in budgets {
+        let mut r = rule.build();
+        let mut prev = None;
+        let mut frac_feats = Vec::with_capacity(lambdas.len());
+        let mut frac_groups = Vec::with_capacity(lambdas.len());
+        let opts = SolveOptions {
+            max_epochs: k,
+            screen_every,
+            eps: 0.0, // run the full budget
+            max_kkt_rounds: 3,
+        };
+        for &lam in &lambdas {
+            let beta0 = prev
+                .as_ref()
+                .map(|p: &crate::screening::PrevSolution| p.beta.clone());
+            let res = solve_fixed_lambda_with(
+                prob,
+                lam,
+                lam_max,
+                beta0.as_ref(),
+                None,
+                r.as_mut(),
+                prev.as_ref(),
+                &opts,
+            );
+            frac_feats.push(res.active.n_active_feats() as f64 / p);
+            frac_groups.push(res.active.n_active_groups() as f64 / ng);
+            prev = Some(crate::screening::PrevSolution {
+                lam,
+                loss: prob.fit.loss(&res.z),
+                pen_value: prob.pen.value(&res.beta),
+                z: res.z,
+                theta: res.theta,
+                active: res.active,
+                beta: res.beta,
+            });
+        }
+        rows.push(ActiveFractionRow { k_epochs: k, frac_feats, frac_groups });
+    }
+    rows
+}
+
+/// One cell of a time-to-convergence table (Figs. 3-6 right panels).
+#[derive(Debug, Clone)]
+pub struct TimingCell {
+    pub rule: Rule,
+    pub warm: WarmStart,
+    pub eps: f64,
+    pub seconds: f64,
+    pub all_converged: bool,
+    pub total_epochs: usize,
+}
+
+/// Time the full path at each requested duality-gap tolerance for each
+/// (rule, warm-start) strategy.
+pub fn time_to_convergence(
+    prob: &Problem,
+    strategies: &[(Rule, WarmStart)],
+    eps_list: &[f64],
+    n_lambdas: usize,
+    delta: f64,
+    max_epochs: usize,
+) -> Vec<TimingCell> {
+    let mut cells = Vec::new();
+    for &(rule, warm) in strategies {
+        for &eps in eps_list {
+            let cfg = PathConfig {
+                n_lambdas,
+                delta,
+                rule,
+                warm,
+                eps,
+                eps_is_absolute: false,
+                max_epochs,
+                screen_every: 10,
+            };
+            let sw = Stopwatch::start();
+            let res = solve_path(prob, &cfg);
+            cells.push(TimingCell {
+                rule,
+                warm,
+                eps,
+                seconds: sw.secs(),
+                all_converged: res.points.iter().all(|p| p.converged),
+                total_epochs: res.points.iter().map(|p| p.epochs).sum(),
+            });
+        }
+    }
+    cells
+}
+
+/// Equicorrelation-set identification diagnostic (Prop. 6): epochs until
+/// the safe active set stabilises to its final value.
+pub fn identification_epoch(prob: &Problem, rule: Rule, lam: f64, eps: f64) -> Option<usize> {
+    let lam_max = prob.lambda_max();
+    let mut r = rule.build();
+    let opts = SolveOptions {
+        max_epochs: 100_000,
+        screen_every: 10,
+        eps: scaled_eps(prob, eps),
+        max_kkt_rounds: 5,
+    };
+    let res = solve_fixed_lambda_with(prob, lam, lam_max, None, None, r.as_mut(), None, &opts);
+    if !res.converged {
+        return None;
+    }
+    let final_active = res.screen_trace.last()?.2;
+    // first epoch index whose trace entry already equals the final count
+    res.screen_trace
+        .iter()
+        .find(|&&(_, _, feats)| feats == final_active)
+        .map(|&(epoch, _, _)| epoch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::{build_problem, Task};
+
+    #[test]
+    fn active_fraction_monotone_in_budget() {
+        let ds = synth::leukemia_like_scaled(24, 60, 3, false);
+        let prob = build_problem(ds, Task::Lasso).unwrap();
+        let rows =
+            active_fraction_experiment(&prob, Rule::GapSafeDyn, &[2, 64], 8, 2.0, 2);
+        assert_eq!(rows.len(), 2);
+        // more iterations -> tighter gap -> (weakly) more screening on average
+        let avg = |r: &ActiveFractionRow| {
+            r.frac_feats.iter().sum::<f64>() / r.frac_feats.len() as f64
+        };
+        assert!(
+            avg(&rows[1]) <= avg(&rows[0]) + 1e-9,
+            "K=64 screened less than K=2: {} vs {}",
+            avg(&rows[1]),
+            avg(&rows[0])
+        );
+    }
+
+    #[test]
+    fn timing_table_shapes() {
+        let ds = synth::leukemia_like_scaled(20, 40, 4, false);
+        let prob = build_problem(ds, Task::Lasso).unwrap();
+        let cells = time_to_convergence(
+            &prob,
+            &[(Rule::None, WarmStart::Standard), (Rule::GapSafeFull, WarmStart::Standard)],
+            &[1e-4, 1e-6],
+            6,
+            2.0,
+            5000,
+        );
+        assert_eq!(cells.len(), 4);
+        assert!(cells.iter().all(|c| c.all_converged));
+    }
+
+    #[test]
+    fn identification_happens() {
+        let ds = synth::leukemia_like_scaled(24, 50, 5, false);
+        let prob = build_problem(ds, Task::Lasso).unwrap();
+        let lam = 0.3 * prob.lambda_max();
+        let e = identification_epoch(&prob, Rule::GapSafeDyn, lam, 1e-10);
+        assert!(e.is_some());
+    }
+}

@@ -1,0 +1,167 @@
+//! Report emitters: paper-style console tables and results/*.csv series.
+
+use super::{ActiveFractionRow, TimingCell};
+use crate::util::{fmt_secs, write_csv};
+use std::path::Path;
+
+/// Print a Fig. 3/4/5-left style table: rows = iteration budgets, columns =
+/// a subsample of the lambda grid, cells = active fraction.
+pub fn print_active_fraction(title: &str, lambdas: &[f64], rows: &[ActiveFractionRow]) {
+    println!("\n== {title}: fraction of active variables ==");
+    let cols: Vec<usize> = sample_indices(lambdas.len(), 8);
+    print!("{:>8}", "K\\l/lmax");
+    for &c in &cols {
+        print!("{:>9.3}", lambdas[c] / lambdas[0]);
+    }
+    println!();
+    for row in rows {
+        print!("{:>8}", row.k_epochs);
+        for &c in &cols {
+            print!("{:>9.3}", row.frac_feats[c]);
+        }
+        println!();
+    }
+}
+
+/// Write the full active-fraction series to CSV (one row per (K, lambda)).
+pub fn write_active_fraction_csv(
+    path: &Path,
+    lambdas: &[f64],
+    rows: &[ActiveFractionRow],
+) -> std::io::Result<()> {
+    let mut out = Vec::new();
+    for row in rows {
+        for (t, &lam) in lambdas.iter().enumerate() {
+            out.push(vec![
+                row.k_epochs.to_string(),
+                t.to_string(),
+                format!("{lam}"),
+                format!("{}", lam / lambdas[0]),
+                format!("{}", row.frac_feats[t]),
+                format!("{}", row.frac_groups[t]),
+            ]);
+        }
+    }
+    write_csv(
+        path,
+        &["k_epochs", "lambda_idx", "lambda", "lambda_ratio", "frac_feats", "frac_groups"],
+        &out,
+    )
+}
+
+/// Print a Fig. 3/4/5/6-right style table: time to solve the whole path per
+/// strategy and tolerance, with speed-ups vs the no-screening baseline.
+pub fn print_timing(title: &str, cells: &[TimingCell]) {
+    println!("\n== {title}: path time to convergence ==");
+    let mut eps_list: Vec<f64> = cells.iter().map(|c| c.eps).collect();
+    eps_list.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    eps_list.dedup();
+    print!("{:<28}", "strategy\\eps");
+    for e in &eps_list {
+        print!("{:>12.0e}", e);
+    }
+    println!("{:>10}", "speedup");
+    let mut seen = Vec::new();
+    for c in cells {
+        let key = (c.rule, c.warm);
+        if seen.contains(&key) {
+            continue;
+        }
+        seen.push(key);
+        let label = format!("{}+{}", c.rule.label(), c.warm.label());
+        print!("{label:<28}");
+        let mut last_secs = None;
+        for e in &eps_list {
+            if let Some(cell) = cells
+                .iter()
+                .find(|x| x.rule == c.rule && x.warm == c.warm && x.eps == *e)
+            {
+                let mark = if cell.all_converged { "" } else { "*" };
+                print!("{:>12}", format!("{}{}", fmt_secs(cell.seconds), mark));
+                last_secs = Some(cell.seconds);
+            } else {
+                print!("{:>12}", "-");
+            }
+        }
+        // speedup vs no-screening at the tightest tolerance
+        let base = cells
+            .iter()
+            .filter(|x| {
+                x.rule == crate::screening::Rule::None && x.eps == *eps_list.last().unwrap()
+            })
+            .map(|x| x.seconds)
+            .next();
+        match (base, last_secs) {
+            (Some(b), Some(s)) if s > 0.0 => println!("{:>9.1}x", b / s),
+            _ => println!("{:>10}", "-"),
+        }
+    }
+    println!("(* = at least one path point hit the epoch cap before the gap target)");
+}
+
+/// CSV dump of a timing table.
+pub fn write_timing_csv(path: &Path, cells: &[TimingCell]) -> std::io::Result<()> {
+    let rows: Vec<Vec<String>> = cells
+        .iter()
+        .map(|c| {
+            vec![
+                c.rule.label().to_string(),
+                c.warm.label().to_string(),
+                format!("{:e}", c.eps),
+                format!("{}", c.seconds),
+                c.all_converged.to_string(),
+                c.total_epochs.to_string(),
+            ]
+        })
+        .collect();
+    write_csv(
+        path,
+        &["rule", "warm_start", "eps", "seconds", "converged", "total_epochs"],
+        &rows,
+    )
+}
+
+fn sample_indices(len: usize, k: usize) -> Vec<usize> {
+    if len <= k {
+        return (0..len).collect();
+    }
+    (0..k).map(|i| i * (len - 1) / (k - 1)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::screening::Rule;
+    use crate::solver::path::WarmStart;
+
+    #[test]
+    fn sample_indices_cover_ends() {
+        let s = sample_indices(100, 8);
+        assert_eq!(s[0], 0);
+        assert_eq!(*s.last().unwrap(), 99);
+        assert_eq!(s.len(), 8);
+        assert_eq!(sample_indices(3, 8), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn csv_writers_smoke() {
+        let dir = std::env::temp_dir().join("gapsafe_report_test");
+        let rows = vec![ActiveFractionRow {
+            k_epochs: 4,
+            frac_feats: vec![1.0, 0.5],
+            frac_groups: vec![1.0, 0.5],
+        }];
+        write_active_fraction_csv(&dir.join("af.csv"), &[1.0, 0.5], &rows).unwrap();
+        let cells = vec![TimingCell {
+            rule: Rule::GapSafeFull,
+            warm: WarmStart::Standard,
+            eps: 1e-6,
+            seconds: 0.5,
+            all_converged: true,
+            total_epochs: 100,
+        }];
+        write_timing_csv(&dir.join("tt.csv"), &cells).unwrap();
+        assert!(dir.join("af.csv").exists());
+        assert!(dir.join("tt.csv").exists());
+    }
+}

@@ -1,0 +1,118 @@
+//! Dataset I/O: dense CSV (features..., target[s]) and a binary f64 dump
+//! used to hand matrices to external tools.
+
+use super::Dataset;
+use crate::linalg::sparse::Design;
+use crate::linalg::Mat;
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Save a dense dataset as CSV: one row per sample, feature columns then
+/// `q` target columns (header encodes the split).
+pub fn save_csv(ds: &Dataset, path: &Path) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let x = ds.x.to_dense();
+    let mut f = BufWriter::new(std::fs::File::create(path)?);
+    let mut header: Vec<String> = (0..ds.p()).map(|j| format!("x{j}")).collect();
+    header.extend((0..ds.q()).map(|k| format!("y{k}")));
+    writeln!(f, "{}", header.join(","))?;
+    for i in 0..ds.n() {
+        let mut row: Vec<String> = (0..ds.p()).map(|j| format!("{}", x[(i, j)])).collect();
+        row.extend((0..ds.q()).map(|k| format!("{}", ds.y[(i, k)])));
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Load a CSV produced by [`save_csv`] (header mandatory).
+pub fn load_csv(path: &Path) -> std::io::Result<Dataset> {
+    let f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut lines = f.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "empty csv"))??;
+    let cols: Vec<&str> = header.split(',').collect();
+    let p = cols.iter().filter(|c| c.starts_with('x')).count();
+    let q = cols.iter().filter(|c| c.starts_with('y')).count();
+    if p + q != cols.len() || q == 0 {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "header must be x0..x{p-1},y0..y{q-1}",
+        ));
+    }
+    let mut xs: Vec<f64> = Vec::new();
+    let mut ys: Vec<f64> = Vec::new();
+    let mut n = 0usize;
+    for line in lines {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let vals: Result<Vec<f64>, _> = line.split(',').map(|s| s.trim().parse()).collect();
+        let vals = vals
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, format!("{e}")))?;
+        if vals.len() != p + q {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("row {n} has {} cells, want {}", vals.len(), p + q),
+            ));
+        }
+        xs.extend_from_slice(&vals[..p]);
+        ys.extend_from_slice(&vals[p..]);
+        n += 1;
+    }
+    // xs is row-major; convert
+    let mut x = Mat::zeros(n, p);
+    let mut y = Mat::zeros(n, q);
+    for i in 0..n {
+        for j in 0..p {
+            x[(i, j)] = xs[i * p + j];
+        }
+        for k in 0..q {
+            y[(i, k)] = ys[i * q + k];
+        }
+    }
+    Ok(Dataset {
+        x: Design::Dense(x),
+        y,
+        group_size: None,
+        name: path.display().to_string(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn csv_roundtrip() {
+        let ds = synth::leukemia_like_scaled(6, 4, 1, false);
+        let dir = std::env::temp_dir().join("gapsafe_io_test");
+        let path = dir.join("ds.csv");
+        save_csv(&ds, &path).unwrap();
+        let back = load_csv(&path).unwrap();
+        assert_eq!((back.n(), back.p(), back.q()), (6, 4, 1));
+        let a = ds.x.to_dense();
+        let b = back.x.to_dense();
+        for i in 0..6 {
+            for j in 0..4 {
+                assert!((a[(i, j)] - b[(i, j)]).abs() < 1e-12);
+            }
+        }
+        for i in 0..6 {
+            assert!((ds.y[(i, 0)] - back.y[(i, 0)]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("gapsafe_io_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.csv");
+        std::fs::write(&path, "x0,y0\n1.0\n").unwrap();
+        assert!(load_csv(&path).is_err());
+    }
+}

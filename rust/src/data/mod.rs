@@ -1,0 +1,51 @@
+//! Datasets: containers, synthetic generators standing in for the paper's
+//! workloads (see DESIGN.md §4 Substitutions), preprocessing, and CSV I/O.
+
+pub mod io;
+pub mod preprocess;
+pub mod synth;
+
+use crate::linalg::sparse::Design;
+use crate::linalg::Mat;
+
+/// A supervised dataset: design matrix + targets (+ optional group size).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub x: Design,
+    /// Targets: (n, 1) for scalar tasks, (n, q) for multi-task/multinomial.
+    pub y: Mat,
+    /// Uniform group size when the features have group structure (SGL).
+    pub group_size: Option<usize>,
+    /// Human-readable provenance for reports.
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn p(&self) -> usize {
+        self.x.cols()
+    }
+
+    pub fn q(&self) -> usize {
+        self.y.cols()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_dims() {
+        let d = Dataset {
+            x: Design::Dense(Mat::zeros(5, 7)),
+            y: Mat::zeros(5, 2),
+            group_size: Some(7),
+            name: "t".into(),
+        };
+        assert_eq!((d.n(), d.p(), d.q()), (5, 7, 2));
+    }
+}

@@ -1,0 +1,135 @@
+//! Binary logistic fit (Sec. 4.4, Table 1 col. 3):
+//!   f_i(z) = -y_i z + log(1 + e^z),   y_i in {0, 1},
+//!   f_i^*(u) = Nh(u + y_i),           gamma = 4.
+
+use super::{neg_entropy, sigmoid, softplus, DataFit, FitKind};
+use crate::linalg::Mat;
+
+/// l1-regularised logistic regression data fit.
+#[derive(Debug, Clone)]
+pub struct Logistic {
+    y: Mat,
+}
+
+impl Logistic {
+    /// Labels must be exactly 0.0 or 1.0 (Remark 13: map {-1,+1} via (l+1)/2).
+    pub fn new(y: &[f64]) -> Self {
+        assert!(
+            y.iter().all(|&v| v == 0.0 || v == 1.0),
+            "logistic labels must be in {{0, 1}}"
+        );
+        Logistic { y: Mat::col_vec(y) }
+    }
+}
+
+impl DataFit for Logistic {
+    fn kind(&self) -> FitKind {
+        FitKind::Logistic
+    }
+
+    fn n(&self) -> usize {
+        self.y.rows()
+    }
+
+    fn q(&self) -> usize {
+        1
+    }
+
+    fn gamma(&self) -> f64 {
+        4.0
+    }
+
+    fn loss(&self, z: &Mat) -> f64 {
+        let mut s = 0.0;
+        for (zi, yi) in z.as_slice().iter().zip(self.y.as_slice()) {
+            s += softplus(*zi) - yi * zi;
+        }
+        s
+    }
+
+    fn neg_grad(&self, z: &Mat, out: &mut Mat) {
+        for ((o, zi), yi) in out
+            .as_mut_slice()
+            .iter_mut()
+            .zip(z.as_slice())
+            .zip(self.y.as_slice())
+        {
+            *o = yi - sigmoid(*zi);
+        }
+    }
+
+    fn dual(&self, theta: &Mat, lam: f64) -> f64 {
+        // D(theta) = -sum Nh(y_i - lam theta_i); dom requires the argument
+        // in [0, 1] — guaranteed by the rescaling (Remark 14); clamp the
+        // inevitable 1e-17-scale rounding excursions.
+        let mut s = 0.0;
+        for (ti, yi) in theta.as_slice().iter().zip(self.y.as_slice()) {
+            let u = (yi - lam * ti).clamp(0.0, 1.0);
+            s += neg_entropy(u);
+        }
+        -s
+    }
+
+    fn lipschitz_scale(&self) -> f64 {
+        0.25 // |sigma'| <= 1/4
+    }
+
+    fn targets(&self) -> &Mat {
+        &self.y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn loss_at_zero_is_n_log2() {
+        let fit = Logistic::new(&[0.0, 1.0, 1.0, 0.0]);
+        let z = Mat::zeros(4, 1);
+        assert!((fit.loss(&z) - 4.0 * std::f64::consts::LN_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn residual_at_zero() {
+        let fit = Logistic::new(&[0.0, 1.0]);
+        let z = Mat::zeros(2, 1);
+        let mut rho = Mat::zeros(2, 1);
+        fit.neg_grad(&z, &mut rho);
+        assert_eq!(rho.as_slice(), &[-0.5, 0.5]);
+    }
+
+    #[test]
+    fn dual_bounded_by_zero() {
+        // D(theta) = -sum Nh(.) and Nh >= -log 2, so D <= n log 2; also D <= P always.
+        let mut rng = Prng::new(3);
+        let y: Vec<f64> = (0..6).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect();
+        let fit = Logistic::new(&y);
+        for _ in 0..50 {
+            let th =
+                Mat::col_vec(&(0..6).map(|_| 0.2 * rng.gaussian()).collect::<Vec<_>>());
+            let d = fit.dual(&th, 0.5);
+            assert!(d <= 6.0 * std::f64::consts::LN_2 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn fenchel_young_equality_at_optimum() {
+        // At theta* = -G(z)/lam: f(z) + f*(-lam theta*) = z * grad f(z).
+        let _fit = Logistic::new(&[1.0]);
+        let z = 0.8_f64;
+        let lam = 0.3;
+        let theta = (1.0 - sigmoid(z)) / lam; // = -grad f / lam
+        let f = softplus(z) - z;
+        let fstar = neg_entropy(1.0 - lam * theta); // Nh(-lam theta + y)
+        let grad = sigmoid(z) - 1.0;
+        assert!((f + fstar - z * grad).abs() < 1e-10);
+    }
+
+    #[test]
+    #[should_panic(expected = "labels")]
+    fn rejects_pm1_labels() {
+        let _ = Logistic::new(&[-1.0, 1.0]);
+    }
+}

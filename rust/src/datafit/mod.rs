@@ -1,0 +1,124 @@
+//! Smooth data-fitting terms F(beta) = sum_i f_i(x_i^T beta) (Table 1).
+//!
+//! Each fit provides the five ingredients of the Gap Safe framework:
+//! the loss, the generalized residual rho = -G(X beta) (Remark 2), the dual
+//! objective D_lambda(theta) = -sum_i f_i^*(-lambda theta_i), the strong
+//! smoothness constant gamma (f_i has 1/gamma-Lipschitz gradient, Thm. 2),
+//! and the per-coordinate Lipschitz scale used by the CD solver
+//! (L_j = lipschitz_scale() * ||X_j||_2^2).
+//!
+//! All fits operate on matrices: Z = X B is (n, q) with q = 1 for scalar
+//! tasks. Multi-task / multinomial problems use q > 1 without any special
+//! casing downstream (Sec. 4.5-4.6 reformulations).
+
+mod logistic;
+mod multinomial;
+mod quadratic;
+
+pub use logistic::Logistic;
+pub use multinomial::Multinomial;
+pub use quadratic::Quadratic;
+
+use crate::linalg::Mat;
+
+/// Which family (used to gate regression-only screening rules).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FitKind {
+    Quadratic,
+    Logistic,
+    Multinomial,
+}
+
+/// A smooth, separable data-fitting term.
+pub trait DataFit: Send + Sync {
+    fn kind(&self) -> FitKind;
+
+    /// Number of samples.
+    fn n(&self) -> usize;
+
+    /// Output width q (1 for scalar regression / binary classification).
+    fn q(&self) -> usize;
+
+    /// gamma: each f_i has 1/gamma-Lipschitz gradient (Table 1 row 4).
+    fn gamma(&self) -> f64;
+
+    /// F at linear predictor Z = X B.
+    fn loss(&self, z: &Mat) -> f64;
+
+    /// Generalized residual rho = -G(Z), shape (n, q).
+    fn neg_grad(&self, z: &Mat, out: &mut Mat);
+
+    /// D_lambda(theta) = -sum_i f_i^*(-lambda theta_i).
+    fn dual(&self, theta: &Mat, lam: f64) -> f64;
+
+    /// Per-coordinate Lipschitz factor: L_j = lipschitz_scale() * ||X_j||^2.
+    fn lipschitz_scale(&self) -> f64;
+
+    /// Targets (Y), shape (n, q).
+    fn targets(&self) -> &Mat;
+}
+
+/// Binary negative entropy Nh (Eq. 28) with the 0 log 0 = 0 convention;
+/// +infinity outside [0, 1].
+pub fn neg_entropy(x: f64) -> f64 {
+    if !(0.0..=1.0).contains(&x) {
+        return f64::INFINITY;
+    }
+    let a = if x > 0.0 { x * x.ln() } else { 0.0 };
+    let b = if x < 1.0 { (1.0 - x) * (1.0 - x).ln() } else { 0.0 };
+    a + b
+}
+
+/// log(1 + exp(z)) computed stably.
+pub fn softplus(z: f64) -> f64 {
+    if z > 0.0 {
+        z + (-z).exp().ln_1p()
+    } else {
+        z.exp().ln_1p()
+    }
+}
+
+/// Logistic sigmoid.
+pub fn sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn neg_entropy_basics() {
+        assert_eq!(neg_entropy(0.0), 0.0);
+        assert_eq!(neg_entropy(1.0), 0.0);
+        assert!((neg_entropy(0.5) + std::f64::consts::LN_2).abs() < 1e-12);
+        assert!(neg_entropy(-0.1).is_infinite());
+        assert!(neg_entropy(1.1).is_infinite());
+    }
+
+    #[test]
+    fn softplus_stable() {
+        assert!((softplus(0.0) - std::f64::consts::LN_2).abs() < 1e-12);
+        assert!((softplus(800.0) - 800.0).abs() < 1e-9); // no overflow
+        assert!(softplus(-800.0).abs() < 1e-12);
+        // softplus(z) - softplus(-z) = z
+        for z in [-3.0, -0.5, 0.7, 4.2] {
+            assert!((softplus(z) - softplus(-z) - z).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn sigmoid_stable_and_symmetric() {
+        assert_eq!(sigmoid(0.0), 0.5);
+        assert!(sigmoid(800.0) <= 1.0);
+        assert!(sigmoid(-800.0) >= 0.0);
+        for z in [-5.0, -1.0, 0.3, 2.0] {
+            assert!((sigmoid(z) + sigmoid(-z) - 1.0).abs() < 1e-12);
+        }
+    }
+}

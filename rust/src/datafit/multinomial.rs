@@ -1,0 +1,174 @@
+//! Multinomial logistic fit (Sec. 4.6, Table 1 col. 4):
+//!   f_i(z) = log(sum_k e^{z_k}) - <Y_i, z>,  Y one-hot rows,
+//!   f_i^*(u) = NH(u + Y_i)  (negative entropy on the simplex),  gamma = 1.
+
+use super::{DataFit, FitKind};
+use crate::linalg::Mat;
+
+/// l1/l2 multinomial regression data fit with one-hot targets Y (n, q).
+#[derive(Debug, Clone)]
+pub struct Multinomial {
+    y: Mat,
+}
+
+impl Multinomial {
+    /// `labels[i] in [q]`; builds the one-hot matrix.
+    pub fn from_labels(labels: &[usize], q: usize) -> Self {
+        let n = labels.len();
+        let mut y = Mat::zeros(n, q);
+        for (i, &l) in labels.iter().enumerate() {
+            assert!(l < q, "label out of range");
+            y[(i, l)] = 1.0;
+        }
+        Multinomial { y }
+    }
+
+    /// From an explicit one-hot (or soft) target matrix with rows on the simplex.
+    pub fn new(y: Mat) -> Self {
+        for i in 0..y.rows() {
+            let s: f64 = (0..y.cols()).map(|k| y[(i, k)]).sum();
+            assert!((s - 1.0).abs() < 1e-9, "target rows must sum to 1");
+        }
+        Multinomial { y }
+    }
+}
+
+/// Row-wise log-sum-exp (stable).
+fn lse_row(z: &Mat, i: usize) -> f64 {
+    let q = z.cols();
+    let mut m = f64::NEG_INFINITY;
+    for k in 0..q {
+        m = m.max(z[(i, k)]);
+    }
+    let mut s = 0.0;
+    for k in 0..q {
+        s += (z[(i, k)] - m).exp();
+    }
+    m + s.ln()
+}
+
+impl DataFit for Multinomial {
+    fn kind(&self) -> FitKind {
+        FitKind::Multinomial
+    }
+
+    fn n(&self) -> usize {
+        self.y.rows()
+    }
+
+    fn q(&self) -> usize {
+        self.y.cols()
+    }
+
+    fn gamma(&self) -> f64 {
+        1.0 // Table 1 (the softmax gradient is 1-Lipschitz w.r.t. ||.||_2)
+    }
+
+    fn loss(&self, z: &Mat) -> f64 {
+        let (n, q) = (z.rows(), z.cols());
+        let mut s = 0.0;
+        for i in 0..n {
+            let lse = lse_row(z, i);
+            let mut dot = 0.0;
+            for k in 0..q {
+                dot += self.y[(i, k)] * z[(i, k)];
+            }
+            s += lse - dot;
+        }
+        s
+    }
+
+    fn neg_grad(&self, z: &Mat, out: &mut Mat) {
+        // -G = Y - RowNorm(exp(Z))
+        let (n, q) = (z.rows(), z.cols());
+        for i in 0..n {
+            let lse = lse_row(z, i);
+            for k in 0..q {
+                out[(i, k)] = self.y[(i, k)] - (z[(i, k)] - lse).exp();
+            }
+        }
+    }
+
+    fn dual(&self, theta: &Mat, lam: f64) -> f64 {
+        // D = -sum_i NH(Y_i - lam Theta_i); arguments lie on the simplex by
+        // the rescaling argument of Remark 14 — clamp rounding excursions.
+        let (n, q) = (theta.rows(), theta.cols());
+        let mut s = 0.0;
+        for i in 0..n {
+            for k in 0..q {
+                let u = (self.y[(i, k)] - lam * theta[(i, k)]).clamp(0.0, 1.0);
+                if u > 0.0 {
+                    s += u * u.ln();
+                }
+            }
+        }
+        -s
+    }
+
+    fn lipschitz_scale(&self) -> f64 {
+        0.5 // Hessian of lse is diag(pi) - pi pi^T <= (1/2) I
+    }
+
+    fn targets(&self) -> &Mat {
+        &self.y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loss_at_zero() {
+        let fit = Multinomial::from_labels(&[0, 2, 1], 3);
+        let z = Mat::zeros(3, 3);
+        assert!((fit.loss(&z) - 3.0 * (3.0_f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn neg_grad_rows_sum_to_zero() {
+        let fit = Multinomial::from_labels(&[1, 0], 3);
+        let mut z = Mat::zeros(2, 3);
+        z[(0, 0)] = 1.0;
+        z[(1, 2)] = -0.5;
+        let mut g = Mat::zeros(2, 3);
+        fit.neg_grad(&z, &mut g);
+        for i in 0..2 {
+            let s: f64 = (0..3).map(|k| g[(i, k)]).sum();
+            assert!(s.abs() < 1e-12, "row {i} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn binary_case_matches_logistic() {
+        use crate::datafit::{sigmoid, softplus, DataFit, Logistic};
+        // q=2 multinomial with z = [0, t] equals binary logistic at t.
+        let labels = [1usize, 0];
+        let fit = Multinomial::from_labels(&labels, 2);
+        let ylog = [1.0, 0.0];
+        let lfit = Logistic::new(&ylog);
+        let t = [0.7, -1.2];
+        let mut z2 = Mat::zeros(2, 2);
+        let mut z1 = Mat::zeros(2, 1);
+        for i in 0..2 {
+            z2[(i, 1)] = t[i];
+            z1[(i, 0)] = t[i];
+        }
+        assert!((fit.loss(&z2) - lfit.loss(&z1)).abs() < 1e-12);
+        let mut g2 = Mat::zeros(2, 2);
+        fit.neg_grad(&z2, &mut g2);
+        for i in 0..2 {
+            let want = ylog[i] - sigmoid(t[i]);
+            assert!((g2[(i, 1)] - want).abs() < 1e-12);
+        }
+        let _ = softplus(0.0);
+    }
+
+    #[test]
+    fn dual_at_feasible_points() {
+        let fit = Multinomial::from_labels(&[0, 1], 2);
+        // theta = 0 -> D = -sum NH(Y_i) = 0 (one-hot rows have zero entropy).
+        let th = Mat::zeros(2, 2);
+        assert_eq!(fit.dual(&th, 0.5), 0.0);
+    }
+}

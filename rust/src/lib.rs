@@ -1,0 +1,167 @@
+//! # gapsafe — Gap Safe screening rules for sparsity enforcing penalties
+//!
+//! A production-grade reproduction of Ndiaye, Fercoq, Gramfort & Salmon,
+//! *"Gap Safe screening rules for sparsity enforcing penalties"* (2016/17),
+//! built as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the pathwise sparse-GLM solver framework:
+//!   block coordinate descent ([`solver`]), the complete screening-rule zoo
+//!   ([`screening`]) with Gap Safe static / sequential / dynamic rules as a
+//!   first-class feature, active / strong warm starts ([`solver::path`]),
+//!   and an experiment coordinator ([`coordinator`]) regenerating every
+//!   figure of the paper's evaluation.
+//! * **Layer 2** — JAX duality-gap graphs (`python/compile/model.py`)
+//!   AOT-lowered to HLO text and executed from Rust via PJRT ([`runtime`]).
+//! * **Layer 1** — Pallas column-tiled screening kernels
+//!   (`python/compile/kernels/screen.py`).
+//!
+//! Quick start:
+//!
+//! ```no_run
+//! use gapsafe::prelude::*;
+//!
+//! let ds = gapsafe::data::synth::leukemia_like_scaled(40, 200, 0, false);
+//! let prob = build_problem(ds, Task::Lasso).unwrap();
+//! let cfg = PathConfig::default();
+//! let res = solve_path(&prob, &cfg);
+//! println!("solved {} lambdas", res.points.len());
+//! ```
+
+pub mod coordinator;
+pub mod data;
+pub mod datafit;
+pub mod linalg;
+pub mod penalty;
+pub mod problem;
+pub mod runtime;
+pub mod screening;
+pub mod solver;
+pub mod util;
+
+use data::Dataset;
+use datafit::{Logistic, Multinomial, Quadratic};
+use penalty::{GroupL2, Groups, SparseGroup, L1};
+use problem::Problem;
+
+/// The estimator families of Table 1.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Task {
+    /// l1 least squares (Sec. 4.1).
+    Lasso,
+    /// l1/l2 with contiguous groups of the dataset's `group_size` (Sec. 4.2).
+    GroupLasso,
+    /// Sparse-Group Lasso with trade-off tau (Sec. 4.3).
+    SparseGroupLasso { tau: f64 },
+    /// l1 binary logistic regression (Sec. 4.4).
+    Logreg,
+    /// l1/l2 multi-task regression (Sec. 4.5).
+    MultiTask,
+    /// l1/l2 multinomial regression (Sec. 4.6).
+    Multinomial,
+}
+
+impl Task {
+    pub fn parse(s: &str) -> Result<Task, String> {
+        match s {
+            "lasso" => Ok(Task::Lasso),
+            "group-lasso" | "grouplasso" => Ok(Task::GroupLasso),
+            "logreg" | "logistic" => Ok(Task::Logreg),
+            "multitask" | "multi-task" => Ok(Task::MultiTask),
+            "multinomial" => Ok(Task::Multinomial),
+            s if s.starts_with("sgl") => {
+                let tau = s
+                    .strip_prefix("sgl:")
+                    .map(|t| t.parse::<f64>().map_err(|e| e.to_string()))
+                    .unwrap_or(Ok(0.4))?;
+                Ok(Task::SparseGroupLasso { tau })
+            }
+            other => Err(format!(
+                "unknown task '{other}' (lasso | group-lasso | sgl[:tau] | logreg | multitask | multinomial)"
+            )),
+        }
+    }
+}
+
+/// Assemble a [`Problem`] from a dataset and a task.
+pub fn build_problem(ds: Dataset, task: Task) -> Result<Problem, String> {
+    let p = ds.p();
+    match task {
+        Task::Lasso => Ok(Problem::new(
+            ds.x,
+            Box::new(Quadratic::new(ds.y)),
+            Box::new(L1::new(p)),
+        )),
+        Task::GroupLasso => {
+            let gs = ds.group_size.ok_or("dataset has no group structure")?;
+            Ok(Problem::new(
+                ds.x,
+                Box::new(Quadratic::new(ds.y)),
+                Box::new(GroupL2::new(Groups::contiguous(p, gs))),
+            ))
+        }
+        Task::SparseGroupLasso { tau } => {
+            let gs = ds.group_size.ok_or("dataset has no group structure")?;
+            Ok(Problem::new(
+                ds.x,
+                Box::new(Quadratic::new(ds.y)),
+                Box::new(SparseGroup::with_unit_weights(Groups::contiguous(p, gs), tau)),
+            ))
+        }
+        Task::Logreg => {
+            if ds.q() != 1 {
+                return Err("logreg needs scalar labels".into());
+            }
+            let y: Vec<f64> = ds.y.as_slice().to_vec();
+            Ok(Problem::new(ds.x, Box::new(Logistic::new(&y)), Box::new(L1::new(p))))
+        }
+        Task::MultiTask => Ok(Problem::new(
+            ds.x,
+            Box::new(Quadratic::new(ds.y)),
+            Box::new(GroupL2::new(Groups::singletons(p))),
+        )),
+        Task::Multinomial => Ok(Problem::new(
+            ds.x,
+            Box::new(Multinomial::new(ds.y)),
+            Box::new(GroupL2::new(Groups::singletons(p))),
+        )),
+    }
+}
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::build_problem;
+    pub use crate::coordinator::report;
+    pub use crate::data::{synth, Dataset};
+    pub use crate::penalty::ActiveSet;
+    pub use crate::problem::Problem;
+    pub use crate::screening::Rule;
+    pub use crate::solver::path::{solve_path, PathConfig, WarmStart};
+    pub use crate::solver::{solve_fixed_lambda, SolveOptions};
+    pub use crate::Task;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_parse() {
+        assert_eq!(Task::parse("lasso").unwrap(), Task::Lasso);
+        assert_eq!(Task::parse("sgl:0.25").unwrap(), Task::SparseGroupLasso { tau: 0.25 });
+        assert!(Task::parse("nope").is_err());
+    }
+
+    #[test]
+    fn build_problem_all_tasks() {
+        let mut ds = data::synth::leukemia_like_scaled(10, 12, 1, false);
+        ds.group_size = Some(3);
+        assert!(build_problem(ds.clone(), Task::Lasso).is_ok());
+        assert!(build_problem(ds.clone(), Task::GroupLasso).is_ok());
+        assert!(build_problem(ds.clone(), Task::SparseGroupLasso { tau: 0.4 }).is_ok());
+        assert!(build_problem(ds.clone(), Task::MultiTask).is_ok());
+        let dsb = data::synth::leukemia_like_scaled(10, 12, 1, true);
+        assert!(build_problem(dsb, Task::Logreg).is_ok());
+        let (dsm, _) = data::synth::multinomial_like(10, 8, 3, 2);
+        assert!(build_problem(dsm, Task::Multinomial).is_ok());
+    }
+}

@@ -1,0 +1,459 @@
+//! Dense column-major linear algebra substrate.
+//!
+//! The coordinate-descent hot loop needs fast access to individual columns
+//! of the design matrix, so `Mat` is column-major (like Fortran / the
+//! paper's Cython implementation). All the O(np) kernels used by solvers
+//! and screening live here: `gemv`, `xtv` (feature–residual correlations),
+//! column norms, block spectral norms (power iteration), axpy updates.
+
+pub mod sparse;
+
+/// Dense column-major matrix of `f64`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    data: Vec<f64>,
+    rows: usize,
+    cols: usize,
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { data: vec![0.0; rows * cols], rows, cols }
+    }
+
+    /// Build from a column-major buffer.
+    pub fn from_col_major(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Mat { data, rows, cols }
+    }
+
+    /// Build from a row-major buffer (e.g. literals in tests).
+    pub fn from_row_major(rows: usize, cols: usize, data: &[f64]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        let mut m = Mat::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m[(r, c)] = data[r * cols + c];
+            }
+        }
+        m
+    }
+
+    /// Column vector from a slice.
+    pub fn col_vec(v: &[f64]) -> Self {
+        Mat { data: v.to_vec(), rows: v.len(), cols: 1 }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Borrow column `j` as a slice (the point of column-major layout).
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        debug_assert!(j < self.cols);
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Mutable column view.
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        debug_assert!(j < self.cols);
+        &mut self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Whole buffer, column-major.
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Row `i` copied out (rows are strided in column-major layout).
+    pub fn row_copy(&self, i: usize) -> Vec<f64> {
+        (0..self.cols).map(|j| self[(i, j)]).collect()
+    }
+
+    /// Squared Frobenius norm.
+    pub fn frob_sq(&self) -> f64 {
+        dot(&self.data, &self.data)
+    }
+
+    /// Euclidean norm of row `i` (for multi-task row groups).
+    #[inline]
+    pub fn row_norm(&self, i: usize) -> f64 {
+        let mut s = 0.0;
+        for j in 0..self.cols {
+            let v = self[(i, j)];
+            s += v * v;
+        }
+        s.sqrt()
+    }
+
+    /// Fill with zeros.
+    pub fn fill_zero(&mut self) {
+        self.data.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// `self <- other` (shapes must match).
+    pub fn copy_from(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data.copy_from_slice(&other.data);
+    }
+
+    /// Matrix–matrix product `self * b` (naive, test/setup-path only).
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows);
+        let mut out = Mat::zeros(self.rows, b.cols);
+        for j in 0..b.cols {
+            for k in 0..self.cols {
+                let bkj = b[(k, j)];
+                if bkj != 0.0 {
+                    axpy(bkj, self.col(k), out.col_mut(j));
+                }
+            }
+        }
+        out
+    }
+
+    /// Number of structurally nonzero entries (for sparsity reports).
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|&&x| x != 0.0).count()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        &self.data[c * self.rows + r]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        &mut self.data[c * self.rows + r]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Vector kernels
+// ---------------------------------------------------------------------------
+
+/// Dot product (unrolled by 4 for the scalar pipeline; see EXPERIMENTS.md §Perf).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for k in 0..chunks {
+        let i = 4 * k;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in 4 * chunks..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Squared Euclidean norm.
+#[inline]
+pub fn norm_sq(x: &[f64]) -> f64 {
+    dot(x, x)
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(x: &[f64]) -> f64 {
+    norm_sq(x).sqrt()
+}
+
+/// Sup norm.
+#[inline]
+pub fn norm_inf(x: &[f64]) -> f64 {
+    x.iter().fold(0.0, |m, &v| m.max(v.abs()))
+}
+
+/// ell_1 norm.
+#[inline]
+pub fn norm1(x: &[f64]) -> f64 {
+    x.iter().map(|v| v.abs()).sum()
+}
+
+/// Soft-thresholding S_tau (Sec. 2.1), in place.
+#[inline]
+pub fn soft_threshold(x: &mut [f64], tau: f64) {
+    for v in x {
+        let a = v.abs() - tau;
+        *v = if a > 0.0 { v.signum() * a } else { 0.0 };
+    }
+}
+
+/// Scalar soft-threshold.
+#[inline]
+pub fn st(x: f64, tau: f64) -> f64 {
+    let a = x.abs() - tau;
+    if a > 0.0 {
+        x.signum() * a
+    } else {
+        0.0
+    }
+}
+
+/// Block soft-threshold: `v <- v * (1 - tau/||v||)_+`, returning the new norm.
+#[inline]
+pub fn block_soft_threshold(v: &mut [f64], tau: f64) -> f64 {
+    let n = norm2(v);
+    if n <= tau {
+        v.iter_mut().for_each(|x| *x = 0.0);
+        0.0
+    } else {
+        let scale = 1.0 - tau / n;
+        v.iter_mut().for_each(|x| *x *= scale);
+        n - tau
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Matrix kernels
+// ---------------------------------------------------------------------------
+
+/// `out = X * b` (n-vector), walking columns so memory access is unit-stride.
+pub fn gemv(x: &Mat, b: &[f64], out: &mut [f64]) {
+    assert_eq!(x.cols(), b.len());
+    assert_eq!(x.rows(), out.len());
+    out.iter_mut().for_each(|v| *v = 0.0);
+    for j in 0..x.cols() {
+        let bj = b[j];
+        if bj != 0.0 {
+            axpy(bj, x.col(j), out);
+        }
+    }
+}
+
+/// `out[j] = X_j^T v` for all columns — the screening hot spot (L3 native
+/// counterpart of the L1 Pallas `xtv` kernel).
+pub fn xtv(x: &Mat, v: &[f64], out: &mut [f64]) {
+    assert_eq!(x.rows(), v.len());
+    assert_eq!(x.cols(), out.len());
+    for j in 0..x.cols() {
+        out[j] = dot(x.col(j), v);
+    }
+}
+
+/// `out = X^T V` (p×q), for the multi-task case.
+pub fn xtm(x: &Mat, v: &Mat, out: &mut Mat) {
+    assert_eq!(x.rows(), v.rows());
+    assert_eq!(out.rows(), x.cols());
+    assert_eq!(out.cols(), v.cols());
+    for k in 0..v.cols() {
+        let vk = v.col(k);
+        for j in 0..x.cols() {
+            out[(j, k)] = dot(x.col(j), vk);
+        }
+    }
+}
+
+/// Per-column squared Euclidean norms of X.
+pub fn col_norms_sq(x: &Mat) -> Vec<f64> {
+    (0..x.cols()).map(|j| norm_sq(x.col(j))).collect()
+}
+
+/// Spectral norm of the column block `cols` of X via power iteration.
+///
+/// Used for the group operator norms Omega_g^D(X_g) in the sphere tests
+/// (Eq. 8). Deterministic start vector; `iters` defaults are ample because
+/// only an upper-accurate estimate is needed (we add a +1e-12 safety slack
+/// in callers... no: power iteration *under*-estimates, so callers use the
+/// Frobenius norm fallback when safety matters — see `penalty::GroupNorms`).
+pub fn block_spectral_norm(x: &Mat, cols: &[usize], iters: usize) -> f64 {
+    let n = x.rows();
+    if cols.is_empty() || n == 0 {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = (0..cols.len())
+        .map(|i| 1.0 + (i as f64 * 0.618_033_988_749).fract())
+        .collect();
+    let mut u = vec![0.0; n];
+    let mut sigma = 0.0;
+    for _ in 0..iters {
+        // u = X_g v
+        u.iter_mut().for_each(|x| *x = 0.0);
+        for (i, &j) in cols.iter().enumerate() {
+            axpy(v[i], x.col(j), &mut u);
+        }
+        let un = norm2(&u);
+        if un == 0.0 {
+            return 0.0;
+        }
+        u.iter_mut().for_each(|x| *x /= un);
+        // v = X_g^T u
+        for (i, &j) in cols.iter().enumerate() {
+            v[i] = dot(x.col(j), &u);
+        }
+        sigma = norm2(&v);
+        if sigma == 0.0 {
+            return 0.0;
+        }
+        v.iter_mut().for_each(|x| *x /= sigma);
+    }
+    sigma
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn rand_mat(rng: &mut Prng, n: usize, p: usize) -> Mat {
+        let mut m = Mat::zeros(n, p);
+        for v in m.as_mut_slice() {
+            *v = rng.gaussian();
+        }
+        m
+    }
+
+    #[test]
+    fn index_and_col_layout() {
+        let m = Mat::from_row_major(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m[(0, 0)], 1.);
+        assert_eq!(m[(1, 2)], 6.);
+        assert_eq!(m.col(1), &[2., 5.]);
+        assert_eq!(m.row_copy(0), vec![1., 2., 3.]);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Prng::new(1);
+        for len in [0, 1, 3, 4, 5, 17, 128] {
+            let a: Vec<f64> = (0..len).map(|_| rng.gaussian()).collect();
+            let b: Vec<f64> = (0..len).map(|_| rng.gaussian()).collect();
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-12 * (1.0 + naive.abs()));
+        }
+    }
+
+    #[test]
+    fn gemv_xtv_consistency() {
+        let mut rng = Prng::new(2);
+        let x = rand_mat(&mut rng, 7, 11);
+        let b: Vec<f64> = (0..11).map(|_| rng.gaussian()).collect();
+        let mut z = vec![0.0; 7];
+        gemv(&x, &b, &mut z);
+        // check one entry by hand
+        let z0: f64 = (0..11).map(|j| x[(0, j)] * b[j]).sum();
+        assert!((z[0] - z0).abs() < 1e-12);
+        // X^T (X b) vs column dots
+        let mut c = vec![0.0; 11];
+        xtv(&x, &z, &mut c);
+        for j in 0..11 {
+            assert!((c[j] - dot(x.col(j), &z)).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn xtm_matches_xtv_per_column() {
+        let mut rng = Prng::new(3);
+        let x = rand_mat(&mut rng, 6, 9);
+        let v = rand_mat(&mut rng, 6, 4);
+        let mut out = Mat::zeros(9, 4);
+        xtm(&x, &v, &mut out);
+        for k in 0..4 {
+            let mut col = vec![0.0; 9];
+            xtv(&x, v.col(k), &mut col);
+            for j in 0..9 {
+                assert!((out[(j, k)] - col[j]).abs() < 1e-14);
+            }
+        }
+    }
+
+    #[test]
+    fn soft_threshold_cases() {
+        assert_eq!(st(3.0, 1.0), 2.0);
+        assert_eq!(st(-3.0, 1.0), -2.0);
+        assert_eq!(st(0.5, 1.0), 0.0);
+        let mut v = vec![2.0, -0.5, -4.0];
+        soft_threshold(&mut v, 1.0);
+        assert_eq!(v, vec![1.0, 0.0, -3.0]);
+    }
+
+    #[test]
+    fn block_soft_threshold_cases() {
+        let mut v = vec![3.0, 4.0]; // norm 5
+        let nn = block_soft_threshold(&mut v, 5.0);
+        assert_eq!(nn, 0.0);
+        assert_eq!(v, vec![0.0, 0.0]);
+        let mut v = vec![3.0, 4.0];
+        let nn = block_soft_threshold(&mut v, 2.5);
+        assert!((nn - 2.5).abs() < 1e-12);
+        assert!((norm2(&v) - 2.5).abs() < 1e-12);
+        // direction preserved
+        assert!((v[1] / v[0] - 4.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spectral_norm_identity_block() {
+        // X = I_4: spectral norm of any column block is 1.
+        let mut x = Mat::zeros(4, 4);
+        for i in 0..4 {
+            x[(i, i)] = 1.0;
+        }
+        let s = block_spectral_norm(&x, &[0, 1, 2], 50);
+        assert!((s - 1.0).abs() < 1e-10, "s={s}");
+    }
+
+    #[test]
+    fn spectral_norm_vs_frobenius_bounds() {
+        let mut rng = Prng::new(4);
+        let x = rand_mat(&mut rng, 10, 8);
+        let cols: Vec<usize> = (0..5).collect();
+        let s = block_spectral_norm(&x, &cols, 200);
+        let frob: f64 = cols.iter().map(|&j| norm_sq(x.col(j))).sum::<f64>().sqrt();
+        let colmax = cols.iter().map(|&j| norm2(x.col(j))).fold(0.0_f64, f64::max);
+        assert!(s <= frob + 1e-9, "s={s} frob={frob}");
+        assert!(s >= colmax - 1e-9, "s={s} colmax={colmax}");
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = Mat::from_row_major(2, 2, &[1., 2., 3., 4.]);
+        let b = Mat::from_row_major(2, 2, &[1., 1., 1., 1.]);
+        let c = a.matmul(&b);
+        assert_eq!(c[(0, 0)], 3.0);
+        assert_eq!(c[(1, 1)], 7.0);
+    }
+
+    #[test]
+    fn norms() {
+        let v = [3.0, -4.0];
+        assert_eq!(norm2(&v), 5.0);
+        assert_eq!(norm1(&v), 7.0);
+        assert_eq!(norm_inf(&v), 4.0);
+    }
+}

@@ -1,0 +1,311 @@
+//! Compressed-sparse-column design matrices.
+//!
+//! Several of the paper's benchmark families (bag-of-words text, genomics
+//! one-hot designs) are sparse; CD + screening only ever touches columns,
+//! so CSC gives the same unit-stride access pattern as the dense `Mat`.
+//! `Design` abstracts over both so solvers and screening are written once.
+
+use super::{dot, Mat};
+
+/// CSC sparse matrix (f64 values).
+#[derive(Debug, Clone)]
+pub struct Csc {
+    rows: usize,
+    cols: usize,
+    /// Column start offsets, length cols+1.
+    indptr: Vec<usize>,
+    /// Row indices per nonzero.
+    indices: Vec<usize>,
+    /// Values per nonzero.
+    values: Vec<f64>,
+}
+
+impl Csc {
+    /// Build from (col, row, value) triplets.
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        mut trip: Vec<(usize, usize, f64)>,
+    ) -> Self {
+        trip.sort_by_key(|&(c, r, _)| (c, r));
+        let mut indptr = vec![0usize; cols + 1];
+        let mut indices = Vec::with_capacity(trip.len());
+        let mut values = Vec::with_capacity(trip.len());
+        for &(c, r, v) in &trip {
+            assert!(c < cols && r < rows, "triplet out of bounds");
+            indptr[c + 1] += 1;
+            indices.push(r);
+            values.push(v);
+        }
+        for c in 0..cols {
+            indptr[c + 1] += indptr[c];
+        }
+        Csc { rows, cols, indptr, indices, values }
+    }
+
+    /// Densify a dense matrix into CSC (test helper / converter).
+    pub fn from_dense(m: &Mat) -> Self {
+        let mut trip = Vec::new();
+        for c in 0..m.cols() {
+            for (r, &v) in m.col(c).iter().enumerate() {
+                if v != 0.0 {
+                    trip.push((c, r, v));
+                }
+            }
+        }
+        Csc::from_triplets(m.rows(), m.cols(), trip)
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// (row indices, values) of column j.
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[usize], &[f64]) {
+        let (a, b) = (self.indptr[j], self.indptr[j + 1]);
+        (&self.indices[a..b], &self.values[a..b])
+    }
+
+    /// Sparse dot of column j with a dense vector.
+    #[inline]
+    pub fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
+        let (idx, val) = self.col(j);
+        let mut s = 0.0;
+        for (&i, &x) in idx.iter().zip(val) {
+            s += x * v[i];
+        }
+        s
+    }
+
+    /// `out += alpha * X_j`.
+    #[inline]
+    pub fn col_axpy(&self, j: usize, alpha: f64, out: &mut [f64]) {
+        let (idx, val) = self.col(j);
+        for (&i, &x) in idx.iter().zip(val) {
+            out[i] += alpha * x;
+        }
+    }
+
+    /// Squared norm of column j.
+    pub fn col_norm_sq(&self, j: usize) -> f64 {
+        let (_, val) = self.col(j);
+        dot(val, val)
+    }
+
+    /// Convert back to dense (tests).
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for j in 0..self.cols {
+            let (idx, val) = self.col(j);
+            for (&i, &x) in idx.iter().zip(val) {
+                m[(i, j)] = x;
+            }
+        }
+        m
+    }
+}
+
+/// A design matrix that is either dense (column-major) or sparse (CSC).
+///
+/// Solvers only need: column dot with an n-vector, column axpy into an
+/// n-vector, column squared norms, and (for PJRT) a dense export.
+#[derive(Debug, Clone)]
+pub enum Design {
+    Dense(Mat),
+    Sparse(Csc),
+}
+
+impl Design {
+    pub fn rows(&self) -> usize {
+        match self {
+            Design::Dense(m) => m.rows(),
+            Design::Sparse(s) => s.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            Design::Dense(m) => m.cols(),
+            Design::Sparse(s) => s.cols(),
+        }
+    }
+
+    /// `X_j^T v`.
+    #[inline]
+    pub fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
+        match self {
+            Design::Dense(m) => dot(m.col(j), v),
+            Design::Sparse(s) => s.col_dot(j, v),
+        }
+    }
+
+    /// `out += alpha * X_j`.
+    #[inline]
+    pub fn col_axpy(&self, j: usize, alpha: f64, out: &mut [f64]) {
+        match self {
+            Design::Dense(m) => super::axpy(alpha, m.col(j), out),
+            Design::Sparse(s) => s.col_axpy(j, alpha, out),
+        }
+    }
+
+    /// Per-column squared norms.
+    pub fn col_norms_sq(&self) -> Vec<f64> {
+        match self {
+            Design::Dense(m) => super::col_norms_sq(m),
+            Design::Sparse(s) => (0..s.cols()).map(|j| s.col_norm_sq(j)).collect(),
+        }
+    }
+
+    /// `out[j] = X_j^T v` over all columns.
+    pub fn xtv(&self, v: &[f64], out: &mut [f64]) {
+        match self {
+            Design::Dense(m) => super::xtv(m, v, out),
+            Design::Sparse(s) => {
+                for j in 0..s.cols() {
+                    out[j] = s.col_dot(j, v);
+                }
+            }
+        }
+    }
+
+    /// `out = X b`.
+    pub fn gemv(&self, b: &[f64], out: &mut [f64]) {
+        match self {
+            Design::Dense(m) => super::gemv(m, b, out),
+            Design::Sparse(s) => {
+                out.iter_mut().for_each(|x| *x = 0.0);
+                for j in 0..s.cols() {
+                    if b[j] != 0.0 {
+                        s.col_axpy(j, b[j], out);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Dense view (copies if sparse) — used when exporting to PJRT buffers.
+    pub fn to_dense(&self) -> Mat {
+        match self {
+            Design::Dense(m) => m.clone(),
+            Design::Sparse(s) => s.to_dense(),
+        }
+    }
+
+    /// Spectral norm of a column block (power iteration on the dense path,
+    /// exact sparse implementation mirrors it).
+    pub fn block_spectral_norm(&self, cols: &[usize], iters: usize) -> f64 {
+        match self {
+            Design::Dense(m) => super::block_spectral_norm(m, cols, iters),
+            Design::Sparse(s) => {
+                // Same power iteration over the sparse columns.
+                let n = s.rows();
+                if cols.is_empty() || n == 0 {
+                    return 0.0;
+                }
+                let mut v: Vec<f64> = (0..cols.len())
+                    .map(|i| 1.0 + (i as f64 * 0.618_033_988_749).fract())
+                    .collect();
+                let mut u = vec![0.0; n];
+                let mut sigma = 0.0;
+                for _ in 0..iters {
+                    u.iter_mut().for_each(|x| *x = 0.0);
+                    for (i, &j) in cols.iter().enumerate() {
+                        s.col_axpy(j, v[i], &mut u);
+                    }
+                    let un = super::norm2(&u);
+                    if un == 0.0 {
+                        return 0.0;
+                    }
+                    u.iter_mut().for_each(|x| *x /= un);
+                    for (i, &j) in cols.iter().enumerate() {
+                        v[i] = s.col_dot(j, &u);
+                    }
+                    sigma = super::norm2(&v);
+                    if sigma == 0.0 {
+                        return 0.0;
+                    }
+                    v.iter_mut().for_each(|x| *x /= sigma);
+                }
+                sigma
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn rand_sparse(rng: &mut Prng, n: usize, p: usize, density: f64) -> Csc {
+        let mut trip = Vec::new();
+        for c in 0..p {
+            for r in 0..n {
+                if rng.bernoulli(density) {
+                    trip.push((c, r, rng.gaussian()));
+                }
+            }
+        }
+        Csc::from_triplets(n, p, trip)
+    }
+
+    #[test]
+    fn csc_roundtrip_dense() {
+        let mut rng = Prng::new(5);
+        let s = rand_sparse(&mut rng, 8, 12, 0.3);
+        let d = s.to_dense();
+        let s2 = Csc::from_dense(&d);
+        assert_eq!(s2.to_dense(), d);
+        assert_eq!(s.nnz(), s2.nnz());
+    }
+
+    #[test]
+    fn design_ops_agree_dense_sparse() {
+        let mut rng = Prng::new(6);
+        let s = rand_sparse(&mut rng, 10, 15, 0.4);
+        let dd = Design::Dense(s.to_dense());
+        let ds = Design::Sparse(s);
+        let v: Vec<f64> = (0..10).map(|_| rng.gaussian()).collect();
+        let b: Vec<f64> = (0..15).map(|_| rng.gaussian()).collect();
+        for j in 0..15 {
+            assert!((dd.col_dot(j, &v) - ds.col_dot(j, &v)).abs() < 1e-12);
+        }
+        let (mut z1, mut z2) = (vec![0.0; 10], vec![0.0; 10]);
+        dd.gemv(&b, &mut z1);
+        ds.gemv(&b, &mut z2);
+        for i in 0..10 {
+            assert!((z1[i] - z2[i]).abs() < 1e-12);
+        }
+        let (mut c1, mut c2) = (vec![0.0; 15], vec![0.0; 15]);
+        dd.xtv(&v, &mut c1);
+        ds.xtv(&v, &mut c2);
+        for j in 0..15 {
+            assert!((c1[j] - c2[j]).abs() < 1e-12);
+        }
+        let n1 = dd.col_norms_sq();
+        let n2 = ds.col_norms_sq();
+        for j in 0..15 {
+            assert!((n1[j] - n2[j]).abs() < 1e-12);
+        }
+        let sp1 = dd.block_spectral_norm(&[0, 1, 2, 3], 100);
+        let sp2 = ds.block_spectral_norm(&[0, 1, 2, 3], 100);
+        assert!((sp1 - sp2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_column_ok() {
+        let s = Csc::from_triplets(4, 3, vec![(0, 1, 2.0)]);
+        let (idx, _) = s.col(2);
+        assert!(idx.is_empty());
+        assert_eq!(s.col_norm_sq(2), 0.0);
+    }
+}

@@ -1,0 +1,377 @@
+//! `gapsafe` — launcher / CLI for the Gap Safe screening framework.
+//!
+//! Subcommands (arg parsing is hand-rolled: the offline registry has no clap):
+//!
+//!   gapsafe path      --task lasso --data synth:leukemia --rule gap --warm active --eps 1e-6
+//!   gapsafe solve     --task lasso --data synth:leukemia --lam-ratio 0.1 --rule gap-dyn
+//!   gapsafe fig3|fig4|fig5|fig6    [--small] [--out results/]
+//!   gapsafe selftest  [--artifacts artifacts/]   (PJRT vs native gap check)
+//!   gapsafe artifacts [--artifacts artifacts/]   (list + validate manifest)
+//!   gapsafe lmax      --task ... --data ...
+
+use gapsafe::coordinator::{active_fraction_experiment, report, time_to_convergence};
+use gapsafe::data::{synth, Dataset};
+use gapsafe::penalty::ActiveSet;
+use gapsafe::runtime::{artifact, PjrtEngine};
+use gapsafe::screening::Rule;
+use gapsafe::solver::path::{lambda_grid, solve_path, PathConfig, WarmStart};
+use gapsafe::solver::{solve_fixed_lambda, SolveOptions};
+use gapsafe::{build_problem, Task};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = args.split_first() else {
+        usage();
+        return ExitCode::FAILURE;
+    };
+    let opts = parse_flags(rest);
+    let r = match cmd.as_str() {
+        "path" => cmd_path(&opts),
+        "solve" => cmd_solve(&opts),
+        "fig3" => cmd_fig(&opts, 3),
+        "fig4" => cmd_fig(&opts, 4),
+        "fig5" => cmd_fig(&opts, 5),
+        "fig6" => cmd_fig(&opts, 6),
+        "selftest" => cmd_selftest(&opts),
+        "artifacts" => cmd_artifacts(&opts),
+        "lmax" => cmd_lmax(&opts),
+        "help" | "--help" | "-h" => {
+            usage();
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'")),
+    };
+    match r {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "gapsafe — Gap Safe screening rules (Ndiaye et al., 2017)\n\
+         usage: gapsafe <path|solve|fig3|fig4|fig5|fig6|selftest|artifacts|lmax> [flags]\n\
+         common flags:\n\
+           --task lasso|group-lasso|sgl[:tau]|logreg|multitask|multinomial\n\
+           --data synth:leukemia | synth:meg | synth:climate | csv:<path> | synth:reg:<n>x<p>\n\
+           --rule none|static|elghaoui|dst3|bonnefoy|gap-seq|gap-dyn|gap|strong\n\
+           --warm standard|active|strong     --eps 1e-6   --grid 100   --delta 3\n\
+           --seed 42   --small (shrink figure workloads)   --out results\n\
+           --artifacts artifacts (manifest dir)   --lam-ratio 0.1 (solve)"
+    );
+}
+
+type Flags = HashMap<String, String>;
+
+fn parse_flags(args: &[String]) -> Flags {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            m.insert(key.to_string(), val);
+        }
+        i += 1;
+    }
+    m
+}
+
+fn flag<'a>(o: &'a Flags, k: &str, default: &'a str) -> &'a str {
+    o.get(k).map(String::as_str).unwrap_or(default)
+}
+
+fn flag_f64(o: &Flags, k: &str, default: f64) -> Result<f64, String> {
+    match o.get(k) {
+        Some(v) => v.parse().map_err(|e| format!("--{k}: {e}")),
+        None => Ok(default),
+    }
+}
+
+fn flag_usize(o: &Flags, k: &str, default: usize) -> Result<usize, String> {
+    match o.get(k) {
+        Some(v) => v.parse().map_err(|e| format!("--{k}: {e}")),
+        None => Ok(default),
+    }
+}
+
+fn load_data(spec: &str, seed: u64, small: bool) -> Result<Dataset, String> {
+    match spec {
+        "synth:leukemia" => Ok(if small {
+            synth::leukemia_like_scaled(48, 500, seed, false)
+        } else {
+            synth::leukemia_like(seed, false)
+        }),
+        "synth:leukemia-binary" => Ok(if small {
+            synth::leukemia_like_scaled(48, 500, seed, true)
+        } else {
+            synth::leukemia_like(seed, true)
+        }),
+        "synth:meg" => Ok(if small {
+            synth::meg_like(60, 400, 8, seed)
+        } else {
+            synth::meg_like(360, 5000, 20, seed)
+        }),
+        "synth:climate" => Ok(if small {
+            synth::climate_like(60, 100, seed)
+        } else {
+            synth::climate_like(200, 1000, seed)
+        }),
+        s if s.starts_with("csv:") => {
+            gapsafe::data::io::load_csv(Path::new(&s[4..])).map_err(|e| e.to_string())
+        }
+        s if s.starts_with("synth:reg:") => {
+            let dims = &s["synth:reg:".len()..];
+            let (n, p) = dims
+                .split_once('x')
+                .ok_or("use synth:reg:<n>x<p>")?;
+            let cfg = synth::SynthConfig {
+                n: n.parse().map_err(|e| format!("{e}"))?,
+                p: p.parse().map_err(|e| format!("{e}"))?,
+                k_sparse: 20,
+                corr: 0.5,
+                noise: 0.5,
+                seed,
+            };
+            Ok(synth::regression(&cfg).0)
+        }
+        other => Err(format!("unknown data spec '{other}'")),
+    }
+}
+
+fn cmd_path(o: &Flags) -> Result<(), String> {
+    let seed = flag_usize(o, "seed", 42)? as u64;
+    let small = o.contains_key("small");
+    let ds = load_data(flag(o, "data", "synth:leukemia"), seed, small)?;
+    let task = Task::parse(flag(o, "task", "lasso"))?;
+    let prob = build_problem(ds, task)?;
+    let cfg = PathConfig {
+        n_lambdas: flag_usize(o, "grid", 100)?,
+        delta: flag_f64(o, "delta", 3.0)?,
+        rule: Rule::parse(flag(o, "rule", "gap"))?,
+        warm: WarmStart::parse(flag(o, "warm", "standard"))?,
+        eps: flag_f64(o, "eps", 1e-6)?,
+        eps_is_absolute: false,
+        max_epochs: flag_usize(o, "max-epochs", 10_000)?,
+        screen_every: flag_usize(o, "fce", 10)?,
+    };
+    let res = solve_path(&prob, &cfg);
+    println!(
+        "{:>4} {:>12} {:>10} {:>8} {:>8} {:>8} {:>10}",
+        "t", "lambda", "gap", "epochs", "active", "nnz", "seconds"
+    );
+    for (t, p) in res.points.iter().enumerate() {
+        println!(
+            "{:>4} {:>12.5e} {:>10.2e} {:>8} {:>8} {:>8} {:>10.4}",
+            t, p.lam, p.gap, p.epochs, p.n_active_feats, p.nnz, p.seconds
+        );
+    }
+    println!(
+        "path: {} lambdas in {:.3}s (rule={}, warm={})",
+        res.points.len(),
+        res.total_seconds,
+        cfg.rule.label(),
+        cfg.warm.label()
+    );
+    Ok(())
+}
+
+fn cmd_solve(o: &Flags) -> Result<(), String> {
+    let seed = flag_usize(o, "seed", 42)? as u64;
+    let ds = load_data(flag(o, "data", "synth:leukemia"), seed, o.contains_key("small"))?;
+    let task = Task::parse(flag(o, "task", "lasso"))?;
+    let prob = build_problem(ds, task)?;
+    let lam = flag_f64(o, "lam-ratio", 0.1)? * prob.lambda_max();
+    let mut rule = Rule::parse(flag(o, "rule", "gap-dyn"))?.build();
+    let opts = SolveOptions {
+        eps: gapsafe::solver::path::scaled_eps(&prob, flag_f64(o, "eps", 1e-6)?),
+        max_epochs: flag_usize(o, "max-epochs", 10_000)?,
+        screen_every: flag_usize(o, "fce", 10)?,
+        max_kkt_rounds: 20,
+    };
+    let res = solve_fixed_lambda(&prob, lam, rule.as_mut(), &opts);
+    println!(
+        "lam={lam:.5e} gap={:.3e} epochs={} active={}/{} nnz={} converged={}",
+        res.gap,
+        res.epochs,
+        res.active.n_active_feats(),
+        prob.p(),
+        res.beta.nnz(),
+        res.converged
+    );
+    Ok(())
+}
+
+fn fig_strategies(fig: u8) -> Vec<(Rule, WarmStart)> {
+    match fig {
+        3 => vec![
+            (Rule::None, WarmStart::Standard),
+            (Rule::StaticElGhaoui, WarmStart::Standard),
+            (Rule::Dst3, WarmStart::Standard),
+            (Rule::GapSafeSeq, WarmStart::Standard),
+            (Rule::GapSafeFull, WarmStart::Standard),
+            (Rule::GapSafeFull, WarmStart::Active),
+            (Rule::Strong, WarmStart::Strong),
+        ],
+        4 => vec![
+            (Rule::None, WarmStart::Standard),
+            (Rule::GapSafeSeq, WarmStart::Standard),
+            (Rule::GapSafeFull, WarmStart::Standard),
+            (Rule::GapSafeFull, WarmStart::Active),
+            (Rule::Strong, WarmStart::Strong),
+        ],
+        5 => vec![
+            (Rule::None, WarmStart::Standard),
+            (Rule::DynamicBonnefoy, WarmStart::Standard),
+            (Rule::GapSafeSeq, WarmStart::Standard),
+            (Rule::GapSafeFull, WarmStart::Standard),
+            (Rule::GapSafeFull, WarmStart::Active),
+        ],
+        _ => vec![
+            (Rule::None, WarmStart::Standard),
+            (Rule::StaticGap, WarmStart::Standard),
+            (Rule::GapSafeSeq, WarmStart::Standard),
+            (Rule::GapSafeFull, WarmStart::Standard),
+            (Rule::GapSafeFull, WarmStart::Active),
+        ],
+    }
+}
+
+fn cmd_fig(o: &Flags, fig: u8) -> Result<(), String> {
+    let seed = flag_usize(o, "seed", 42)? as u64;
+    let small = o.contains_key("small");
+    let out = PathBuf::from(flag(o, "out", "results"));
+    let (title, ds, task, delta) = match fig {
+        3 => (
+            "Fig3 Lasso (leukemia-like)",
+            load_data("synth:leukemia", seed, small)?,
+            Task::Lasso,
+            3.0,
+        ),
+        4 => (
+            "Fig4 logistic (leukemia-like)",
+            load_data("synth:leukemia-binary", seed, small)?,
+            Task::Logreg,
+            3.0,
+        ),
+        5 => (
+            "Fig5 multi-task (MEG-like)",
+            load_data("synth:meg", seed, small)?,
+            Task::MultiTask,
+            3.0,
+        ),
+        6 => (
+            "Fig6 SGL (climate-like)",
+            load_data("synth:climate", seed, small)?,
+            Task::SparseGroupLasso { tau: 0.4 },
+            2.5,
+        ),
+        _ => unreachable!(),
+    };
+    let prob = build_problem(ds, task)?;
+    let n_lambdas = flag_usize(o, "grid", if small { 30 } else { 100 })?;
+    // Left panel: active fractions for K = 2 .. 2^9.
+    let budgets: Vec<usize> = (1..=9).map(|e| 1usize << e).collect();
+    let rows = active_fraction_experiment(&prob, Rule::GapSafeFull, &budgets, n_lambdas, delta, 10);
+    let lambdas = lambda_grid(prob.lambda_max(), n_lambdas, delta);
+    report::print_active_fraction(title, &lambdas, &rows);
+    report::write_active_fraction_csv(
+        &out.join(format!("fig{fig}_active_fraction.csv")),
+        &lambdas,
+        &rows,
+    )
+    .map_err(|e| e.to_string())?;
+    // Right panel: time-to-convergence per strategy.
+    let eps_list = if small {
+        vec![1e-2, 1e-4, 1e-6]
+    } else {
+        vec![1e-2, 1e-4, 1e-6, 1e-8]
+    };
+    let cells = time_to_convergence(
+        &prob,
+        &fig_strategies(fig),
+        &eps_list,
+        n_lambdas,
+        delta,
+        flag_usize(o, "max-epochs", 10_000)?,
+    );
+    report::print_timing(title, &cells);
+    report::write_timing_csv(&out.join(format!("fig{fig}_timing.csv")), &cells)
+        .map_err(|e| e.to_string())?;
+    Ok(())
+}
+
+fn cmd_selftest(o: &Flags) -> Result<(), String> {
+    let dir = PathBuf::from(flag(o, "artifacts", "artifacts"));
+    let engine = PjrtEngine::new(&dir).map_err(|e| format!("{e:#}"))?;
+    println!("PJRT platform: {}", engine.platform());
+    // lasso_small artifact vs native gap pass
+    let ds = synth::leukemia_like_scaled(16, 40, 7, false);
+    let prob = build_problem(ds, Task::Lasso)?;
+    let exe = engine.bind(&prob, "lasso").map_err(|e| format!("{e:#}"))?;
+    let lam = 0.5 * prob.lambda_max();
+    let mut beta = gapsafe::linalg::Mat::zeros(40, 1);
+    beta[(3, 0)] = 0.7;
+    beta[(11, 0)] = -0.2;
+    let z = prob.predict(&beta);
+    let active = ActiveSet::full(prob.pen.groups());
+    let native = prob.gap_pass(&beta, &z, lam, &active);
+    let pjrt = exe.gap_pass(&prob, &beta, lam).map_err(|e| format!("{e:#}"))?;
+    let rel = |a: f64, b: f64| (a - b).abs() / (1.0 + a.abs());
+    println!(
+        "native  primal={:.12e} dual={:.12e} gap={:.6e} r={:.6e}",
+        native.primal, native.dual, native.gap, native.radius
+    );
+    println!(
+        "pjrt    primal={:.12e} dual={:.12e} gap={:.6e} r={:.6e}",
+        pjrt.primal, pjrt.dual, pjrt.gap, pjrt.radius
+    );
+    for (name, a, b) in [
+        ("primal", native.primal, pjrt.primal),
+        ("dual", native.dual, pjrt.dual),
+        ("gap", native.gap, pjrt.gap),
+        ("radius", native.radius, pjrt.radius),
+    ] {
+        if rel(a, b) > 1e-9 {
+            return Err(format!("{name} mismatch: native {a} vs pjrt {b}"));
+        }
+    }
+    println!("selftest OK (artifact {} on {})", exe.name(), engine.platform());
+    Ok(())
+}
+
+fn cmd_artifacts(o: &Flags) -> Result<(), String> {
+    let dir = PathBuf::from(flag(o, "artifacts", "artifacts"));
+    let m = artifact::Manifest::load(&dir)?;
+    m.validate()?;
+    println!("{:<24} {:<10} {:>6} {:>7} {:>4} {:>4} {:>9}", "name", "task", "n", "p", "q", "gs", "outputs");
+    for e in &m.entries {
+        println!(
+            "{:<24} {:<10} {:>6} {:>7} {:>4} {:>4} {:>9}",
+            e.name, e.task, e.n, e.p, e.q, e.group_size, e.n_outputs
+        );
+    }
+    println!("{} artifacts OK in {}", m.entries.len(), dir.display());
+    Ok(())
+}
+
+fn cmd_lmax(o: &Flags) -> Result<(), String> {
+    let seed = flag_usize(o, "seed", 42)? as u64;
+    let ds = load_data(flag(o, "data", "synth:leukemia"), seed, o.contains_key("small"))?;
+    let task = Task::parse(flag(o, "task", "lasso"))?;
+    let prob = build_problem(ds, task)?;
+    println!("lambda_max = {:.10e}", prob.lambda_max());
+    Ok(())
+}

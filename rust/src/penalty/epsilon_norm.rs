@@ -1,0 +1,221 @@
+//! The epsilon-norm of Burdakov (Eq. 25) and its exact evaluation.
+//!
+//! `||x||_eps` is the unique nu >= 0 with  sum_i (|x_i| - (1-eps) nu)_+^2
+//! = (eps nu)^2 ; conventions `||x||_0 = ||x||_inf`, `||x||_1 = ||x||_2`.
+//! It is the building block of the Sparse-Group Lasso dual norm (Prop. 7).
+//!
+//! Two evaluators are provided:
+//! * [`epsilon_norm`] — the exact O(d log d) sorting algorithm of
+//!   (Ndiaye et al. 2016b, Prop. 5): on the bracket where exactly k
+//!   coordinates survive the soft-threshold, the defining equation is the
+//!   quadratic ((1-eps)^2 k - eps^2) nu^2 - 2 (1-eps) S_k nu + Q_k = 0 with
+//!   S_k, Q_k the prefix sum / sum of squares of the sorted |x|; the valid
+//!   root is the one falling in the bracket.
+//! * [`epsilon_norm_bisect`] — a 100-iteration bisection oracle on the
+//!   strictly decreasing phi(nu) = ||S_{(1-eps)nu}(x)||_2 - eps nu, used by
+//!   tests (and mirroring the jnp implementation in
+//!   `python/compile/kernels/ref.py`).
+
+/// Exact epsilon-norm via the sorting algorithm (Remark 12).
+pub fn epsilon_norm(x: &[f64], eps: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&eps), "eps must be in [0,1]");
+    if x.is_empty() {
+        return 0.0;
+    }
+    let mut a: Vec<f64> = x.iter().map(|v| v.abs()).collect();
+    let linf = a.iter().fold(0.0_f64, |m, &v| m.max(v));
+    if eps <= 0.0 || linf == 0.0 {
+        return linf;
+    }
+    if eps >= 1.0 {
+        return a.iter().map(|v| v * v).sum::<f64>().sqrt();
+    }
+    a.sort_by(|p, q| q.partial_cmp(p).unwrap()); // descending
+    let ome = 1.0 - eps;
+    let (mut s, mut q) = (0.0_f64, 0.0_f64);
+    for k in 1..=a.len() {
+        s += a[k - 1];
+        q += a[k - 1] * a[k - 1];
+        // bracket for nu when exactly k coordinates are active:
+        //   a_{k+1} <= (1-eps) nu < a_k    (a_{d+1} := 0)
+        let lo = if k < a.len() { a[k] / ome } else { 0.0 };
+        let hi = a[k - 1] / ome;
+        let ca = ome * ome * (k as f64) - eps * eps;
+        let cb = -2.0 * ome * s;
+        let cc = q;
+        // Solve ca nu^2 + cb nu + cc = 0 for nu in [lo, hi].
+        let mut cands = [f64::NAN, f64::NAN];
+        if ca.abs() < 1e-300 {
+            if cb != 0.0 {
+                cands[0] = -cc / cb;
+            }
+        } else {
+            let disc = cb * cb - 4.0 * ca * cc;
+            if disc >= 0.0 {
+                let sq = disc.sqrt();
+                // Numerically stable pair.
+                let qq = -0.5 * (cb + cb.signum() * sq);
+                cands[0] = qq / ca;
+                if qq != 0.0 {
+                    cands[1] = cc / qq;
+                }
+            }
+        }
+        let tol = 1e-9 * (hi.abs() + 1.0);
+        for &nu in cands.iter() {
+            if nu.is_finite() && nu >= lo - tol && nu <= hi + tol && nu > 0.0 {
+                // verify it is the decreasing-phi root: phi'(nu) < 0 always
+                // holds for the true root; the spurious root of the squared
+                // equation has ||S(x)||_2 = -eps nu < 0, impossible, so any
+                // in-bracket root is the answer.
+                return nu.max(lo).min(hi);
+            }
+        }
+    }
+    // Fallback (should be unreachable): bisection oracle.
+    epsilon_norm_bisect(x, eps)
+}
+
+/// Bisection oracle for the epsilon-norm (test reference; always correct).
+pub fn epsilon_norm_bisect(x: &[f64], eps: f64) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    let linf = x.iter().fold(0.0_f64, |m, &v| m.max(v.abs()));
+    if eps <= 1e-12 {
+        return linf;
+    }
+    let l2 = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+    let phi = |nu: f64| -> f64 {
+        let t = (1.0 - eps) * nu;
+        let s: f64 = x
+            .iter()
+            .map(|v| {
+                let a = v.abs() - t;
+                if a > 0.0 {
+                    a * a
+                } else {
+                    0.0
+                }
+            })
+            .sum();
+        s.sqrt() - eps * nu
+    };
+    let (mut lo, mut hi) = (0.0_f64, l2 / eps + 1e-30);
+    for _ in 0..100 {
+        let mid = 0.5 * (lo + hi);
+        if phi(mid) > 0.0 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{check_property, prng::Prng};
+
+    fn rand_vec(rng: &mut Prng, d: usize) -> Vec<f64> {
+        (0..d).map(|_| rng.gaussian()).collect()
+    }
+
+    #[test]
+    fn limits() {
+        let x = [3.0, -4.0, 1.0];
+        assert!((epsilon_norm(&x, 0.0) - 4.0).abs() < 1e-12);
+        let l2 = (9.0 + 16.0 + 1.0_f64).sqrt();
+        assert!((epsilon_norm(&x, 1.0) - l2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singleton() {
+        // d=1: equation (|x| - (1-eps)nu)_+^2 = (eps nu)^2 -> nu = |x|.
+        for eps in [0.1, 0.5, 0.9] {
+            assert!((epsilon_norm(&[-2.5], eps) - 2.5).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn zero_vector() {
+        assert_eq!(epsilon_norm(&[0.0, 0.0], 0.3), 0.0);
+        assert_eq!(epsilon_norm(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn matches_bisection_property() {
+        check_property("epsnorm_sort_vs_bisect", 300, |rng| {
+            let d = 1 + rng.below(12);
+            let eps = rng.uniform_in(1e-4, 1.0);
+            let x = rand_vec(rng, d);
+            let a = epsilon_norm(&x, eps);
+            let b = epsilon_norm_bisect(&x, eps);
+            if (a - b).abs() > 1e-7 * (1.0 + b.abs()) {
+                return Err(format!("sort={a} bisect={b} eps={eps} x={x:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn defining_equation_property() {
+        check_property("epsnorm_defining_eq", 200, |rng| {
+            let d = 1 + rng.below(10);
+            let eps = rng.uniform_in(0.01, 0.99);
+            let x = rand_vec(rng, d);
+            let nu = epsilon_norm(&x, eps);
+            let t = (1.0 - eps) * nu;
+            let lhs: f64 = x
+                .iter()
+                .map(|v| {
+                    let a = v.abs() - t;
+                    if a > 0.0 {
+                        a * a
+                    } else {
+                        0.0
+                    }
+                })
+                .sum();
+            let rhs = (eps * nu) * (eps * nu);
+            if (lhs - rhs).abs() > 1e-8 * (1.0 + rhs) {
+                return Err(format!("lhs={lhs} rhs={rhs} nu={nu}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sandwiched_between_linf_and_l2() {
+        check_property("epsnorm_bounds", 200, |rng| {
+            let d = 1 + rng.below(10);
+            let eps = rng.uniform_in(0.0, 1.0);
+            let x = rand_vec(rng, d);
+            let nu = epsilon_norm(&x, eps);
+            let linf = x.iter().fold(0.0_f64, |m, &v| m.max(v.abs()));
+            let l2 = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+            if nu < linf - 1e-9 || nu > l2 + 1e-9 {
+                return Err(format!("nu={nu} not in [{linf}, {l2}]"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn homogeneous() {
+        check_property("epsnorm_homog", 100, |rng| {
+            let d = 1 + rng.below(8);
+            let eps = rng.uniform_in(0.05, 0.95);
+            let c = rng.uniform_in(0.1, 10.0);
+            let x = rand_vec(rng, d);
+            let xs: Vec<f64> = x.iter().map(|v| c * v).collect();
+            let a = epsilon_norm(&xs, eps);
+            let b = c * epsilon_norm(&x, eps);
+            if (a - b).abs() > 1e-8 * (1.0 + b.abs()) {
+                return Err(format!("scale fail {a} vs {b}"));
+            }
+            Ok(())
+        });
+    }
+}

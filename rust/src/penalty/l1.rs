@@ -1,0 +1,126 @@
+//! The ell_1 penalty (Lasso, Sec. 4.1; also the l1-logistic case of Sec. 4.4).
+//!
+//! Groups are singletons; with q > 1 this module is NOT used — row groups
+//! with q > 1 belong to `GroupL2` (multi-task, Sec. 4.5).
+
+use super::{
+    ActiveSet, GroupNorms, Groups, Penalty, PenaltyKind, ScreenStats,
+};
+use crate::linalg::sparse::Design;
+use crate::linalg::{norm1, st, Mat};
+
+/// Omega(beta) = ||beta||_1,  Omega^D = ||.||_inf  (Table 1).
+#[derive(Debug, Clone)]
+pub struct L1 {
+    groups: Groups,
+}
+
+impl L1 {
+    pub fn new(p: usize) -> Self {
+        L1 { groups: Groups::singletons(p) }
+    }
+}
+
+impl Penalty for L1 {
+    fn kind(&self) -> PenaltyKind {
+        PenaltyKind::L1
+    }
+
+    fn groups(&self) -> &Groups {
+        &self.groups
+    }
+
+    fn value(&self, beta: &Mat) -> f64 {
+        norm1(beta.as_slice())
+    }
+
+    fn group_dual_norm(&self, _g: usize, block: &[f64]) -> f64 {
+        debug_assert_eq!(block.len(), 1);
+        block[0].abs()
+    }
+
+    fn prox_group(&self, _g: usize, block: &mut [f64], t: f64) {
+        block[0] = st(block[0], t);
+    }
+
+    fn op_norms(&self, x: &Design) -> GroupNorms {
+        let col2: Vec<f64> = x.col_norms_sq().iter().map(|s| s.sqrt()).collect();
+        GroupNorms { op: col2.clone(), spectral: col2.clone(), col2 }
+    }
+
+    fn stats(&self, corr: &Mat, active: &ActiveSet) -> ScreenStats {
+        debug_assert_eq!(corr.cols(), 1);
+        let p = self.groups.p();
+        let mut group_dual = vec![0.0; p];
+        let c = corr.as_slice();
+        for j in 0..p {
+            if active.group[j] {
+                group_dual[j] = c[j].abs();
+            }
+        }
+        ScreenStats { group_dual, sgl: None }
+    }
+
+    fn sphere_screen(
+        &self,
+        stats: &ScreenStats,
+        r: f64,
+        norms: &GroupNorms,
+        active: &mut ActiveSet,
+    ) -> (usize, usize) {
+        let mut killed = 0;
+        let thresh = 1.0 - super::SCREEN_MARGIN;
+        for j in 0..self.groups.p() {
+            if active.group[j] && stats.group_dual[j] + r * norms.op[j] < thresh {
+                active.group[j] = false;
+                active.feat[j] = false;
+                killed += 1;
+            }
+        }
+        (killed, killed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    #[test]
+    fn value_and_dual() {
+        let pen = L1::new(3);
+        let b = Mat::col_vec(&[1.0, -2.0, 0.5]);
+        assert_eq!(pen.value(&b), 3.5);
+        assert_eq!(pen.group_dual_norm(0, &[-4.0]), 4.0);
+    }
+
+    #[test]
+    fn prox_is_soft_threshold() {
+        let pen = L1::new(1);
+        let mut blk = [3.0];
+        pen.prox_group(0, &mut blk, 1.0);
+        assert_eq!(blk[0], 2.0);
+        let mut blk = [-0.4];
+        pen.prox_group(0, &mut blk, 1.0);
+        assert_eq!(blk[0], 0.0);
+    }
+
+    #[test]
+    fn screen_kills_small_scores() {
+        let pen = L1::new(3);
+        let x = Design::Dense(Mat::from_row_major(
+            2,
+            3,
+            &[1.0, 0.0, 0.5, 0.0, 1.0, 0.5],
+        ));
+        let norms = pen.op_norms(&x);
+        let mut active = ActiveSet::full(pen.groups());
+        // scores: j0 -> 0.95 + 0.1*1 = 1.05 (keep), j1 -> 0.2 + 0.1 (kill),
+        // j2 -> 0.99 + 0.1*sqrt(0.5) ~ 1.06 (keep)
+        let corr = Mat::col_vec(&[0.95, 0.2, 0.99]);
+        let stats = pen.stats(&corr, &active);
+        let (kg, kf) = pen.sphere_screen(&stats, 0.1, &norms, &mut active);
+        assert_eq!((kg, kf), (1, 1));
+        assert!(active.group[0] && !active.group[1] && active.group[2]);
+    }
+}

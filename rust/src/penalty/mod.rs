@@ -1,0 +1,328 @@
+//! Sparsity-enforcing, group-decomposable penalties (paper Sec. 4).
+//!
+//! A penalty owns the group structure over *features*; the coefficient
+//! object is a `Mat` of shape (p, q) — q = 1 for Lasso / Group Lasso / SGL,
+//! q > 1 for the multi-task and multinomial row-group cases (Sec. 4.5–4.6,
+//! where each feature j forms the block B_{j,:}).
+//!
+//! Every penalty provides the four ingredients the Gap Safe machinery needs
+//! (Table 1 bottom): its value Omega, the group dual norms Omega_g^D used
+//! both for the dual rescaling (Eq. 9) and the sphere tests (Eq. 8), the
+//! group prox for the CD solver, and the operator norms Omega_g^D(X_g)
+//! appearing in the sphere-test bound.
+
+pub mod epsilon_norm;
+mod group_l2;
+mod l1;
+mod sparse_group;
+
+pub use group_l2::GroupL2;
+pub use l1::L1;
+pub use sparse_group::SparseGroup;
+
+use crate::linalg::sparse::Design;
+use crate::linalg::Mat;
+
+/// Partition of the feature set [p] into groups.
+#[derive(Debug, Clone)]
+pub struct Groups {
+    /// Feature indices per group (a partition of 0..p).
+    index: Vec<Vec<usize>>,
+    p: usize,
+    /// group id of each feature.
+    of_feature: Vec<usize>,
+}
+
+impl Groups {
+    /// Singleton groups {0}, {1}, ..., {p-1} (Lasso / multi-task rows).
+    pub fn singletons(p: usize) -> Self {
+        Groups {
+            index: (0..p).map(|j| vec![j]).collect(),
+            p,
+            of_feature: (0..p).collect(),
+        }
+    }
+
+    /// Contiguous groups of uniform size (p must be divisible).
+    pub fn contiguous(p: usize, group_size: usize) -> Self {
+        assert!(group_size > 0 && p % group_size == 0, "p not divisible by group size");
+        let mut index = Vec::with_capacity(p / group_size);
+        let mut of_feature = vec![0usize; p];
+        for (g, start) in (0..p).step_by(group_size).enumerate() {
+            let idx: Vec<usize> = (start..start + group_size).collect();
+            for &j in &idx {
+                of_feature[j] = g;
+            }
+            index.push(idx);
+        }
+        Groups { index, p, of_feature }
+    }
+
+    /// Arbitrary partition (validated).
+    pub fn from_parts(p: usize, parts: Vec<Vec<usize>>) -> Self {
+        let mut seen = vec![false; p];
+        for part in &parts {
+            assert!(!part.is_empty(), "empty group");
+            for &j in part {
+                assert!(j < p && !seen[j], "groups must partition [p]");
+                seen[j] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "groups must cover [p]");
+        let mut of_feature = vec![0usize; p];
+        for (g, part) in parts.iter().enumerate() {
+            for &j in part {
+                of_feature[j] = g;
+            }
+        }
+        Groups { index: parts, p, of_feature }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    #[inline]
+    pub fn feats(&self, g: usize) -> &[usize] {
+        &self.index[g]
+    }
+
+    #[inline]
+    pub fn group_of(&self, j: usize) -> usize {
+        self.of_feature[j]
+    }
+}
+
+/// Which estimator family a penalty instance belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PenaltyKind {
+    L1,
+    GroupL2,
+    SparseGroup,
+}
+
+/// Precomputed operator norms used by the sphere tests (Eq. 8 / Prop. 8).
+#[derive(Debug, Clone)]
+pub struct GroupNorms {
+    /// Omega_g^D(X_g) per group (the sphere-test slope).
+    pub op: Vec<f64>,
+    /// ||X_j||_2 per feature (SGL feature-level tests).
+    pub col2: Vec<f64>,
+    /// Spectral norm ||X_g||_2 per group (SGL group-level T_g bound).
+    pub spectral: Vec<f64>,
+}
+
+/// Screening statistics of a dual center theta_c: everything the sphere
+/// tests need, computed from the correlations `corr = X^T theta_c`.
+/// Entries for inactive groups are stale and must not be read.
+#[derive(Debug, Clone)]
+pub struct ScreenStats {
+    /// Omega_g^D([X^T theta]_g) per group.
+    pub group_dual: Vec<f64>,
+    /// SGL extras: (||S_tau(c_g)||_2, ||c_g||_inf) per group and |c_j| per feature.
+    pub sgl: Option<SglStats>,
+}
+
+/// Sparse-Group Lasso two-level statistics (Prop. 8).
+#[derive(Debug, Clone)]
+pub struct SglStats {
+    pub st_norm: Vec<f64>,
+    pub max_abs: Vec<f64>,
+    pub feat_abs: Vec<f64>,
+}
+
+/// Active sets at both levels. For non-SGL penalties the feature level
+/// mirrors the group level.
+#[derive(Debug, Clone)]
+pub struct ActiveSet {
+    pub group: Vec<bool>,
+    pub feat: Vec<bool>,
+}
+
+impl ActiveSet {
+    pub fn full(groups: &Groups) -> Self {
+        ActiveSet { group: vec![true; groups.len()], feat: vec![true; groups.p()] }
+    }
+
+    pub fn n_active_groups(&self) -> usize {
+        self.group.iter().filter(|&&a| a).count()
+    }
+
+    pub fn n_active_feats(&self) -> usize {
+        self.feat.iter().filter(|&&a| a).count()
+    }
+
+    /// Deactivate a whole group (and its features).
+    pub fn kill_group(&mut self, groups: &Groups, g: usize) {
+        self.group[g] = false;
+        for &j in groups.feats(g) {
+            self.feat[j] = false;
+        }
+    }
+
+    /// Restrict to the intersection with `other`.
+    pub fn intersect(&mut self, other: &ActiveSet) {
+        for (a, b) in self.group.iter_mut().zip(&other.group) {
+            *a = *a && *b;
+        }
+        for (a, b) in self.feat.iter_mut().zip(&other.feat) {
+            *a = *a && *b;
+        }
+    }
+}
+
+/// Gather the coefficient block of group `g` (feature-major, task-minor).
+pub fn gather_block(beta: &Mat, feats: &[usize], out: &mut Vec<f64>) {
+    out.clear();
+    for &j in feats {
+        for k in 0..beta.cols() {
+            out.push(beta[(j, k)]);
+        }
+    }
+}
+
+/// Scatter a block back into the coefficient matrix.
+pub fn scatter_block(beta: &mut Mat, feats: &[usize], block: &[f64]) {
+    let q = beta.cols();
+    for (i, &j) in feats.iter().enumerate() {
+        for k in 0..q {
+            beta[(j, k)] = block[i * q + k];
+        }
+    }
+}
+
+/// Group-decomposable sparsity-enforcing norm (Sec. 2.1).
+pub trait Penalty: Send + Sync {
+    fn kind(&self) -> PenaltyKind;
+
+    fn groups(&self) -> &Groups;
+
+    /// Omega(beta).
+    fn value(&self, beta: &Mat) -> f64;
+
+    /// Omega_g^D of the correlation block of group g (block = rows `feats(g)`
+    /// of `corr`, feature-major/task-minor as produced by `gather_block`).
+    fn group_dual_norm(&self, g: usize, block: &[f64]) -> f64;
+
+    /// In-place prox of `t * Omega_g` on a coefficient block.
+    fn prox_group(&self, g: usize, block: &mut [f64], t: f64);
+
+    /// Operator norms for the sphere tests.
+    fn op_norms(&self, x: &Design) -> GroupNorms;
+
+    /// Screening statistics of a center from its correlations (only active
+    /// groups are filled; `corr` rows of inactive features may be stale).
+    fn stats(&self, corr: &Mat, active: &ActiveSet) -> ScreenStats;
+
+    /// Apply the sphere test with center stats `stats` and radius `r`,
+    /// deactivating groups/features in `active`. Returns (groups killed,
+    /// features killed).
+    fn sphere_screen(
+        &self,
+        stats: &ScreenStats,
+        r: f64,
+        norms: &GroupNorms,
+        active: &mut ActiveSet,
+    ) -> (usize, usize);
+
+    /// The l1 trade-off for SGL; None otherwise.
+    fn tau(&self) -> Option<f64> {
+        None
+    }
+}
+
+/// Numerical safety margin for the strict sphere tests: with an exactly-zero
+/// radius (gap = 0 to f64 precision) the test `score < 1` becomes razor
+/// sharp and rounding of an equicorrelated score (= 1 in exact arithmetic,
+/// 1 - few ulp in floats) could wrongly screen a support feature of a
+/// non-unique solution. Screening `score < 1 - MARGIN` is strictly more
+/// conservative, hence still safe.
+pub const SCREEN_MARGIN: f64 = 1e-11;
+
+/// Shared helper: Omega^D(X^T theta) as max over *active* groups (the
+/// active-set trick of Sec. 2.2.2 — the argmax provably lies in any safe
+/// active set, so inactive groups can be skipped).
+pub fn dual_norm_active(
+    pen: &dyn Penalty,
+    corr: &Mat,
+    active: &ActiveSet,
+    block_buf: &mut Vec<f64>,
+) -> f64 {
+    let groups = pen.groups();
+    let mut m: f64 = 0.0;
+    for g in 0..groups.len() {
+        if !active.group[g] {
+            continue;
+        }
+        gather_block(corr, groups.feats(g), block_buf);
+        m = m.max(pen.group_dual_norm(g, block_buf));
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn groups_constructors() {
+        let s = Groups::singletons(4);
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.feats(2), &[2]);
+        let c = Groups::contiguous(6, 3);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.feats(1), &[3, 4, 5]);
+        assert_eq!(c.group_of(4), 1);
+        let f = Groups::from_parts(3, vec![vec![2], vec![0, 1]]);
+        assert_eq!(f.group_of(1), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "partition")]
+    fn groups_must_partition() {
+        let _ = Groups::from_parts(3, vec![vec![0, 1], vec![1, 2]]);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let mut b = Mat::zeros(4, 2);
+        for j in 0..4 {
+            for k in 0..2 {
+                b[(j, k)] = (j * 2 + k) as f64;
+            }
+        }
+        let mut blk = Vec::new();
+        gather_block(&b, &[1, 3], &mut blk);
+        assert_eq!(blk, vec![2.0, 3.0, 6.0, 7.0]);
+        blk.iter_mut().for_each(|v| *v += 10.0);
+        scatter_block(&mut b, &[1, 3], &blk);
+        assert_eq!(b[(1, 0)], 12.0);
+        assert_eq!(b[(3, 1)], 17.0);
+        assert_eq!(b[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn active_set_ops() {
+        let g = Groups::contiguous(6, 2);
+        let mut a = ActiveSet::full(&g);
+        assert_eq!(a.n_active_groups(), 3);
+        a.kill_group(&g, 1);
+        assert_eq!(a.n_active_groups(), 2);
+        assert_eq!(a.n_active_feats(), 4);
+        assert!(!a.feat[2] && !a.feat[3]);
+        let mut b = ActiveSet::full(&g);
+        b.kill_group(&g, 0);
+        a.intersect(&b);
+        assert_eq!(a.n_active_groups(), 1);
+    }
+}

@@ -1,0 +1,146 @@
+//! Artifact manifest: the contract between the Python compile path
+//! (`python/compile/aot.py`) and the Rust PJRT runtime.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled gap-pass artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub task: String,
+    pub file: PathBuf,
+    pub n: usize,
+    pub p: usize,
+    pub q: usize,
+    pub group_size: usize,
+    pub dtype: String,
+    pub inputs: Vec<String>,
+    pub n_outputs: usize,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        let doc = Json::parse(&text).map_err(|e| format!("bad manifest: {e}"))?;
+        let arts = doc
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or("manifest missing 'artifacts'")?;
+        let mut entries = Vec::new();
+        for a in arts {
+            let get_s = |k: &str| -> Result<String, String> {
+                a.get(k)
+                    .and_then(|v| v.as_str())
+                    .map(str::to_string)
+                    .ok_or_else(|| format!("artifact missing '{k}'"))
+            };
+            let get_n = |k: &str| -> Result<usize, String> {
+                a.get(k).and_then(|v| v.as_usize()).ok_or_else(|| format!("missing '{k}'"))
+            };
+            entries.push(ArtifactEntry {
+                name: get_s("name")?,
+                task: get_s("task")?,
+                file: dir.join(get_s("file")?),
+                n: get_n("n")?,
+                p: get_n("p")?,
+                q: get_n("q")?,
+                group_size: get_n("group_size")?,
+                dtype: get_s("dtype")?,
+                inputs: a
+                    .get("inputs")
+                    .and_then(|v| v.as_arr())
+                    .map(|arr| {
+                        arr.iter().filter_map(|x| x.as_str().map(str::to_string)).collect()
+                    })
+                    .unwrap_or_default(),
+                n_outputs: get_n("n_outputs")?,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Find an artifact by name.
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Find an artifact matching (task, n, p, q, group_size).
+    pub fn find(
+        &self,
+        task: &str,
+        n: usize,
+        p: usize,
+        q: usize,
+        group_size: usize,
+    ) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| {
+            e.task == task && e.n == n && e.p == p && e.q == q && e.group_size == group_size
+        })
+    }
+
+    /// All artifact files exist on disk.
+    pub fn validate(&self) -> Result<(), String> {
+        for e in &self.entries {
+            if !e.file.exists() {
+                return Err(format!("missing artifact file {}", e.file.display()));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Default artifacts directory: $GAPSAFE_ARTIFACTS or ./artifacts.
+pub fn default_dir() -> PathBuf {
+    std::env::var("GAPSAFE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("x.hlo.txt"), "HloModule x").unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,"artifacts":[{"name":"lasso_t","task":"lasso",
+             "file":"x.hlo.txt","n":4,"p":6,"q":1,"group_size":1,
+             "dtype":"f64","inputs":["X","y","beta","lam"],"n_outputs":6}]}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn load_and_query() {
+        let dir = std::env::temp_dir().join("gapsafe_manifest_test");
+        write_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        assert!(m.by_name("lasso_t").is_some());
+        assert!(m.find("lasso", 4, 6, 1, 1).is_some());
+        assert!(m.find("lasso", 4, 7, 1, 1).is_none());
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn missing_file_fails_validation() {
+        let dir = std::env::temp_dir().join("gapsafe_manifest_test2");
+        write_manifest(&dir);
+        std::fs::remove_file(dir.join("x.hlo.txt")).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.validate().is_err());
+    }
+}

@@ -1,0 +1,228 @@
+//! PJRT runtime (the Rust side of the AOT bridge).
+//!
+//! Loads the HLO-text artifacts produced by `python/compile/aot.py`,
+//! compiles them once per (task, shape) on the PJRT CPU client, keeps the
+//! design matrix resident as a device buffer, and serves duality-gap /
+//! screening passes to the L3 solver. Python is never on this path.
+//!
+//! Layout note: JAX lowers row-major (C-order) arrays; the solver's `Mat`
+//! is column-major, so matrices are transposed into row-major scratch
+//! buffers at the boundary (X only once, at engine setup).
+
+pub mod artifact;
+
+use crate::linalg::Mat;
+use crate::penalty::{ActiveSet, ScreenStats, SglStats};
+use crate::problem::{GapResult, Problem};
+use artifact::{ArtifactEntry, Manifest};
+
+use anyhow::{anyhow, Context, Result};
+
+/// A compiled gap-pass executable bound to one (task, shape) and one design
+/// matrix (held on-device).
+pub struct GapExecutable {
+    entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+    /// X as a device buffer (row-major), transferred once.
+    x_buf: xla::PjRtBuffer,
+    /// y / Y as a device buffer, transferred once.
+    y_buf: xla::PjRtBuffer,
+    /// SGL extras, transferred once.
+    tau_w: Option<(xla::PjRtBuffer, xla::PjRtBuffer)>,
+}
+
+/// The PJRT engine: client + manifest.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+}
+
+/// Row-major copy of a column-major Mat.
+fn to_row_major(m: &Mat) -> Vec<f64> {
+    let (r, c) = (m.rows(), m.cols());
+    let mut out = vec![0.0; r * c];
+    for i in 0..r {
+        for j in 0..c {
+            out[i * c + j] = m[(i, j)];
+        }
+    }
+    out
+}
+
+/// Column-major Mat from a row-major buffer.
+fn from_row_major(rows: usize, cols: usize, data: &[f64]) -> Mat {
+    let mut m = Mat::zeros(rows, cols);
+    for i in 0..rows {
+        for j in 0..cols {
+            m[(i, j)] = data[i * cols + j];
+        }
+    }
+    m
+}
+
+impl PjrtEngine {
+    /// Create a CPU PJRT client and load the artifact manifest.
+    pub fn new(artifacts_dir: &std::path::Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir).map_err(|e| anyhow!(e))?;
+        manifest.validate().map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtEngine { client, manifest })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile the artifact for `problem` (matched by task/shape) and pin
+    /// the problem's X and Y on-device. SGL problems also pin (tau, w).
+    pub fn bind(&self, prob: &Problem, task_name: &str) -> Result<GapExecutable> {
+        let gs = match prob.pen.kind() {
+            crate::penalty::PenaltyKind::SparseGroup => {
+                prob.pen.groups().feats(0).len()
+            }
+            _ => 1,
+        };
+        let entry = self
+            .manifest
+            .find(task_name, prob.n(), prob.p(), prob.q(), gs)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact for task={task_name} n={} p={} q={} gs={gs}; \
+                     add the shape to python/compile/aot.py REGISTRY and re-run `make artifacts`",
+                    prob.n(),
+                    prob.p(),
+                    prob.q()
+                )
+            })?
+            .clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            entry.file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing {}", entry.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).context("PJRT compile")?;
+        let xd = prob.x.to_dense();
+        let x_rm = to_row_major(&xd);
+        let x_buf = self
+            .client
+            .buffer_from_host_buffer(&x_rm, &[entry.n, entry.p], None)
+            .context("uploading X")?;
+        let y = prob.fit.targets();
+        let y_buf = if entry.q > 1 {
+            let y_rm = to_row_major(y);
+            self.client.buffer_from_host_buffer(&y_rm, &[entry.n, entry.q], None)
+        } else {
+            self.client.buffer_from_host_buffer(y.as_slice(), &[entry.n], None)
+        }
+        .context("uploading Y")?;
+        let tau_w = if entry.task == "sgl" {
+            let tau = prob.pen.tau().ok_or_else(|| anyhow!("sgl artifact needs tau"))?;
+            let ng = prob.n_groups();
+            let w: Vec<f64> = (0..ng).map(|_| 1.0).collect();
+            let tau_buf = self.client.buffer_from_host_buffer(&[tau], &[], None)?;
+            let w_buf = self.client.buffer_from_host_buffer(&w, &[ng], None)?;
+            Some((tau_buf, w_buf))
+        } else {
+            None
+        };
+        Ok(GapExecutable { entry, exe, x_buf, y_buf, tau_w })
+    }
+}
+
+impl GapExecutable {
+    pub fn name(&self) -> &str {
+        &self.entry.name
+    }
+
+    /// Execute one gap pass at (beta, lam); returns the same quantities as
+    /// `Problem::gap_pass` (statistics over *all* groups: the artifact works
+    /// on the full matrix; the caller intersects with its active set).
+    pub fn gap_pass(&self, prob: &Problem, beta: &Mat, lam: f64) -> Result<GapResult> {
+        let client = self.exe.client();
+        let beta_buf = if self.entry.q > 1 {
+            let b_rm = to_row_major(beta);
+            client.buffer_from_host_buffer(&b_rm, &[self.entry.p, self.entry.q], None)?
+        } else {
+            client.buffer_from_host_buffer(beta.as_slice(), &[self.entry.p], None)?
+        };
+        let lam_buf = client.buffer_from_host_buffer(&[lam], &[], None)?;
+        let mut args: Vec<&xla::PjRtBuffer> =
+            vec![&self.x_buf, &self.y_buf, &beta_buf, &lam_buf];
+        if let Some((tau_buf, w_buf)) = &self.tau_w {
+            args.push(tau_buf);
+            args.push(w_buf);
+        }
+        let out = self.exe.execute_b(&args)?;
+        let lit = out[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        if parts.len() != self.entry.n_outputs {
+            return Err(anyhow!(
+                "artifact returned {} outputs, manifest says {}",
+                parts.len(),
+                self.entry.n_outputs
+            ));
+        }
+        let scal = |l: &xla::Literal| -> Result<f64> {
+            Ok(l.to_vec::<f64>()?[0])
+        };
+        let primal = scal(&parts[0])?;
+        let dual = scal(&parts[1])?;
+        let gap = scal(&parts[2])?;
+        let radius = scal(&parts[3])?;
+        let theta_raw = parts[4].to_vec::<f64>()?;
+        let theta = if self.entry.q > 1 {
+            from_row_major(self.entry.n, self.entry.q, &theta_raw)
+        } else {
+            Mat::col_vec(&theta_raw)
+        };
+        let stats = if self.entry.task == "sgl" {
+            let feat_abs = parts[5].to_vec::<f64>()?;
+            let st_norm = parts[6].to_vec::<f64>()?;
+            let max_abs = parts[7].to_vec::<f64>()?;
+            // group_dual is not emitted by the artifact (the two-level SGL
+            // tests don't need it); recompute lazily only if requested.
+            let ng = st_norm.len();
+            ScreenStats {
+                group_dual: vec![f64::NAN; ng],
+                sgl: Some(SglStats { st_norm, max_abs, feat_abs }),
+            }
+        } else {
+            let cg = parts[5].to_vec::<f64>()?;
+            ScreenStats { group_dual: cg, sgl: None }
+        };
+        let _ = prob;
+        Ok(GapResult { primal, dual, gap, radius, theta, stats })
+    }
+}
+
+/// Gap-pass backend selection for the solver / examples.
+pub enum GapBackend {
+    /// Pure-Rust implementation (`Problem::gap_pass`).
+    Native,
+    /// AOT artifact via PJRT.
+    Pjrt(GapExecutable),
+}
+
+impl GapBackend {
+    pub fn label(&self) -> &'static str {
+        match self {
+            GapBackend::Native => "native",
+            GapBackend::Pjrt(_) => "pjrt",
+        }
+    }
+
+    /// Run a gap pass through the backend.
+    pub fn gap_pass(
+        &self,
+        prob: &Problem,
+        beta: &Mat,
+        z: &Mat,
+        lam: f64,
+        active: &ActiveSet,
+    ) -> Result<GapResult> {
+        match self {
+            GapBackend::Native => Ok(prob.gap_pass(beta, z, lam, active)),
+            GapBackend::Pjrt(exe) => exe.gap_pass(prob, beta, lam),
+        }
+    }
+}

@@ -1,0 +1,494 @@
+//! Baseline safe rules the paper compares against (Sec. 3.1 and 3.6):
+//! the static Gap sphere, El Ghaoui's seminal static sphere, ST3/DST3 and
+//! Bonnefoy's dynamic sphere. The last three exploit
+//! theta-hat = Pi_{Delta_X}(y/lambda) and are therefore *regression only*
+//! (Remark 9); they are no-ops on non-quadratic fits.
+
+use super::{apply_sphere, PrevSolution, ScreeningRule};
+use crate::datafit::FitKind;
+use crate::linalg::{dot, norm2, norm_sq, Mat};
+use crate::penalty::{ActiveSet, PenaltyKind, ScreenStats};
+use crate::problem::{GapResult, Problem};
+
+/// Static Gap Safe sphere (Eq. 12-14): center theta_max = -G(0)/lambda_max,
+/// radius r_lambda(0, theta_max). Screens once per lambda, before iterating.
+pub struct StaticGapRule {
+    pub screened_groups: usize,
+}
+
+impl StaticGapRule {
+    pub fn new() -> Self {
+        StaticGapRule { screened_groups: 0 }
+    }
+}
+
+impl Default for StaticGapRule {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ScreeningRule for StaticGapRule {
+    fn name(&self) -> &'static str {
+        "static-gap"
+    }
+
+    fn begin_lambda(
+        &mut self,
+        prob: &Problem,
+        lam: f64,
+        lam_max: f64,
+        _prev: Option<&PrevSolution>,
+        active: &mut ActiveSet,
+    ) {
+        let (n, q) = (prob.n(), prob.q());
+        let z0 = Mat::zeros(n, q);
+        let mut theta_max = Mat::zeros(n, q);
+        prob.fit.neg_grad(&z0, &mut theta_max);
+        theta_max.as_mut_slice().iter_mut().for_each(|v| *v /= lam_max);
+        // Gap at (beta = 0, theta_max): P_lambda(0) = F(0), Omega(0) = 0.
+        let primal = prob.fit.loss(&z0);
+        let dual = prob.fit.dual(&theta_max, lam);
+        let gap = (primal - dual).max(0.0);
+        let radius = (2.0 * gap / prob.fit.gamma()).sqrt() / lam;
+        let full = ActiveSet::full(prob.pen.groups());
+        let stats = prob.stats_for_center(&theta_max, &full);
+        let (kg, _) = apply_sphere(prob, &stats, radius, active);
+        self.screened_groups += kg;
+    }
+
+    fn on_gap_pass(&mut self, _: &Problem, _: f64, _: &GapResult, _: &mut ActiveSet) {}
+}
+
+/// El Ghaoui et al. (2012) static sphere for regression: center y/lambda,
+/// radius |1/lambda - 1/lambda_max| ||y|| (Sec. 3.1 / 3.6). Exhibits the
+/// lambda_critic dead zone measured in the ablation bench.
+pub struct StaticElGhaouiRule {
+    pub screened_groups: usize,
+}
+
+impl StaticElGhaouiRule {
+    pub fn new() -> Self {
+        StaticElGhaouiRule { screened_groups: 0 }
+    }
+
+    /// The threshold lambda_critic below which this rule cannot screen
+    /// (closed form of Sec. 3.1 for the (group) Lasso).
+    pub fn lambda_critic(prob: &Problem, lam_max: f64) -> f64 {
+        let y = prob.fit.targets();
+        let ynorm = y.frob_sq().sqrt();
+        let full = ActiveSet::full(prob.pen.groups());
+        // Omega_g^D(X_g^T G(0)) with G(0) = -y for regression.
+        let stats = {
+            let mut my = y.clone();
+            my.as_mut_slice().iter_mut().for_each(|v| *v = -*v);
+            prob.stats_for_center(&my, &full)
+        };
+        let mut crit: f64 = f64::INFINITY;
+        for g in 0..prob.n_groups() {
+            let opn = prob.norms.op[g];
+            let denom = lam_max + ynorm * opn - stats.group_dual[g];
+            if denom > 0.0 {
+                crit = crit.min(lam_max * ynorm * opn / denom);
+            }
+        }
+        crit
+    }
+}
+
+impl Default for StaticElGhaouiRule {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ScreeningRule for StaticElGhaouiRule {
+    fn name(&self) -> &'static str {
+        "static-elghaoui"
+    }
+
+    fn begin_lambda(
+        &mut self,
+        prob: &Problem,
+        lam: f64,
+        lam_max: f64,
+        _prev: Option<&PrevSolution>,
+        active: &mut ActiveSet,
+    ) {
+        if prob.fit.kind() != FitKind::Quadratic {
+            return; // regression-only rule (Remark 9)
+        }
+        let y = prob.fit.targets();
+        let mut center = y.clone();
+        center.as_mut_slice().iter_mut().for_each(|v| *v /= lam);
+        let radius = (1.0 / lam - 1.0 / lam_max).abs() * y.frob_sq().sqrt();
+        let full = ActiveSet::full(prob.pen.groups());
+        let stats = prob.stats_for_center(&center, &full);
+        let (kg, _) = apply_sphere(prob, &stats, radius, active);
+        self.screened_groups += kg;
+    }
+
+    fn on_gap_pass(&mut self, _: &Problem, _: f64, _: &GapResult, _: &mut ActiveSet) {}
+}
+
+/// Bonnefoy et al. dynamic sphere: center y/lambda, radius
+/// ||y/lambda - theta_k|| with the current dual feasible point theta_k
+/// (Sec. 3.3 / 3.6). Non-converging: the radius is bounded below by
+/// ||y/lambda - theta_hat|| (Remark 10).
+pub struct DynamicBonnefoyRule {
+    /// Stats of the fixed center, cached per lambda.
+    cached: Option<(f64, ScreenStats)>,
+    pub screened_groups: usize,
+}
+
+impl DynamicBonnefoyRule {
+    pub fn new() -> Self {
+        DynamicBonnefoyRule { cached: None, screened_groups: 0 }
+    }
+}
+
+impl Default for DynamicBonnefoyRule {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ScreeningRule for DynamicBonnefoyRule {
+    fn name(&self) -> &'static str {
+        "bonnefoy"
+    }
+
+    fn begin_lambda(
+        &mut self,
+        prob: &Problem,
+        lam: f64,
+        _lam_max: f64,
+        _prev: Option<&PrevSolution>,
+        _active: &mut ActiveSet,
+    ) {
+        if prob.fit.kind() != FitKind::Quadratic {
+            self.cached = None;
+            return;
+        }
+        let y = prob.fit.targets();
+        let mut center = y.clone();
+        center.as_mut_slice().iter_mut().for_each(|v| *v /= lam);
+        let full = ActiveSet::full(prob.pen.groups());
+        self.cached = Some((lam, prob.stats_for_center(&center, &full)));
+    }
+
+    fn on_gap_pass(
+        &mut self,
+        prob: &Problem,
+        lam: f64,
+        gap: &GapResult,
+        active: &mut ActiveSet,
+    ) {
+        let Some((clam, stats)) = &self.cached else { return };
+        if (*clam - lam).abs() > 1e-15 {
+            return;
+        }
+        // radius = ||y/lambda - theta_k||_F
+        let y = prob.fit.targets();
+        let mut rsq = 0.0;
+        for (yi, ti) in y.as_slice().iter().zip(gap.theta.as_slice()) {
+            let d = yi / lam - ti;
+            rsq += d * d;
+        }
+        let stats = stats.clone();
+        let (kg, _) = apply_sphere(prob, &stats, rsq.sqrt(), active);
+        self.screened_groups += kg;
+    }
+}
+
+/// ST3 / dynamic ST3 (Xiang et al. 2011; Bonnefoy et al. 2014-15):
+/// center = projection of y/lambda onto the active hyperplane of the most
+/// correlated group g*, radius shrunk accordingly (Sec. 3.6).
+///
+/// Implemented for the l1 and l1/l2 (q = 1) penalties where the dual-norm
+/// gradient has a closed form; for SGL the rule of Ndiaye et al. (2016b,
+/// App. D) reduces to the same construction with the epsilon-norm gradient
+/// — we conservatively fall back to the Bonnefoy sphere there (safe, just
+/// looser).
+pub struct Dst3Rule {
+    /// (lambda, center stats, ||y/lam - theta_c||^2, center) cache.
+    cached: Option<Cache>,
+    pub screened_groups: usize,
+}
+
+struct Cache {
+    lam: f64,
+    stats: ScreenStats,
+    /// ||y/lambda - theta_c||^2 (0 for the Bonnefoy fallback).
+    shift_sq: f64,
+    /// true when the projection construction applied.
+    projected: bool,
+}
+
+impl Dst3Rule {
+    pub fn new() -> Self {
+        Dst3Rule { cached: None, screened_groups: 0 }
+    }
+}
+
+impl Default for Dst3Rule {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ScreeningRule for Dst3Rule {
+    fn name(&self) -> &'static str {
+        "dst3"
+    }
+
+    fn begin_lambda(
+        &mut self,
+        prob: &Problem,
+        lam: f64,
+        _lam_max: f64,
+        _prev: Option<&PrevSolution>,
+        _active: &mut ActiveSet,
+    ) {
+        self.cached = None;
+        if prob.fit.kind() != FitKind::Quadratic || prob.q() != 1 {
+            return;
+        }
+        let y: Vec<f64> = prob.fit.targets().as_slice().to_vec();
+        let n = y.len();
+        let full = ActiveSet::full(prob.pen.groups());
+        // g* = argmax_g Omega_g^D(X_g^T y)
+        let ystats = prob.stats_for_center(prob.fit.targets(), &full);
+        let mut gstar = 0usize;
+        for g in 1..prob.n_groups() {
+            if ystats.group_dual[g] > ystats.group_dual[gstar] {
+                gstar = g;
+            }
+        }
+        let lam_max_val = ystats.group_dual[gstar];
+        let feats = prob.pen.groups().feats(gstar).to_vec();
+        // eta = X_{g*} grad Omega^D_{g*}(X_{g*}^T y / lambda_max)
+        let mut eta = vec![0.0; n];
+        let supported = match prob.pen.kind() {
+            PenaltyKind::L1 => {
+                let j = feats[0];
+                let c = prob.x.col_dot(j, &y);
+                prob.x.col_axpy(j, c.signum(), &mut eta);
+                true
+            }
+            PenaltyKind::GroupL2 => {
+                // grad of ||v||_2 / w at v: v / (w ||v||); constants cancel in
+                // the projection, so use v / ||v||.
+                let mut v: Vec<f64> = feats.iter().map(|&j| prob.x.col_dot(j, &y)).collect();
+                let nv = norm2(&v);
+                if nv > 0.0 {
+                    v.iter_mut().for_each(|c| *c /= nv);
+                    for (i, &j) in feats.iter().enumerate() {
+                        prob.x.col_axpy(j, v[i], &mut eta);
+                    }
+                    true
+                } else {
+                    false
+                }
+            }
+            PenaltyKind::SparseGroup => false,
+        };
+        let yl: Vec<f64> = y.iter().map(|v| v / lam).collect();
+        if !supported || lam_max_val <= 0.0 {
+            // Bonnefoy fallback: center y/lambda.
+            let center = Mat::col_vec(&yl);
+            self.cached = Some(Cache {
+                lam,
+                stats: prob.stats_for_center(&center, &full),
+                shift_sq: 0.0,
+                projected: false,
+            });
+            return;
+        }
+        // theta_c = y/lam - ((<y/lam, eta> - 1) / ||eta||^2) eta
+        let ee = norm_sq(&eta);
+        let coef = (dot(&yl, &eta) - 1.0) / ee;
+        let mut center = yl.clone();
+        for i in 0..n {
+            center[i] -= coef * eta[i];
+        }
+        let shift_sq = coef * coef * ee; // ||y/lam - theta_c||^2
+        let center = Mat::col_vec(&center);
+        self.cached = Some(Cache {
+            lam,
+            stats: prob.stats_for_center(&center, &full),
+            shift_sq,
+            projected: true,
+        });
+    }
+
+    fn on_gap_pass(
+        &mut self,
+        prob: &Problem,
+        lam: f64,
+        gap: &GapResult,
+        active: &mut ActiveSet,
+    ) {
+        let Some(cache) = &self.cached else { return };
+        if (cache.lam - lam).abs() > 1e-15 {
+            return;
+        }
+        // r_theta = sqrt(||y/lam - theta_k||^2 - ||y/lam - theta_c||^2)
+        let y = prob.fit.targets();
+        let mut dist_sq = 0.0;
+        for (yi, ti) in y.as_slice().iter().zip(gap.theta.as_slice()) {
+            let d = yi / lam - ti;
+            dist_sq += d * d;
+        }
+        let r_sq = if cache.projected { (dist_sq - cache.shift_sq).max(0.0) } else { dist_sq };
+        let stats = cache.stats.clone();
+        let (kg, _) = apply_sphere(prob, &stats, r_sq.sqrt(), active);
+        self.screened_groups += kg;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datafit::Quadratic;
+    use crate::linalg::sparse::Design;
+    use crate::penalty::{Groups, L1};
+    use crate::problem::Problem;
+    use crate::util::prng::Prng;
+
+    fn toy(seed: u64, n: usize, p: usize) -> Problem {
+        let mut rng = Prng::new(seed);
+        let mut x = Mat::zeros(n, p);
+        for v in x.as_mut_slice() {
+            *v = rng.gaussian();
+        }
+        let y: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        Problem::new(Design::Dense(x), Box::new(Quadratic::from_vec(&y)), Box::new(L1::new(p)))
+    }
+
+    #[test]
+    fn static_rules_screen_near_lambda_max() {
+        let prob = toy(1, 15, 50);
+        let lmax = prob.lambda_max();
+        let lam = 0.98 * lmax;
+        for mut rule in [
+            Box::new(StaticGapRule::new()) as Box<dyn ScreeningRule>,
+            Box::new(StaticElGhaouiRule::new()),
+        ] {
+            let mut active = ActiveSet::full(prob.pen.groups());
+            rule.begin_lambda(&prob, lam, lmax, None, &mut active);
+            assert!(
+                active.n_active_feats() < 50,
+                "{} screened nothing at 0.98 lambda_max",
+                rule.name()
+            );
+        }
+    }
+
+    #[test]
+    fn static_rules_useless_at_small_lambda() {
+        // The lambda_critic phenomenon: far below lambda_max the static
+        // El Ghaoui radius blows up and nothing can be screened.
+        let prob = toy(2, 15, 50);
+        let lmax = prob.lambda_max();
+        let lam = lmax / 100.0;
+        let mut rule = StaticElGhaouiRule::new();
+        let mut active = ActiveSet::full(prob.pen.groups());
+        rule.begin_lambda(&prob, lam, lmax, None, &mut active);
+        assert_eq!(active.n_active_feats(), 50);
+        let crit = StaticElGhaouiRule::lambda_critic(&prob, lmax);
+        assert!(crit > lam, "lambda_critic {crit} should exceed {lam}");
+        assert!(crit < lmax);
+    }
+
+    #[test]
+    fn bonnefoy_and_dst3_screen_with_good_theta() {
+        let prob = toy(3, 20, 60);
+        let lmax = prob.lambda_max();
+        let lam = 0.9 * lmax;
+        let beta = Mat::zeros(60, 1);
+        let z = prob.predict(&beta);
+        let full = ActiveSet::full(prob.pen.groups());
+        let gap = prob.gap_pass(&beta, &z, lam, &full);
+        for (name, mut rule) in [
+            ("bonnefoy", Box::new(DynamicBonnefoyRule::new()) as Box<dyn ScreeningRule>),
+            ("dst3", Box::new(Dst3Rule::new())),
+        ] {
+            let mut active = ActiveSet::full(prob.pen.groups());
+            rule.begin_lambda(&prob, lam, lmax, None, &mut active);
+            rule.on_gap_pass(&prob, lam, &gap, &mut active);
+            assert!(active.n_active_feats() < 60, "{name} screened nothing");
+        }
+    }
+
+    #[test]
+    fn dst3_at_least_as_tight_as_bonnefoy() {
+        // Same theta_k: DST3's sphere is contained in Bonnefoy's, so it must
+        // screen at least as many features.
+        let prob = toy(4, 18, 80);
+        let lmax = prob.lambda_max();
+        let lam = 0.85 * lmax;
+        let beta = Mat::zeros(80, 1);
+        let z = prob.predict(&beta);
+        let full = ActiveSet::full(prob.pen.groups());
+        let gap = prob.gap_pass(&beta, &z, lam, &full);
+        let mut ab = ActiveSet::full(prob.pen.groups());
+        let mut ad = ActiveSet::full(prob.pen.groups());
+        let mut rb = DynamicBonnefoyRule::new();
+        let mut rd = Dst3Rule::new();
+        rb.begin_lambda(&prob, lam, lmax, None, &mut ab);
+        rd.begin_lambda(&prob, lam, lmax, None, &mut ad);
+        rb.on_gap_pass(&prob, lam, &gap, &mut ab);
+        rd.on_gap_pass(&prob, lam, &gap, &mut ad);
+        assert!(ad.n_active_feats() <= ab.n_active_feats());
+    }
+
+    #[test]
+    fn regression_only_rules_noop_on_logistic() {
+        use crate::datafit::Logistic;
+        let mut rng = Prng::new(5);
+        let mut x = Mat::zeros(12, 20);
+        for v in x.as_mut_slice() {
+            *v = rng.gaussian();
+        }
+        let y: Vec<f64> = (0..12).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect();
+        let prob = Problem::new(
+            Design::Dense(x),
+            Box::new(Logistic::new(&y)),
+            Box::new(L1::new(20)),
+        );
+        let lmax = prob.lambda_max();
+        let mut rule = StaticElGhaouiRule::new();
+        let mut active = ActiveSet::full(prob.pen.groups());
+        rule.begin_lambda(&prob, 0.9 * lmax, lmax, None, &mut active);
+        assert_eq!(active.n_active_feats(), 20, "must not screen on logistic");
+    }
+
+    #[test]
+    fn dst3_group_lasso_path_supported() {
+        use crate::datafit::Quadratic;
+        use crate::penalty::GroupL2;
+        let mut rng = Prng::new(6);
+        let mut x = Mat::zeros(14, 24);
+        for v in x.as_mut_slice() {
+            *v = rng.gaussian();
+        }
+        let y: Vec<f64> = (0..14).map(|_| rng.gaussian()).collect();
+        let prob = Problem::new(
+            Design::Dense(x),
+            Box::new(Quadratic::from_vec(&y)),
+            Box::new(GroupL2::new(Groups::contiguous(24, 3))),
+        );
+        let lmax = prob.lambda_max();
+        let lam = 0.9 * lmax;
+        let beta = Mat::zeros(24, 1);
+        let z = prob.predict(&beta);
+        let full = ActiveSet::full(prob.pen.groups());
+        let gap = prob.gap_pass(&beta, &z, lam, &full);
+        let mut rule = Dst3Rule::new();
+        let mut active = ActiveSet::full(prob.pen.groups());
+        rule.begin_lambda(&prob, lam, lmax, None, &mut active);
+        rule.on_gap_pass(&prob, lam, &gap, &mut active);
+        assert!(active.n_active_groups() < 8);
+    }
+}

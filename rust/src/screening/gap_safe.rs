@@ -1,0 +1,161 @@
+//! The paper's contribution: Gap Safe spheres (Thm. 2) applied statically,
+//! sequentially (Eq. 15-17) and dynamically (Eq. 19-21).
+
+use super::{apply_sphere, PrevSolution, ScreeningRule};
+use crate::penalty::ActiveSet;
+use crate::problem::{GapResult, Problem};
+
+/// Which events the rule screens on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GapSafeVariant {
+    /// Only at lambda boundaries, centered at the previous dual point.
+    Sequential,
+    /// Only along the iterations, centered at the current dual point.
+    Dynamic,
+    /// Both (the recommended rule; Alg. 1 + 2).
+    Full,
+}
+
+/// Gap Safe sphere rule.
+pub struct GapSafeRule {
+    variant: GapSafeVariant,
+    /// Cumulative counters for reports.
+    pub screened_groups: usize,
+    pub screened_feats: usize,
+}
+
+impl GapSafeRule {
+    pub fn new(variant: GapSafeVariant) -> Self {
+        GapSafeRule { variant, screened_groups: 0, screened_feats: 0 }
+    }
+}
+
+impl ScreeningRule for GapSafeRule {
+    fn name(&self) -> &'static str {
+        match self.variant {
+            GapSafeVariant::Sequential => "gap-seq",
+            GapSafeVariant::Dynamic => "gap-dyn",
+            GapSafeVariant::Full => "gap-full",
+        }
+    }
+
+    fn begin_lambda(
+        &mut self,
+        prob: &Problem,
+        lam: f64,
+        _lam_max: f64,
+        prev: Option<&PrevSolution>,
+        active: &mut ActiveSet,
+    ) {
+        if self.variant == GapSafeVariant::Dynamic {
+            return;
+        }
+        let Some(prev) = prev else { return };
+        // Sequential sphere (Eq. 15-17): center theta-check_{t-1}, radius
+        // r_{lambda_t}(beta_{t-1}, theta_{t-1}) evaluated at the *new* lambda.
+        let primal_t = prev.loss + lam * prev.pen_value;
+        let dual_t = prob.fit.dual(&prev.theta, lam);
+        let gap_t = (primal_t - dual_t).max(0.0);
+        let radius = (2.0 * gap_t / prob.fit.gamma()).sqrt() / lam;
+        // The previous active set is not safe for lambda_t, so statistics are
+        // computed over all groups.
+        let full = ActiveSet::full(prob.pen.groups());
+        let stats = prob.stats_for_center(&prev.theta, &full);
+        let (kg, kf) = apply_sphere(prob, &stats, radius, active);
+        self.screened_groups += kg;
+        self.screened_feats += kf;
+    }
+
+    fn on_gap_pass(
+        &mut self,
+        prob: &Problem,
+        _lam: f64,
+        gap: &GapResult,
+        active: &mut ActiveSet,
+    ) {
+        if self.variant == GapSafeVariant::Sequential {
+            return;
+        }
+        // Dynamic sphere (Eq. 19-21): the solver already produced the
+        // rescaled dual point and the Gap Safe radius in `gap`.
+        let (kg, kf) = apply_sphere(prob, &gap.stats, gap.radius, active);
+        self.screened_groups += kg;
+        self.screened_feats += kf;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datafit::Quadratic;
+    use crate::linalg::sparse::Design;
+    use crate::linalg::Mat;
+    use crate::penalty::L1;
+    use crate::problem::Problem;
+    use crate::util::prng::Prng;
+
+    fn toy_problem(seed: u64, n: usize, p: usize) -> Problem {
+        let mut rng = Prng::new(seed);
+        let mut x = Mat::zeros(n, p);
+        for v in x.as_mut_slice() {
+            *v = rng.gaussian();
+        }
+        let y: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        Problem::new(Design::Dense(x), Box::new(Quadratic::from_vec(&y)), Box::new(L1::new(p)))
+    }
+
+    #[test]
+    fn dynamic_screens_at_beta_zero_small_lambda_ratio() {
+        // At beta = 0 with lambda just below lambda_max, the dynamic Gap Safe
+        // sphere is tight enough to kill most features immediately.
+        let prob = toy_problem(1, 20, 60);
+        let lam = 0.95 * prob.lambda_max();
+        let beta = Mat::zeros(60, 1);
+        let z = prob.predict(&beta);
+        let mut active = ActiveSet::full(prob.pen.groups());
+        let res = prob.gap_pass(&beta, &z, lam, &active);
+        let mut rule = GapSafeRule::new(GapSafeVariant::Dynamic);
+        rule.on_gap_pass(&prob, lam, &res, &mut active);
+        assert!(
+            active.n_active_feats() < 60,
+            "expected some screening at lambda close to lambda_max"
+        );
+    }
+
+    #[test]
+    fn sequential_noop_without_prev() {
+        let prob = toy_problem(2, 10, 20);
+        let mut active = ActiveSet::full(prob.pen.groups());
+        let mut rule = GapSafeRule::new(GapSafeVariant::Sequential);
+        rule.begin_lambda(&prob, 0.5 * prob.lambda_max(), prob.lambda_max(), None, &mut active);
+        assert_eq!(active.n_active_feats(), 20);
+    }
+
+    #[test]
+    fn sequential_screens_with_exact_prev() {
+        // Previous point = exact solution at lambda_max (beta = 0, theta =
+        // rho/lambda_max): sequential screening at lambda slightly smaller
+        // must keep at least the argmax feature and kill far-away ones.
+        let prob = toy_problem(3, 15, 40);
+        let lmax = prob.lambda_max();
+        let beta = Mat::zeros(40, 1);
+        let z = prob.predict(&beta);
+        let active_full = ActiveSet::full(prob.pen.groups());
+        let g = prob.gap_pass(&beta, &z, lmax, &active_full);
+        let prev = PrevSolution {
+            lam: lmax,
+            beta: beta.clone(),
+            z: z.clone(),
+            theta: g.theta.clone(),
+            loss: prob.fit.loss(&z),
+            pen_value: 0.0,
+            active: active_full.clone(),
+        };
+        let lam = 0.97 * lmax;
+        let mut active = ActiveSet::full(prob.pen.groups());
+        let mut rule = GapSafeRule::new(GapSafeVariant::Sequential);
+        rule.begin_lambda(&prob, lam, lmax, Some(&prev), &mut active);
+        assert!(active.n_active_feats() < 40, "sequential rule screened nothing");
+        assert!(active.n_active_feats() >= 1);
+    }
+}

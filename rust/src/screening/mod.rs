@@ -1,0 +1,225 @@
+//! Screening rules (Sec. 3): the paper's Gap Safe rules plus every baseline
+//! it compares against.
+//!
+//! A rule interacts with the solver at two points:
+//!
+//! * [`ScreeningRule::begin_lambda`] — once per regularization parameter,
+//!   before any iteration; *static* and *sequential* rules (Sec. 3.1-3.2)
+//!   and the un-safe *strong* rule (Sec. 3.6) act here, using only
+//!   quantities available from the previous path point.
+//! * [`ScreeningRule::on_gap_pass`] — every `f_ce` epochs, right after the
+//!   solver computed a duality gap (Alg. 2); *dynamic* rules
+//!   (Sec. 3.3) act here with the current dual feasible point.
+//!
+//! Rules only ever *deactivate* groups; for safe rules deactivation is
+//! permanent within a lambda (a safely screened group is provably zero at
+//! the optimum). The strong rule is un-safe, so the solver re-checks KKT
+//! conditions at convergence and reactivates violators
+//! ([`ScreeningRule::needs_kkt_check`]).
+
+mod baselines;
+mod gap_safe;
+mod strong;
+
+pub use baselines::{Dst3Rule, DynamicBonnefoyRule, StaticElGhaouiRule, StaticGapRule};
+pub use gap_safe::{GapSafeRule, GapSafeVariant};
+pub use strong::StrongRule;
+
+use crate::linalg::Mat;
+use crate::penalty::{ActiveSet, ScreenStats};
+use crate::problem::{GapResult, Problem};
+
+/// Everything the path driver hands a rule about the previous path point
+/// (lambda_{t-1}); see Sec. 3.2 / 3.4.
+#[derive(Debug, Clone)]
+pub struct PrevSolution {
+    pub lam: f64,
+    /// Approximate primal solution at lambda_{t-1}.
+    pub beta: Mat,
+    /// Cached prediction X beta.
+    pub z: Mat,
+    /// Rescaled dual point theta-check at lambda_{t-1}.
+    pub theta: Mat,
+    /// F(beta) (loss part of the primal, lambda-independent).
+    pub loss: f64,
+    /// Omega(beta).
+    pub pen_value: f64,
+    /// Safe active set at convergence of lambda_{t-1}.
+    pub active: ActiveSet,
+}
+
+/// A screening strategy.
+pub trait ScreeningRule: Send {
+    fn name(&self) -> &'static str;
+
+    /// Screening performed before any iteration at a new lambda.
+    fn begin_lambda(
+        &mut self,
+        prob: &Problem,
+        lam: f64,
+        lam_max: f64,
+        prev: Option<&PrevSolution>,
+        active: &mut ActiveSet,
+    );
+
+    /// Screening performed at each duality-gap evaluation.
+    fn on_gap_pass(
+        &mut self,
+        prob: &Problem,
+        lam: f64,
+        gap: &GapResult,
+        active: &mut ActiveSet,
+    );
+
+    /// Whether the solver must run a KKT post-convergence check (un-safe rules).
+    fn needs_kkt_check(&self) -> bool {
+        false
+    }
+}
+
+/// Named rule selection (CLI / experiments).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    /// No screening (baseline).
+    None,
+    /// Static Gap Safe sphere at theta_max (Eq. 12-14).
+    StaticGap,
+    /// Static El Ghaoui sphere (regression only, Sec. 3.6).
+    StaticElGhaoui,
+    /// Dynamic ST3 (regression only; Xiang et al. / Bonnefoy et al.).
+    Dst3,
+    /// Bonnefoy dynamic sphere centered at y/lambda (regression only).
+    DynamicBonnefoy,
+    /// Gap Safe, sequential only (Eq. 15-17).
+    GapSafeSeq,
+    /// Gap Safe, dynamic only (Eq. 19-21).
+    GapSafeDyn,
+    /// Gap Safe, sequential + dynamic (the paper's full rule).
+    GapSafeFull,
+    /// Strong rule (un-safe, Eq. 23-24) + dynamic Gap Safe + KKT checking.
+    Strong,
+}
+
+impl Rule {
+    pub const ALL: [Rule; 9] = [
+        Rule::None,
+        Rule::StaticGap,
+        Rule::StaticElGhaoui,
+        Rule::Dst3,
+        Rule::DynamicBonnefoy,
+        Rule::GapSafeSeq,
+        Rule::GapSafeDyn,
+        Rule::GapSafeFull,
+        Rule::Strong,
+    ];
+
+    pub fn parse(s: &str) -> Result<Rule, String> {
+        match s {
+            "none" | "no-screening" => Ok(Rule::None),
+            "static-gap" | "static" => Ok(Rule::StaticGap),
+            "static-elghaoui" | "elghaoui" | "safe" => Ok(Rule::StaticElGhaoui),
+            "dst3" | "st3" => Ok(Rule::Dst3),
+            "bonnefoy" | "dynamic-safe" => Ok(Rule::DynamicBonnefoy),
+            "gap-seq" | "gap-sequential" => Ok(Rule::GapSafeSeq),
+            "gap-dyn" | "gap-dynamic" => Ok(Rule::GapSafeDyn),
+            "gap" | "gap-full" | "gap-safe" => Ok(Rule::GapSafeFull),
+            "strong" => Ok(Rule::Strong),
+            other => Err(format!("unknown rule '{other}'")),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Rule::None => "no-screening",
+            Rule::StaticGap => "static-gap",
+            Rule::StaticElGhaoui => "static-elghaoui",
+            Rule::Dst3 => "dst3",
+            Rule::DynamicBonnefoy => "bonnefoy",
+            Rule::GapSafeSeq => "gap-seq",
+            Rule::GapSafeDyn => "gap-dyn",
+            Rule::GapSafeFull => "gap-full",
+            Rule::Strong => "strong",
+        }
+    }
+
+    /// Instantiate the rule's state machine.
+    pub fn build(&self) -> Box<dyn ScreeningRule> {
+        match self {
+            Rule::None => Box::new(NoScreening),
+            Rule::StaticGap => Box::new(StaticGapRule::new()),
+            Rule::StaticElGhaoui => Box::new(StaticElGhaouiRule::new()),
+            Rule::Dst3 => Box::new(Dst3Rule::new()),
+            Rule::DynamicBonnefoy => Box::new(DynamicBonnefoyRule::new()),
+            Rule::GapSafeSeq => Box::new(GapSafeRule::new(GapSafeVariant::Sequential)),
+            Rule::GapSafeDyn => Box::new(GapSafeRule::new(GapSafeVariant::Dynamic)),
+            Rule::GapSafeFull => Box::new(GapSafeRule::new(GapSafeVariant::Full)),
+            Rule::Strong => Box::new(StrongRule::new()),
+        }
+    }
+
+    /// Rules that only apply to quadratic fits (Remark 9).
+    pub fn regression_only(&self) -> bool {
+        matches!(self, Rule::StaticElGhaoui | Rule::Dst3 | Rule::DynamicBonnefoy)
+    }
+}
+
+/// The no-op baseline.
+pub struct NoScreening;
+
+impl ScreeningRule for NoScreening {
+    fn name(&self) -> &'static str {
+        "no-screening"
+    }
+
+    fn begin_lambda(
+        &mut self,
+        _prob: &Problem,
+        _lam: f64,
+        _lam_max: f64,
+        _prev: Option<&PrevSolution>,
+        _active: &mut ActiveSet,
+    ) {
+    }
+
+    fn on_gap_pass(
+        &mut self,
+        _prob: &Problem,
+        _lam: f64,
+        _gap: &GapResult,
+        _active: &mut ActiveSet,
+    ) {
+    }
+}
+
+/// Shared helper: apply a sphere test given precomputed center stats and a
+/// radius, returning kills.
+pub(crate) fn apply_sphere(
+    prob: &Problem,
+    stats: &ScreenStats,
+    radius: f64,
+    active: &mut ActiveSet,
+) -> (usize, usize) {
+    prob.pen.sphere_screen(stats, radius, &prob.norms, active)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_labels_roundtrip() {
+        for r in Rule::ALL {
+            assert_eq!(Rule::parse(r.label()).unwrap(), r);
+        }
+        assert!(Rule::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn regression_only_flags() {
+        assert!(Rule::StaticElGhaoui.regression_only());
+        assert!(Rule::Dst3.regression_only());
+        assert!(Rule::DynamicBonnefoy.regression_only());
+        assert!(!Rule::GapSafeFull.regression_only());
+        assert!(!Rule::Strong.regression_only());
+    }
+}

@@ -1,0 +1,167 @@
+//! Strong rules (Tibshirani et al. 2012; paper Sec. 3.6, Eq. 23-24):
+//! heuristic sequential screening based on a unit non-expansiveness
+//! assumption on the gradient of the data-fitting term. Un-safe: the solver
+//! must check KKT conditions at convergence and reactivate violators.
+//!
+//! Our `Strong` rule composes the strong sequential discard with the
+//! (safe) dynamic Gap Safe sphere along the iterations, mirroring how the
+//! paper's "strong warm start" experiments are run.
+
+use super::{apply_sphere, PrevSolution, ScreeningRule};
+use crate::penalty::ActiveSet;
+use crate::problem::{GapResult, Problem};
+
+/// Strong sequential rule + dynamic Gap Safe + KKT post-checking.
+pub struct StrongRule {
+    pub screened_groups: usize,
+    pub kkt_violations: usize,
+}
+
+impl StrongRule {
+    pub fn new() -> Self {
+        StrongRule { screened_groups: 0, kkt_violations: 0 }
+    }
+
+    /// The strong active set S_{theta_{t-1}, lambda_t} (Eq. 24) as a mask.
+    pub fn strong_active_set(
+        prob: &Problem,
+        prev: &PrevSolution,
+        lam: f64,
+    ) -> ActiveSet {
+        let full = ActiveSet::full(prob.pen.groups());
+        let stats = prob.stats_for_center(&prev.theta, &full);
+        let thresh = (2.0 * lam - prev.lam) / prev.lam;
+        let mut active = ActiveSet::full(prob.pen.groups());
+        for g in 0..prob.n_groups() {
+            if stats.group_dual[g] < thresh {
+                active.kill_group(prob.pen.groups(), g);
+            }
+        }
+        active
+    }
+}
+
+impl Default for StrongRule {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ScreeningRule for StrongRule {
+    fn name(&self) -> &'static str {
+        "strong"
+    }
+
+    fn begin_lambda(
+        &mut self,
+        prob: &Problem,
+        lam: f64,
+        _lam_max: f64,
+        prev: Option<&PrevSolution>,
+        active: &mut ActiveSet,
+    ) {
+        let Some(prev) = prev else { return };
+        // When the grid is sparsely sampled (2 lambda <= lambda_0) the
+        // threshold is <= 0 and the rule discards nothing (Sec. 5.1).
+        if 2.0 * lam <= prev.lam {
+            return;
+        }
+        let strong = Self::strong_active_set(prob, prev, lam);
+        let before = active.n_active_groups();
+        active.intersect(&strong);
+        self.screened_groups += before - active.n_active_groups();
+    }
+
+    fn on_gap_pass(
+        &mut self,
+        prob: &Problem,
+        _lam: f64,
+        gap: &GapResult,
+        active: &mut ActiveSet,
+    ) {
+        // Safe dynamic screening on top (cheap, and guarantees convergence
+        // of the active set even when the strong guess was too aggressive).
+        let (kg, _) = apply_sphere(prob, &gap.stats, gap.radius, active);
+        self.screened_groups += kg;
+    }
+
+    fn needs_kkt_check(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datafit::Quadratic;
+    use crate::linalg::sparse::Design;
+    use crate::linalg::Mat;
+    use crate::penalty::L1;
+    use crate::util::prng::Prng;
+
+    fn toy(seed: u64, n: usize, p: usize) -> Problem {
+        let mut rng = Prng::new(seed);
+        let mut x = Mat::zeros(n, p);
+        for v in x.as_mut_slice() {
+            *v = rng.gaussian();
+        }
+        let y: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        Problem::new(Design::Dense(x), Box::new(Quadratic::from_vec(&y)), Box::new(L1::new(p)))
+    }
+
+    fn prev_at_lmax(prob: &Problem) -> PrevSolution {
+        let lmax = prob.lambda_max();
+        let beta = Mat::zeros(prob.p(), 1);
+        let z = prob.predict(&beta);
+        let full = ActiveSet::full(prob.pen.groups());
+        let g = prob.gap_pass(&beta, &z, lmax, &full);
+        PrevSolution {
+            lam: lmax,
+            beta,
+            z: z.clone(),
+            theta: g.theta,
+            loss: prob.fit.loss(&z),
+            pen_value: 0.0,
+            active: full,
+        }
+    }
+
+    #[test]
+    fn strong_discards_aggressively() {
+        let prob = toy(1, 15, 60);
+        let prev = prev_at_lmax(&prob);
+        let lam = 0.9 * prev.lam;
+        let strong = StrongRule::strong_active_set(&prob, &prev, lam);
+        // Strong threshold (2*0.9-1) = 0.8 kills anything with correlation
+        // below 0.8 * lam_max: expect most of the iid design gone.
+        assert!(strong.n_active_feats() < 30, "{}", strong.n_active_feats());
+    }
+
+    #[test]
+    fn strong_noop_on_sparse_grid() {
+        let prob = toy(2, 15, 40);
+        let prev = prev_at_lmax(&prob);
+        let lam = 0.4 * prev.lam; // 2 lam < lam_0
+        let mut rule = StrongRule::new();
+        let mut active = ActiveSet::full(prob.pen.groups());
+        rule.begin_lambda(&prob, lam, prev.lam, Some(&prev), &mut active);
+        assert_eq!(active.n_active_feats(), 40);
+    }
+
+    #[test]
+    fn strong_contains_equicorrelation_at_exact_prev() {
+        // With the exact previous dual point, the strong set contains every
+        // group with correlation 1 (the equicorrelation set at lam_{t-1}).
+        let prob = toy(3, 12, 30);
+        let prev = prev_at_lmax(&prob);
+        let lam = 0.95 * prev.lam;
+        let strong = StrongRule::strong_active_set(&prob, &prev, lam);
+        let full = ActiveSet::full(prob.pen.groups());
+        let stats = prob.stats_for_center(&prev.theta, &full);
+        for g in 0..prob.n_groups() {
+            if stats.group_dual[g] >= 1.0 - 1e-12 {
+                assert!(strong.group[g], "equicorrelated group {g} wrongly discarded");
+            }
+        }
+    }
+}

@@ -1,0 +1,526 @@
+//! Solvers. The workhorse is block coordinate descent with Gap Safe
+//! screening (Alg. 2); `ista` provides a proximal-gradient comparator
+//! (screening is solver-agnostic, Sec. 3.3) and `working_set` a Blitz-like
+//! aggressive working-set strategy (Sec. 5.1).
+
+pub mod ista;
+pub mod path;
+pub mod working_set;
+
+use crate::datafit::FitKind;
+use crate::linalg::Mat;
+use crate::penalty::{gather_block, scatter_block, ActiveSet};
+use crate::problem::{GapResult, Problem};
+use crate::screening::{PrevSolution, ScreeningRule};
+
+/// Inner-solver options (Alg. 2 inputs).
+#[derive(Debug, Clone)]
+pub struct SolveOptions {
+    /// Max CD epochs K.
+    pub max_epochs: usize,
+    /// Gap / screening cadence f_ce (paper uses 10).
+    pub screen_every: usize,
+    /// Absolute duality-gap tolerance (callers pre-scale per Sec. 5).
+    pub eps: f64,
+    /// Max strong-rule KKT repair rounds.
+    pub max_kkt_rounds: usize,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        SolveOptions { max_epochs: 10_000, screen_every: 10, eps: 1e-8, max_kkt_rounds: 20 }
+    }
+}
+
+/// Outcome of one fixed-lambda solve.
+#[derive(Debug, Clone)]
+pub struct SolveResult {
+    pub beta: Mat,
+    /// Prediction X beta.
+    pub z: Mat,
+    pub primal: f64,
+    pub dual: f64,
+    pub gap: f64,
+    /// Final rescaled dual point.
+    pub theta: Mat,
+    pub epochs: usize,
+    pub gap_passes: usize,
+    pub converged: bool,
+    /// Active set at exit (safe superset of the support).
+    pub active: ActiveSet,
+    /// (epoch, active groups, active features) at each gap pass.
+    pub screen_trace: Vec<(usize, usize, usize)>,
+    /// Strong-rule violations repaired.
+    pub kkt_violations: usize,
+}
+
+/// Solve min F(beta) + lambda Omega(beta) at one lambda with screening
+/// (Alg. 2), optionally warm-started and optionally restricted to an
+/// initial active set (active warm start, Eq. 22).
+pub fn solve_fixed_lambda_with(
+    prob: &Problem,
+    lam: f64,
+    lam_max: f64,
+    beta0: Option<&Mat>,
+    init_active: Option<&ActiveSet>,
+    rule: &mut dyn ScreeningRule,
+    prev: Option<&PrevSolution>,
+    opts: &SolveOptions,
+) -> SolveResult {
+    let (p, q) = (prob.p(), prob.q());
+    let mut beta = match beta0 {
+        Some(b) => b.clone(),
+        None => Mat::zeros(p, q),
+    };
+    let mut active = match init_active {
+        Some(a) => a.clone(),
+        None => ActiveSet::full(prob.pen.groups()),
+    };
+    rule.begin_lambda(prob, lam, lam_max, prev, &mut active);
+    zero_screened(prob, &mut beta, &active);
+    let mut state = CdState::new(prob, &beta);
+
+    let mut epochs = 0usize;
+    let mut gap_passes = 0usize;
+    let mut converged = false;
+    let mut screen_trace = Vec::new();
+    let mut kkt_violations = 0usize;
+    let mut last: Option<GapResult> = None;
+
+    let mut kkt_round = 0usize;
+    'outer: loop {
+        for k in 0..opts.max_epochs {
+            if k % opts.screen_every == 0 {
+                let z = state.z(prob);
+                let res = prob.gap_pass(&beta, &z, lam, &active);
+                gap_passes += 1;
+                // Screen before the stopping test (Alg. 2 performs both at
+                // the same event; screening first makes the recorded active
+                // set meaningful even when the gap already certifies
+                // convergence, e.g. at lambda_max).
+                rule.on_gap_pass(prob, lam, &res, &mut active);
+                if zero_screened(prob, &mut beta, &active) {
+                    state.resync(prob, &beta);
+                }
+                screen_trace.push((epochs, active.n_active_groups(), active.n_active_feats()));
+                let stop = res.gap <= opts.eps;
+                last = Some(res);
+                if stop {
+                    converged = true;
+                    break;
+                }
+            }
+            state.cd_epoch(prob, &mut beta, &active, lam);
+            epochs += 1;
+        }
+        if last.is_none() {
+            let z = state.z(prob);
+            last = Some(prob.gap_pass(&beta, &z, lam, &active));
+            gap_passes += 1;
+        }
+        // KKT post-convergence check for un-safe rules (Sec. 3.6): any
+        // inactive group whose dual-norm statistic exceeds 1 was wrongly
+        // discarded; reactivate and resume.
+        if converged && rule.needs_kkt_check() && kkt_round < opts.max_kkt_rounds {
+            let theta = &last.as_ref().unwrap().theta;
+            let full = ActiveSet::full(prob.pen.groups());
+            let stats = prob.stats_for_center(theta, &full);
+            let mut violated = false;
+            for g in 0..prob.n_groups() {
+                if !active.group[g] && stats.group_dual[g] > 1.0 + 1e-12 {
+                    active.group[g] = true;
+                    for &j in prob.pen.groups().feats(g) {
+                        active.feat[j] = true;
+                    }
+                    violated = true;
+                    kkt_violations += 1;
+                }
+            }
+            if violated {
+                kkt_round += 1;
+                converged = false;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+
+    let res = last.expect("at least one gap pass");
+    SolveResult {
+        z: state.z(prob),
+        beta,
+        primal: res.primal,
+        dual: res.dual,
+        gap: res.gap,
+        theta: res.theta,
+        epochs,
+        gap_passes,
+        converged,
+        active,
+        screen_trace,
+        kkt_violations,
+    }
+}
+
+/// Convenience wrapper with a fresh active set and no previous point.
+pub fn solve_fixed_lambda(
+    prob: &Problem,
+    lam: f64,
+    rule: &mut dyn ScreeningRule,
+    opts: &SolveOptions,
+) -> SolveResult {
+    let lam_max = prob.lambda_max();
+    solve_fixed_lambda_with(prob, lam, lam_max, None, None, rule, None, opts)
+}
+
+/// Zero coefficients of screened features (they are provably zero at the
+/// optimum); returns true if anything changed (prediction must resync).
+fn zero_screened(prob: &Problem, beta: &mut Mat, active: &ActiveSet) -> bool {
+    let q = prob.q();
+    let mut changed = false;
+    for j in 0..prob.p() {
+        if !active.feat[j] {
+            for k in 0..q {
+                if beta[(j, k)] != 0.0 {
+                    beta[(j, k)] = 0.0;
+                    changed = true;
+                }
+            }
+        }
+    }
+    changed
+}
+
+/// Coordinate-descent state: for quadratic fits we maintain the residual
+/// rho = Y - X B (classic CD); for logistic / multinomial we maintain the
+/// linear predictor Z = X B and the per-row link values.
+struct CdState {
+    kind: FitKind,
+    /// Quadratic: rho = Y - Z. Others: Z itself.
+    buf: Mat,
+    /// Logistic: sigma(z). Multinomial: softmax rows. Unused for quadratic.
+    link: Mat,
+    /// Scratch for block updates.
+    blk: Vec<f64>,
+    grad: Vec<f64>,
+}
+
+impl CdState {
+    fn new(prob: &Problem, beta: &Mat) -> Self {
+        let kind = prob.fit.kind();
+        let (n, q) = (prob.n(), prob.q());
+        let mut st = CdState {
+            kind,
+            buf: Mat::zeros(n, q),
+            link: Mat::zeros(n, q),
+            blk: Vec::new(),
+            grad: Vec::new(),
+        };
+        st.resync(prob, beta);
+        st
+    }
+
+    /// Recompute state from beta (after screening zeroed coefficients).
+    fn resync(&mut self, prob: &Problem, beta: &Mat) {
+        let z = prob.predict(beta);
+        match self.kind {
+            FitKind::Quadratic => {
+                // rho = Y - Z
+                let y = prob.fit.targets();
+                for ((b, zi), yi) in self
+                    .buf
+                    .as_mut_slice()
+                    .iter_mut()
+                    .zip(z.as_slice())
+                    .zip(y.as_slice())
+                {
+                    *b = yi - zi;
+                }
+            }
+            FitKind::Logistic | FitKind::Multinomial => {
+                self.buf.copy_from(&z);
+                self.refresh_link(prob);
+            }
+        }
+    }
+
+    fn refresh_link(&mut self, prob: &Problem) {
+        // link = -neg_grad(z) + Y ... we store the mean parameter directly:
+        // logistic: sigma(z); multinomial: softmax rows. Both obtained from
+        // neg_grad: link = Y - neg_grad(Z).
+        let y = prob.fit.targets();
+        prob.fit.neg_grad(&self.buf, &mut self.link);
+        for (l, yi) in self.link.as_mut_slice().iter_mut().zip(y.as_slice()) {
+            *l = yi - *l;
+        }
+    }
+
+    /// Current prediction Z = X B.
+    fn z(&self, prob: &Problem) -> Mat {
+        match self.kind {
+            FitKind::Quadratic => {
+                let y = prob.fit.targets();
+                let mut z = Mat::zeros(self.buf.rows(), self.buf.cols());
+                for ((zi, b), yi) in z
+                    .as_mut_slice()
+                    .iter_mut()
+                    .zip(self.buf.as_slice())
+                    .zip(y.as_slice())
+                {
+                    *zi = yi - b;
+                }
+                z
+            }
+            _ => self.buf.clone(),
+        }
+    }
+
+    /// One (block) coordinate-descent epoch over the active set.
+    fn cd_epoch(&mut self, prob: &Problem, beta: &mut Mat, active: &ActiveSet, lam: f64) {
+        let groups = prob.pen.groups();
+        let q = prob.q();
+        for g in 0..groups.len() {
+            if !active.group[g] {
+                continue;
+            }
+            let feats = groups.feats(g);
+            let lg = prob.lipschitz[g];
+            if lg <= 0.0 {
+                continue;
+            }
+            // gradient block: grad[(i,k)] = -X_j^T rho_k   (rho = -G(Z))
+            self.grad.clear();
+            match self.kind {
+                FitKind::Quadratic => {
+                    for &j in feats {
+                        for k in 0..q {
+                            self.grad.push(-prob.x.col_dot(j, self.buf.col(k)));
+                        }
+                    }
+                }
+                FitKind::Logistic | FitKind::Multinomial => {
+                    // grad = X_j^T (link - y)
+                    let y = prob.fit.targets();
+                    for &j in feats {
+                        for k in 0..q {
+                            let mut s = 0.0;
+                            // dot with (link - y) column k
+                            let lk = self.link.col(k);
+                            let yk = y.col(k);
+                            match &prob.x {
+                                crate::linalg::sparse::Design::Dense(m) => {
+                                    let col = m.col(j);
+                                    for i in 0..col.len() {
+                                        s += col[i] * (lk[i] - yk[i]);
+                                    }
+                                }
+                                crate::linalg::sparse::Design::Sparse(sp) => {
+                                    let (idx, val) = sp.col(j);
+                                    for (&i, &v) in idx.iter().zip(val) {
+                                        s += v * (lk[i] - yk[i]);
+                                    }
+                                }
+                            }
+                            self.grad.push(s);
+                        }
+                    }
+                }
+            }
+            // v = beta_g - grad / L_g ; prox ; delta update
+            gather_block(beta, feats, &mut self.blk);
+            let mut any_nonzero_before = false;
+            for (b, gr) in self.blk.iter_mut().zip(&self.grad) {
+                if *b != 0.0 {
+                    any_nonzero_before = true;
+                }
+                *b -= gr / lg;
+            }
+            prob.pen.prox_group(g, &mut self.blk, lam / lg);
+            // compute delta vs old beta and apply
+            let mut changed = false;
+            for (i, &j) in feats.iter().enumerate() {
+                for k in 0..q {
+                    let new = self.blk[i * q + k];
+                    let old = beta[(j, k)];
+                    let delta = new - old;
+                    if delta != 0.0 {
+                        changed = true;
+                        match self.kind {
+                            FitKind::Quadratic => {
+                                // rho -= X_j * delta (column k)
+                                let col = self.buf.col_mut(k);
+                                prob.x.col_axpy(j, -delta, col);
+                            }
+                            _ => {
+                                let col = self.buf.col_mut(k);
+                                prob.x.col_axpy(j, delta, col);
+                            }
+                        }
+                    }
+                }
+            }
+            if changed {
+                scatter_block(beta, feats, &self.blk);
+                if !matches!(self.kind, FitKind::Quadratic) {
+                    self.refresh_link(prob);
+                }
+            } else if !any_nonzero_before {
+                // stayed at zero: nothing to do
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::screening::{NoScreening, Rule};
+    use crate::{build_problem, Task};
+
+    fn small_lasso() -> Problem {
+        let ds = synth::leukemia_like_scaled(24, 60, 3, false);
+        build_problem(ds, Task::Lasso).unwrap()
+    }
+
+    #[test]
+    fn cd_converges_lasso() {
+        let prob = small_lasso();
+        let lam = 0.2 * prob.lambda_max();
+        let mut rule = NoScreening;
+        let opts = SolveOptions { eps: 1e-10, ..Default::default() };
+        let res = solve_fixed_lambda(&prob, lam, &mut rule, &opts);
+        assert!(res.converged, "gap={}", res.gap);
+        assert!(res.gap <= 1e-10);
+        // solution is sparse
+        let nnz = res.beta.nnz();
+        assert!(nnz < 60, "dense solution?");
+        assert!(nnz > 0, "trivial solution");
+    }
+
+    #[test]
+    fn screening_preserves_solution() {
+        // Safety check: the Gap Safe solution equals the no-screening one.
+        let prob = small_lasso();
+        let lam = 0.15 * prob.lambda_max();
+        let opts = SolveOptions { eps: 1e-12, ..Default::default() };
+        let mut r_none = NoScreening;
+        let a = solve_fixed_lambda(&prob, lam, &mut r_none, &opts);
+        let mut r_gap = Rule::GapSafeDyn.build();
+        let b = solve_fixed_lambda(&prob, lam, r_gap.as_mut(), &opts);
+        for j in 0..prob.p() {
+            assert!(
+                (a.beta[(j, 0)] - b.beta[(j, 0)]).abs() < 1e-6,
+                "solutions diverge at {j}: {} vs {}",
+                a.beta[(j, 0)],
+                b.beta[(j, 0)]
+            );
+        }
+        // screened features are exactly zero in both
+        for j in 0..prob.p() {
+            if !b.active.feat[j] {
+                assert_eq!(b.beta[(j, 0)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn screening_speeds_up_epoch_work() {
+        let prob = small_lasso();
+        let lam = 0.1 * prob.lambda_max();
+        let opts = SolveOptions { eps: 1e-10, ..Default::default() };
+        let mut r_gap = Rule::GapSafeDyn.build();
+        let res = solve_fixed_lambda(&prob, lam, r_gap.as_mut(), &opts);
+        assert!(res.converged);
+        // by the end, active set should be well below p
+        let last = res.screen_trace.last().unwrap();
+        assert!(last.2 < 60, "no screening at convergence: {last:?}");
+    }
+
+    #[test]
+    fn logistic_cd_converges() {
+        let ds = synth::leukemia_like_scaled(30, 40, 5, true);
+        let prob = build_problem(ds, Task::Logreg).unwrap();
+        let lam = 0.2 * prob.lambda_max();
+        let mut rule = Rule::GapSafeDyn.build();
+        let opts = SolveOptions { eps: 1e-9, ..Default::default() };
+        let res = solve_fixed_lambda(&prob, lam, rule.as_mut(), &opts);
+        assert!(res.converged, "gap={}", res.gap);
+    }
+
+    #[test]
+    fn multitask_cd_converges() {
+        let ds = synth::meg_like(20, 30, 4, 7);
+        let prob = build_problem(ds, Task::MultiTask).unwrap();
+        let lam = 0.3 * prob.lambda_max();
+        let mut rule = Rule::GapSafeDyn.build();
+        let opts = SolveOptions { eps: 1e-9, ..Default::default() };
+        let res = solve_fixed_lambda(&prob, lam, rule.as_mut(), &opts);
+        assert!(res.converged, "gap={}", res.gap);
+        // row sparsity
+        let active_rows = (0..30).filter(|&j| res.beta.row_norm(j) > 0.0).count();
+        assert!(active_rows < 30);
+    }
+
+    #[test]
+    fn sgl_cd_converges() {
+        let mut ds = synth::leukemia_like_scaled(20, 36, 9, false);
+        ds.group_size = Some(4);
+        let prob = build_problem(ds, Task::SparseGroupLasso { tau: 0.4 }).unwrap();
+        let lam = 0.3 * prob.lambda_max();
+        let mut rule = Rule::GapSafeFull.build();
+        let opts = SolveOptions { eps: 1e-9, ..Default::default() };
+        let res = solve_fixed_lambda(&prob, lam, rule.as_mut(), &opts);
+        assert!(res.converged, "gap={}", res.gap);
+    }
+
+    #[test]
+    fn multinomial_cd_converges() {
+        let (ds, _) = synth::multinomial_like(24, 20, 3, 11);
+        let prob = build_problem(ds, Task::Multinomial).unwrap();
+        let lam = 0.3 * prob.lambda_max();
+        let mut rule = Rule::GapSafeDyn.build();
+        let opts = SolveOptions { eps: 1e-7, max_epochs: 20_000, ..Default::default() };
+        let res = solve_fixed_lambda(&prob, lam, rule.as_mut(), &opts);
+        assert!(res.converged, "gap={}", res.gap);
+    }
+
+    #[test]
+    fn strong_rule_kkt_repair_matches_safe_solution() {
+        let prob = small_lasso();
+        let lmax = prob.lambda_max();
+        let lam = 0.5 * lmax;
+        let opts = SolveOptions { eps: 1e-12, ..Default::default() };
+        // build a prev at lambda_max
+        let beta0 = Mat::zeros(prob.p(), 1);
+        let z0 = prob.predict(&beta0);
+        let full = ActiveSet::full(prob.pen.groups());
+        let g0 = prob.gap_pass(&beta0, &z0, lmax, &full);
+        let prev = PrevSolution {
+            lam: lmax,
+            beta: beta0.clone(),
+            z: z0.clone(),
+            theta: g0.theta,
+            loss: prob.fit.loss(&z0),
+            pen_value: 0.0,
+            active: full,
+        };
+        let mut strong = Rule::Strong.build();
+        let res = solve_fixed_lambda_with(
+            &prob, lam, lmax, None, None, strong.as_mut(), Some(&prev), &opts,
+        );
+        let mut none = NoScreening;
+        let want = solve_fixed_lambda(&prob, lam, &mut none, &opts);
+        assert!(res.converged);
+        for j in 0..prob.p() {
+            assert!(
+                (res.beta[(j, 0)] - want.beta[(j, 0)]).abs() < 1e-6,
+                "j={j}: strong={} oracle={} active={} kkt_viol={}",
+                res.beta[(j, 0)],
+                want.beta[(j, 0)],
+                res.active.feat[j],
+                res.kkt_violations
+            );
+        }
+    }
+}

@@ -1,0 +1,333 @@
+//! Pathwise solver (Alg. 1): logarithmic lambda grid, sequential screening,
+//! and the three warm-start strategies of Sec. 3.4 / 3.6:
+//!
+//! * `Standard` — initialize at the previous solution;
+//! * `Active`   — first (approximately) solve Eq. (22) restricted to the
+//!                previous *safe active set*, then solve the full problem;
+//! * `Strong`   — same two-phase scheme but restricted to the (un-safe)
+//!                strong active set of Eq. (24), with KKT repair.
+
+use super::{solve_fixed_lambda_with, SolveOptions, SolveResult};
+use crate::linalg::Mat;
+
+use crate::problem::Problem;
+use crate::screening::{PrevSolution, Rule, StrongRule};
+use crate::util::Stopwatch;
+
+/// Warm-start strategy across the path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WarmStart {
+    Standard,
+    Active,
+    Strong,
+}
+
+impl WarmStart {
+    pub fn parse(s: &str) -> Result<WarmStart, String> {
+        match s {
+            "standard" | "warm" => Ok(WarmStart::Standard),
+            "active" => Ok(WarmStart::Active),
+            "strong" => Ok(WarmStart::Strong),
+            other => Err(format!("unknown warm start '{other}'")),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            WarmStart::Standard => "standard",
+            WarmStart::Active => "active",
+            WarmStart::Strong => "strong",
+        }
+    }
+}
+
+/// Path configuration (defaults follow Sec. 5: 100 lambdas from lambda_max
+/// down to lambda_max / 10^delta with delta = 3).
+#[derive(Debug, Clone)]
+pub struct PathConfig {
+    pub n_lambdas: usize,
+    /// Grid decade span delta: lambda_t = lambda_max 10^{-delta t/(T-1)}.
+    pub delta: f64,
+    pub rule: Rule,
+    pub warm: WarmStart,
+    /// Raw tolerance; scaled as in Sec. 5 unless `eps_is_absolute`.
+    pub eps: f64,
+    pub eps_is_absolute: bool,
+    pub max_epochs: usize,
+    pub screen_every: usize,
+}
+
+impl Default for PathConfig {
+    fn default() -> Self {
+        PathConfig {
+            n_lambdas: 100,
+            delta: 3.0,
+            rule: Rule::GapSafeFull,
+            warm: WarmStart::Standard,
+            eps: 1e-6,
+            eps_is_absolute: false,
+            max_epochs: 10_000,
+            screen_every: 10,
+        }
+    }
+}
+
+/// Per-lambda record.
+#[derive(Debug, Clone)]
+pub struct PathPoint {
+    pub lam: f64,
+    pub gap: f64,
+    pub epochs: usize,
+    pub n_active_groups: usize,
+    pub n_active_feats: usize,
+    pub nnz: usize,
+    pub seconds: f64,
+    pub converged: bool,
+    pub kkt_violations: usize,
+}
+
+/// Whole-path outcome.
+#[derive(Debug, Clone)]
+pub struct PathResult {
+    pub lambdas: Vec<f64>,
+    pub points: Vec<PathPoint>,
+    /// Final coefficients per lambda (kept for downstream model selection).
+    pub betas: Vec<Mat>,
+    pub total_seconds: f64,
+    pub lam_max: f64,
+}
+
+/// The standard logarithmic grid of Sec. 3.2.
+pub fn lambda_grid(lam_max: f64, n: usize, delta: f64) -> Vec<f64> {
+    assert!(n >= 1);
+    if n == 1 {
+        return vec![lam_max];
+    }
+    (0..n)
+        .map(|t| lam_max * 10f64.powf(-delta * t as f64 / (n as f64 - 1.0)))
+        .collect()
+}
+
+/// Tolerance scaling of Sec. 5: eps <- eps ||y||^2 for regression,
+/// eps * min(n_1, n_2)/n for logistic (class counts), eps * n log(q) for
+/// multinomial.
+pub fn scaled_eps(prob: &Problem, eps: f64) -> f64 {
+    use crate::datafit::FitKind;
+    match prob.fit.kind() {
+        FitKind::Quadratic => eps * prob.fit.targets().frob_sq().max(1e-300),
+        FitKind::Logistic => {
+            let y = prob.fit.targets().as_slice();
+            let n1 = y.iter().filter(|&&v| v == 1.0).count().max(1);
+            let n0 = (y.len() - n1).max(1);
+            eps * (n1.min(n0) as f64) / y.len() as f64
+        }
+        FitKind::Multinomial => {
+            let n = prob.n() as f64;
+            let q = prob.q() as f64;
+            eps * n * q.ln()
+        }
+    }
+}
+
+/// Run the full path (Alg. 1).
+pub fn solve_path(prob: &Problem, cfg: &PathConfig) -> PathResult {
+    let lam_max = prob.lambda_max();
+    let lambdas = lambda_grid(lam_max, cfg.n_lambdas, cfg.delta);
+    let eps = if cfg.eps_is_absolute { cfg.eps } else { scaled_eps(prob, cfg.eps) };
+    let opts = SolveOptions {
+        max_epochs: cfg.max_epochs,
+        screen_every: cfg.screen_every,
+        eps,
+        max_kkt_rounds: 20,
+    };
+    let mut rule = cfg.rule.build();
+    let mut prev: Option<PrevSolution> = None;
+    let mut points = Vec::with_capacity(lambdas.len());
+    let mut betas = Vec::with_capacity(lambdas.len());
+    let sw_total = Stopwatch::start();
+
+    for &lam in &lambdas {
+        let sw = Stopwatch::start();
+        let beta0 = prev.as_ref().map(|p| p.beta.clone());
+        // Phase 1 (active / strong warm start): approximately solve the
+        // restricted problem (22) at lambda_t.
+        let phase1_beta = match (cfg.warm, prev.as_ref()) {
+            (WarmStart::Active, Some(pv)) => {
+                let res = solve_fixed_lambda_with(
+                    prob,
+                    lam,
+                    lam_max,
+                    beta0.as_ref(),
+                    Some(&pv.active),
+                    rule.as_mut(),
+                    Some(pv),
+                    &opts,
+                );
+                Some(res.beta)
+            }
+            (WarmStart::Strong, Some(pv)) => {
+                let strong = StrongRule::strong_active_set(prob, pv, lam);
+                // intersect with safe knowledge from the previous lambda is
+                // NOT valid here (supports grow as lambda decreases), so the
+                // restriction is the strong set alone.
+                let res = solve_fixed_lambda_with(
+                    prob,
+                    lam,
+                    lam_max,
+                    beta0.as_ref(),
+                    Some(&strong),
+                    rule.as_mut(),
+                    Some(pv),
+                    &opts,
+                );
+                Some(res.beta)
+            }
+            _ => None,
+        };
+        let init = phase1_beta.as_ref().or(beta0.as_ref());
+        let res: SolveResult = solve_fixed_lambda_with(
+            prob,
+            lam,
+            lam_max,
+            init,
+            None,
+            rule.as_mut(),
+            prev.as_ref(),
+            &opts,
+        );
+        let secs = sw.secs();
+        let nnz = count_nnz(&res.beta);
+        points.push(PathPoint {
+            lam,
+            gap: res.gap,
+            epochs: res.epochs,
+            n_active_groups: res.active.n_active_groups(),
+            n_active_feats: res.active.n_active_feats(),
+            nnz,
+            seconds: secs,
+            converged: res.converged,
+            kkt_violations: res.kkt_violations,
+        });
+        prev = Some(PrevSolution {
+            lam,
+            loss: prob.fit.loss(&res.z),
+            pen_value: prob.pen.value(&res.beta),
+            z: res.z,
+            theta: res.theta,
+            active: res.active,
+            beta: res.beta.clone(),
+        });
+        betas.push(res.beta);
+    }
+
+    PathResult { lambdas, points, betas, total_seconds: sw_total.secs(), lam_max }
+}
+
+fn count_nnz(beta: &Mat) -> usize {
+    (0..beta.rows()).filter(|&j| (0..beta.cols()).any(|k| beta[(j, k)] != 0.0)).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::{build_problem, Task};
+
+    #[test]
+    fn grid_endpoints() {
+        let g = lambda_grid(10.0, 5, 2.0);
+        assert_eq!(g.len(), 5);
+        assert!((g[0] - 10.0).abs() < 1e-12);
+        assert!((g[4] - 0.1).abs() < 1e-12);
+        for w in g.windows(2) {
+            assert!(w[1] < w[0]);
+        }
+    }
+
+    fn quick_cfg(rule: Rule, warm: WarmStart) -> PathConfig {
+        PathConfig {
+            n_lambdas: 12,
+            delta: 2.0,
+            rule,
+            warm,
+            eps: 1e-8,
+            eps_is_absolute: false,
+            max_epochs: 3000,
+            screen_every: 10,
+        }
+    }
+
+    #[test]
+    fn path_converges_all_points_and_monotone_support() {
+        let ds = synth::leukemia_like_scaled(30, 80, 2, false);
+        let prob = build_problem(ds, Task::Lasso).unwrap();
+        let res = solve_path(&prob, &quick_cfg(Rule::GapSafeFull, WarmStart::Standard));
+        assert_eq!(res.points.len(), 12);
+        assert!(res.points.iter().all(|p| p.converged));
+        // support at lambda_max is empty
+        assert_eq!(res.points[0].nnz, 0);
+        // support grows (weakly, statistically) along the path
+        assert!(res.points.last().unwrap().nnz >= res.points[0].nnz);
+    }
+
+    #[test]
+    fn warm_start_variants_agree() {
+        let ds = synth::leukemia_like_scaled(24, 60, 4, false);
+        let prob = build_problem(ds, Task::Lasso).unwrap();
+        let base = solve_path(&prob, &quick_cfg(Rule::GapSafeFull, WarmStart::Standard));
+        for warm in [WarmStart::Active, WarmStart::Strong] {
+            let other = solve_path(&prob, &quick_cfg(Rule::GapSafeFull, warm));
+            for (a, b) in base.betas.iter().zip(&other.betas) {
+                for j in 0..prob.p() {
+                    assert!(
+                        (a[(j, 0)] - b[(j, 0)]).abs() < 1e-4,
+                        "warm start {warm:?} diverged at feature {j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rules_produce_identical_paths() {
+        // Safety across the whole rule zoo on a regression path.
+        let ds = synth::leukemia_like_scaled(20, 40, 6, false);
+        let prob = build_problem(ds, Task::Lasso).unwrap();
+        let base = solve_path(&prob, &quick_cfg(Rule::None, WarmStart::Standard));
+        for rule in [
+            Rule::StaticGap,
+            Rule::StaticElGhaoui,
+            Rule::Dst3,
+            Rule::DynamicBonnefoy,
+            Rule::GapSafeSeq,
+            Rule::GapSafeDyn,
+            Rule::GapSafeFull,
+            Rule::Strong,
+        ] {
+            let other = solve_path(&prob, &quick_cfg(rule, WarmStart::Standard));
+            for (t, (a, b)) in base.betas.iter().zip(&other.betas).enumerate() {
+                for j in 0..prob.p() {
+                    assert!(
+                        (a[(j, 0)] - b[(j, 0)]).abs() < 1e-4,
+                        "rule {} diverged at lambda index {t}, feature {j}: {} vs {}",
+                        rule.label(),
+                        a[(j, 0)],
+                        b[(j, 0)]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scaled_eps_families() {
+        let ds = synth::leukemia_like_scaled(20, 10, 1, false);
+        let prob = build_problem(ds, Task::Lasso).unwrap();
+        let e = scaled_eps(&prob, 1e-6);
+        assert!(e > 0.0);
+        let dsb = synth::leukemia_like_scaled(20, 10, 1, true);
+        let probb = build_problem(dsb, Task::Logreg).unwrap();
+        let eb = scaled_eps(&probb, 1e-6);
+        assert!(eb > 0.0 && eb < 1e-6);
+    }
+}

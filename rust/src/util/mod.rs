@@ -1,0 +1,111 @@
+//! Substrate utilities: PRNG, mini-JSON, timing, CSV, and the lightweight
+//! property-test harness (the offline registry has no rand/serde/proptest).
+
+pub mod json;
+pub mod prng;
+
+use std::time::Instant;
+
+/// A simple stopwatch for coordinator metrics.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    /// Elapsed seconds since construction.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Write rows of (stringified) cells as CSV with a header line.
+pub fn write_csv(
+    path: &std::path::Path,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> std::io::Result<()> {
+    use std::io::Write;
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Format seconds with adaptive precision for table output.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+/// Property-test driver: runs `body` for `cases` seeded cases and reports the
+/// failing seed, mimicking proptest's shrink-free core loop. Each case gets
+/// an independent `Prng` so failures reproduce from the printed seed.
+pub fn check_property<F: FnMut(&mut prng::Prng) -> Result<(), String>>(
+    name: &str,
+    cases: u64,
+    mut body: F,
+) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000u64 ^ (case.wrapping_mul(0x9E37_79B9));
+        let mut rng = prng::Prng::new(seed);
+        if let Err(msg) = body(&mut rng) {
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.secs();
+        let b = sw.secs();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(1e-5).ends_with("us"));
+        assert!(fmt_secs(0.01).ends_with("ms"));
+        assert!(fmt_secs(2.5).ends_with('s'));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("gapsafe_csv_test");
+        let path = dir.join("t.csv");
+        write_csv(&path, &["a", "b"], &[vec!["1".into(), "2".into()]]).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(s, "a,b\n1,2\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'boom' failed")]
+    fn property_reports_failure() {
+        check_property("boom", 5, |rng| {
+            if rng.uniform() >= 0.0 {
+                Err("always".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

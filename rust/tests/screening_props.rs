@@ -1,0 +1,269 @@
+//! Deeper property tests on the screening machinery: convergence of the
+//! Gap Safe regions (Prop. 5 / Remark 8), finite identification of the
+//! equicorrelation set (Prop. 6), sequential-vs-dynamic consistency,
+//! lambda_max criticality (Prop. 3), and failure injection (degenerate
+//! designs, zero columns, constant targets).
+
+use gapsafe::data::synth;
+use gapsafe::linalg::sparse::{Csc, Design};
+use gapsafe::linalg::Mat;
+use gapsafe::penalty::{ActiveSet, Groups, L1};
+use gapsafe::datafit::Quadratic;
+use gapsafe::problem::Problem;
+use gapsafe::screening::{NoScreening, Rule};
+use gapsafe::solver::path::{lambda_grid, solve_path, PathConfig, WarmStart};
+use gapsafe::solver::{solve_fixed_lambda, SolveOptions};
+use gapsafe::util::{check_property, prng::Prng};
+use gapsafe::{build_problem, Task};
+
+/// Prop. 3: at lambda >= lambda_max the solution is exactly 0 and everything
+/// is screened instantly; just below, the top feature survives.
+#[test]
+fn lambda_max_criticality() {
+    check_property("lambda_max_critical", 10, |rng| {
+        let ds = synth::leukemia_like_scaled(15 + rng.below(10), 30, rng.next_u64(), false);
+        let prob = build_problem(ds, Task::Lasso).unwrap();
+        let lmax = prob.lambda_max();
+        let opts = SolveOptions { eps: 1e-12, ..Default::default() };
+        let mut rule = Rule::GapSafeDyn.build();
+        let res = solve_fixed_lambda(&prob, lmax * 1.0001, rule.as_mut(), &opts);
+        if res.beta.nnz() != 0 {
+            return Err("nonzero solution above lambda_max".into());
+        }
+        let mut rule = Rule::GapSafeDyn.build();
+        let res = solve_fixed_lambda(&prob, lmax * 0.999, rule.as_mut(), &opts);
+        if !res.converged {
+            return Err("did not converge just below lambda_max".into());
+        }
+        Ok(())
+    });
+}
+
+/// Remark 8: the Gap Safe radius goes to zero along the iterations, so the
+/// active set converges; the trace must be non-increasing in feature count.
+#[test]
+fn dynamic_active_set_monotone_within_lambda() {
+    let ds = synth::leukemia_like_scaled(30, 120, 77, false);
+    let prob = build_problem(ds, Task::Lasso).unwrap();
+    let lam = 0.1 * prob.lambda_max();
+    let opts = SolveOptions { eps: 1e-12, screen_every: 5, ..Default::default() };
+    let mut rule = Rule::GapSafeDyn.build();
+    let res = solve_fixed_lambda(&prob, lam, rule.as_mut(), &opts);
+    assert!(res.converged);
+    let counts: Vec<usize> = res.screen_trace.iter().map(|t| t.2).collect();
+    for w in counts.windows(2) {
+        assert!(w[1] <= w[0], "active set grew within a lambda: {counts:?}");
+    }
+    // radius converges to 0 => final active set equals the equicorrelation
+    // set (Prop. 6): every active feature has |X_j^T theta| ~ 1.
+    let full = ActiveSet::full(prob.pen.groups());
+    let stats = prob.stats_for_center(&res.theta, &full);
+    for j in 0..prob.p() {
+        if res.active.feat[j] {
+            assert!(
+                stats.group_dual[j] > 1.0 - 1e-4,
+                "active feature {j} has score {} << 1 at convergence (eps=1e-12)",
+                stats.group_dual[j]
+            );
+        }
+    }
+}
+
+/// Sequential screening with an *exact* previous solution can never be less
+/// safe than dynamic screening started cold (both must keep the support).
+#[test]
+fn sequential_and_dynamic_consistent_along_path() {
+    let ds = synth::leukemia_like_scaled(24, 80, 78, false);
+    let prob = build_problem(ds, Task::Lasso).unwrap();
+    let cfg_seq = PathConfig {
+        n_lambdas: 15,
+        delta: 2.0,
+        rule: Rule::GapSafeSeq,
+        eps: 1e-8,
+        ..Default::default()
+    };
+    let cfg_dyn = PathConfig { rule: Rule::GapSafeDyn, ..cfg_seq.clone() };
+    let seq = solve_path(&prob, &cfg_seq);
+    let dyn_ = solve_path(&prob, &cfg_dyn);
+    for (a, b) in seq.betas.iter().zip(&dyn_.betas) {
+        for j in 0..prob.p() {
+            assert!((a[(j, 0)] - b[(j, 0)]).abs() < 1e-5);
+        }
+    }
+}
+
+/// Degenerate designs must not break anything: zero columns are screened
+/// immediately (their correlation is 0 forever).
+#[test]
+fn zero_columns_are_harmless() {
+    let mut rng = Prng::new(5);
+    let n = 15;
+    let p = 20;
+    let mut x = Mat::zeros(n, p);
+    for j in 0..p {
+        if j % 4 != 0 {
+            for i in 0..n {
+                x[(i, j)] = rng.gaussian();
+            }
+        } // every 4th column stays identically zero
+    }
+    let y: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+    let prob = Problem::new(
+        Design::Dense(x),
+        Box::new(Quadratic::from_vec(&y)),
+        Box::new(L1::new(p)),
+    );
+    let lam = 0.3 * prob.lambda_max();
+    let mut rule = Rule::GapSafeDyn.build();
+    let opts = SolveOptions { eps: 1e-10, ..Default::default() };
+    let res = solve_fixed_lambda(&prob, lam, rule.as_mut(), &opts);
+    assert!(res.converged);
+    for j in (0..p).step_by(4) {
+        assert_eq!(res.beta[(j, 0)], 0.0);
+        assert!(!res.active.feat[j], "zero column {j} not screened");
+    }
+}
+
+/// Constant (zero) target: lambda_max = 0 edge; solving at any lambda > 0
+/// returns beta = 0 instantly.
+#[test]
+fn zero_target_trivial_solution() {
+    let mut rng = Prng::new(6);
+    let mut x = Mat::zeros(10, 8);
+    for v in x.as_mut_slice() {
+        *v = rng.gaussian();
+    }
+    let y = vec![0.0; 10];
+    let prob = Problem::new(
+        Design::Dense(x),
+        Box::new(Quadratic::from_vec(&y)),
+        Box::new(L1::new(8)),
+    );
+    assert_eq!(prob.lambda_max(), 0.0);
+    let mut rule = NoScreening;
+    let opts = SolveOptions { eps: 1e-12, ..Default::default() };
+    let res = solve_fixed_lambda(&prob, 0.5, &mut rule, &opts);
+    assert!(res.converged);
+    assert_eq!(res.beta.nnz(), 0);
+}
+
+/// Duplicated columns (non-unique solutions, Tibshirani 2013): safe rules
+/// must still converge and the active set must contain every equicorrelated
+/// copy.
+#[test]
+fn duplicated_columns_non_unique_solutions() {
+    let mut rng = Prng::new(7);
+    let n = 12;
+    let mut x = Mat::zeros(n, 10);
+    for j in 0..5 {
+        for i in 0..n {
+            x[(i, j)] = rng.gaussian();
+        }
+    }
+    for j in 5..10 {
+        for i in 0..n {
+            x[(i, j)] = x[(i, j - 5)]; // exact duplicates
+        }
+    }
+    let y: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+    let prob = Problem::new(
+        Design::Dense(x),
+        Box::new(Quadratic::from_vec(&y)),
+        Box::new(L1::new(10)),
+    );
+    let lam = 0.4 * prob.lambda_max();
+    let mut rule = Rule::GapSafeDyn.build();
+    let opts = SolveOptions { eps: 1e-10, ..Default::default() };
+    let res = solve_fixed_lambda(&prob, lam, rule.as_mut(), &opts);
+    assert!(res.converged);
+    for j in 0..5 {
+        // a feature and its duplicate have identical screening scores: both
+        // in or both out.
+        assert_eq!(res.active.feat[j], res.active.feat[j + 5], "asymmetric screen at {j}");
+    }
+}
+
+/// Sparse CSC path equals the dense path on identical data.
+#[test]
+fn sparse_dense_paths_identical() {
+    let ds = synth::sparse_regression(25, 60, 0.2, 13);
+    let dense = gapsafe::data::Dataset {
+        x: Design::Dense(ds.x.to_dense()),
+        y: ds.y.clone(),
+        group_size: None,
+        name: "densified".into(),
+    };
+    let cfg = PathConfig { n_lambdas: 8, delta: 2.0, eps: 1e-8, ..Default::default() };
+    let ps = solve_path(&build_problem(ds, Task::Lasso).unwrap(), &cfg);
+    let pd = solve_path(&build_problem(dense, Task::Lasso).unwrap(), &cfg);
+    for (a, b) in ps.betas.iter().zip(&pd.betas) {
+        for j in 0..60 {
+            assert!((a[(j, 0)] - b[(j, 0)]).abs() < 1e-7);
+        }
+    }
+}
+
+/// CSC construction from triplets in scrambled order must canonicalise.
+#[test]
+fn csc_triplet_order_invariance() {
+    let mut rng = Prng::new(8);
+    let mut trip = Vec::new();
+    for j in 0..6 {
+        for i in 0..5 {
+            if rng.bernoulli(0.5) {
+                trip.push((j, i, rng.gaussian()));
+            }
+        }
+    }
+    let a = Csc::from_triplets(5, 6, trip.clone());
+    rng.shuffle(&mut trip);
+    let b = Csc::from_triplets(5, 6, trip);
+    assert_eq!(a.to_dense(), b.to_dense());
+}
+
+/// Group Lasso with sqrt-size weights (Yuan & Lin) runs the whole path.
+#[test]
+fn group_lasso_weighted_path() {
+    use gapsafe::penalty::GroupL2;
+    let ds = synth::climate_like(36, 8, 17);
+    let p = ds.p();
+    let prob = Problem::new(
+        ds.x,
+        Box::new(Quadratic::new(ds.y)),
+        Box::new(GroupL2::sqrt_size_weights(Groups::contiguous(p, 7))),
+    );
+    let cfg = PathConfig { n_lambdas: 8, delta: 1.5, eps: 1e-6, ..Default::default() };
+    let res = solve_path(&prob, &cfg);
+    assert!(res.points.iter().all(|pt| pt.converged));
+}
+
+/// The lambda grid endpoints and spacing follow Sec. 3.2 exactly.
+#[test]
+fn grid_matches_paper_formula() {
+    let lmax = 3.7;
+    let g = lambda_grid(lmax, 100, 3.0);
+    assert_eq!(g.len(), 100);
+    for (t, &l) in g.iter().enumerate() {
+        let want = lmax * 10f64.powf(-3.0 * t as f64 / 99.0);
+        assert!((l - want).abs() < 1e-12 * want);
+    }
+}
+
+/// Multinomial path with the full rule set that applies to it.
+#[test]
+fn multinomial_path_with_screening() {
+    let (ds, _) = synth::multinomial_like(24, 18, 3, 19);
+    let prob = build_problem(ds, Task::Multinomial).unwrap();
+    let cfg = PathConfig {
+        n_lambdas: 6,
+        delta: 1.5,
+        rule: Rule::GapSafeFull,
+        warm: WarmStart::Active,
+        eps: 1e-5,
+        max_epochs: 20_000,
+        ..Default::default()
+    };
+    let res = solve_path(&prob, &cfg);
+    assert!(res.points.iter().all(|p| p.converged), "{:?}",
+        res.points.iter().map(|p| p.gap).collect::<Vec<_>>());
+}
