@@ -39,3 +39,26 @@ pub fn banner(name: &str, detail: &str) {
     println!("(set GAPSAFE_BENCH_FULL=1 for the paper's full-size workloads)");
     println!("================================================================");
 }
+
+/// Record headline numbers as `results/BENCH_<name>.json` — the perf-
+/// trajectory convention (docs/BENCHMARKS.md): one flat object of numeric
+/// metrics per bench, overwritten on each run so successive commits can be
+/// diffed. Serialized through the crate's own `util::json` (JSON has no
+/// NaN/inf literals, so non-finite metrics are recorded as null).
+pub fn record_bench_json(name: &str, metrics: &[(&str, f64)]) {
+    use gapsafe::util::json::Json;
+    use std::collections::BTreeMap;
+    let mut obj = BTreeMap::new();
+    obj.insert("bench".to_string(), Json::Str(name.to_string()));
+    obj.insert("full_size".to_string(), Json::Bool(full_size()));
+    for (k, v) in metrics {
+        let val = if v.is_finite() { Json::Num(*v) } else { Json::Null };
+        obj.insert((*k).to_string(), val);
+    }
+    let path = results_dir().join(format!("BENCH_{name}.json"));
+    if let Err(e) = std::fs::write(&path, format!("{}\n", Json::Obj(obj))) {
+        eprintln!("warning: could not record {}: {e}", path.display());
+    } else {
+        println!("recorded {}", path.display());
+    }
+}

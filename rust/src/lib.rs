@@ -15,6 +15,14 @@
 //! * **Layer 1** — Pallas column-tiled screening kernels
 //!   (`python/compile/kernels/screen.py`).
 //!
+//! The solver stack is parallel end to end on a std-only scoped-thread
+//! pool ([`solver::parallel`]): chunked lambda grids in
+//! [`solver::path::solve_path`] (`PathConfig::threads`), concurrent CV
+//! folds and tau candidates ([`coordinator::cv`]), fanned-out screening
+//! sweeps (`Problem::set_screen_threads`), and batch serving of many path
+//! requests ([`coordinator::BatchRunner`]). `threads = 1` always takes the
+//! exact serial path.
+//!
 //! Quick start:
 //!
 //! ```no_run
@@ -22,10 +30,14 @@
 //!
 //! let ds = gapsafe::data::synth::leukemia_like_scaled(40, 200, 0, false);
 //! let prob = build_problem(ds, Task::Lasso).unwrap();
-//! let cfg = PathConfig::default();
+//! let cfg = PathConfig { threads: 4, ..PathConfig::default() };
 //! let res = solve_path(&prob, &cfg);
 //! println!("solved {} lambdas", res.points.len());
 //! ```
+
+// Numeric-kernel code indexes matrices heavily and threads wide argument
+// lists through Alg. 1/2; these pedantic lints fight the domain style.
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 pub mod coordinator;
 pub mod data;
@@ -130,11 +142,13 @@ pub fn build_problem(ds: Dataset, task: Task) -> Result<Problem, String> {
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
     pub use crate::build_problem;
-    pub use crate::coordinator::report;
+    pub use crate::coordinator::cv::{kfold_cv, CvConfig, CvResult};
+    pub use crate::coordinator::{report, BatchRunner};
     pub use crate::data::{synth, Dataset};
     pub use crate::penalty::ActiveSet;
     pub use crate::problem::Problem;
     pub use crate::screening::Rule;
+    pub use crate::solver::parallel::effective_threads;
     pub use crate::solver::path::{solve_path, PathConfig, WarmStart};
     pub use crate::solver::{solve_fixed_lambda, SolveOptions};
     pub use crate::Task;

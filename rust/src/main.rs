@@ -3,13 +3,18 @@
 //! Subcommands (arg parsing is hand-rolled: the offline registry has no clap):
 //!
 //!   gapsafe path      --task lasso --data synth:leukemia --rule gap --warm active --eps 1e-6
+//!                     [--threads 4]   (chunked parallel path engine)
 //!   gapsafe solve     --task lasso --data synth:leukemia --lam-ratio 0.1 --rule gap-dyn
+//!                     [--threads 4]   (parallel screening sweep)
+//!   gapsafe cv        --task lasso --data ... --folds 5 [--threads 0]   (K-fold CV)
+//!   gapsafe batch     --jobs 8 [--threads 0]   (BatchRunner serving demo)
 //!   gapsafe fig3|fig4|fig5|fig6    [--small] [--out results/]
 //!   gapsafe selftest  [--artifacts artifacts/]   (PJRT vs native gap check)
 //!   gapsafe artifacts [--artifacts artifacts/]   (list + validate manifest)
 //!   gapsafe lmax      --task ... --data ...
 
-use gapsafe::coordinator::{active_fraction_experiment, report, time_to_convergence};
+use gapsafe::coordinator::cv::{kfold_cv, CvConfig};
+use gapsafe::coordinator::{active_fraction_experiment, report, time_to_convergence, BatchRunner};
 use gapsafe::data::{synth, Dataset};
 use gapsafe::penalty::ActiveSet;
 use gapsafe::runtime::{artifact, PjrtEngine};
@@ -32,6 +37,8 @@ fn main() -> ExitCode {
     let r = match cmd.as_str() {
         "path" => cmd_path(&opts),
         "solve" => cmd_solve(&opts),
+        "cv" => cmd_cv(&opts),
+        "batch" => cmd_batch(&opts),
         "fig3" => cmd_fig(&opts, 3),
         "fig4" => cmd_fig(&opts, 4),
         "fig5" => cmd_fig(&opts, 5),
@@ -57,13 +64,15 @@ fn main() -> ExitCode {
 fn usage() {
     eprintln!(
         "gapsafe — Gap Safe screening rules (Ndiaye et al., 2017)\n\
-         usage: gapsafe <path|solve|fig3|fig4|fig5|fig6|selftest|artifacts|lmax> [flags]\n\
+         usage: gapsafe <path|solve|cv|batch|fig3|fig4|fig5|fig6|selftest|artifacts|lmax> [flags]\n\
          common flags:\n\
            --task lasso|group-lasso|sgl[:tau]|logreg|multitask|multinomial\n\
            --data synth:leukemia | synth:meg | synth:climate | csv:<path> | synth:reg:<n>x<p>\n\
            --rule none|static|elghaoui|dst3|bonnefoy|gap-seq|gap-dyn|gap|strong\n\
            --warm standard|active|strong     --eps 1e-6   --grid 100   --delta 3\n\
+           --threads 1 (1 = serial, 0 = all cores; path chunks / CV folds / batch jobs)\n\
            --seed 42   --small (shrink figure workloads)   --out results\n\
+           --folds 5 (cv)   --jobs 8 (batch)\n\
            --artifacts artifacts (manifest dir)   --lam-ratio 0.1 (solve)"
     );
 }
@@ -166,6 +175,7 @@ fn cmd_path(o: &Flags) -> Result<(), String> {
         eps_is_absolute: false,
         max_epochs: flag_usize(o, "max-epochs", 10_000)?,
         screen_every: flag_usize(o, "fce", 10)?,
+        threads: flag_usize(o, "threads", 1)?,
     };
     let res = solve_path(&prob, &cfg);
     println!(
@@ -179,11 +189,100 @@ fn cmd_path(o: &Flags) -> Result<(), String> {
         );
     }
     println!(
-        "path: {} lambdas in {:.3}s (rule={}, warm={})",
+        "path: {} lambdas in {:.3}s (rule={}, warm={}, threads={})",
         res.points.len(),
         res.total_seconds,
         cfg.rule.label(),
-        cfg.warm.label()
+        cfg.warm.label(),
+        gapsafe::solver::parallel::effective_threads(cfg.threads)
+    );
+    Ok(())
+}
+
+fn cmd_cv(o: &Flags) -> Result<(), String> {
+    let seed = flag_usize(o, "seed", 42)? as u64;
+    let small = o.contains_key("small");
+    let ds = load_data(flag(o, "data", "synth:leukemia"), seed, small)?;
+    let task = Task::parse(flag(o, "task", "lasso"))?;
+    let cfg = PathConfig {
+        n_lambdas: flag_usize(o, "grid", 50)?,
+        delta: flag_f64(o, "delta", 3.0)?,
+        rule: Rule::parse(flag(o, "rule", "gap"))?,
+        warm: WarmStart::parse(flag(o, "warm", "standard"))?,
+        eps: flag_f64(o, "eps", 1e-6)?,
+        eps_is_absolute: false,
+        max_epochs: flag_usize(o, "max-epochs", 10_000)?,
+        screen_every: flag_usize(o, "fce", 10)?,
+        threads: 1,
+    };
+    let cv = CvConfig {
+        folds: flag_usize(o, "folds", 5)?,
+        seed,
+        threads: flag_usize(o, "threads", 0)?,
+    };
+    let sw = gapsafe::util::Stopwatch::start();
+    let res = kfold_cv(&ds, task, &cfg, &cv)?;
+    let secs = sw.secs();
+    println!("{:>4} {:>12} {:>12}", "t", "lambda", "mean CV MSE");
+    let step = (res.lambdas.len() / 10).max(1);
+    for t in (0..res.lambdas.len()).step_by(step) {
+        let mark = if t == res.best_index { "  <- best" } else { "" };
+        println!("{:>4} {:>12.5e} {:>12.6}{}", t, res.lambdas[t], res.mean_mse[t], mark);
+    }
+    println!(
+        "cv: {} folds x {} lambdas in {:.3}s; best lambda = {:.5e} (index {}, MSE {:.6})",
+        cv.folds,
+        res.lambdas.len(),
+        secs,
+        res.best_lambda,
+        res.best_index,
+        res.mean_mse[res.best_index]
+    );
+    Ok(())
+}
+
+fn cmd_batch(o: &Flags) -> Result<(), String> {
+    let seed = flag_usize(o, "seed", 42)? as u64;
+    let small = o.contains_key("small");
+    let jobs = flag_usize(o, "jobs", 8)?;
+    let threads = flag_usize(o, "threads", 0)?;
+    let task = Task::parse(flag(o, "task", "lasso"))?;
+    let spec = flag(o, "data", "synth:reg:100x2000");
+    let cfg = PathConfig {
+        n_lambdas: flag_usize(o, "grid", 50)?,
+        delta: flag_f64(o, "delta", 2.5)?,
+        rule: Rule::parse(flag(o, "rule", "gap"))?,
+        warm: WarmStart::parse(flag(o, "warm", "active"))?,
+        eps: flag_f64(o, "eps", 1e-6)?,
+        eps_is_absolute: false,
+        max_epochs: flag_usize(o, "max-epochs", 10_000)?,
+        screen_every: flag_usize(o, "fce", 10)?,
+        threads: 1,
+    };
+    let mut requests = Vec::with_capacity(jobs);
+    for j in 0..jobs {
+        let ds = load_data(spec, seed + j as u64, small)?;
+        requests.push((build_problem(ds, task)?, cfg.clone()));
+    }
+    let runner = BatchRunner::new(threads);
+    println!("batch: {} requests on {} workers ...", jobs, runner.threads());
+    let sw = gapsafe::util::Stopwatch::start();
+    let results = runner.run(requests);
+    let wall = sw.secs();
+    let mut cpu = 0.0;
+    for (j, r) in results.iter().enumerate() {
+        cpu += r.total_seconds;
+        println!(
+            "  job {j:>3}: {} lambdas, converged={}, {:.3}s",
+            r.points.len(),
+            r.points.iter().all(|p| p.converged),
+            r.total_seconds
+        );
+    }
+    println!(
+        "batch: {jobs} paths in {wall:.3}s wall ({:.2} jobs/s, pool efficiency {:.1}x)",
+        jobs as f64 / wall.max(1e-12),
+        cpu / wall.max(1e-12)
     );
     Ok(())
 }
@@ -193,6 +292,8 @@ fn cmd_solve(o: &Flags) -> Result<(), String> {
     let ds = load_data(flag(o, "data", "synth:leukemia"), seed, o.contains_key("small"))?;
     let task = Task::parse(flag(o, "task", "lasso"))?;
     let prob = build_problem(ds, task)?;
+    // Fan the O(np) screening-sweep correlations out over the pool.
+    prob.set_screen_threads(flag_usize(o, "threads", 1)?);
     let lam = flag_f64(o, "lam-ratio", 0.1)? * prob.lambda_max();
     let mut rule = Rule::parse(flag(o, "rule", "gap-dyn"))?.build();
     let opts = SolveOptions {

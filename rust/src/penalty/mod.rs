@@ -23,7 +23,7 @@ pub use sparse_group::SparseGroup;
 use crate::linalg::sparse::Design;
 use crate::linalg::Mat;
 
-/// Partition of the feature set [p] into groups.
+/// Partition of the feature set `[p]` into groups.
 #[derive(Debug, Clone)]
 pub struct Groups {
     /// Feature indices per group (a partition of 0..p).

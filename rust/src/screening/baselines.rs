@@ -3,6 +3,11 @@
 //! Bonnefoy's dynamic sphere. The last three exploit
 //! theta-hat = Pi_{Delta_X}(y/lambda) and are therefore *regression only*
 //! (Remark 9); they are no-ops on non-quadratic fits.
+//!
+//! All four reuse the generic sphere test of the
+//! [module docs](crate::screening) — only the (center, radius) pair
+//! changes; none of them shrink with the iterates the way the dynamic Gap
+//! Safe sphere does, which is the comparison Figs. 3-6 quantify.
 
 use super::{apply_sphere, PrevSolution, ScreeningRule};
 use crate::datafit::FitKind;

@@ -1,6 +1,56 @@
 //! Screening rules (Sec. 3): the paper's Gap Safe rules plus every baseline
 //! it compares against.
 //!
+//! # The Gap Safe sphere in one page
+//!
+//! All safe rules here are *sphere tests*: a region of the dual space that
+//! provably contains the dual optimum `theta_hat` is intersected with the
+//! unit sub-level sets of the group dual norms, and every group whose set
+//! cannot be touched is provably zero at the primal optimum (Prop. 4).
+//! The crate implements spheres `B(theta_c, r)`; a rule is a choice of
+//! center and radius.
+//!
+//! **Dual feasible point (Eq. 9 / 18).** Any primal iterate `beta` yields
+//! the generalized residual `rho = -G(X beta)`; rescaling
+//!
+//! ```text
+//! theta = rho / max(lambda, Omega^D(X^T rho))
+//! ```
+//!
+//! is dual feasible, and the dual norm is evaluated on the safe active set
+//! only (the argmax provably lies inside it, Sec. 2.2.2).
+//!
+//! **Gap radius (Thm. 2).** With `gamma` the strong-smoothness constant of
+//! the data fit (`gamma = 1` quadratic, `4` logistic, `1` multinomial,
+//! Table 1) and `gap = P_lambda(beta) - D_lambda(theta) >= 0`,
+//!
+//! ```text
+//! r_lambda(beta, theta) = sqrt(2 * gap) / (lambda * sqrt(gamma))
+//! ```
+//!
+//! so `theta_hat in B(theta, r)` — the sphere shrinks to a point as the
+//! solver converges, which is what makes the dynamic rule *converging*
+//! (Prop. 5-6).
+//!
+//! **Screening test per penalty (Eq. 8, Prop. 8).** Group `g` is safely
+//! discarded when the sphere stays strictly inside the dual unit ball of
+//! its group norm:
+//!
+//! * Lasso (`Omega = l1`): `|x_j^T theta| + r * ||x_j||_2 < 1`;
+//! * (multi-task) Group Lasso (`l1/l2`):
+//!   `||X_g^T theta||_2 + r * ||X_g||_2 < 1` (spectral norm slope);
+//! * Sparse-Group Lasso: two-level epsilon-norm tests — the group test
+//!   uses `||S_tau(X_g^T theta)||_2` with slope `tau + (1-tau) w_g` bounds
+//!   (Prop. 8), and surviving groups still screen individual features via
+//!   `|x_j^T theta| + r * ||x_j||_2 < tau`.
+//!
+//! The implementations live in each [`crate::penalty::Penalty`]'s
+//! `sphere_screen`; the margin constant
+//! [`crate::penalty::SCREEN_MARGIN`] keeps the strict inequality safe
+//! under floating-point rounding.
+//!
+//! # Where rules plug into the solver
+//!
 //! A rule interacts with the solver at two points:
 //!
 //! * [`ScreeningRule::begin_lambda`] — once per regularization parameter,
@@ -16,6 +66,10 @@
 //! the optimum). The strong rule is un-safe, so the solver re-checks KKT
 //! conditions at convergence and reactivates violators
 //! ([`ScreeningRule::needs_kkt_check`]).
+//!
+//! The O(np) correlation stage feeding these tests fans out over the
+//! worker pool when the owning [`crate::problem::Problem`] has
+//! `set_screen_threads > 1` (see [`crate::solver::parallel`]).
 
 mod baselines;
 mod gap_safe;
@@ -78,6 +132,20 @@ pub trait ScreeningRule: Send {
 }
 
 /// Named rule selection (CLI / experiments).
+///
+/// Every rule round-trips through [`Rule::parse`] / [`Rule::label`]:
+///
+/// ```
+/// use gapsafe::screening::Rule;
+///
+/// assert_eq!(Rule::parse("gap").unwrap(), Rule::GapSafeFull);
+/// assert_eq!(Rule::parse("gap-dyn").unwrap(), Rule::GapSafeDyn);
+/// assert_eq!(Rule::parse("strong").unwrap().label(), "strong");
+/// for rule in Rule::ALL {
+///     assert_eq!(Rule::parse(rule.label()).unwrap(), rule);
+/// }
+/// assert!(Rule::parse("bogus").is_err());
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Rule {
     /// No screening (baseline).

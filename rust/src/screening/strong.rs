@@ -6,6 +6,12 @@
 //! Our `Strong` rule composes the strong sequential discard with the
 //! (safe) dynamic Gap Safe sphere along the iterations, mirroring how the
 //! paper's "strong warm start" experiments are run.
+//!
+//! The discard test (Eq. 23-24) keeps group `g` iff
+//! `Omega_g^D([X^T theta_{t-1}]_g) >= (2 lambda_t - lambda_{t-1}) / lambda_{t-1}`
+//! — a unit-slope extrapolation of the correlation, not a certificate,
+//! hence the mandatory KKT re-check at convergence
+//! ([`super::ScreeningRule::needs_kkt_check`]).
 
 use super::{apply_sphere, PrevSolution, ScreeningRule};
 use crate::penalty::ActiveSet;

@@ -4,6 +4,7 @@
 //! aggressive working-set strategy (Sec. 5.1).
 
 pub mod ista;
+pub mod parallel;
 pub mod path;
 pub mod working_set;
 

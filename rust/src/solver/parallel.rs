@@ -1,0 +1,318 @@
+//! Parallel execution subsystem: a std-only scoped-thread worker pool and
+//! the chunked pathwise solver built on it.
+//!
+//! The offline registry ships no crates, so there is no rayon here — the
+//! pool is [`std::thread::scope`] plus an atomic work cursor, which is all
+//! the solver stack needs: every parallel site in the crate is a fork/join
+//! over a finite, pre-known work list.
+//!
+//! Three layers fan out through [`parallel_map`]:
+//!
+//! * **paths** — [`solve_path_parallel`] chunks the lambda grid so chunks
+//!   run concurrently while warm starts stay sequential *within* a chunk
+//!   (chunk heads are seeded by a cheap coarse pre-pass; see below);
+//! * **cross-validation / model selection** — `coordinator::cv` runs folds
+//!   (and SGL tau candidates) as independent work items;
+//! * **screening sweeps** — `Problem::corr_active` splits the O(np)
+//!   correlation stage of a gap/screening pass over feature ranges (the
+//!   per-group sphere tests themselves are O(p) and stay serial).
+//!
+//! Batch serving ([`crate::coordinator::BatchRunner`]) schedules whole
+//! `(Problem, PathConfig)` requests over the same pool.
+//!
+//! # Determinism contract
+//!
+//! `threads = 1` always takes the exact serial code path (byte-for-byte
+//! identical results). For `threads > 1`, work items are pure functions of
+//! their inputs and results are re-assembled in input order, so fold-level
+//! and request-level parallelism are bitwise deterministic; the chunked
+//! path differs from the serial path only through the warm-start points of
+//! chunk heads, and converges to the same duality-gap tolerance at every
+//! lambda (tests pin the objectives to 1e-10 of the serial run).
+
+use super::path::{lambda_grid, run_grid_segment, scaled_eps, PathConfig, PathResult};
+use super::{solve_fixed_lambda_with, SolveOptions};
+use crate::problem::Problem;
+use crate::screening::PrevSolution;
+use crate::util::Stopwatch;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Resolve a requested thread count: `0` means "use all available cores".
+pub fn effective_threads(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    }
+}
+
+/// Split `0..len` into at most `parts` contiguous, near-equal ranges.
+pub fn split_ranges(len: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.clamp(1, len.max(1));
+    let base = len / parts;
+    let rem = len % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0;
+    for c in 0..parts {
+        let sz = base + usize::from(c < rem);
+        if sz == 0 {
+            continue;
+        }
+        out.push((lo, lo + sz));
+        lo += sz;
+    }
+    out
+}
+
+/// Apply `f` to every item on a scoped worker pool and return the results
+/// in input order. `f(i, item)` receives the item's index so callers can
+/// label work without capturing it in the item type.
+///
+/// With `threads <= 1` (or fewer than two items) this runs inline on the
+/// calling thread — no pool, no synchronization, the exact serial path.
+/// Workers pull items through an atomic cursor, so an expensive item does
+/// not stall the queue behind it. A panic in any worker propagates to the
+/// caller once the scope joins.
+pub fn parallel_map<T, R, F>(threads: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = threads.clamp(1, n.max(1));
+    if threads <= 1 || n <= 1 {
+        return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let slots: Vec<Mutex<Option<T>>> =
+        items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let out: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = slots[i].lock().unwrap().take().expect("item claimed twice");
+                let r = f(i, item);
+                *out[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    out.into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker dropped an item"))
+        .collect()
+}
+
+/// Chunk boundaries over the lambda grid, weighted so later (smaller-
+/// lambda) chunks hold fewer grid points: supports densify and epochs grow
+/// as lambda decreases, so equal-length chunks would leave the first
+/// workers idle. The weight of grid index `t` is `1 + t`, a cheap proxy
+/// for per-lambda cost that balances well on the paper's workloads.
+fn weighted_chunk_bounds(n_lambdas: usize, chunks: usize) -> Vec<(usize, usize)> {
+    let chunks = chunks.clamp(1, n_lambdas.max(1));
+    let total: u64 = (n_lambdas as u64) * (n_lambdas as u64 + 1) / 2;
+    let mut bounds = Vec::with_capacity(chunks);
+    let mut lo = 0usize;
+    let mut acc = 0u64;
+    let mut next_target = total / chunks as u64;
+    let mut c = 1usize;
+    for t in 0..n_lambdas {
+        acc += 1 + t as u64;
+        let remaining_chunks = chunks - bounds.len();
+        let remaining_points = n_lambdas - t - 1;
+        // close the chunk at the weight target, but never starve the
+        // remaining chunks of at least one point each
+        if (acc >= next_target && remaining_points + 1 >= remaining_chunks)
+            || remaining_points + 1 == remaining_chunks
+        {
+            bounds.push((lo, t + 1));
+            lo = t + 1;
+            c += 1;
+            next_target = total * c as u64 / chunks as u64;
+            if bounds.len() == chunks - 1 {
+                break;
+            }
+        }
+    }
+    if lo < n_lambdas {
+        bounds.push((lo, n_lambdas));
+    }
+    bounds
+}
+
+/// How much the coarse pre-pass relaxes the duality-gap tolerance. The
+/// pre-pass only has to produce usable warm starts (beta, theta) for chunk
+/// heads; its Gap Safe certificate is valid at *any* gap value, so safety
+/// never depends on this constant.
+const COARSE_RELAX: f64 = 1e3;
+
+/// Parallel Alg. 1: split the lambda grid into `threads` contiguous chunks
+/// and solve them concurrently, preserving sequential warm starts within
+/// each chunk.
+///
+/// Chunk heads cannot warm-start from their true predecessor (it lives in
+/// another chunk that is still running), so a cheap serial pre-pass first
+/// solves *only the chunk-head lambdas* at a relaxed tolerance
+/// (`eps * 1e3`), chaining warm starts between heads. Each head then hands
+/// its chunk a [`PrevSolution`] whose dual point and active set are valid
+/// Gap Safe inputs — screening stays *safe* regardless of how loose the
+/// pre-pass was (Thm. 2 holds for any primal/dual pair).
+///
+/// Callers should use [`super::path::solve_path`], which dispatches here
+/// when `PathConfig::threads` resolves to more than one worker.
+pub fn solve_path_parallel(prob: &Problem, cfg: &PathConfig, threads: usize) -> PathResult {
+    debug_assert!(threads > 1);
+    let sw_total = Stopwatch::start();
+    let lam_max = prob.lambda_max();
+    let lambdas = lambda_grid(lam_max, cfg.n_lambdas, cfg.delta);
+    let eps = if cfg.eps_is_absolute { cfg.eps } else { scaled_eps(prob, cfg.eps) };
+    let opts = SolveOptions {
+        max_epochs: cfg.max_epochs,
+        screen_every: cfg.screen_every,
+        eps,
+        max_kkt_rounds: 20,
+    };
+    let n_chunks = threads.min(lambdas.len());
+    let bounds = weighted_chunk_bounds(lambdas.len(), n_chunks);
+
+    // Coarse pre-pass: seed every chunk head (chunk 0 starts cold at
+    // lambda_max, exactly like the serial path).
+    let mut seeds: Vec<Option<PrevSolution>> = vec![None; bounds.len()];
+    {
+        let coarse_opts = SolveOptions { eps: eps * COARSE_RELAX, ..opts.clone() };
+        let mut rule = cfg.rule.build();
+        let mut prev: Option<PrevSolution> = None;
+        for (c, &(lo, _)) in bounds.iter().enumerate().skip(1) {
+            let lam = lambdas[lo];
+            let beta0 = prev.as_ref().map(|p| p.beta.clone());
+            let res = solve_fixed_lambda_with(
+                prob,
+                lam,
+                lam_max,
+                beta0.as_ref(),
+                None,
+                rule.as_mut(),
+                prev.as_ref(),
+                &coarse_opts,
+            );
+            let sol = PrevSolution {
+                lam,
+                loss: prob.fit.loss(&res.z),
+                pen_value: prob.pen.value(&res.beta),
+                z: res.z,
+                theta: res.theta,
+                active: res.active,
+                beta: res.beta,
+            };
+            seeds[c] = Some(sol.clone());
+            prev = Some(sol);
+        }
+    }
+
+    // Fan the chunks out; results come back in grid order.
+    let jobs: Vec<usize> = (0..bounds.len()).collect();
+    let segments = parallel_map(n_chunks, jobs, |_, c| {
+        let (lo, hi) = bounds[c];
+        let mut rule = cfg.rule.build();
+        run_grid_segment(
+            prob,
+            &lambdas[lo..hi],
+            lam_max,
+            cfg,
+            &opts,
+            rule.as_mut(),
+            seeds[c].clone(),
+        )
+    });
+
+    let mut points = Vec::with_capacity(lambdas.len());
+    let mut betas = Vec::with_capacity(lambdas.len());
+    for (pts, bs, _) in segments {
+        points.extend(pts);
+        betas.extend(bs);
+    }
+    PathResult { lambdas, points, betas, total_seconds: sw_total.secs(), lam_max }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_threads_zero_is_auto() {
+        assert!(effective_threads(0) >= 1);
+        assert_eq!(effective_threads(3), 3);
+    }
+
+    #[test]
+    fn split_ranges_covers_and_partitions() {
+        for (len, parts) in [(10, 3), (7, 7), (5, 9), (1, 2), (0, 4), (100, 4)] {
+            let r = split_ranges(len, parts);
+            let mut covered = 0;
+            let mut prev_end = 0;
+            for &(lo, hi) in &r {
+                assert_eq!(lo, prev_end);
+                assert!(hi > lo);
+                covered += hi - lo;
+                prev_end = hi;
+            }
+            assert_eq!(covered, len);
+        }
+    }
+
+    #[test]
+    fn weighted_bounds_partition_the_grid() {
+        for (n, c) in [(100, 4), (12, 3), (5, 5), (6, 4), (3, 8), (1, 2)] {
+            let b = weighted_chunk_bounds(n, c);
+            assert!(!b.is_empty());
+            assert_eq!(b[0].0, 0);
+            assert_eq!(b.last().unwrap().1, n);
+            for w in b.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+            assert!(b.len() <= c.min(n));
+            // later chunks should never be longer than the first
+            if b.len() > 1 {
+                let first = b[0].1 - b[0].0;
+                let last = b.last().unwrap().1 - b.last().unwrap().0;
+                assert!(last <= first, "last chunk longer than first: {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_map_preserves_order_and_values() {
+        let items: Vec<usize> = (0..97).collect();
+        let serial: Vec<usize> = items.iter().map(|&x| x * x + 1).collect();
+        for threads in [1, 2, 4, 16] {
+            let got = parallel_map(threads, items.clone(), |i, x| {
+                assert_eq!(i, x);
+                x * x + 1
+            });
+            assert_eq!(got, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_map_empty_and_single() {
+        let empty: Vec<u8> = Vec::new();
+        assert!(parallel_map(4, empty, |_, x: u8| x).is_empty());
+        assert_eq!(parallel_map(4, vec![7u8], |_, x| x + 1), vec![8]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn parallel_map_propagates_panics() {
+        let _ = parallel_map(2, vec![1, 2, 3, 4], |_, x: i32| {
+            if x == 3 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+}

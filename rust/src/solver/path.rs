@@ -55,6 +55,10 @@ pub struct PathConfig {
     pub eps_is_absolute: bool,
     pub max_epochs: usize,
     pub screen_every: usize,
+    /// Worker threads for the chunked path engine
+    /// ([`crate::solver::parallel`]): `1` = the exact serial path (default),
+    /// `0` = all available cores, `t > 1` = that many chunk workers.
+    pub threads: usize,
 }
 
 impl Default for PathConfig {
@@ -68,6 +72,7 @@ impl Default for PathConfig {
             eps_is_absolute: false,
             max_epochs: 10_000,
             screen_every: 10,
+            threads: 1,
         }
     }
 }
@@ -129,10 +134,32 @@ pub fn scaled_eps(prob: &Problem, eps: f64) -> f64 {
     }
 }
 
-/// Run the full path (Alg. 1).
+/// Run the full path (Alg. 1). Dispatches to the chunked parallel engine
+/// ([`crate::solver::parallel::solve_path_parallel`]) when
+/// `cfg.threads` resolves to more than one worker; `threads = 1` takes the
+/// serial path byte-for-byte.
 pub fn solve_path(prob: &Problem, cfg: &PathConfig) -> PathResult {
+    let threads = super::parallel::effective_threads(cfg.threads);
+    if threads > 1 && cfg.n_lambdas > 1 {
+        return super::parallel::solve_path_parallel(prob, cfg, threads);
+    }
+    solve_path_serial(prob, cfg)
+}
+
+/// The reference serial path (Alg. 1 exactly as written): the standard
+/// grid handed to [`solve_path_on_grid`]. Exposed so tests can pin
+/// `solve_path` with `threads = 1` against it bitwise.
+pub fn solve_path_serial(prob: &Problem, cfg: &PathConfig) -> PathResult {
+    let lambdas = lambda_grid(prob.lambda_max(), cfg.n_lambdas, cfg.delta);
+    solve_path_on_grid(prob, cfg, &lambdas)
+}
+
+/// Solve an explicit lambda grid serially (cross-validation folds share one
+/// grid computed from the full dataset, so their own `lambda_max` must not
+/// regenerate it). The grid must be decreasing; entries above the problem's
+/// own `lambda_max` simply resolve to the null solution.
+pub fn solve_path_on_grid(prob: &Problem, cfg: &PathConfig, lambdas: &[f64]) -> PathResult {
     let lam_max = prob.lambda_max();
-    let lambdas = lambda_grid(lam_max, cfg.n_lambdas, cfg.delta);
     let eps = if cfg.eps_is_absolute { cfg.eps } else { scaled_eps(prob, cfg.eps) };
     let opts = SolveOptions {
         max_epochs: cfg.max_epochs,
@@ -141,12 +168,36 @@ pub fn solve_path(prob: &Problem, cfg: &PathConfig) -> PathResult {
         max_kkt_rounds: 20,
     };
     let mut rule = cfg.rule.build();
-    let mut prev: Option<PrevSolution> = None;
+    let sw_total = Stopwatch::start();
+    let (points, betas, _) =
+        run_grid_segment(prob, lambdas, lam_max, cfg, &opts, rule.as_mut(), None);
+    PathResult {
+        lambdas: lambdas.to_vec(),
+        points,
+        betas,
+        total_seconds: sw_total.secs(),
+        lam_max,
+    }
+}
+
+/// One contiguous run of lambdas with sequential warm starts — the body of
+/// Alg. 1, shared between the serial path (whole grid, cold start) and the
+/// parallel engine (one chunk per call, seeded by the coarse pre-pass).
+/// Returns the per-lambda records plus the final [`PrevSolution`] so a
+/// caller can chain further segments.
+pub(crate) fn run_grid_segment(
+    prob: &Problem,
+    lambdas: &[f64],
+    lam_max: f64,
+    cfg: &PathConfig,
+    opts: &SolveOptions,
+    rule: &mut dyn crate::screening::ScreeningRule,
+    mut prev: Option<PrevSolution>,
+) -> (Vec<PathPoint>, Vec<Mat>, Option<PrevSolution>) {
     let mut points = Vec::with_capacity(lambdas.len());
     let mut betas = Vec::with_capacity(lambdas.len());
-    let sw_total = Stopwatch::start();
 
-    for &lam in &lambdas {
+    for &lam in lambdas {
         let sw = Stopwatch::start();
         let beta0 = prev.as_ref().map(|p| p.beta.clone());
         // Phase 1 (active / strong warm start): approximately solve the
@@ -159,9 +210,9 @@ pub fn solve_path(prob: &Problem, cfg: &PathConfig) -> PathResult {
                     lam_max,
                     beta0.as_ref(),
                     Some(&pv.active),
-                    rule.as_mut(),
+                    &mut *rule,
                     Some(pv),
-                    &opts,
+                    opts,
                 );
                 Some(res.beta)
             }
@@ -176,9 +227,9 @@ pub fn solve_path(prob: &Problem, cfg: &PathConfig) -> PathResult {
                     lam_max,
                     beta0.as_ref(),
                     Some(&strong),
-                    rule.as_mut(),
+                    &mut *rule,
                     Some(pv),
-                    &opts,
+                    opts,
                 );
                 Some(res.beta)
             }
@@ -191,9 +242,9 @@ pub fn solve_path(prob: &Problem, cfg: &PathConfig) -> PathResult {
             lam_max,
             init,
             None,
-            rule.as_mut(),
+            &mut *rule,
             prev.as_ref(),
-            &opts,
+            opts,
         );
         let secs = sw.secs();
         let nnz = count_nnz(&res.beta);
@@ -220,7 +271,7 @@ pub fn solve_path(prob: &Problem, cfg: &PathConfig) -> PathResult {
         betas.push(res.beta);
     }
 
-    PathResult { lambdas, points, betas, total_seconds: sw_total.secs(), lam_max }
+    (points, betas, prev)
 }
 
 fn count_nnz(beta: &Mat) -> usize {
@@ -254,6 +305,7 @@ mod tests {
             eps_is_absolute: false,
             max_epochs: 3000,
             screen_every: 10,
+            threads: 1,
         }
     }
 

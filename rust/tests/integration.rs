@@ -266,6 +266,7 @@ fn paths_all_estimators() {
         eps_is_absolute: false,
         max_epochs: 5000,
         screen_every: 10,
+        threads: 1,
     };
     let cases: Vec<(Task, gapsafe::data::Dataset)> = vec![
         (Task::Lasso, synth::leukemia_like_scaled(20, 50, 51, false)),

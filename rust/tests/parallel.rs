@@ -1,0 +1,197 @@
+//! Determinism / equivalence tests for the parallel execution subsystem:
+//!
+//! * `threads = 1` is the serial path bitwise;
+//! * the chunked path engine (`threads in {2, 4}`) reaches the same
+//!   duality-gap certificate at every lambda, so per-lambda objectives
+//!   match the serial run within 1e-10 and coefficients agree tightly, on
+//!   Lasso, multi-task and Sparse-Group Lasso problems;
+//! * fold-parallel CV, the tau sweep and the batch runner are bitwise
+//!   identical at any thread count (work items are independent and results
+//!   are re-assembled in input order).
+
+use gapsafe::coordinator::cv::{kfold_cv, select_tau_sgl, select_tau_sgl_threaded, CvConfig};
+use gapsafe::coordinator::BatchRunner;
+use gapsafe::data::{synth, Dataset};
+use gapsafe::problem::Problem;
+use gapsafe::screening::Rule;
+use gapsafe::solver::path::{solve_path, solve_path_serial, PathConfig, PathResult, WarmStart};
+use gapsafe::{build_problem, Task};
+
+fn tight_cfg(threads: usize) -> PathConfig {
+    PathConfig {
+        n_lambdas: 14,
+        delta: 2.0,
+        rule: Rule::GapSafeFull,
+        warm: WarmStart::Standard,
+        // Absolute gap certificate: both runs end with gap <= 2e-11 at
+        // every lambda, so their objectives bracket the optimum to
+        // 4e-11 < 1e-10 (and the tolerance stays well above the f64
+        // noise floor of the gap evaluation on these loss magnitudes).
+        eps: 2e-11,
+        eps_is_absolute: true,
+        max_epochs: 50_000,
+        screen_every: 10,
+        threads,
+    }
+}
+
+fn cases() -> Vec<(Task, Dataset)> {
+    vec![
+        (Task::Lasso, synth::leukemia_like_scaled(24, 60, 101, false)),
+        (Task::MultiTask, synth::meg_like(20, 30, 4, 102)),
+        (Task::SparseGroupLasso { tau: 0.4 }, synth::climate_like(36, 8, 103)),
+    ]
+}
+
+fn max_beta_diff(prob: &Problem, a: &PathResult, b: &PathResult) -> f64 {
+    let mut worst: f64 = 0.0;
+    for (ba, bb) in a.betas.iter().zip(&b.betas) {
+        for j in 0..prob.p() {
+            for k in 0..prob.q() {
+                worst = worst.max((ba[(j, k)] - bb[(j, k)]).abs());
+            }
+        }
+    }
+    worst
+}
+
+#[test]
+fn threads_one_is_exactly_the_serial_path() {
+    for (task, ds) in cases() {
+        let prob = build_problem(ds, task).unwrap();
+        let via_dispatch = solve_path(&prob, &tight_cfg(1));
+        let serial = solve_path_serial(&prob, &tight_cfg(1));
+        assert_eq!(via_dispatch.betas.len(), serial.betas.len());
+        for (a, b) in via_dispatch.betas.iter().zip(&serial.betas) {
+            assert_eq!(a, b, "{task:?}: threads=1 is not the serial path");
+        }
+        for (a, b) in via_dispatch.points.iter().zip(&serial.points) {
+            assert_eq!(a.epochs, b.epochs, "{task:?}: epoch counts differ");
+            assert_eq!(a.gap.to_bits(), b.gap.to_bits(), "{task:?}: gaps differ");
+        }
+    }
+}
+
+#[test]
+fn chunked_path_matches_serial_objectives_within_1e10() {
+    for (task, ds) in cases() {
+        let prob = build_problem(ds, task).unwrap();
+        let serial = solve_path(&prob, &tight_cfg(1));
+        assert!(serial.points.iter().all(|p| p.converged), "{task:?}: serial unconverged");
+        for threads in [2, 4] {
+            let par = solve_path(&prob, &tight_cfg(threads));
+            assert_eq!(par.points.len(), serial.points.len());
+            assert_eq!(par.lambdas, serial.lambdas, "{task:?}: grids differ");
+            assert!(
+                par.points.iter().all(|p| p.converged),
+                "{task:?}/threads={threads}: some chunked path point unconverged"
+            );
+            // Both runs certify gap <= 2e-11 at every lambda, so their
+            // primal objectives bracket the optimum to 4e-11 < 1e-10.
+            for (t, (&lam, (ba, bb))) in serial
+                .lambdas
+                .iter()
+                .zip(serial.betas.iter().zip(&par.betas))
+                .enumerate()
+            {
+                let pa = prob.primal(ba, &prob.predict(ba), lam);
+                let pb = prob.primal(bb, &prob.predict(bb), lam);
+                assert!(
+                    (pa - pb).abs() <= 1e-10,
+                    "{task:?}/threads={threads}: objective diverged at lambda index {t}: \
+                     serial {pa:.15e} vs parallel {pb:.15e}"
+                );
+            }
+            let diff = max_beta_diff(&prob, &serial, &par);
+            assert!(
+                diff < 1e-5,
+                "{task:?}/threads={threads}: coefficients diverged (max diff {diff:.3e})"
+            );
+            // "Identical screened sets": a screened feature is exactly zero
+            // (prox/screening write literal zeros), so the zero pattern of
+            // the certified solutions is the observable screening outcome —
+            // it must agree feature-for-feature at every lambda.
+            for (t, (ba, bb)) in serial.betas.iter().zip(&par.betas).enumerate() {
+                for j in 0..prob.p() {
+                    let sa = (0..prob.q()).any(|k| ba[(j, k)] != 0.0);
+                    let sb = (0..prob.q()).any(|k| bb[(j, k)] != 0.0);
+                    assert_eq!(
+                        sa, sb,
+                        "{task:?}/threads={threads}: screened/support sets differ at \
+                         lambda index {t}, feature {j}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fold_parallel_cv_is_bitwise_deterministic() {
+    let ds = synth::leukemia_like_scaled(30, 40, 7, false);
+    let cfg = PathConfig {
+        n_lambdas: 10,
+        delta: 2.0,
+        eps: 1e-8,
+        max_epochs: 5000,
+        ..Default::default()
+    };
+    let serial = kfold_cv(&ds, Task::Lasso, &cfg, &CvConfig { folds: 4, seed: 3, threads: 1 })
+        .unwrap();
+    for threads in [2, 4] {
+        let par =
+            kfold_cv(&ds, Task::Lasso, &cfg, &CvConfig { folds: 4, seed: 3, threads }).unwrap();
+        assert_eq!(par.best_index, serial.best_index);
+        assert_eq!(par.best_lambda.to_bits(), serial.best_lambda.to_bits());
+        for (f, (a, b)) in serial.fold_mse.iter().zip(&par.fold_mse).enumerate() {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "fold {f} diverged at threads={threads}");
+            }
+        }
+    }
+}
+
+#[test]
+fn threaded_tau_sweep_is_bitwise_deterministic() {
+    let ds = synth::climate_like(36, 6, 9);
+    let cfg = PathConfig {
+        n_lambdas: 5,
+        delta: 1.5,
+        eps: 1e-4,
+        max_epochs: 500,
+        ..Default::default()
+    };
+    let serial = select_tau_sgl(&ds, &cfg, 7);
+    let par = select_tau_sgl_threaded(&ds, &cfg, 7, 4);
+    assert_eq!(serial.best_tau, par.best_tau);
+    for (a, b) in serial.test_mse.iter().zip(&par.test_mse) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn batch_runner_results_independent_of_pool_size() {
+    let mk_jobs = || -> Vec<(Problem, PathConfig)> {
+        (0..5u64)
+            .map(|s| {
+                let ds = synth::leukemia_like_scaled(20, 30, s, false);
+                let cfg = PathConfig {
+                    n_lambdas: 6,
+                    delta: 1.5,
+                    eps: 1e-6,
+                    max_epochs: 2000,
+                    ..Default::default()
+                };
+                (build_problem(ds, Task::Lasso).unwrap(), cfg)
+            })
+            .collect()
+    };
+    let one = BatchRunner::new(1).run(mk_jobs());
+    let many = BatchRunner::new(4).run(mk_jobs());
+    assert_eq!(one.len(), many.len());
+    for (job, (a, b)) in one.iter().zip(&many).enumerate() {
+        for (ba, bb) in a.betas.iter().zip(&b.betas) {
+            assert_eq!(ba, bb, "job {job} diverged with a bigger pool");
+        }
+    }
+}
