@@ -1,0 +1,95 @@
+//! Serving-layer benchmark: cold fit vs. warm-start cache hit.
+//!
+//! Measures the three registry outcomes a resident `gapsafe serve`
+//! process distinguishes (see `rust/src/serve/registry.rs`):
+//!
+//! * **cold** — no cached family member; the full path solve;
+//! * **warm** — a perturbed lambda grid seeded per-lambda from the
+//!   closest cached solution (the Gap Safe + warm-start payoff);
+//! * **hit** — the exact key again; artifact fetch, no solver work.
+//!
+//! Records results/BENCH_serve.json (docs/BENCHMARKS.md convention).
+
+#[path = "common.rs"]
+mod common;
+
+use gapsafe::serve::registry::{ModelKey, Registry};
+use gapsafe::serve::Metrics;
+use std::cell::Cell;
+use std::sync::Arc;
+
+fn key(data: &str, grid: usize, delta: f64) -> ModelKey {
+    ModelKey::new(data, "lasso", 42, false, grid, delta, 1e-6, 20_000)
+}
+
+fn main() {
+    let full = common::full_size();
+    let (data, grid) = if full { ("synth:reg:200x5000", 60) } else { ("synth:reg:60x800", 30) };
+    common::banner(
+        "serve_warm",
+        &format!("registry cold fit vs warm-start vs exact hit on {data} ({grid} lambdas)"),
+    );
+    let reps = if full { 2 } else { 5 };
+    let base_delta = 2.0;
+
+    // Cold: a fresh registry every repetition (nothing to seed from).
+    let (cold_mean, cold_min) = common::time_it(reps, || {
+        let reg = Registry::new(4096, Arc::new(Metrics::default()));
+        let (m, _) = reg.fit(&key(data, grid, base_delta)).unwrap();
+        std::hint::black_box(m);
+    });
+
+    // Warm: one resident registry holding the base fit; each repetition
+    // fits a slightly different grid so every call really solves (the
+    // delta perturbation grows per rep to dodge exact-key hits).
+    let reg = Registry::new(4096, Arc::new(Metrics::default()));
+    let (base, _) = reg.fit(&key(data, grid, base_delta)).unwrap();
+    let rep = Cell::new(0u32);
+    let (warm_mean, warm_min) = common::time_it(reps, || {
+        rep.set(rep.get() + 1);
+        let delta = base_delta + 0.01 * rep.get() as f64;
+        let (m, _) = reg.fit(&key(data, grid, delta)).unwrap();
+        assert!(m.warm_started, "expected a warm-started fit");
+        std::hint::black_box(m);
+    });
+
+    // Hit: the exact base key, already resident.
+    let (hit_mean, hit_min) = common::time_it(reps, || {
+        let (m, _) = reg.fit(&key(data, grid, base_delta)).unwrap();
+        std::hint::black_box(m);
+    });
+
+    // Epoch accounting for the headline "epochs saved" story.
+    let (warm_model, _) = reg.fit(&key(data, grid, base_delta + 0.005)).unwrap();
+    let cold_epochs = base.total_epochs as f64;
+    let warm_epochs = warm_model.total_epochs as f64;
+
+    println!(
+        "cold fit:        mean {:.4}s  min {:.4}s  ({} epochs)",
+        cold_mean, cold_min, base.total_epochs
+    );
+    println!(
+        "warm-start fit:  mean {:.4}s  min {:.4}s  ({} epochs)",
+        warm_mean, warm_min, warm_model.total_epochs
+    );
+    println!("exact cache hit: mean {:.6}s  min {:.6}s", hit_mean, hit_min);
+    println!(
+        "warm speedup {:.2}x  hit speedup {:.0}x  epochs saved {:.0}",
+        cold_min / warm_min.max(1e-12),
+        cold_min / hit_min.max(1e-12),
+        (cold_epochs - warm_epochs).max(0.0)
+    );
+
+    common::record_bench_json(
+        "serve",
+        &[
+            ("seconds_cold_fit", cold_min),
+            ("seconds_warm_fit", warm_min),
+            ("seconds_cache_hit", hit_min),
+            ("speedup_warm_vs_cold", cold_min / warm_min.max(1e-12)),
+            ("speedup_hit_vs_cold", cold_min / hit_min.max(1e-12)),
+            ("epochs_cold", cold_epochs),
+            ("epochs_warm", warm_epochs),
+        ],
+    );
+}

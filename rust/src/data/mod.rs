@@ -34,9 +34,83 @@ impl Dataset {
     }
 }
 
+/// Resolve a dataset spec string to a [`Dataset`] — the shared vocabulary
+/// of the CLI (`--data`) and the serving layer (`ModelKey::data`):
+///
+/// * `synth:leukemia` / `synth:leukemia-binary` — the paper's leukemia
+///   shape (scaled down when `small`);
+/// * `synth:meg` — the multi-task MEG shape;
+/// * `synth:climate` — the SGL climate shape;
+/// * `synth:reg:<n>x<p>` — generic correlated regression;
+/// * `csv:<path>` — load from disk.
+///
+/// Specs are pure functions of `(spec, seed, small)` — two calls with the
+/// same triple produce bitwise-identical data, which is what lets the
+/// model registry key fitted artifacts on the spec string instead of the
+/// data itself.
+pub fn load_spec(spec: &str, seed: u64, small: bool) -> Result<Dataset, String> {
+    match spec {
+        "synth:leukemia" => Ok(if small {
+            synth::leukemia_like_scaled(48, 500, seed, false)
+        } else {
+            synth::leukemia_like(seed, false)
+        }),
+        "synth:leukemia-binary" => Ok(if small {
+            synth::leukemia_like_scaled(48, 500, seed, true)
+        } else {
+            synth::leukemia_like(seed, true)
+        }),
+        "synth:meg" => Ok(if small {
+            synth::meg_like(60, 400, 8, seed)
+        } else {
+            synth::meg_like(360, 5000, 20, seed)
+        }),
+        "synth:climate" => Ok(if small {
+            synth::climate_like(60, 100, seed)
+        } else {
+            synth::climate_like(200, 1000, seed)
+        }),
+        s if s.starts_with("csv:") => {
+            io::load_csv(std::path::Path::new(&s[4..])).map_err(|e| e.to_string())
+        }
+        s if s.starts_with("synth:reg:") => {
+            let (n, p) = parse_reg_dims(s).ok_or("use synth:reg:<n>x<p>")?;
+            let cfg = synth::SynthConfig { n, p, k_sparse: 20, corr: 0.5, noise: 0.5, seed };
+            Ok(synth::regression(&cfg).0)
+        }
+        other => Err(format!("unknown data spec '{other}'")),
+    }
+}
+
+/// Parse the `(n, p)` of a `synth:reg:<n>x<p>` spec — the single home of
+/// that grammar, shared by [`load_spec`] and the serving layer's request
+/// validation. `None` when the spec is not `synth:reg:*` or malformed.
+pub fn parse_reg_dims(spec: &str) -> Option<(usize, usize)> {
+    let dims = spec.strip_prefix("synth:reg:")?;
+    let (n, p) = dims.split_once('x')?;
+    Some((n.parse().ok()?, p.parse().ok()?))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn parse_reg_dims_grammar() {
+        assert_eq!(parse_reg_dims("synth:reg:10x20"), Some((10, 20)));
+        assert_eq!(parse_reg_dims("synth:reg:10"), None);
+        assert_eq!(parse_reg_dims("synth:reg:ax2"), None);
+        assert_eq!(parse_reg_dims("synth:leukemia"), None);
+    }
+
+    #[test]
+    fn load_spec_is_deterministic() {
+        let a = load_spec("synth:reg:10x20", 3, false).unwrap();
+        let b = load_spec("synth:reg:10x20", 3, false).unwrap();
+        assert_eq!((a.n(), a.p(), a.q()), (10, 20, 1));
+        assert_eq!(a.y.as_slice(), b.y.as_slice());
+        assert!(load_spec("nope", 0, false).is_err());
+    }
 
     #[test]
     fn dataset_dims() {

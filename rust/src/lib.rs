@@ -23,6 +23,13 @@
 //! requests ([`coordinator::BatchRunner`]). `threads = 1` always takes the
 //! exact serial path.
 //!
+//! On top of it sits a resident model-serving subsystem ([`serve`]):
+//! `gapsafe serve` runs a std-only HTTP server whose model registry keeps
+//! fitted paths alive between requests, answering repeat fits from cache
+//! and nearby-lambda fits through warm starts seeded by the closest
+//! cached solution (`POST /v1/fit`, `GET /v1/jobs/{id}`,
+//! `POST /v1/predict`, `GET /healthz`, `GET /metrics`).
+//!
 //! Quick start:
 //!
 //! ```no_run
@@ -47,6 +54,7 @@ pub mod penalty;
 pub mod problem;
 pub mod runtime;
 pub mod screening;
+pub mod serve;
 pub mod solver;
 pub mod util;
 
@@ -148,6 +156,8 @@ pub mod prelude {
     pub use crate::penalty::ActiveSet;
     pub use crate::problem::Problem;
     pub use crate::screening::Rule;
+    pub use crate::serve::registry::{ModelKey, Registry};
+    pub use crate::serve::{ServeConfig, Server};
     pub use crate::solver::parallel::effective_threads;
     pub use crate::solver::path::{solve_path, PathConfig, WarmStart};
     pub use crate::solver::{solve_fixed_lambda, SolveOptions};

@@ -8,6 +8,7 @@
 //!                     [--threads 4]   (parallel screening sweep)
 //!   gapsafe cv        --task lasso --data ... --folds 5 [--threads 0]   (K-fold CV)
 //!   gapsafe batch     --jobs 8 [--threads 0]   (BatchRunner serving demo)
+//!   gapsafe serve     --port 7878 --threads 0 --cache-mb 256   (resident HTTP model server)
 //!   gapsafe fig3|fig4|fig5|fig6    [--small] [--out results/]
 //!   gapsafe selftest  [--artifacts artifacts/]   (PJRT vs native gap check)
 //!   gapsafe artifacts [--artifacts artifacts/]   (list + validate manifest)
@@ -15,16 +16,17 @@
 
 use gapsafe::coordinator::cv::{kfold_cv, CvConfig};
 use gapsafe::coordinator::{active_fraction_experiment, report, time_to_convergence, BatchRunner};
-use gapsafe::data::{synth, Dataset};
+use gapsafe::data::{load_spec, synth};
 use gapsafe::penalty::ActiveSet;
 use gapsafe::runtime::{artifact, PjrtEngine};
 use gapsafe::screening::Rule;
+use gapsafe::serve::{ServeConfig, Server};
 use gapsafe::solver::path::{lambda_grid, solve_path, PathConfig, WarmStart};
 use gapsafe::solver::{solve_fixed_lambda, SolveOptions};
 use gapsafe::{build_problem, Task};
 
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 use std::process::ExitCode;
 
 fn main() -> ExitCode {
@@ -39,6 +41,7 @@ fn main() -> ExitCode {
         "solve" => cmd_solve(&opts),
         "cv" => cmd_cv(&opts),
         "batch" => cmd_batch(&opts),
+        "serve" => cmd_serve(&opts),
         "fig3" => cmd_fig(&opts, 3),
         "fig4" => cmd_fig(&opts, 4),
         "fig5" => cmd_fig(&opts, 5),
@@ -64,16 +67,35 @@ fn main() -> ExitCode {
 fn usage() {
     eprintln!(
         "gapsafe — Gap Safe screening rules (Ndiaye et al., 2017)\n\
-         usage: gapsafe <path|solve|cv|batch|fig3|fig4|fig5|fig6|selftest|artifacts|lmax> [flags]\n\
+         usage: gapsafe <subcommand> [flags]\n\
+         subcommands:\n\
+           path       solve a full lambda path (chunked parallel engine with --threads)\n\
+           solve      one fixed-lambda solve (--lam-ratio; parallel screening sweep)\n\
+           cv         K-fold cross-validation over the path grid (--folds, --threads)\n\
+           batch      BatchRunner demo: --jobs independent path requests over the pool\n\
+           serve      resident HTTP model server (see below)\n\
+           fig3..fig6 regenerate the paper's figure protocols into --out\n\
+           selftest   PJRT-vs-native duality-gap consistency check\n\
+           artifacts  list + validate the AOT artifact manifest\n\
+           lmax       print lambda_max for a (task, data) pair\n\
+           help       this text\n\
          common flags:\n\
            --task lasso|group-lasso|sgl[:tau]|logreg|multitask|multinomial\n\
            --data synth:leukemia | synth:meg | synth:climate | csv:<path> | synth:reg:<n>x<p>\n\
            --rule none|static|elghaoui|dst3|bonnefoy|gap-seq|gap-dyn|gap|strong\n\
            --warm standard|active|strong     --eps 1e-6   --grid 100   --delta 3\n\
            --threads 1 (1 = serial, 0 = all cores; path chunks / CV folds / batch jobs)\n\
-           --seed 42   --small (shrink figure workloads)   --out results\n\
-           --folds 5 (cv)   --jobs 8 (batch)\n\
-           --artifacts artifacts (manifest dir)   --lam-ratio 0.1 (solve)"
+           --seed 42   --small (shrink synthetic workloads)   --out results\n\
+           --max-epochs 10000   --fce 10 (gap/screening cadence)\n\
+         per-subcommand flags:\n\
+           cv:        --folds 5\n\
+           batch:     --jobs 8\n\
+           solve:     --lam-ratio 0.1\n\
+           serve:     --port 7878   --host 127.0.0.1   --threads 0 (HTTP workers)\n\
+                      --workers 0 (fit workers)   --cache-mb 256 (registry budget)\n\
+                      endpoints: GET /healthz | GET /metrics | POST /v1/fit\n\
+                                 GET /v1/jobs/<id> | POST /v1/predict   (docs/SERVING.md)\n\
+           selftest/artifacts: --artifacts artifacts (manifest dir)"
     );
 }
 
@@ -116,54 +138,30 @@ fn flag_usize(o: &Flags, k: &str, default: usize) -> Result<usize, String> {
     }
 }
 
-fn load_data(spec: &str, seed: u64, small: bool) -> Result<Dataset, String> {
-    match spec {
-        "synth:leukemia" => Ok(if small {
-            synth::leukemia_like_scaled(48, 500, seed, false)
-        } else {
-            synth::leukemia_like(seed, false)
-        }),
-        "synth:leukemia-binary" => Ok(if small {
-            synth::leukemia_like_scaled(48, 500, seed, true)
-        } else {
-            synth::leukemia_like(seed, true)
-        }),
-        "synth:meg" => Ok(if small {
-            synth::meg_like(60, 400, 8, seed)
-        } else {
-            synth::meg_like(360, 5000, 20, seed)
-        }),
-        "synth:climate" => Ok(if small {
-            synth::climate_like(60, 100, seed)
-        } else {
-            synth::climate_like(200, 1000, seed)
-        }),
-        s if s.starts_with("csv:") => {
-            gapsafe::data::io::load_csv(Path::new(&s[4..])).map_err(|e| e.to_string())
-        }
-        s if s.starts_with("synth:reg:") => {
-            let dims = &s["synth:reg:".len()..];
-            let (n, p) = dims
-                .split_once('x')
-                .ok_or("use synth:reg:<n>x<p>")?;
-            let cfg = synth::SynthConfig {
-                n: n.parse().map_err(|e| format!("{e}"))?,
-                p: p.parse().map_err(|e| format!("{e}"))?,
-                k_sparse: 20,
-                corr: 0.5,
-                noise: 0.5,
-                seed,
-            };
-            Ok(synth::regression(&cfg).0)
-        }
-        other => Err(format!("unknown data spec '{other}'")),
-    }
+fn cmd_serve(o: &Flags) -> Result<(), String> {
+    let host = flag(o, "host", "127.0.0.1");
+    let port = flag_usize(o, "port", 7878)?;
+    let cfg = ServeConfig {
+        addr: format!("{host}:{port}"),
+        http_threads: flag_usize(o, "threads", 0)?,
+        fit_workers: flag_usize(o, "workers", 0)?,
+        cache_mb: flag_usize(o, "cache-mb", 256)?,
+    };
+    let server = Server::bind(&cfg)?;
+    println!(
+        "gapsafe serve: listening on {host}:{} (cache {} MiB)",
+        server.port(),
+        cfg.cache_mb
+    );
+    println!("endpoints: /healthz /metrics /v1/fit /v1/jobs/<id> /v1/predict  (docs/SERVING.md)");
+    // Runs until the process is killed.
+    server.run()
 }
 
 fn cmd_path(o: &Flags) -> Result<(), String> {
     let seed = flag_usize(o, "seed", 42)? as u64;
     let small = o.contains_key("small");
-    let ds = load_data(flag(o, "data", "synth:leukemia"), seed, small)?;
+    let ds = load_spec(flag(o, "data", "synth:leukemia"), seed, small)?;
     let task = Task::parse(flag(o, "task", "lasso"))?;
     let prob = build_problem(ds, task)?;
     let cfg = PathConfig {
@@ -202,7 +200,7 @@ fn cmd_path(o: &Flags) -> Result<(), String> {
 fn cmd_cv(o: &Flags) -> Result<(), String> {
     let seed = flag_usize(o, "seed", 42)? as u64;
     let small = o.contains_key("small");
-    let ds = load_data(flag(o, "data", "synth:leukemia"), seed, small)?;
+    let ds = load_spec(flag(o, "data", "synth:leukemia"), seed, small)?;
     let task = Task::parse(flag(o, "task", "lasso"))?;
     let cfg = PathConfig {
         n_lambdas: flag_usize(o, "grid", 50)?,
@@ -261,7 +259,7 @@ fn cmd_batch(o: &Flags) -> Result<(), String> {
     };
     let mut requests = Vec::with_capacity(jobs);
     for j in 0..jobs {
-        let ds = load_data(spec, seed + j as u64, small)?;
+        let ds = load_spec(spec, seed + j as u64, small)?;
         requests.push((build_problem(ds, task)?, cfg.clone()));
     }
     let runner = BatchRunner::new(threads);
@@ -289,7 +287,7 @@ fn cmd_batch(o: &Flags) -> Result<(), String> {
 
 fn cmd_solve(o: &Flags) -> Result<(), String> {
     let seed = flag_usize(o, "seed", 42)? as u64;
-    let ds = load_data(flag(o, "data", "synth:leukemia"), seed, o.contains_key("small"))?;
+    let ds = load_spec(flag(o, "data", "synth:leukemia"), seed, o.contains_key("small"))?;
     let task = Task::parse(flag(o, "task", "lasso"))?;
     let prob = build_problem(ds, task)?;
     // Fan the O(np) screening-sweep correlations out over the pool.
@@ -357,25 +355,25 @@ fn cmd_fig(o: &Flags, fig: u8) -> Result<(), String> {
     let (title, ds, task, delta) = match fig {
         3 => (
             "Fig3 Lasso (leukemia-like)",
-            load_data("synth:leukemia", seed, small)?,
+            load_spec("synth:leukemia", seed, small)?,
             Task::Lasso,
             3.0,
         ),
         4 => (
             "Fig4 logistic (leukemia-like)",
-            load_data("synth:leukemia-binary", seed, small)?,
+            load_spec("synth:leukemia-binary", seed, small)?,
             Task::Logreg,
             3.0,
         ),
         5 => (
             "Fig5 multi-task (MEG-like)",
-            load_data("synth:meg", seed, small)?,
+            load_spec("synth:meg", seed, small)?,
             Task::MultiTask,
             3.0,
         ),
         6 => (
             "Fig6 SGL (climate-like)",
-            load_data("synth:climate", seed, small)?,
+            load_spec("synth:climate", seed, small)?,
             Task::SparseGroupLasso { tau: 0.4 },
             2.5,
         ),
@@ -470,7 +468,7 @@ fn cmd_artifacts(o: &Flags) -> Result<(), String> {
 
 fn cmd_lmax(o: &Flags) -> Result<(), String> {
     let seed = flag_usize(o, "seed", 42)? as u64;
-    let ds = load_data(flag(o, "data", "synth:leukemia"), seed, o.contains_key("small"))?;
+    let ds = load_spec(flag(o, "data", "synth:leukemia"), seed, o.contains_key("small"))?;
     let task = Task::parse(flag(o, "task", "lasso"))?;
     let prob = build_problem(ds, task)?;
     println!("lambda_max = {:.10e}", prob.lambda_max());

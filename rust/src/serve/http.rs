@@ -1,0 +1,300 @@
+//! Minimal HTTP/1.1 front end on `std::net` — no hyper, no tokio.
+//!
+//! The server is a bounded accept/worker pool: `threads` scoped workers
+//! ([`crate::solver::parallel::run_workers`]) share one non-blocking
+//! [`TcpListener`]; each worker accepts a connection, parses one request,
+//! hands it to the router and writes the response (`Connection: close`
+//! framing — one request per connection keeps the parser and the clients
+//! trivial; curl and the test harness both reconnect per call).
+//!
+//! Resource bounds, so a misbehaving client cannot wedge a worker:
+//! header block ≤ 64 KiB, body ≤ 16 MiB, 10 s per-read timeouts, and a
+//! 20 s whole-request deadline (slow-loris trickle included).
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+/// Max bytes of request head (request line + headers).
+const MAX_HEAD: usize = 64 * 1024;
+/// Max request body bytes.
+const MAX_BODY: usize = 16 * 1024 * 1024;
+/// Per-read socket timeout.
+const IO_TIMEOUT: Duration = Duration::from_secs(10);
+/// Whole-request deadline: a client trickling one byte per read (slow
+/// loris) hits this wall instead of holding a worker for MAX_HEAD reads.
+const REQUEST_DEADLINE: Duration = Duration::from_secs(20);
+/// Accept-poll sleep bounds while idle (the listener is non-blocking so
+/// workers can observe the stop flag): the sleep starts at the minimum
+/// after any accepted connection and doubles up to the maximum, so a
+/// busy server stays responsive while an idle one barely wakes.
+const ACCEPT_POLL_MIN: Duration = Duration::from_millis(2);
+const ACCEPT_POLL_MAX: Duration = Duration::from_millis(50);
+
+/// A parsed request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    /// Path with the query string stripped.
+    pub path: String,
+    /// Lower-cased header names.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Body as UTF-8 (endpoints are JSON).
+    pub fn body_str(&self) -> Result<&str, String> {
+        std::str::from_utf8(&self.body).map_err(|_| "body is not UTF-8".to_string())
+    }
+}
+
+/// A response about to be written.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: String,
+}
+
+impl Response {
+    pub fn json(status: u16, body: &crate::util::json::Json) -> Response {
+        Response { status, content_type: "application/json", body: format!("{body}\n") }
+    }
+
+    pub fn text(status: u16, body: &str) -> Response {
+        Response { status, content_type: "text/plain; charset=utf-8", body: body.to_string() }
+    }
+
+    /// A JSON error envelope `{"error": msg}`.
+    pub fn error(status: u16, msg: &str) -> Response {
+        use crate::util::json::Json;
+        Response::json(status, &Json::obj([("error", Json::Str(msg.to_string()))]))
+    }
+
+    fn reason(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            202 => "Accepted",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            408 => "Request Timeout",
+            500 => "Internal Server Error",
+            503 => "Service Unavailable",
+            _ => "Unknown",
+        }
+    }
+}
+
+/// Read and parse one request from the stream.
+pub fn read_request(stream: &mut TcpStream) -> Result<Request, String> {
+    let deadline = std::time::Instant::now() + REQUEST_DEADLINE;
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut tmp = [0u8; 4096];
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD {
+            return Err("request head too large".into());
+        }
+        if std::time::Instant::now() > deadline {
+            return Err("request deadline exceeded".into());
+        }
+        match stream.read(&mut tmp) {
+            Ok(0) => return Err("connection closed mid-request".into()),
+            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(format!("read: {e}")),
+        }
+    };
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| "request head is not UTF-8".to_string())?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().ok_or("empty request")?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().ok_or("missing method")?.to_string();
+    let target = parts.next().ok_or("missing path")?;
+    let path = target.split('?').next().unwrap_or(target).to_string();
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line.split_once(':').ok_or_else(|| format!("bad header '{line}'"))?;
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+    let content_length: usize = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .map(|(_, v)| v.parse().map_err(|_| "bad content-length".to_string()))
+        .transpose()?
+        .unwrap_or(0);
+    if content_length > MAX_BODY {
+        return Err("body too large".into());
+    }
+    let mut body: Vec<u8> = buf[head_end + 4..].to_vec();
+    while body.len() < content_length {
+        if std::time::Instant::now() > deadline {
+            return Err("request deadline exceeded".into());
+        }
+        match stream.read(&mut tmp) {
+            Ok(0) => return Err("connection closed mid-body".into()),
+            Ok(n) => body.extend_from_slice(&tmp[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(format!("read body: {e}")),
+        }
+    }
+    body.truncate(content_length);
+    Ok(Request { method, path, headers, body })
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Write a response (Connection: close framing).
+pub fn write_response(stream: &mut TcpStream, resp: &Response) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        resp.status,
+        resp.reason(),
+        resp.content_type,
+        resp.body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(resp.body.as_bytes())?;
+    stream.flush()
+}
+
+/// Serve connections until `stop` is set: `threads` workers accept on the
+/// shared listener and run `handler` per request. Returns once every
+/// worker has observed the stop flag and exited.
+pub fn serve<H>(
+    listener: &TcpListener,
+    threads: usize,
+    stop: &AtomicBool,
+    handler: H,
+) -> std::io::Result<()>
+where
+    H: Fn(&Request) -> Response + Sync,
+{
+    listener.set_nonblocking(true)?;
+    crate::solver::parallel::run_workers(threads, |_| {
+        let mut idle_sleep = ACCEPT_POLL_MIN;
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, _addr)) => {
+                    idle_sleep = ACCEPT_POLL_MIN;
+                    handle_connection(stream, &handler);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(idle_sleep);
+                    idle_sleep = (idle_sleep * 2).min(ACCEPT_POLL_MAX);
+                }
+                Err(_) => std::thread::sleep(idle_sleep),
+            }
+        }
+    });
+    Ok(())
+}
+
+fn handle_connection<H>(mut stream: TcpStream, handler: &H)
+where
+    H: Fn(&Request) -> Response,
+{
+    // On BSD-derived platforms accepted sockets inherit the listener's
+    // O_NONBLOCK flag (Linux accept does not); force blocking mode so the
+    // read loop below never sees spurious WouldBlock, then put a ceiling
+    // on how long a slow client can hold the worker.
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let resp = match read_request(&mut stream) {
+        Ok(req) => handler(&req),
+        Err(e) => Response::error(400, &e),
+    };
+    let _ = write_response(&mut stream, &resp);
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    fn roundtrip(raw: &str) -> Result<Request, String> {
+        // Push raw bytes through a real socket pair so read_request sees
+        // the same framing a client produces.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let raw = raw.to_string();
+        let writer = std::thread::spawn(move || {
+            let mut c = TcpStream::connect(addr).unwrap();
+            c.write_all(raw.as_bytes()).unwrap();
+            let _ = c.shutdown(std::net::Shutdown::Write);
+        });
+        let (mut s, _) = listener.accept().unwrap();
+        let req = read_request(&mut s);
+        writer.join().unwrap();
+        req
+    }
+
+    #[test]
+    fn parses_request_with_body() {
+        let req = roundtrip(
+            "POST /v1/fit?x=1 HTTP/1.1\r\nHost: h\r\nContent-Length: 4\r\n\r\nabcd",
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/fit");
+        assert_eq!(req.header("host"), Some("h"));
+        assert_eq!(req.body, b"abcd");
+    }
+
+    #[test]
+    fn parses_request_without_body() {
+        let req = roundtrip("GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(roundtrip("not-http\r\n\r\n").is_err());
+    }
+
+    #[test]
+    fn serve_round_trips_over_tcp_and_stops() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let server = std::thread::spawn(move || {
+            serve(&listener, 2, &stop2, |req| {
+                Response::text(200, &format!("echo {}", req.path))
+            })
+            .unwrap();
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.write_all(b"GET /ping HTTP/1.1\r\n\r\n").unwrap();
+        let mut out = String::new();
+        c.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 200 OK\r\n"), "{out}");
+        assert!(out.ends_with("echo /ping"), "{out}");
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap();
+    }
+}

@@ -1,0 +1,312 @@
+//! Background fit-job queue: submit → poll → fetch.
+//!
+//! `POST /v1/fit` must not hold an HTTP worker hostage for the length of a
+//! path solve, so fit requests are enqueued here and executed by a
+//! dedicated pool of fit workers (detached threads — the queue outlives
+//! any single connection). Workers drain the queue through the
+//! [`Registry`](super::registry::Registry), so single-flight dedup, warm
+//! starts and LRU bounding all apply; the queue itself only tracks job
+//! lifecycle (`queued → running → done|failed`) and exposes depth for
+//! `/metrics`.
+//!
+//! Jobs are executed in submission order by `workers` threads — the same
+//! requests-over-a-pool discipline as
+//! [`BatchRunner`](crate::coordinator::BatchRunner), but resident: the
+//! queue accepts work forever instead of fanning out one finite batch.
+
+use super::registry::{FitKind, ModelKey, Registry};
+use super::Metrics;
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Retention bound for finished (done/failed) job records: the newest
+/// `MAX_FINISHED` stay pollable, older ones are pruned so a resident
+/// server does not grow its job table forever.
+const MAX_FINISHED: usize = 1024;
+
+/// Lifecycle of one fit job.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed(String),
+}
+
+impl JobState {
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed(_) => "failed",
+        }
+    }
+}
+
+/// Snapshot of a job for polling / the jobs endpoint.
+#[derive(Debug, Clone)]
+pub struct JobRecord {
+    pub id: u64,
+    pub key: ModelKey,
+    pub state: JobState,
+    /// Set once the job is done.
+    pub outcome: Option<JobOutcome>,
+}
+
+/// What a completed fit reports back.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    /// `hit` | `warm` | `cold` (see [`FitKind`]).
+    pub kind: FitKind,
+    pub seconds: f64,
+    pub total_epochs: usize,
+    pub n_lambdas: usize,
+    pub converged: bool,
+}
+
+struct QueueState {
+    queue: VecDeque<u64>,
+    jobs: HashMap<u64, JobRecord>,
+    /// Terminal job ids in completion order (drives [`MAX_FINISHED`]).
+    finished: VecDeque<u64>,
+    next_id: u64,
+    shutdown: bool,
+}
+
+impl QueueState {
+    /// Record `id` as terminal and prune the oldest finished records
+    /// beyond the retention bound.
+    fn mark_finished(&mut self, id: u64) {
+        self.finished.push_back(id);
+        while self.finished.len() > MAX_FINISHED {
+            if let Some(old) = self.finished.pop_front() {
+                self.jobs.remove(&old);
+            }
+        }
+    }
+}
+
+struct Inner {
+    state: Mutex<QueueState>,
+    /// Signals workers (new job / shutdown) and pollers (job finished).
+    cv: Condvar,
+    registry: Arc<Registry>,
+    metrics: Arc<Metrics>,
+}
+
+/// The background fit queue (see module docs).
+pub struct JobQueue {
+    inner: Arc<Inner>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl JobQueue {
+    /// Start `workers` fit workers draining into `registry`.
+    pub fn start(registry: Arc<Registry>, metrics: Arc<Metrics>, workers: usize) -> JobQueue {
+        let inner = Arc::new(Inner {
+            state: Mutex::new(QueueState {
+                queue: VecDeque::new(),
+                jobs: HashMap::new(),
+                finished: VecDeque::new(),
+                next_id: 0,
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+            registry,
+            metrics,
+        });
+        let workers = (0..workers.max(1))
+            .map(|_| {
+                let inner = inner.clone();
+                std::thread::spawn(move || worker_loop(&inner))
+            })
+            .collect();
+        JobQueue { inner, workers }
+    }
+
+    /// Enqueue a fit; returns the job id immediately.
+    pub fn submit(&self, key: ModelKey) -> u64 {
+        let mut st = self.inner.state.lock().unwrap();
+        let id = st.next_id;
+        st.next_id += 1;
+        st.jobs.insert(
+            id,
+            JobRecord { id, key, state: JobState::Queued, outcome: None },
+        );
+        st.queue.push_back(id);
+        self.inner.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        self.inner.cv.notify_all();
+        id
+    }
+
+    /// Snapshot a job.
+    pub fn status(&self, id: u64) -> Option<JobRecord> {
+        self.inner.state.lock().unwrap().jobs.get(&id).cloned()
+    }
+
+    /// Block until the job reaches a terminal state (or `timeout`
+    /// elapses); returns the final snapshot.
+    pub fn wait(&self, id: u64, timeout: Duration) -> Option<JobRecord> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            match st.jobs.get(&id) {
+                None => return None,
+                Some(rec) if matches!(rec.state, JobState::Done | JobState::Failed(_)) => {
+                    return Some(rec.clone());
+                }
+                Some(_) => {}
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return st.jobs.get(&id).cloned();
+            }
+            let (guard, _res) = self.inner.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Jobs waiting to start (the `/metrics` queue-depth gauge).
+    pub fn depth(&self) -> usize {
+        self.inner.state.lock().unwrap().queue.len()
+    }
+
+    /// Stop accepting work and join the workers (in-flight jobs finish).
+    pub fn shutdown(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.inner.cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for JobQueue {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(inner: &Inner) {
+    loop {
+        // Pull the next job (or exit on shutdown with an empty queue).
+        let (id, key) = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if let Some(id) = st.queue.pop_front() {
+                    // Queued jobs are never pruned (only finished ones),
+                    // so the record is present; skip defensively if not.
+                    if let Some(rec) = st.jobs.get_mut(&id) {
+                        rec.state = JobState::Running;
+                        break (id, rec.key.clone());
+                    }
+                    continue;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = inner.cv.wait(st).unwrap();
+            }
+        };
+        // Solve without holding the queue lock.
+        let result = inner.registry.fit(&key);
+        let mut st = inner.state.lock().unwrap();
+        if let Some(rec) = st.jobs.get_mut(&id) {
+            match result {
+                Ok((model, kind)) => {
+                    rec.state = JobState::Done;
+                    rec.outcome = Some(JobOutcome {
+                        kind,
+                        seconds: model.fit_seconds,
+                        total_epochs: model.total_epochs,
+                        n_lambdas: model.path.points.len(),
+                        converged: model.path.points.iter().all(|p| p.converged),
+                    });
+                    inner.metrics.jobs_completed.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) => {
+                    rec.state = JobState::Failed(e);
+                    inner.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            st.mark_finished(id);
+        }
+        drop(st);
+        inner.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn queue(workers: usize) -> JobQueue {
+        let metrics = Arc::new(Metrics::default());
+        let registry = Arc::new(Registry::new(64, metrics.clone()));
+        JobQueue::start(registry, metrics, workers)
+    }
+
+    fn small_key(delta: f64) -> ModelKey {
+        ModelKey::new("synth:reg:16x24", "lasso", 7, false, 4, delta, 1e-4, 2000)
+    }
+
+    #[test]
+    fn submit_poll_fetch_lifecycle() {
+        let q = queue(2);
+        let id = q.submit(small_key(1.5));
+        let rec = q.wait(id, Duration::from_secs(60)).expect("job exists");
+        assert_eq!(rec.state, JobState::Done, "job did not finish: {rec:?}");
+        let out = rec.outcome.expect("outcome recorded");
+        assert_eq!(out.n_lambdas, 4);
+        assert!(out.converged);
+        // second submit of the same key is a cache hit
+        let id2 = q.submit(small_key(1.5));
+        let rec2 = q.wait(id2, Duration::from_secs(60)).unwrap();
+        assert_eq!(rec2.outcome.unwrap().kind, FitKind::Hit);
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn failed_jobs_report_failure() {
+        let q = queue(1);
+        let id = q.submit(ModelKey::new("no:such", "lasso", 0, false, 3, 1.0, 1e-4, 100));
+        let rec = q.wait(id, Duration::from_secs(30)).unwrap();
+        assert!(matches!(rec.state, JobState::Failed(_)), "{rec:?}");
+    }
+
+    #[test]
+    fn finished_retention_prunes_old_records() {
+        let mut st = QueueState {
+            queue: VecDeque::new(),
+            jobs: HashMap::new(),
+            finished: VecDeque::new(),
+            next_id: 0,
+            shutdown: false,
+        };
+        for id in 0..(MAX_FINISHED as u64 + 10) {
+            st.jobs.insert(
+                id,
+                JobRecord { id, key: small_key(1.0), state: JobState::Done, outcome: None },
+            );
+            st.mark_finished(id);
+        }
+        assert_eq!(st.finished.len(), MAX_FINISHED);
+        assert_eq!(st.jobs.len(), MAX_FINISHED);
+        assert!(!st.jobs.contains_key(&0), "oldest record must be pruned");
+        assert!(st.jobs.contains_key(&(MAX_FINISHED as u64 + 9)));
+    }
+
+    #[test]
+    fn unknown_job_is_none() {
+        let q = queue(1);
+        assert!(q.status(999).is_none());
+        assert!(q.wait(999, Duration::from_millis(10)).is_none());
+    }
+}

@@ -1,0 +1,445 @@
+//! Model-serving subsystem: a resident HTTP server over the solver stack.
+//!
+//! `gapsafe serve` turns the one-shot CLI into a long-lived service so
+//! fitted paths persist between requests — the prerequisite for the
+//! warm-start reuse that Gap Safe screening makes so effective (see
+//! [`registry`]). Everything is std-only, like the rest of the crate.
+//!
+//! ```text
+//!            ┌────────────────────────────────────────────────┐
+//! clients →  │ http  bounded accept/worker pool (HTTP/1.1)    │
+//!            ├────────────────────────────────────────────────┤
+//!            │ router  /healthz /metrics /v1/fit /v1/jobs/{id}│
+//!            │         /v1/predict                            │
+//!            ├───────────────┬────────────────────────────────┤
+//!            │ jobs          │ registry                       │
+//!            │ background    │ ModelKey → fitted PathResult,  │
+//!            │ fit queue     │ single-flight, LRU-bounded     │
+//!            │ (submit/poll/ │ warm-start cache seeding       │
+//!            │  fetch)       │ solve_fixed_lambda_with        │
+//!            └───────────────┴────────────────────────────────┘
+//! ```
+//!
+//! # Endpoints (JSON in, JSON out)
+//!
+//! | endpoint | method | purpose |
+//! |---|---|---|
+//! | `/healthz` | GET | liveness + uptime |
+//! | `/metrics` | GET | request counts, cache hit rate, queue depth, epochs saved |
+//! | `/v1/fit` | POST | submit a fit job (`{"wait":true}` blocks until done) |
+//! | `/v1/jobs/{id}` | GET | poll a job |
+//! | `/v1/predict` | POST | fitted values `X beta_t` for a registered model |
+//!
+//! `docs/SERVING.md` has the full request/response reference and a curl
+//! walkthrough; `rust/tests/serve.rs` drives all of it over a real TCP
+//! socket.
+
+pub mod http;
+pub mod jobs;
+pub mod registry;
+
+use crate::solver::parallel::effective_threads;
+use crate::util::json::Json;
+use http::{Request, Response};
+use jobs::{JobQueue, JobRecord, JobState};
+use registry::{FitKind, ModelKey, Registry};
+
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// How long `/v1/fit` with `"wait": true` may park an HTTP worker before
+/// handing the client back a still-running (202) job snapshot to poll.
+/// Kept short on purpose: each waiting request occupies one accept-pool
+/// worker, and the background queue exists precisely so fits don't hold
+/// HTTP threads hostage.
+const WAIT_FIT_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Serving counters (all monotone; `/metrics` adds the gauges).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub http_requests: AtomicU64,
+    pub http_errors: AtomicU64,
+    pub fit_requests: AtomicU64,
+    pub predict_requests: AtomicU64,
+    pub cache_hits: AtomicU64,
+    pub cache_misses: AtomicU64,
+    pub warm_hits: AtomicU64,
+    pub cold_fits: AtomicU64,
+    pub evictions: AtomicU64,
+    pub jobs_submitted: AtomicU64,
+    pub jobs_completed: AtomicU64,
+    pub jobs_failed: AtomicU64,
+    pub epochs_total: AtomicU64,
+    pub epochs_saved: AtomicU64,
+}
+
+/// Server configuration (`gapsafe serve --port/--threads/--cache-mb`).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address (`127.0.0.1:0` picks an ephemeral port — tests).
+    pub addr: String,
+    /// HTTP accept/worker pool size (0 = all cores).
+    pub http_threads: usize,
+    /// Background fit workers (0 = all cores).
+    pub fit_workers: usize,
+    /// Registry byte budget in MiB.
+    pub cache_mb: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7878".to_string(),
+            http_threads: 0,
+            fit_workers: 0,
+            cache_mb: 256,
+        }
+    }
+}
+
+/// Shared state behind the router.
+pub struct ServerState {
+    pub registry: Arc<Registry>,
+    pub jobs: JobQueue,
+    pub metrics: Arc<Metrics>,
+    started: Instant,
+}
+
+/// A bound, ready-to-run server.
+pub struct Server {
+    listener: TcpListener,
+    state: ServerState,
+    stop: Arc<AtomicBool>,
+    http_threads: usize,
+}
+
+impl Server {
+    /// Bind the listener and start the fit workers (no requests are
+    /// served until [`Server::run`]).
+    pub fn bind(cfg: &ServeConfig) -> Result<Server, String> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| format!("bind {}: {e}", cfg.addr))?;
+        let metrics = Arc::new(Metrics::default());
+        let registry = Arc::new(Registry::new(cfg.cache_mb, metrics.clone()));
+        let jobs = JobQueue::start(
+            registry.clone(),
+            metrics.clone(),
+            effective_threads(cfg.fit_workers),
+        );
+        Ok(Server {
+            listener,
+            state: ServerState { registry, jobs, metrics, started: Instant::now() },
+            stop: Arc::new(AtomicBool::new(false)),
+            http_threads: effective_threads(cfg.http_threads),
+        })
+    }
+
+    /// The bound port (useful with an ephemeral bind).
+    pub fn port(&self) -> u16 {
+        self.listener.local_addr().map(|a| a.port()).unwrap_or(0)
+    }
+
+    /// Flag that makes [`Server::run`] return (set from another thread).
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Serve until the stop flag is set. Blocks the calling thread; the
+    /// accept/worker pool runs on scoped threads underneath.
+    pub fn run(&self) -> Result<(), String> {
+        http::serve(&self.listener, self.http_threads, &self.stop, |req| {
+            route(&self.state, req)
+        })
+        .map_err(|e| format!("serve: {e}"))
+    }
+}
+
+/// Dispatch one request (public so tests can drive the router without a
+/// socket).
+pub fn route(state: &ServerState, req: &Request) -> Response {
+    state.metrics.http_requests.fetch_add(1, Ordering::Relaxed);
+    let resp = match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => handle_healthz(state),
+        ("GET", "/metrics") => handle_metrics(state),
+        ("POST", "/v1/fit") => handle_fit(state, req),
+        ("POST", "/v1/predict") => handle_predict(state, req),
+        ("GET", p) if p.starts_with("/v1/jobs/") => handle_job(state, p),
+        ("GET", _) | ("POST", _) => Response::error(404, "no such endpoint"),
+        _ => Response::error(405, "method not allowed"),
+    };
+    if resp.status >= 400 {
+        state.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
+    }
+    resp
+}
+
+/// Parse a JSON body; an empty body reads as `{}` so GET-style POSTs work.
+fn parse_body(req: &Request) -> Result<Json, Response> {
+    let s = req.body_str().map_err(|e| Response::error(400, &e))?;
+    if s.trim().is_empty() {
+        return Ok(Json::Obj(Default::default()));
+    }
+    Json::parse(s).map_err(|e| Response::error(400, &format!("bad JSON body: {e}")))
+}
+
+fn handle_healthz(state: &ServerState) -> Response {
+    Response::json(
+        200,
+        &Json::obj([
+            ("ok", Json::Bool(true)),
+            ("uptime_seconds", Json::Num(state.started.elapsed().as_secs_f64())),
+        ]),
+    )
+}
+
+fn handle_fit(state: &ServerState, req: &Request) -> Response {
+    state.metrics.fit_requests.fetch_add(1, Ordering::Relaxed);
+    let body = match parse_body(req) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let key = match ModelKey::from_json(&body) {
+        Ok(k) => k,
+        Err(e) => return Response::error(400, &e),
+    };
+    let wait = body.get("wait").and_then(Json::as_bool).unwrap_or(false);
+    let id = state.jobs.submit(key.clone());
+    if wait {
+        match state.jobs.wait(id, WAIT_FIT_TIMEOUT) {
+            Some(rec) => job_response(&rec),
+            None => Response::error(500, "job record vanished"),
+        }
+    } else {
+        Response::json(
+            202,
+            &Json::obj([
+                ("job_id", Json::Num(id as f64)),
+                ("key", Json::Str(key.canonical())),
+                ("state", Json::Str("queued".to_string())),
+            ]),
+        )
+    }
+}
+
+fn handle_job(state: &ServerState, path: &str) -> Response {
+    let id_str = &path["/v1/jobs/".len()..];
+    let Ok(id) = id_str.parse::<u64>() else {
+        return Response::error(400, "job id must be an integer");
+    };
+    match state.jobs.status(id) {
+        Some(rec) => job_response(&rec),
+        None => Response::error(404, "no such job"),
+    }
+}
+
+/// Render a job snapshot: 200 once done, 500 on failure, 202 while the
+/// job is still queued/running (e.g. a `wait:true` fit that outlived
+/// [`WAIT_FIT_TIMEOUT`] — the client keeps polling `/v1/jobs/{id}`).
+fn job_response(rec: &JobRecord) -> Response {
+    let mut pairs: Vec<(String, Json)> = vec![
+        ("id".to_string(), Json::Num(rec.id as f64)),
+        ("key".to_string(), Json::Str(rec.key.canonical())),
+        ("state".to_string(), Json::Str(rec.state.label().to_string())),
+    ];
+    if let JobState::Failed(e) = &rec.state {
+        pairs.push(("error".to_string(), Json::Str(e.clone())));
+    }
+    if let Some(out) = &rec.outcome {
+        pairs.push(("fit".to_string(), Json::Str(out.kind.label().to_string())));
+        pairs.push(("warm".to_string(), Json::Bool(out.kind == FitKind::Warm)));
+        pairs.push(("seconds".to_string(), Json::Num(out.seconds)));
+        pairs.push(("epochs".to_string(), Json::Num(out.total_epochs as f64)));
+        pairs.push(("n_lambdas".to_string(), Json::Num(out.n_lambdas as f64)));
+        pairs.push(("converged".to_string(), Json::Bool(out.converged)));
+    }
+    let status = match rec.state {
+        JobState::Failed(_) => 500,
+        JobState::Done => 200,
+        JobState::Queued | JobState::Running => 202,
+    };
+    Response::json(status, &Json::obj(pairs))
+}
+
+fn handle_predict(state: &ServerState, req: &Request) -> Response {
+    state.metrics.predict_requests.fetch_add(1, Ordering::Relaxed);
+    let body = match parse_body(req) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    // Resolve the artifact: canonical "key", "job_id", or the same
+    // parameters a fit request carries.
+    let model = if let Some(k) = body.get("key").and_then(Json::as_str) {
+        state.registry.get(k)
+    } else if let Some(id) = body.get("job_id").and_then(Json::as_usize) {
+        state
+            .jobs
+            .status(id as u64)
+            .and_then(|rec| state.registry.get(&rec.key.canonical()))
+    } else {
+        match ModelKey::from_json(&body) {
+            Ok(k) => state.registry.get(&k.canonical()),
+            Err(e) => return Response::error(400, &e),
+        }
+    };
+    let Some(model) = model else {
+        return Response::error(404, "model not fitted (POST /v1/fit first)");
+    };
+    let n_betas = model.path.betas.len();
+    let t = match body.get("t") {
+        None => n_betas.saturating_sub(1),
+        Some(j) => match j.as_usize() {
+            Some(t) => t,
+            None => return Response::error(400, "t must be a non-negative integer"),
+        },
+    };
+    if t >= n_betas {
+        return Response::error(400, &format!("t out of range (path has {n_betas} lambdas)"));
+    }
+    let beta = &model.path.betas[t];
+    let z = model.prob.predict(beta);
+    let (n, q, p) = (z.rows(), z.cols(), beta.rows());
+    // Flat row-major arrays; Json::Num round-trips f64 bitwise.
+    let mut z_flat = Vec::with_capacity(n * q);
+    for i in 0..n {
+        for k in 0..q {
+            z_flat.push(z[(i, k)]);
+        }
+    }
+    let mut pairs: Vec<(String, Json)> = vec![
+        ("key".to_string(), Json::Str(model.key.canonical())),
+        ("t".to_string(), Json::Num(t as f64)),
+        ("lam".to_string(), Json::Num(model.path.lambdas[t])),
+        ("n".to_string(), Json::Num(n as f64)),
+        ("q".to_string(), Json::Num(q as f64)),
+        ("p".to_string(), Json::Num(p as f64)),
+        ("z".to_string(), Json::arr_f64(&z_flat)),
+    ];
+    if body.get("beta").and_then(Json::as_bool).unwrap_or(false) {
+        let mut b_flat = Vec::with_capacity(p * q);
+        for j in 0..p {
+            for k in 0..q {
+                b_flat.push(beta[(j, k)]);
+            }
+        }
+        pairs.push(("beta".to_string(), Json::arr_f64(&b_flat)));
+    }
+    Response::json(200, &Json::obj(pairs))
+}
+
+fn handle_metrics(state: &ServerState) -> Response {
+    let m = &state.metrics;
+    let reg = state.registry.stats();
+    let load = |c: &AtomicU64| Json::Num(c.load(Ordering::Relaxed) as f64);
+    let hits = m.cache_hits.load(Ordering::Relaxed) as f64;
+    let misses = m.cache_misses.load(Ordering::Relaxed) as f64;
+    let hit_rate = if hits + misses > 0.0 { hits / (hits + misses) } else { 0.0 };
+    Response::json(
+        200,
+        &Json::obj([
+            ("uptime_seconds", Json::Num(state.started.elapsed().as_secs_f64())),
+            ("http_requests", load(&m.http_requests)),
+            ("http_errors", load(&m.http_errors)),
+            ("fit_requests", load(&m.fit_requests)),
+            ("predict_requests", load(&m.predict_requests)),
+            ("cache_hits", load(&m.cache_hits)),
+            ("cache_misses", load(&m.cache_misses)),
+            ("cache_hit_rate", Json::Num(hit_rate)),
+            ("warm_hits", load(&m.warm_hits)),
+            ("cold_fits", load(&m.cold_fits)),
+            ("evictions", load(&m.evictions)),
+            ("jobs_submitted", load(&m.jobs_submitted)),
+            ("jobs_completed", load(&m.jobs_completed)),
+            ("jobs_failed", load(&m.jobs_failed)),
+            ("queue_depth", Json::Num(state.jobs.depth() as f64)),
+            ("epochs_total", load(&m.epochs_total)),
+            ("epochs_saved", load(&m.epochs_saved)),
+            ("registry_models", Json::Num(reg.models as f64)),
+            ("registry_pending", Json::Num(reg.pending as f64)),
+            ("registry_bytes", Json::Num(reg.bytes as f64)),
+            ("registry_cap_bytes", Json::Num(reg.cap_bytes as f64)),
+        ]),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state() -> ServerState {
+        let metrics = Arc::new(Metrics::default());
+        let registry = Arc::new(Registry::new(64, metrics.clone()));
+        let jobs = JobQueue::start(registry.clone(), metrics.clone(), 2);
+        ServerState { registry, jobs, metrics, started: Instant::now() }
+    }
+
+    fn post(path: &str, body: &str) -> Request {
+        Request {
+            method: "POST".to_string(),
+            path: path.to_string(),
+            headers: Vec::new(),
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    fn get(path: &str) -> Request {
+        Request {
+            method: "GET".to_string(),
+            path: path.to_string(),
+            headers: Vec::new(),
+            body: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn router_health_metrics_and_404() {
+        let st = state();
+        assert_eq!(route(&st, &get("/healthz")).status, 200);
+        assert_eq!(route(&st, &get("/metrics")).status, 200);
+        assert_eq!(route(&st, &get("/nope")).status, 404);
+        let del = Request {
+            method: "DELETE".to_string(),
+            path: "/healthz".to_string(),
+            headers: Vec::new(),
+            body: Vec::new(),
+        };
+        assert_eq!(route(&st, &del).status, 405);
+        assert!(st.metrics.http_errors.load(Ordering::Relaxed) >= 2);
+    }
+
+    #[test]
+    fn fit_wait_then_predict_through_router() {
+        let st = state();
+        let fit = post(
+            "/v1/fit",
+            r#"{"data":"synth:reg:16x24","task":"lasso","grid":4,"delta":1.5,
+               "eps":1e-4,"seed":7,"wait":true}"#,
+        );
+        let resp = route(&st, &fit);
+        assert_eq!(resp.status, 200, "{}", resp.body);
+        let v = Json::parse(&resp.body).unwrap();
+        assert_eq!(v.get("state").and_then(Json::as_str), Some("done"));
+        let pred = post(
+            "/v1/predict",
+            r#"{"data":"synth:reg:16x24","task":"lasso","grid":4,"delta":1.5,
+               "eps":1e-4,"seed":7,"t":3,"beta":true}"#,
+        );
+        let presp = route(&st, &pred);
+        assert_eq!(presp.status, 200, "{}", presp.body);
+        let pv = Json::parse(&presp.body).unwrap();
+        assert_eq!(pv.get("n").and_then(Json::as_usize), Some(16));
+        assert_eq!(pv.get("z").unwrap().as_arr().unwrap().len(), 16);
+        assert_eq!(pv.get("beta").unwrap().as_arr().unwrap().len(), 24);
+    }
+
+    #[test]
+    fn predict_before_fit_is_404_and_bad_fit_is_400() {
+        let st = state();
+        assert_eq!(route(&st, &post("/v1/predict", r#"{"data":"synth:reg:8x8"}"#)).status, 404);
+        assert_eq!(route(&st, &post("/v1/fit", "{not json")).status, 400);
+        assert_eq!(route(&st, &post("/v1/fit", r#"{"task":"nope"}"#)).status, 400);
+        assert_eq!(route(&st, &get("/v1/jobs/abc")).status, 400);
+        assert_eq!(route(&st, &get("/v1/jobs/99")).status, 404);
+    }
+}

@@ -1,0 +1,771 @@
+//! Model registry + warm-start cache: canonical model keys mapped to
+//! fitted path artifacts, with LRU bounding and nearest-lambda warm
+//! starts.
+//!
+//! # Why a resident registry
+//!
+//! Gap Safe screening composes with warm starts (Sec. 3.3-3.4): a solve
+//! seeded near the optimum certifies a small duality gap at its very
+//! first gap pass, so the safe sphere is tiny and almost everything
+//! screens immediately. A long-lived registry that keeps `(beta, active)`
+//! per (dataset, penalty, grid) key therefore answers
+//!
+//! * **repeat fits** (same [`ModelKey`]) from the artifact itself — no
+//!   solver work at all, and
+//! * **nearby fits** (same model family, perturbed lambda grid) by
+//!   seeding every grid point from the closest cached solution via the
+//!   active-warm-start entry point
+//!   [`solve_fixed_lambda_with`](crate::solver::solve_fixed_lambda_with)
+//!   — typically orders of magnitude fewer epochs than a cold path.
+//!
+//! # Concurrency contract
+//!
+//! Fits are **single-flight**: the first caller of a key computes it, any
+//! concurrent caller of the same key blocks on a condvar and receives the
+//! same `Arc<FittedModel>`. Combined with the deterministic solver
+//! (`threads = 1` inside a fit) this makes N clients hammering one key
+//! bitwise-identical to a serial run — `rust/tests/serve.rs` pins it.
+//!
+//! The cache is LRU-bounded by approximate resident bytes (design matrix
+//! + path betas); eviction never removes in-flight fits or the entry just
+//! inserted.
+
+use super::Metrics;
+use crate::data::load_spec;
+use crate::linalg::Mat;
+use crate::penalty::ActiveSet;
+use crate::problem::Problem;
+use crate::screening::{PrevSolution, Rule};
+use crate::solver::path::{
+    lambda_grid, point_from_result, prev_from_result, scaled_eps, solve_path, PathConfig,
+    PathResult, WarmStart,
+};
+use crate::solver::{solve_fixed_lambda_with, SolveOptions};
+use crate::util::json::Json;
+use crate::util::Stopwatch;
+use crate::{build_problem, Task};
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Canonical identity of a fitted model: dataset spec, penalty/task, and
+/// the lambda-grid / tolerance parameters. Two requests with equal keys
+/// are the same model and share one artifact. `delta` and `eps` are
+/// stored as bit patterns so the key is `Eq + Hash` without fuzz.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ModelKey {
+    /// Dataset spec understood by [`crate::data::load_spec`].
+    pub data: String,
+    /// Task label understood by [`Task::parse`] (e.g. `lasso`, `sgl:0.4`).
+    pub task: String,
+    pub seed: u64,
+    pub small: bool,
+    pub n_lambdas: usize,
+    delta_bits: u64,
+    eps_bits: u64,
+    pub max_epochs: usize,
+}
+
+impl ModelKey {
+    pub fn new(
+        data: &str,
+        task: &str,
+        seed: u64,
+        small: bool,
+        n_lambdas: usize,
+        delta: f64,
+        eps: f64,
+        max_epochs: usize,
+    ) -> ModelKey {
+        ModelKey {
+            data: data.to_string(),
+            task: task.to_string(),
+            seed,
+            small,
+            n_lambdas: n_lambdas.max(1),
+            delta_bits: delta.to_bits(),
+            eps_bits: eps.to_bits(),
+            max_epochs: max_epochs.max(1),
+        }
+    }
+
+    pub fn delta(&self) -> f64 {
+        f64::from_bits(self.delta_bits)
+    }
+
+    pub fn eps(&self) -> f64 {
+        f64::from_bits(self.eps_bits)
+    }
+
+    /// Canonical string form — the registry index and the `key` field of
+    /// every serving response (f64 components print with shortest
+    /// round-trip formatting, so equal keys stringify equally).
+    pub fn canonical(&self) -> String {
+        format!(
+            "{}|{}|seed={}|small={}|T={}|delta={}|eps={}|K={}",
+            self.data,
+            self.task,
+            self.seed,
+            self.small,
+            self.n_lambdas,
+            self.delta(),
+            self.eps(),
+            self.max_epochs
+        )
+    }
+
+    /// Same underlying data + penalty (only the grid/tolerance differ):
+    /// warm starts transfer within a family.
+    pub fn same_family(&self, other: &ModelKey) -> bool {
+        self.data == other.data
+            && self.task == other.task
+            && self.seed == other.seed
+            && self.small == other.small
+    }
+
+    /// The solver configuration this key pins down. Fits run serially
+    /// (`threads = 1`) inside one worker so results are bitwise
+    /// independent of pool sizes, exactly like
+    /// [`crate::coordinator::BatchRunner`].
+    pub fn path_config(&self) -> PathConfig {
+        PathConfig {
+            n_lambdas: self.n_lambdas,
+            delta: self.delta(),
+            rule: Rule::GapSafeFull,
+            warm: WarmStart::Standard,
+            eps: self.eps(),
+            eps_is_absolute: false,
+            max_epochs: self.max_epochs,
+            screen_every: 10,
+            threads: 1,
+        }
+    }
+
+    /// Parse a key from a JSON request body (`/v1/fit`, `/v1/predict`).
+    /// Absent fields take defaults; *present but malformed* fields are
+    /// errors (they must not be silently coerced into a different key).
+    pub fn from_json(v: &Json) -> Result<ModelKey, String> {
+        let data = field(v, "data", Json::as_str, "a string", "synth:leukemia")?;
+        let task = field(v, "task", Json::as_str, "a string", "lasso")?;
+        // validate early so submit-time errors reach the client as 400s
+        Task::parse(task)?;
+        let seed = field(v, "seed", Json::as_usize, "a non-negative integer", 42)? as u64;
+        let small = field(v, "small", Json::as_bool, "a boolean", false)?;
+        let n_lambdas = field(v, "grid", Json::as_usize, "a non-negative integer", 20)?;
+        let delta = field(v, "delta", Json::as_f64, "a number", 2.0)?;
+        let eps = field(v, "eps", Json::as_f64, "a number", 1e-6)?;
+        let max_epochs =
+            field(v, "max_epochs", Json::as_usize, "a non-negative integer", 10_000)?;
+        if !(delta.is_finite() && delta > 0.0) {
+            return Err("delta must be finite and > 0".into());
+        }
+        if !(eps.is_finite() && eps > 0.0) {
+            return Err("eps must be finite and > 0".into());
+        }
+        if n_lambdas == 0 || n_lambdas > 10_000 {
+            return Err("grid must be in 1..=10000".into());
+        }
+        validate_data_spec(data)?;
+        Ok(ModelKey::new(data, task, seed, small, n_lambdas, delta, eps, max_epochs))
+    }
+}
+
+/// Largest synthetic design (n * p cells) a fit request may ask the
+/// server to materialize (~200 MiB of f64). The CLI has no such cap — an
+/// operator sizing a benchmark is not an unauthenticated HTTP client
+/// whose single request could abort the resident process on allocation
+/// failure (or overflow `n * p` in release).
+const MAX_SYNTH_CELLS: usize = 25_000_000;
+
+/// Serving-side guard on request dataset specs (the shared
+/// [`load_spec`] grammar itself is validated at fit time):
+///
+/// * `csv:` is refused outright — an HTTP client must not be able to
+///   make the resident server read (and expose model output derived
+///   from) arbitrary local files; csv stays a CLI-only spec;
+/// * `synth:reg` dimensions are capped so a request cannot ask the
+///   process to materialize an allocation-abort-sized design.
+fn validate_data_spec(data: &str) -> Result<(), String> {
+    if data.starts_with("csv:") {
+        return Err("csv: specs are not served over HTTP (use the CLI)".into());
+    }
+    if data.starts_with("synth:reg:") {
+        let (n, p) = crate::data::parse_reg_dims(data).ok_or("use synth:reg:<n>x<p>")?;
+        if n == 0 || p == 0 {
+            return Err("synth:reg dimensions must be positive".into());
+        }
+        if n.checked_mul(p).map(|cells| cells > MAX_SYNTH_CELLS).unwrap_or(true) {
+            return Err(format!(
+                "synth:reg:{n}x{p} exceeds the serving cap of {MAX_SYNTH_CELLS} cells"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Extract an optional request field: absent → `default`, present but of
+/// the wrong shape → an error naming the expectation.
+fn field<'a, T>(
+    v: &'a Json,
+    key: &str,
+    extract: fn(&'a Json) -> Option<T>,
+    expect: &str,
+    default: T,
+) -> Result<T, String> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(j) => extract(j).ok_or_else(|| format!("'{key}' must be {expect}")),
+    }
+}
+
+/// A fitted artifact held by the registry.
+pub struct FittedModel {
+    pub key: ModelKey,
+    /// The assembled problem (kept for `/v1/predict` and warm starts).
+    pub prob: Arc<Problem>,
+    pub path: PathResult,
+    /// Sum of per-lambda epochs actually run for this artifact.
+    pub total_epochs: usize,
+    /// Whether this fit was seeded from a cached family member.
+    pub warm_started: bool,
+    pub fit_seconds: f64,
+}
+
+/// How a fit request was satisfied.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FitKind {
+    /// Exact key already fitted — artifact returned as-is.
+    Hit,
+    /// New key, seeded from a cached family member.
+    Warm,
+    /// New key, no usable seed.
+    Cold,
+}
+
+impl FitKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            FitKind::Hit => "hit",
+            FitKind::Warm => "warm",
+            FitKind::Cold => "cold",
+        }
+    }
+}
+
+enum Entry {
+    /// A fit is in flight; waiters sleep on the registry condvar.
+    Pending,
+    Done(Slot),
+}
+
+struct Slot {
+    model: Arc<FittedModel>,
+    bytes: usize,
+    last_used: u64,
+}
+
+struct RegState {
+    entries: HashMap<String, Entry>,
+    /// Monotone access clock for LRU.
+    tick: u64,
+    /// Resident bytes of Done entries.
+    bytes: usize,
+    evictions: u64,
+}
+
+/// Registry snapshot for `/metrics`.
+#[derive(Debug, Clone)]
+pub struct RegistryStats {
+    pub models: usize,
+    pub pending: usize,
+    pub bytes: usize,
+    pub cap_bytes: usize,
+    pub evictions: u64,
+}
+
+/// The model registry (see module docs).
+pub struct Registry {
+    state: Mutex<RegState>,
+    cv: Condvar,
+    metrics: Arc<Metrics>,
+    cap_bytes: usize,
+}
+
+impl Registry {
+    /// A registry bounded to roughly `cache_mb` MiB of fitted artifacts
+    /// (0 means "one model at most" — the floor is always the entry just
+    /// inserted).
+    pub fn new(cache_mb: usize, metrics: Arc<Metrics>) -> Registry {
+        Registry {
+            state: Mutex::new(RegState {
+                entries: HashMap::new(),
+                tick: 0,
+                bytes: 0,
+                evictions: 0,
+            }),
+            cv: Condvar::new(),
+            metrics,
+            cap_bytes: cache_mb.saturating_mul(1024 * 1024),
+        }
+    }
+
+    /// Fit (or fetch) the model for `key`. Exact hits return the cached
+    /// artifact; misses solve — warm-started from the best cached family
+    /// member when one exists — and publish the artifact for every
+    /// concurrent waiter of the same key.
+    pub fn fit(&self, key: &ModelKey) -> Result<(Arc<FittedModel>, FitKind), String> {
+        let canon = key.canonical();
+        let seed: Option<Arc<FittedModel>>;
+        {
+            let mut st = self.state.lock().unwrap();
+            loop {
+                st.tick += 1;
+                let tick = st.tick;
+                match st.entries.get_mut(&canon) {
+                    Some(Entry::Done(slot)) => {
+                        slot.last_used = tick;
+                        self.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+                        return Ok((slot.model.clone(), FitKind::Hit));
+                    }
+                    Some(Entry::Pending) => {
+                        st = self.cv.wait(st).unwrap();
+                    }
+                    None => {
+                        seed = best_seed(&st, key);
+                        st.entries.insert(canon.clone(), Entry::Pending);
+                        break;
+                    }
+                }
+            }
+            self.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
+        }
+        // Solve outside the lock; waiters sleep on the condvar meanwhile.
+        // The guard clears the Pending claim if build_model panics —
+        // otherwise every later fit of this key would block forever.
+        let mut guard = PendingGuard { reg: self, canon: &canon, armed: true };
+        let built = self.build_model(key, seed.as_deref());
+        guard.armed = false; // normal paths below publish or clear the claim
+        let mut st = self.state.lock().unwrap();
+        match built {
+            Ok(model) => {
+                let model = Arc::new(model);
+                let bytes = estimate_bytes(&model);
+                st.tick += 1;
+                let tick = st.tick;
+                st.bytes += bytes;
+                st.entries.insert(
+                    canon.clone(),
+                    Entry::Done(Slot { model: model.clone(), bytes, last_used: tick }),
+                );
+                self.evict_locked(&mut st, &canon);
+                self.cv.notify_all();
+                let kind = if model.warm_started { FitKind::Warm } else { FitKind::Cold };
+                match kind {
+                    FitKind::Warm => self.metrics.warm_hits.fetch_add(1, Ordering::Relaxed),
+                    _ => self.metrics.cold_fits.fetch_add(1, Ordering::Relaxed),
+                };
+                Ok((model, kind))
+            }
+            Err(e) => {
+                // Clear the claim so a later request can retry.
+                st.entries.remove(&canon);
+                self.cv.notify_all();
+                Err(e)
+            }
+        }
+    }
+
+    /// Fetch a fitted artifact by canonical key (no solving).
+    pub fn get(&self, canon: &str) -> Option<Arc<FittedModel>> {
+        let mut st = self.state.lock().unwrap();
+        st.tick += 1;
+        let tick = st.tick;
+        match st.entries.get_mut(canon) {
+            Some(Entry::Done(slot)) => {
+                slot.last_used = tick;
+                Some(slot.model.clone())
+            }
+            _ => None,
+        }
+    }
+
+    pub fn stats(&self) -> RegistryStats {
+        let st = self.state.lock().unwrap();
+        let models = st.entries.values().filter(|e| matches!(e, Entry::Done(_))).count();
+        let pending = st.entries.len() - models;
+        RegistryStats {
+            models,
+            pending,
+            bytes: st.bytes,
+            cap_bytes: self.cap_bytes,
+            evictions: st.evictions,
+        }
+    }
+
+    fn build_model(
+        &self,
+        key: &ModelKey,
+        seed: Option<&FittedModel>,
+    ) -> Result<FittedModel, String> {
+        let sw = Stopwatch::start();
+        // A seed is always from the same family (same data/task/seed/
+        // small), so its Problem is this model's Problem: share the Arc
+        // instead of materializing another copy of the design matrix.
+        let prob = match seed {
+            Some(s) => s.prob.clone(),
+            None => {
+                let task = Task::parse(&key.task)?;
+                let ds = load_spec(&key.data, key.seed, key.small)?;
+                Arc::new(build_problem(ds, task)?)
+            }
+        };
+        let cfg = key.path_config();
+        let (path, warm_started) = match seed {
+            Some(s) => (solve_path_seeded(&prob, &cfg, s), true),
+            None => (solve_path(&prob, &cfg), false),
+        };
+        let total_epochs: usize = path.points.iter().map(|p| p.epochs).sum();
+        self.metrics.epochs_total.fetch_add(total_epochs as u64, Ordering::Relaxed);
+        if let Some(s) = seed {
+            // Epochs-saved estimate: the seed's own cost scaled to this
+            // grid length, minus what the warm path actually spent.
+            let scaled = s.total_epochs * path.points.len() / s.path.points.len().max(1);
+            let saved = scaled.saturating_sub(total_epochs);
+            self.metrics.epochs_saved.fetch_add(saved as u64, Ordering::Relaxed);
+        }
+        Ok(FittedModel {
+            key: key.clone(),
+            prob,
+            path,
+            total_epochs,
+            warm_started,
+            fit_seconds: sw.secs(),
+        })
+    }
+
+    /// Evict least-recently-used Done entries (never `keep`, never
+    /// Pending) until under the byte cap.
+    fn evict_locked(&self, st: &mut RegState, keep: &str) {
+        while st.bytes > self.cap_bytes {
+            let victim = st
+                .entries
+                .iter()
+                .filter_map(|(k, e)| match e {
+                    Entry::Done(s) if k != keep => Some((k.clone(), s.last_used, s.bytes)),
+                    _ => None,
+                })
+                .min_by_key(|&(_, last_used, _)| last_used);
+            match victim {
+                Some((k, _, bytes)) => {
+                    st.entries.remove(&k);
+                    st.bytes -= bytes;
+                    st.evictions += 1;
+                    self.metrics.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                None => break,
+            }
+        }
+    }
+}
+
+/// Unwind guard for the single-flight claim: while `armed`, dropping it
+/// (i.e. a panic in the in-flight solve) removes the Pending entry and
+/// wakes waiters so the key is retryable instead of wedged forever.
+struct PendingGuard<'a> {
+    reg: &'a Registry,
+    canon: &'a str,
+    armed: bool,
+}
+
+impl Drop for PendingGuard<'_> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        // Never panic inside Drop (double panic aborts): take the state
+        // even if another thread poisoned the mutex.
+        let mut st = match self.reg.state.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        st.entries.remove(self.canon);
+        self.reg.cv.notify_all();
+    }
+}
+
+/// Most-recently-used cached family member, if any.
+fn best_seed(st: &RegState, key: &ModelKey) -> Option<Arc<FittedModel>> {
+    let mut best: Option<&Slot> = None;
+    for entry in st.entries.values() {
+        if let Entry::Done(slot) = entry {
+            if slot.model.key.same_family(key)
+                && best.map(|b| slot.last_used > b.last_used).unwrap_or(true)
+            {
+                best = Some(slot);
+            }
+        }
+    }
+    best.map(|s| s.model.clone())
+}
+
+/// Approximate resident bytes of one artifact: design + targets +
+/// per-lambda coefficient matrices. Family members share one
+/// `Arc<Problem>`, so charging the design to every entry *overcounts* —
+/// deliberately: an entry holding the last Arc to an evicted seed's
+/// design still pins that memory, and a budget that errs toward early
+/// eviction can never exceed `--cache-mb` in real bytes.
+fn estimate_bytes(m: &FittedModel) -> usize {
+    let (n, p, q) = (m.prob.n(), m.prob.p(), m.prob.q());
+    let design = n * p * 8;
+    let targets = n * q * 8;
+    let betas = m.path.betas.len() * p * q * 8;
+    design + targets + betas + 4096
+}
+
+/// Solve a lambda path seeded from a cached family artifact: every grid
+/// point warm-starts from the *nearest* cached solution (log-lambda
+/// distance) — or from the sequential predecessor when that is closer —
+/// via the active-warm-start scheme of Eq. (22): a first restricted solve
+/// on the seed's support, then the full problem. Screening stays safe for
+/// any seed (Thm. 2 holds for every primal/dual pair), so a stale or
+/// far-away cache entry costs epochs, never correctness.
+pub fn solve_path_seeded(prob: &Problem, cfg: &PathConfig, seed: &FittedModel) -> PathResult {
+    let sw_total = Stopwatch::start();
+    let lam_max = prob.lambda_max();
+    let lambdas = lambda_grid(lam_max, cfg.n_lambdas, cfg.delta);
+    let eps = if cfg.eps_is_absolute { cfg.eps } else { scaled_eps(prob, cfg.eps) };
+    let opts = SolveOptions {
+        max_epochs: cfg.max_epochs,
+        screen_every: cfg.screen_every,
+        eps,
+        max_kkt_rounds: 20,
+    };
+    let mut rule = cfg.rule.build();
+    let mut prev: Option<PrevSolution> = None;
+    let mut points = Vec::with_capacity(lambdas.len());
+    let mut betas = Vec::with_capacity(lambdas.len());
+    for &lam in &lambdas {
+        let sw = Stopwatch::start();
+        let (ci, clam) = nearest_lambda(&seed.path.lambdas, lam);
+        let cache_closer = match prev.as_ref() {
+            None => true,
+            Some(p) => log_dist(clam, lam) < log_dist(p.lam, lam),
+        };
+        let seeded_prev = if cache_closer {
+            make_prev(prob, &seed.path.betas[ci], clam)
+        } else {
+            prev.clone().expect("prev exists when cache is not closer")
+        };
+        // Phase 1 (Eq. 22): restricted to the seed's support.
+        let support = support_active(prob, &seeded_prev.beta);
+        let mut phase1_epochs = 0usize;
+        let phase1_beta = if support.n_active_feats() > 0 {
+            let r1 = solve_fixed_lambda_with(
+                prob,
+                lam,
+                lam_max,
+                Some(&seeded_prev.beta),
+                Some(&support),
+                rule.as_mut(),
+                Some(&seeded_prev),
+                &opts,
+            );
+            phase1_epochs = r1.epochs;
+            Some(r1.beta)
+        } else {
+            None
+        };
+        // Phase 2: the full problem, initialized from phase 1.
+        let init = phase1_beta.as_ref().or(Some(&seeded_prev.beta));
+        let res = solve_fixed_lambda_with(
+            prob,
+            lam,
+            lam_max,
+            init,
+            None,
+            rule.as_mut(),
+            Some(&seeded_prev),
+            &opts,
+        );
+        points.push(point_from_result(lam, &res, res.epochs + phase1_epochs, sw.secs()));
+        let (pv, beta) = prev_from_result(prob, lam, res);
+        prev = Some(pv);
+        betas.push(beta);
+    }
+    PathResult { lambdas, points, betas, total_seconds: sw_total.secs(), lam_max }
+}
+
+/// Reconstruct a [`PrevSolution`] from a cached coefficient matrix: one
+/// gap pass at the cached lambda yields a dual-feasible theta, and the
+/// full active set keeps every downstream screen safe.
+fn make_prev(prob: &Problem, beta: &Mat, lam: f64) -> PrevSolution {
+    let z = prob.predict(beta);
+    let full = ActiveSet::full(prob.pen.groups());
+    let gp = prob.gap_pass(beta, &z, lam, &full);
+    let loss = prob.fit.loss(&z);
+    PrevSolution {
+        lam,
+        loss,
+        pen_value: prob.pen.value(beta),
+        z,
+        theta: gp.theta,
+        active: full,
+        beta: beta.clone(),
+    }
+}
+
+/// Active set spanning exactly the support of `beta` (the phase-1
+/// restriction of the active warm start).
+fn support_active(prob: &Problem, beta: &Mat) -> ActiveSet {
+    let groups = prob.pen.groups();
+    let q = beta.cols();
+    let mut a = ActiveSet::full(groups);
+    for g in 0..groups.len() {
+        let any = groups
+            .feats(g)
+            .iter()
+            .any(|&j| (0..q).any(|k| beta[(j, k)] != 0.0));
+        if !any {
+            a.kill_group(groups, g);
+        }
+    }
+    a
+}
+
+fn log_dist(a: f64, b: f64) -> f64 {
+    (a.max(1e-300).ln() - b.max(1e-300).ln()).abs()
+}
+
+/// Index and value of the grid lambda closest to `lam` in log scale.
+fn nearest_lambda(lams: &[f64], lam: f64) -> (usize, f64) {
+    let mut bi = 0usize;
+    let mut bd = f64::INFINITY;
+    for (i, &l) in lams.iter().enumerate() {
+        let d = log_dist(l, lam);
+        if d < bd {
+            bd = d;
+            bi = i;
+        }
+    }
+    (bi, lams[bi])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics() -> Arc<Metrics> {
+        Arc::new(Metrics::default())
+    }
+
+    fn key(grid: usize, delta: f64) -> ModelKey {
+        ModelKey::new("synth:reg:24x60", "lasso", 5, false, grid, delta, 1e-6, 10_000)
+    }
+
+    #[test]
+    fn canonical_round_trips_equality() {
+        let a = key(10, 2.0);
+        let b = key(10, 2.0);
+        assert_eq!(a, b);
+        assert_eq!(a.canonical(), b.canonical());
+        assert_ne!(a.canonical(), key(10, 2.5).canonical());
+        assert!(a.same_family(&key(30, 1.5)));
+        assert!(!a.same_family(&ModelKey::new(
+            "synth:reg:24x60",
+            "lasso",
+            6,
+            false,
+            10,
+            2.0,
+            1e-6,
+            10_000
+        )));
+    }
+
+    #[test]
+    fn from_json_validates() {
+        let ok = Json::parse(r#"{"data":"synth:reg:10x20","task":"lasso","grid":5}"#).unwrap();
+        let k = ModelKey::from_json(&ok).unwrap();
+        assert_eq!(k.n_lambdas, 5);
+        assert_eq!(k.delta(), 2.0);
+        let bad = Json::parse(r#"{"task":"nope"}"#).unwrap();
+        assert!(ModelKey::from_json(&bad).is_err());
+        let bad_eps = Json::parse(r#"{"eps":0}"#).unwrap();
+        assert!(ModelKey::from_json(&bad_eps).is_err());
+        // present-but-malformed fields are rejected, not coerced
+        for doc in [r#"{"grid":7.9}"#, r#"{"seed":-1}"#, r#"{"small":"yes"}"#, r#"{"grid":"8"}"#]
+        {
+            let v = Json::parse(doc).unwrap();
+            assert!(ModelKey::from_json(&v).is_err(), "{doc} should be rejected");
+        }
+        // synthetic datasets a request may materialize are capped, and
+        // csv (local file access) is CLI-only
+        for doc in [
+            r#"{"data":"synth:reg:1000000x1000000"}"#,
+            r#"{"data":"synth:reg:0x10"}"#,
+            r#"{"data":"synth:reg:10"}"#,
+            r#"{"data":"csv:/etc/passwd"}"#,
+        ] {
+            let v = Json::parse(doc).unwrap();
+            assert!(ModelKey::from_json(&v).is_err(), "{doc} should be rejected");
+        }
+        assert!(validate_data_spec("synth:reg:100x2000").is_ok());
+        assert!(validate_data_spec("synth:leukemia").is_ok());
+    }
+
+    #[test]
+    fn exact_hit_returns_same_artifact() {
+        let reg = Registry::new(256, metrics());
+        let k = key(6, 1.5);
+        let (a, kind_a) = reg.fit(&k).unwrap();
+        assert_eq!(kind_a, FitKind::Cold);
+        let (b, kind_b) = reg.fit(&k).unwrap();
+        assert_eq!(kind_b, FitKind::Hit);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(reg.get(&k.canonical()).is_some());
+        assert!(reg.get("nope").is_none());
+    }
+
+    #[test]
+    fn warm_fit_converges_and_saves_epochs() {
+        let m = metrics();
+        let reg = Registry::new(256, m.clone());
+        let (cold, _) = reg.fit(&key(10, 2.0)).unwrap();
+        assert!(cold.path.points.iter().all(|p| p.converged));
+        let (warm, kind) = reg.fit(&key(10, 2.02)).unwrap();
+        assert_eq!(kind, FitKind::Warm);
+        assert!(warm.warm_started);
+        assert!(warm.path.points.iter().all(|p| p.converged));
+        assert!(
+            warm.total_epochs < cold.total_epochs,
+            "warm start did not save epochs: warm {} vs cold {}",
+            warm.total_epochs,
+            cold.total_epochs
+        );
+        assert!(m.warm_hits.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn lru_eviction_respects_cap() {
+        let m = metrics();
+        let reg = Registry::new(0, m); // floor: only the newest artifact survives
+        let first = key(5, 1.5);
+        reg.fit(&first).unwrap();
+        reg.fit(&key(5, 1.6)).unwrap();
+        let stats = reg.stats();
+        assert_eq!(stats.models, 1, "cap 0 must keep only the latest model");
+        assert!(stats.evictions >= 1);
+        assert!(reg.get(&first.canonical()).is_none());
+    }
+
+    #[test]
+    fn failed_fit_clears_the_claim() {
+        let reg = Registry::new(64, metrics());
+        let bad = ModelKey::new("no:such", "lasso", 1, false, 3, 1.0, 1e-6, 100);
+        assert!(reg.fit(&bad).is_err());
+        // the claim is gone: a retry errors again instead of deadlocking
+        assert!(reg.fit(&bad).is_err());
+        assert_eq!(reg.stats().pending, 0);
+    }
+}

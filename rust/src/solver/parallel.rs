@@ -108,6 +108,30 @@ where
         .collect()
 }
 
+/// Run `threads` long-lived scoped workers and join them all: each worker
+/// runs `worker(w)` (its own loop) to completion. This is the resident
+/// counterpart of [`parallel_map`] — same scoped-thread machinery, but the
+/// workers own their loop instead of pulling from a finite work list. The
+/// serving front end ([`crate::serve`]) runs its bounded accept pool on
+/// it; a panic in any worker propagates to the caller once the scope
+/// joins.
+pub fn run_workers<F>(threads: usize, worker: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = threads.max(1);
+    if threads == 1 {
+        worker(0);
+        return;
+    }
+    std::thread::scope(|s| {
+        for w in 0..threads {
+            let f = &worker;
+            s.spawn(move || f(w));
+        }
+    });
+}
+
 /// Chunk boundaries over the lambda grid, weighted so later (smaller-
 /// lambda) chunks hold fewer grid points: supports densify and epochs grow
 /// as lambda decreases, so equal-length chunks would leave the first
@@ -295,6 +319,18 @@ mod tests {
                 x * x + 1
             });
             assert_eq!(got, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn run_workers_runs_every_worker() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        for threads in [1, 2, 5] {
+            let ran = AtomicUsize::new(0);
+            run_workers(threads, |_| {
+                ran.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(ran.load(Ordering::Relaxed), threads);
         }
     }
 

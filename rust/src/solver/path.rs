@@ -247,31 +247,55 @@ pub(crate) fn run_grid_segment(
             opts,
         );
         let secs = sw.secs();
-        let nnz = count_nnz(&res.beta);
-        points.push(PathPoint {
-            lam,
-            gap: res.gap,
-            epochs: res.epochs,
-            n_active_groups: res.active.n_active_groups(),
-            n_active_feats: res.active.n_active_feats(),
-            nnz,
-            seconds: secs,
-            converged: res.converged,
-            kkt_violations: res.kkt_violations,
-        });
-        prev = Some(PrevSolution {
-            lam,
-            loss: prob.fit.loss(&res.z),
-            pen_value: prob.pen.value(&res.beta),
-            z: res.z,
-            theta: res.theta,
-            active: res.active,
-            beta: res.beta.clone(),
-        });
-        betas.push(res.beta);
+        points.push(point_from_result(lam, &res, res.epochs, secs));
+        let (pv, beta) = prev_from_result(prob, lam, res);
+        prev = Some(pv);
+        betas.push(beta);
     }
 
     (points, betas, prev)
+}
+
+/// Per-lambda record assembled from one fixed-lambda solve. `epochs` is
+/// passed in (not read from `res`) so callers running a two-phase warm
+/// start can fold the phase-1 work into the count.
+pub(crate) fn point_from_result(
+    lam: f64,
+    res: &SolveResult,
+    epochs: usize,
+    seconds: f64,
+) -> PathPoint {
+    PathPoint {
+        lam,
+        gap: res.gap,
+        epochs,
+        n_active_groups: res.active.n_active_groups(),
+        n_active_feats: res.active.n_active_feats(),
+        nnz: count_nnz(&res.beta),
+        seconds,
+        converged: res.converged,
+        kkt_violations: res.kkt_violations,
+    }
+}
+
+/// Chainable warm-start snapshot of a finished solve at `lam`; returns
+/// the [`PrevSolution`] plus the coefficient matrix for the path record.
+pub(crate) fn prev_from_result(
+    prob: &Problem,
+    lam: f64,
+    res: SolveResult,
+) -> (PrevSolution, Mat) {
+    let beta = res.beta;
+    let prev = PrevSolution {
+        lam,
+        loss: prob.fit.loss(&res.z),
+        pen_value: prob.pen.value(&beta),
+        z: res.z,
+        theta: res.theta,
+        active: res.active,
+        beta: beta.clone(),
+    };
+    (prev, beta)
 }
 
 fn count_nnz(beta: &Mat) -> usize {

@@ -1,8 +1,19 @@
 //! Minimal JSON parser + writer (the offline registry has no serde).
 //!
-//! Supports the full JSON grammar except `\u` surrogate pairs beyond the BMP;
-//! ample for the artifact manifest and result files this crate exchanges
-//! with the Python compile path.
+//! Supports the full JSON grammar, including `\u` surrogate pairs beyond
+//! the BMP; ample for the artifact manifest, the serving endpoints
+//! ([`crate::serve`]) and the result files this crate exchanges with the
+//! Python compile path.
+//!
+//! # Round-trip contract
+//!
+//! `parse(v.to_string()) == v` for every value the writer can emit, and
+//! finite [`Json::Num`] survives **bitwise** (the writer uses Rust's
+//! shortest-round-trip `f64` formatting and preserves `-0.0`). JSON has no
+//! `NaN`/`inf` literals, so non-finite numbers serialize as `null` — the
+//! one lossy case, by construction. The serving layer relies on the
+//! bitwise guarantee to hand coefficients over HTTP without perturbing
+//! them.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -45,8 +56,18 @@ impl Json {
         }
     }
 
+    /// The value as a usize — `None` for negative, non-integral or
+    /// out-of-range numbers (API inputs must not be silently coerced).
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|x| x as usize)
+        self.as_f64().and_then(|x| {
+            // strict <: usize::MAX as f64 rounds up to 2^64, which would
+            // admit an out-of-range value that saturates on cast
+            if x >= 0.0 && x.fract() == 0.0 && x < usize::MAX as f64 {
+                Some(x as usize)
+            } else {
+                None
+            }
+        })
     }
 
     pub fn as_arr(&self) -> Option<&[Json]> {
@@ -56,11 +77,35 @@ impl Json {
         }
     }
 
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
             _ => None,
         }
+    }
+
+    /// Build an object from `(key, value)` pairs (endpoint ergonomics).
+    pub fn obj<K: Into<String>, I: IntoIterator<Item = (K, Json)>>(pairs: I) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.into(), v)).collect())
+    }
+
+    /// An array of numbers.
+    pub fn arr_f64(xs: &[f64]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
 }
 
@@ -152,14 +197,37 @@ impl<'a> Parser<'a> {
                         b'r' => out.push('\r'),
                         b't' => out.push('\t'),
                         b'u' => {
-                            if self.i + 4 > self.b.len() {
-                                return Err("bad \\u".into());
+                            let cp = self.hex4()?;
+                            if (0xD800..0xDC00).contains(&cp) {
+                                // High surrogate: pair it with a following
+                                // \uDC00-\uDFFF low surrogate (non-BMP code
+                                // points, e.g. emoji); unpaired surrogates
+                                // become U+FFFD.
+                                let paired = self.b.get(self.i) == Some(&b'\\')
+                                    && self.b.get(self.i + 1) == Some(&b'u');
+                                if paired {
+                                    let save = self.i;
+                                    self.i += 2;
+                                    let lo = self.hex4()?;
+                                    if (0xDC00..0xE000).contains(&lo) {
+                                        let c = 0x10000
+                                            + ((cp - 0xD800) << 10)
+                                            + (lo - 0xDC00);
+                                        out.push(char::from_u32(c).unwrap_or('\u{fffd}'));
+                                    } else {
+                                        // not a low surrogate: re-parse the
+                                        // escape on the next loop pass
+                                        self.i = save;
+                                        out.push('\u{fffd}');
+                                    }
+                                } else {
+                                    out.push('\u{fffd}');
+                                }
+                            } else if (0xDC00..0xE000).contains(&cp) {
+                                out.push('\u{fffd}'); // lone low surrogate
+                            } else {
+                                out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
                             }
-                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
-                                .map_err(|_| "bad \\u")?;
-                            let cp = u32::from_str_radix(hex, 16).map_err(|_| "bad \\u")?;
-                            self.i += 4;
-                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
                         }
                         _ => return Err(format!("bad escape at {}", self.i)),
                     }
@@ -179,6 +247,18 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// Four hex digits of a `\u` escape.
+    fn hex4(&mut self) -> Result<u32, String> {
+        if self.i + 4 > self.b.len() {
+            return Err("bad \\u".into());
+        }
+        let hex =
+            std::str::from_utf8(&self.b[self.i..self.i + 4]).map_err(|_| "bad \\u")?;
+        let cp = u32::from_str_radix(hex, 16).map_err(|_| "bad \\u")?;
+        self.i += 4;
+        Ok(cp)
     }
 
     fn array(&mut self) -> Result<Json, String> {
@@ -242,9 +322,18 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                if !x.is_finite() {
+                    // JSON has no NaN/inf literals.
+                    write!(f, "null")
+                } else if *x == 0.0 && x.is_sign_negative() {
+                    // `as i64` would drop the sign bit; "-0" parses back to
+                    // -0.0, keeping Num round-trips bitwise.
+                    write!(f, "-0")
+                } else if x.fract() == 0.0 && x.abs() < 1e15 {
                     write!(f, "{}", *x as i64)
                 } else {
+                    // Rust's shortest representation re-parses to the same
+                    // bits, so finite numbers round-trip exactly.
                     write!(f, "{x}")
                 }
             }
@@ -330,5 +419,126 @@ mod tests {
         let v = Json::parse(r#"[[[1],[2]],{"k":{"kk":[true]}}]"#).unwrap();
         let a = v.as_arr().unwrap();
         assert_eq!(a.len(), 2);
+    }
+
+    #[test]
+    fn surrogate_pairs_beyond_bmp() {
+        let v = Json::parse(r#""😀""#).unwrap();
+        assert_eq!(v.as_str(), Some("\u{1F600}"));
+        // lone surrogates degrade to U+FFFD instead of erroring
+        let lone = Json::parse(r#""a\ud83db""#).unwrap();
+        assert_eq!(lone.as_str(), Some("a\u{fffd}b"));
+        let lo = Json::parse(r#""\ude00""#).unwrap();
+        assert_eq!(lo.as_str(), Some("\u{fffd}"));
+        // raw (unescaped) non-BMP round-trips through the writer
+        let raw = Json::Str("\u{1F600}".into());
+        assert_eq!(Json::parse(&raw.to_string()).unwrap(), raw);
+    }
+
+    #[test]
+    fn numbers_roundtrip_bitwise() {
+        for x in [
+            0.0,
+            -0.0,
+            1.0,
+            -3.0,
+            2.5,
+            -1e-300,
+            1e300,
+            1e15,
+            -1e15,
+            0.1 + 0.2,
+            f64::MIN_POSITIVE,
+            std::f64::consts::PI,
+        ] {
+            let s = Json::Num(x).to_string();
+            let back = Json::parse(&s).unwrap();
+            let y = back.as_f64().unwrap();
+            assert_eq!(x.to_bits(), y.to_bits(), "{x:?} -> {s} -> {y:?}");
+        }
+        // non-finite numbers become null (the only lossy case)
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+    }
+
+    #[test]
+    fn as_usize_rejects_negative_and_fractional() {
+        assert_eq!(Json::Num(7.0).as_usize(), Some(7));
+        assert_eq!(Json::Num(0.0).as_usize(), Some(0));
+        assert_eq!(Json::Num(-1.0).as_usize(), None);
+        assert_eq!(Json::Num(7.9).as_usize(), None);
+        assert_eq!(Json::Num(f64::NAN).as_usize(), None);
+        assert_eq!(Json::Num(1e300).as_usize(), None);
+        assert_eq!(Json::Str("7".into()).as_usize(), None);
+    }
+
+    #[test]
+    fn helpers_and_builders() {
+        let v = Json::obj([("ok", Json::Bool(true)), ("xs", Json::arr_f64(&[1.0, 2.5]))]);
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(v.get("xs").unwrap().as_arr().unwrap().len(), 2);
+        assert!(v.as_obj().is_some());
+        assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+    }
+
+    /// Random finite JSON value for the round-trip property.
+    fn random_json(rng: &mut crate::util::prng::Prng, depth: usize) -> Json {
+        let kinds = if depth >= 3 { 4 } else { 6 };
+        match rng.below(kinds) {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bernoulli(0.5)),
+            2 => {
+                // mix of magnitudes; always finite
+                let exp = rng.uniform_in(-300.0, 300.0);
+                let x = rng.gaussian() * 10f64.powf(exp);
+                Json::Num(if x.is_finite() { x } else { 0.0 })
+            }
+            3 => {
+                let corpus = [
+                    "", "plain", "esc\"ape\\", "tab\tnl\n", "café ✓", "\u{1F600}🎉",
+                    "ctrl\u{1}\u{1f}", "/slash/",
+                ];
+                Json::Str(corpus[rng.below(corpus.len())].to_string())
+            }
+            4 => {
+                let n = rng.below(4);
+                Json::Arr((0..n).map(|_| random_json(rng, depth + 1)).collect())
+            }
+            _ => {
+                let n = rng.below(4);
+                let mut m = BTreeMap::new();
+                for i in 0..n {
+                    m.insert(format!("k{i}"), random_json(rng, depth + 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+
+    #[test]
+    fn serialize_parse_roundtrip_property() {
+        // parse ∘ serialize = id, and serialization is idempotent, over a
+        // few hundred random documents (plus the hand-written corpus).
+        crate::util::check_property("json_roundtrip", 300, |rng| {
+            let v = random_json(rng, 0);
+            let s = v.to_string();
+            let back = Json::parse(&s).map_err(|e| format!("unparseable {s:?}: {e}"))?;
+            if back != v {
+                return Err(format!("value changed through {s:?}"));
+            }
+            if back.to_string() != s {
+                return Err(format!("serialization not idempotent on {s:?}"));
+            }
+            Ok(())
+        });
+        for doc in [
+            r#"{"version": 1, "artifacts": [{"name": "lasso_small", "ok": true}]}"#,
+            r#"{"a":[1,2.5,-3e2],"b":"x\ny","c":null,"d":false}"#,
+            r#"[[[1],[2]],{"k":{"kk":[true]}}]"#,
+            r#""café ✓ ok""#,
+        ] {
+            let v = Json::parse(doc).unwrap();
+            assert_eq!(Json::parse(&v.to_string()).unwrap(), v, "corpus doc {doc}");
+        }
     }
 }

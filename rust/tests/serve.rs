@@ -1,0 +1,239 @@
+//! End-to-end tests for the model-serving subsystem, in the determinism
+//! style of `tests/parallel.rs`:
+//!
+//! * a real server on a real TCP socket: submit a fit job over HTTP, poll
+//!   it to completion, predict, and check the returned coefficients are
+//!   **bitwise** equal to a direct `solve_path` call;
+//! * a second fit of a *perturbed* lambda grid is warm-started from the
+//!   cache: `/metrics` records the warm hit and the job spends fewer
+//!   epochs than the cold fit;
+//! * N client threads hammering fit/predict on the same key are bitwise
+//!   identical to a serial run (single-flight registry).
+
+use gapsafe::screening::Rule;
+use gapsafe::serve::registry::{FitKind, ModelKey, Registry};
+use gapsafe::serve::{Metrics, ServeConfig, Server};
+use gapsafe::solver::path::{solve_path, PathConfig, WarmStart};
+use gapsafe::util::json::Json;
+use gapsafe::{build_problem, Task};
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One HTTP request over a fresh connection; returns (status, body JSON).
+fn call(port: u16, method: &str, path: &str, body: &str) -> (u16, Json) {
+    let mut s = TcpStream::connect(("127.0.0.1", port)).expect("connect");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap();
+    let status: u16 = raw
+        .strip_prefix("HTTP/1.1 ")
+        .and_then(|r| r.split_whitespace().next())
+        .and_then(|c| c.parse().ok())
+        .unwrap_or_else(|| panic!("bad response: {raw}"));
+    let body_start = raw.find("\r\n\r\n").map(|i| i + 4).unwrap_or(raw.len());
+    let v = Json::parse(raw[body_start..].trim())
+        .unwrap_or_else(|e| panic!("bad JSON body ({e}): {raw}"));
+    (status, v)
+}
+
+/// The exact solver configuration the server pins for these parameters
+/// (mirrors `ModelKey::path_config`).
+fn direct_cfg(grid: usize, delta: f64, eps: f64) -> PathConfig {
+    PathConfig {
+        n_lambdas: grid,
+        delta,
+        rule: Rule::GapSafeFull,
+        warm: WarmStart::Standard,
+        eps,
+        eps_is_absolute: false,
+        max_epochs: 10_000,
+        screen_every: 10,
+        threads: 1,
+    }
+}
+
+fn start_server() -> (Server, u16) {
+    let server = Server::bind(&ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        http_threads: 2,
+        fit_workers: 2,
+        cache_mb: 64,
+    })
+    .expect("bind");
+    let port = server.port();
+    (server, port)
+}
+
+#[test]
+fn end_to_end_fit_poll_predict_bitwise_and_warm_metrics() {
+    let (server, port) = start_server();
+    let stop = server.stop_handle();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+
+    // --- healthz ---
+    let (st, v) = call(port, "GET", "/healthz", "");
+    assert_eq!(st, 200);
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+
+    // --- submit a cold fit and poll it to completion ---
+    let fit_body = r#"{"data":"synth:reg:30x80","task":"lasso","seed":11,
+                       "grid":10,"delta":2.0,"eps":1e-6}"#;
+    let (st, v) = call(port, "POST", "/v1/fit", fit_body);
+    assert_eq!(st, 202, "{v:?}");
+    let id = v.get("job_id").and_then(Json::as_usize).expect("job id");
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let cold_job = loop {
+        let (st, j) = call(port, "GET", &format!("/v1/jobs/{id}"), "");
+        assert_eq!(st, 200, "{j:?}");
+        match j.get("state").and_then(Json::as_str) {
+            Some("done") => break j,
+            Some("failed") => panic!("cold fit failed: {j:?}"),
+            _ => {
+                assert!(Instant::now() < deadline, "fit did not finish in time");
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    };
+    assert_eq!(cold_job.get("fit").and_then(Json::as_str), Some("cold"));
+    assert_eq!(cold_job.get("converged").and_then(Json::as_bool), Some(true));
+    let cold_epochs = cold_job.get("epochs").and_then(Json::as_usize).unwrap();
+
+    // --- predict must match a direct solve_path bitwise ---
+    let t = 9usize;
+    let (st, pred) = call(
+        port,
+        "POST",
+        "/v1/predict",
+        r#"{"data":"synth:reg:30x80","task":"lasso","seed":11,
+            "grid":10,"delta":2.0,"eps":1e-6,"t":9,"beta":true}"#,
+    );
+    assert_eq!(st, 200, "{pred:?}");
+    let ds = gapsafe::data::load_spec("synth:reg:30x80", 11, false).unwrap();
+    let prob = build_problem(ds, Task::Lasso).unwrap();
+    let direct = solve_path(&prob, &direct_cfg(10, 2.0, 1e-6));
+    let beta = &direct.betas[t];
+    let z = prob.predict(beta);
+    let served_lam = pred.get("lam").and_then(Json::as_f64).unwrap();
+    assert_eq!(served_lam.to_bits(), direct.lambdas[t].to_bits(), "lambda drifted");
+    let served_beta = pred.get("beta").unwrap().as_arr().unwrap();
+    assert_eq!(served_beta.len(), prob.p());
+    for (j, sb) in served_beta.iter().enumerate() {
+        let want = beta[(j, 0)];
+        let got = sb.as_f64().unwrap();
+        assert_eq!(
+            want.to_bits(),
+            got.to_bits(),
+            "beta[{j}] not bitwise identical: {want:?} vs {got:?}"
+        );
+    }
+    let served_z = pred.get("z").unwrap().as_arr().unwrap();
+    assert_eq!(served_z.len(), prob.n());
+    for (i, sz) in served_z.iter().enumerate() {
+        assert_eq!(z[(i, 0)].to_bits(), sz.as_f64().unwrap().to_bits(), "z[{i}] drifted");
+    }
+
+    // --- perturbed grid: warm-start cache hit, fewer epochs ---
+    let (st, warm_job) = call(
+        port,
+        "POST",
+        "/v1/fit",
+        r#"{"data":"synth:reg:30x80","task":"lasso","seed":11,
+            "grid":10,"delta":2.04,"eps":1e-6,"wait":true}"#,
+    );
+    assert_eq!(st, 200, "{warm_job:?}");
+    assert_eq!(warm_job.get("state").and_then(Json::as_str), Some("done"));
+    assert_eq!(warm_job.get("fit").and_then(Json::as_str), Some("warm"));
+    assert_eq!(warm_job.get("warm").and_then(Json::as_bool), Some(true));
+    assert_eq!(warm_job.get("converged").and_then(Json::as_bool), Some(true));
+    let warm_epochs = warm_job.get("epochs").and_then(Json::as_usize).unwrap();
+    assert!(
+        warm_epochs < cold_epochs,
+        "warm start did not save epochs: warm {warm_epochs} vs cold {cold_epochs}"
+    );
+
+    // --- exact repeat is a cache hit ---
+    let fit_again = r#"{"data":"synth:reg:30x80","task":"lasso","seed":11,
+                        "grid":10,"delta":2.0,"eps":1e-6,"wait":true}"#;
+    let (st, hit_job) = call(port, "POST", "/v1/fit", fit_again);
+    assert_eq!(st, 200);
+    assert_eq!(hit_job.get("fit").and_then(Json::as_str), Some("hit"));
+
+    // --- metrics reflect all of it ---
+    let (st, m) = call(port, "GET", "/metrics", "");
+    assert_eq!(st, 200);
+    let count = |k: &str| m.get(k).and_then(Json::as_usize).unwrap_or(0);
+    assert!(count("warm_hits") >= 1, "{m:?}");
+    assert!(count("cache_hits") >= 1, "{m:?}");
+    assert!(count("cold_fits") >= 1, "{m:?}");
+    assert!(count("epochs_saved") >= 1, "no epochs saved recorded: {m:?}");
+    assert_eq!(count("queue_depth"), 0);
+    assert_eq!(count("jobs_failed"), 0);
+    assert!(count("registry_models") >= 2);
+    let rate = m.get("cache_hit_rate").and_then(Json::as_f64).unwrap();
+    assert!(rate > 0.0 && rate < 1.0, "hit rate {rate}");
+
+    stop.store(true, Ordering::Relaxed);
+    handle.join().unwrap();
+}
+
+#[test]
+fn concurrent_same_key_fits_are_bitwise_identical_to_serial() {
+    let metrics = Arc::new(Metrics::default());
+    let reg = Arc::new(Registry::new(64, metrics));
+    let key = ModelKey::new("synth:reg:16x24", "lasso", 7, false, 5, 1.5, 1e-6, 10_000);
+
+    // serial reference
+    let ds = gapsafe::data::load_spec("synth:reg:16x24", 7, false).unwrap();
+    let prob = build_problem(ds, Task::Lasso).unwrap();
+    let direct = solve_path(&prob, &direct_cfg(5, 1.5, 1e-6));
+
+    // N threads hammer the same key; single-flight must hand everyone the
+    // same artifact, bitwise equal to the serial run.
+    let n_threads = 8;
+    let results: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n_threads)
+            .map(|_| {
+                let reg = reg.clone();
+                let key = key.clone();
+                s.spawn(move || reg.fit(&key).expect("fit"))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert_eq!(results.len(), n_threads);
+    assert!(
+        results.iter().filter(|(_, kind)| *kind != FitKind::Hit).count() >= 1,
+        "someone must have computed it"
+    );
+    let first = &results[0].0;
+    for (model, _) in &results {
+        assert!(Arc::ptr_eq(first, model), "single-flight returned distinct artifacts");
+    }
+    assert_eq!(first.path.betas.len(), direct.betas.len());
+    for (t, (a, b)) in direct.betas.iter().zip(&first.path.betas).enumerate() {
+        assert_eq!(a, b, "betas diverged from the serial run at lambda index {t}");
+    }
+
+    // concurrent predicts on the shared artifact are identical too
+    let zs: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n_threads)
+            .map(|_| {
+                let m = first.clone();
+                s.spawn(move || m.prob.predict(&m.path.betas[4]))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let z0 = prob.predict(&direct.betas[4]);
+    for z in &zs {
+        assert_eq!(&z0, z, "concurrent predict diverged");
+    }
+}
