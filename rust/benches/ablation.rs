@@ -24,7 +24,11 @@ use gapsafe::{build_problem, Task};
 
 fn main() {
     common::banner("ablation", "lambda_critic, f_ce cadence, warm starts, solver-agnosticism");
-    let ds = synth::leukemia_like_scaled(72, 1500, 42, false);
+    let ds = if common::smoke() {
+        synth::leukemia_like_scaled(30, 200, 42, false)
+    } else {
+        synth::leukemia_like_scaled(72, 1500, 42, false)
+    };
     let prob = build_problem(ds, Task::Lasso).unwrap();
     let lam_max = prob.lambda_max();
 
@@ -59,7 +63,7 @@ fn main() {
             screen_every: fce,
             ..Default::default()
         };
-        let (mean, _min) = common::time_it(3, || {
+        let (mean, _min) = common::time_it(common::reps(3), || {
             let mut rule = Rule::GapSafeDyn.build();
             let res = solve_fixed_lambda(&prob, lam, rule.as_mut(), &opts);
             assert!(res.converged);

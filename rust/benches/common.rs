@@ -25,6 +25,25 @@ pub fn full_size() -> bool {
     std::env::var("GAPSAFE_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
 }
 
+/// True in smoke mode (`cargo bench --bench <b> -- --smoke`, or
+/// `GAPSAFE_BENCH_SMOKE=1`): benches shrink to seconds-scale workloads and
+/// a single repetition so CI can exercise every table printer and
+/// `BENCH_*.json` writer on each commit without owning a perf budget.
+/// Numbers recorded in smoke mode are plumbing checks, not measurements.
+pub fn smoke() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+        || std::env::var("GAPSAFE_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Repetition count honoring smoke mode (1) vs the requested default.
+pub fn reps(default: usize) -> usize {
+    if smoke() {
+        1
+    } else {
+        default
+    }
+}
+
 /// Results directory (created).
 pub fn results_dir() -> std::path::PathBuf {
     let d = std::path::PathBuf::from("results");

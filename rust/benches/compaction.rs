@@ -1,0 +1,103 @@
+//! Active-set compaction benchmark: full-scan vs compacted solves across
+//! lambda ratios and design densities.
+//!
+//! Small lambda ratios are the regime where Gap Safe screening kills most
+//! columns, so this is where physically repacking the survivors
+//! ([`gapsafe::linalg::compact::CompactDesign`]) should buy the most —
+//! CD epochs and gap passes stop scanning the full feature bitmap and
+//! iterate a contiguous working matrix instead. The solves are verified
+//! bitwise-identical before timing (compaction must never change an
+//! output bit).
+//!
+//! Records results/BENCH_compaction.json (see docs/BENCHMARKS.md).
+
+#[path = "common.rs"]
+mod common;
+
+use gapsafe::data::synth;
+use gapsafe::screening::Rule;
+use gapsafe::solver::path::scaled_eps;
+use gapsafe::solver::{solve_fixed_lambda, SolveOptions};
+use gapsafe::{build_problem, Task};
+
+fn main() {
+    let smoke = common::smoke();
+    let full = common::full_size();
+    let shapes: Vec<(&str, gapsafe::data::Dataset)> = if smoke {
+        vec![
+            ("dense", synth::leukemia_like_scaled(24, 300, 42, false)),
+            ("sparse10", synth::sparse_regression(50, 400, 0.10, 42)),
+        ]
+    } else if full {
+        vec![
+            ("dense", synth::leukemia_like(42, false)),
+            ("sparse05", synth::sparse_regression(500, 20_000, 0.05, 42)),
+            ("sparse20", synth::sparse_regression(500, 20_000, 0.20, 42)),
+        ]
+    } else {
+        vec![
+            ("dense", synth::leukemia_like_scaled(72, 3000, 42, false)),
+            ("sparse05", synth::sparse_regression(200, 5000, 0.05, 42)),
+            ("sparse20", synth::sparse_regression(200, 5000, 0.20, 42)),
+        ]
+    };
+    common::banner(
+        "compaction",
+        "full-scan vs compacted epochs across lambda ratios and densities \
+         (smaller lambda => more screening => more to gain from repacking)",
+    );
+    let ratios = [0.3, 0.1, 0.05];
+    let mut metrics: Vec<(String, f64)> = Vec::new();
+    for (label, ds) in shapes {
+        let prob = build_problem(ds, Task::Lasso).unwrap();
+        let lmax = prob.lambda_max();
+        let eps = scaled_eps(&prob, 1e-6);
+        println!("\nshape {label}: n={} p={}", prob.n(), prob.p());
+        for r in ratios {
+            let lam = r * lmax;
+            let mk = |compact| SolveOptions {
+                eps,
+                max_epochs: 100_000,
+                compact,
+                ..Default::default()
+            };
+            // Transparency gate before timing: identical gap and betas.
+            let mut ra = Rule::GapSafeFull.build();
+            let mut rb = Rule::GapSafeFull.build();
+            let a = solve_fixed_lambda(&prob, lam, ra.as_mut(), &mk(true));
+            let b = solve_fixed_lambda(&prob, lam, rb.as_mut(), &mk(false));
+            assert_eq!(a.gap.to_bits(), b.gap.to_bits(), "compaction changed the gap");
+            assert_eq!(a.epochs, b.epochs, "compaction changed the epoch count");
+            for j in 0..prob.p() {
+                assert_eq!(
+                    a.beta[(j, 0)].to_bits(),
+                    b.beta[(j, 0)].to_bits(),
+                    "compaction changed beta at feature {j}"
+                );
+            }
+            let reps = common::reps(3);
+            let (_, t_full) = common::time_it(reps, || {
+                let mut rule = Rule::GapSafeFull.build();
+                std::hint::black_box(solve_fixed_lambda(&prob, lam, rule.as_mut(), &mk(false)));
+            });
+            let (_, t_comp) = common::time_it(reps, || {
+                let mut rule = Rule::GapSafeFull.build();
+                std::hint::black_box(solve_fixed_lambda(&prob, lam, rule.as_mut(), &mk(true)));
+            });
+            let speedup = t_full / t_comp.max(1e-12);
+            println!(
+                "  lam/lmax={r:>5.2}: full {t_full:>8.4}s  compact {t_comp:>8.4}s  \
+                 speedup {speedup:>5.2}x  (epochs {}, final active {}/{})",
+                a.epochs,
+                a.active.n_active_feats(),
+                prob.p()
+            );
+            let rtag = format!("r{:03}", (r * 100.0).round() as usize);
+            metrics.push((format!("seconds_full_{label}_{rtag}"), t_full));
+            metrics.push((format!("seconds_compact_{label}_{rtag}"), t_comp));
+            metrics.push((format!("speedup_{label}_{rtag}"), speedup));
+        }
+    }
+    let borrowed: Vec<(&str, f64)> = metrics.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    common::record_bench_json("compaction", &borrowed);
+}

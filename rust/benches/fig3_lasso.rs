@@ -16,7 +16,9 @@ use gapsafe::{build_problem, Task};
 
 fn main() {
     let full = common::full_size();
-    let (ds, n_lambdas, eps_list): (_, usize, Vec<f64>) = if full {
+    let (ds, n_lambdas, eps_list): (_, usize, Vec<f64>) = if common::smoke() {
+        (synth::leukemia_like_scaled(30, 200, 42, false), 10, vec![1e-2, 1e-4])
+    } else if full {
         (synth::leukemia_like(42, false), 100, vec![1e-2, 1e-4, 1e-6, 1e-8])
     } else {
         (synth::leukemia_like_scaled(72, 2000, 42, false), 50, vec![1e-2, 1e-4, 1e-6])

@@ -13,12 +13,15 @@ use gapsafe::{build_problem, Task};
 
 fn main() {
     let full = common::full_size();
+    let smoke = common::smoke();
     // n < p logistic data is linearly separable, so solutions blow up at the
     // smallest lambdas of a delta=3 grid; the default (single-core) bench
     // uses delta=2 and a tighter epoch cap — the relative ordering of the
     // strategies is unchanged (the paper's own Fig. 4 runs fixed-iteration
     // budgets for the left panel for the same reason).
-    let (ds, n_lambdas, eps_list, delta, cap): (_, usize, Vec<f64>, f64, usize) = if full {
+    let (ds, n_lambdas, eps_list, delta, cap): (_, usize, Vec<f64>, f64, usize) = if smoke {
+        (synth::leukemia_like_scaled(30, 150, 42, true), 8, vec![1e-2], 1.5, 3000)
+    } else if full {
         (synth::leukemia_like(42, true), 100, vec![1e-2, 1e-4, 1e-6, 1e-8], 3.0, 50_000)
     } else {
         (

@@ -14,7 +14,9 @@ use gapsafe::{build_problem, Task};
 
 fn main() {
     let full = common::full_size();
-    let (ds, n_lambdas, eps_list): (_, usize, Vec<f64>) = if full {
+    let (ds, n_lambdas, eps_list): (_, usize, Vec<f64>) = if common::smoke() {
+        (synth::meg_like(30, 200, 4, 42), 8, vec![1e-2, 1e-4])
+    } else if full {
         (synth::meg_like(360, 22_494, 20, 42), 100, vec![1e-2, 1e-4, 1e-6, 1e-8])
     } else {
         (synth::meg_like(120, 1500, 10, 42), 30, vec![1e-2, 1e-4, 1e-6])

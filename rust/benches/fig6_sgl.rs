@@ -16,7 +16,9 @@ use gapsafe::{build_problem, Task};
 
 fn main() {
     let full = common::full_size();
-    let (ds, n_lambdas, eps_list): (_, usize, Vec<f64>) = if full {
+    let (ds, n_lambdas, eps_list): (_, usize, Vec<f64>) = if common::smoke() {
+        (synth::climate_like(36, 30, 42), 8, vec![1e-2, 1e-4])
+    } else if full {
         // paper: n=814, p=73577 (10511 groups of 7); largest offline size
         (synth::climate_like(814, 10_511, 42), 100, vec![1e-2, 1e-4, 1e-6, 1e-8])
     } else {

@@ -19,7 +19,11 @@ fn main() {
     let mut rows = Vec::new();
 
     // ---- X^T v (the screening hot spot) -----------------------------------
-    let ds = synth::leukemia_like(42, false);
+    let ds = if common::smoke() {
+        synth::leukemia_like_scaled(40, 500, 42, false)
+    } else {
+        synth::leukemia_like(42, false)
+    };
     let prob = build_problem(ds, Task::Lasso).unwrap();
     let (n, p) = (prob.n(), prob.p());
     let mut rng = Prng::new(1);

@@ -17,7 +17,9 @@ use gapsafe::{build_problem, Task};
 
 fn main() {
     let full = common::full_size();
-    let (ds, n_lambdas) = if full {
+    let (ds, n_lambdas) = if common::smoke() {
+        (gapsafe::data::synth::leukemia_like_scaled(30, 300, 42, false), 12)
+    } else if full {
         (gapsafe::data::synth::leukemia_like(42, false), 100)
     } else {
         (gapsafe::data::synth::leukemia_like_scaled(72, 2000, 42, false), 60)
@@ -37,13 +39,14 @@ fn main() {
         max_epochs: 20_000,
         screen_every: 10,
         threads,
+        compact: true,
     };
 
     let serial = solve_path(&prob, &cfg(1));
     let mut metrics: Vec<(String, f64)> = Vec::new();
     let mut t1 = f64::NAN;
     for threads in [1usize, 2, 4, 8] {
-        let (mean, min) = common::time_it(if full { 1 } else { 3 }, || {
+        let (mean, min) = common::time_it(if full { 1 } else { common::reps(3) }, || {
             std::hint::black_box(solve_path(&prob, &cfg(threads)));
         });
         if threads == 1 {

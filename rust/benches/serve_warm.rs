@@ -24,12 +24,18 @@ fn key(data: &str, grid: usize, delta: f64) -> ModelKey {
 
 fn main() {
     let full = common::full_size();
-    let (data, grid) = if full { ("synth:reg:200x5000", 60) } else { ("synth:reg:60x800", 30) };
+    let (data, grid) = if common::smoke() {
+        ("synth:reg:30x200", 8)
+    } else if full {
+        ("synth:reg:200x5000", 60)
+    } else {
+        ("synth:reg:60x800", 30)
+    };
     common::banner(
         "serve_warm",
         &format!("registry cold fit vs warm-start vs exact hit on {data} ({grid} lambdas)"),
     );
-    let reps = if full { 2 } else { 5 };
+    let reps = if full { 2 } else { common::reps(5) };
     let base_delta = 2.0;
 
     // Cold: a fresh registry every repetition (nothing to seed from).

@@ -72,6 +72,6 @@ fn main() {
         "path: {} lambdas in {:.3}s; support sizes {:?} ...",
         res.points.len(),
         sw.secs(),
-        res.points.iter().map(|p| p.nnz).take(10).collect::<Vec<_>>()
+        res.points.iter().map(|p| p.nnz_rows).take(10).collect::<Vec<_>>()
     );
 }

@@ -251,6 +251,7 @@ mod tests {
             max_epochs: 500,
             screen_every: 10,
             threads: 1,
+            compact: true,
         };
         let sel = select_tau_sgl(&ds, &cfg, 7);
         assert_eq!(sel.taus.len(), 11);

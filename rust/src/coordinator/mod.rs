@@ -93,6 +93,7 @@ pub fn active_fraction_experiment(
             screen_every,
             eps: 0.0, // run the full budget
             max_kkt_rounds: 3,
+            compact: true,
         };
         for &lam in &lambdas {
             let beta0 = prev
@@ -159,6 +160,7 @@ pub fn time_to_convergence(
                 max_epochs,
                 screen_every: 10,
                 threads: 1,
+                compact: true,
             };
             let sw = Stopwatch::start();
             let res = solve_path(prob, &cfg);
@@ -185,6 +187,7 @@ pub fn identification_epoch(prob: &Problem, rule: Rule, lam: f64, eps: f64) -> O
         screen_every: 10,
         eps: scaled_eps(prob, eps),
         max_kkt_rounds: 5,
+        compact: true,
     };
     let res = solve_fixed_lambda_with(prob, lam, lam_max, None, None, r.as_mut(), None, &opts);
     if !res.converged {

@@ -77,6 +77,19 @@ impl DataFit for Logistic {
     fn targets(&self) -> &Mat {
         &self.y
     }
+
+    fn refresh_link_rows(&self, z: &Mat, rows: &[usize], link: &mut Mat) {
+        // Row-local: link_i = y_i - (y_i - sigma(z_i)), computed with the
+        // same two rounding steps as the full neg_grad + subtract pass so
+        // the restricted refresh is bitwise identical to it.
+        let zs = z.as_slice();
+        let ys = self.y.as_slice();
+        let ls = link.as_mut_slice();
+        for &i in rows {
+            let g = ys[i] - sigmoid(zs[i]);
+            ls[i] = ys[i] - g;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -131,5 +144,36 @@ mod tests {
     #[should_panic(expected = "labels")]
     fn rejects_pm1_labels() {
         let _ = Logistic::new(&[-1.0, 1.0]);
+    }
+
+    #[test]
+    fn refresh_link_rows_bitwise_matches_full_pass() {
+        let mut rng = Prng::new(7);
+        let y: Vec<f64> = (0..9).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect();
+        let fit = Logistic::new(&y);
+        let mut z = Mat::zeros(9, 1);
+        for v in z.as_mut_slice() {
+            *v = 2.0 * rng.gaussian();
+        }
+        // full pass: link = Y - neg_grad(Z)
+        let mut full = Mat::zeros(9, 1);
+        fit.neg_grad(&z, &mut full);
+        for (l, yi) in full.as_mut_slice().iter_mut().zip(fit.targets().as_slice()) {
+            *l = yi - *l;
+        }
+        // restricted pass over a scrambled subset, rest seeded from full
+        let mut part = full.clone();
+        let rows = [5usize, 0, 7, 3];
+        for &i in &rows {
+            part[(i, 0)] = f64::NAN; // must be overwritten
+        }
+        fit.refresh_link_rows(&z, &rows, &mut part);
+        for i in 0..9 {
+            assert_eq!(
+                full[(i, 0)].to_bits(),
+                part[(i, 0)].to_bits(),
+                "row {i} diverged"
+            );
+        }
     }
 }

@@ -56,6 +56,29 @@ pub trait DataFit: Send + Sync {
 
     /// Targets (Y), shape (n, q).
     fn targets(&self) -> &Mat;
+
+    /// Refresh the listed rows of the link (mean-parameter) matrix in
+    /// place: `link[i, :] = Y[i, :] - neg_grad(Z)[i, :]` for each `i` in
+    /// `rows`. Row-separable fits (logistic, multinomial) override this
+    /// with a per-row computation that is bitwise identical to the full
+    /// pass, which is what lets the CD solver batch link updates over only
+    /// the rows touched by a packed sparse column instead of paying
+    /// O(n q) per group. The default recomputes every row (ignoring
+    /// `rows`) — correct for any fit, restricted for none.
+    fn refresh_link_rows(&self, z: &Mat, rows: &[usize], link: &mut Mat) {
+        let _ = rows;
+        let mut g = Mat::zeros(z.rows(), z.cols());
+        self.neg_grad(z, &mut g);
+        let y = self.targets();
+        for ((l, gi), yi) in link
+            .as_mut_slice()
+            .iter_mut()
+            .zip(g.as_slice())
+            .zip(y.as_slice())
+        {
+            *l = yi - gi;
+        }
+    }
 }
 
 /// Binary negative entropy Nh (Eq. 28) with the 0 log 0 = 0 convention;

@@ -112,6 +112,20 @@ impl DataFit for Multinomial {
     fn targets(&self) -> &Mat {
         &self.y
     }
+
+    fn refresh_link_rows(&self, z: &Mat, rows: &[usize], link: &mut Mat) {
+        // Row-local softmax: identical per-element arithmetic to the full
+        // neg_grad + subtract pass, so the restricted refresh is bitwise
+        // identical to it.
+        let q = z.cols();
+        for &i in rows {
+            let lse = lse_row(z, i);
+            for k in 0..q {
+                let g = self.y[(i, k)] - (z[(i, k)] - lse).exp();
+                link[(i, k)] = self.y[(i, k)] - g;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -170,5 +184,39 @@ mod tests {
         // theta = 0 -> D = -sum NH(Y_i) = 0 (one-hot rows have zero entropy).
         let th = Mat::zeros(2, 2);
         assert_eq!(fit.dual(&th, 0.5), 0.0);
+    }
+
+    #[test]
+    fn refresh_link_rows_bitwise_matches_full_pass() {
+        use crate::util::prng::Prng;
+        let mut rng = Prng::new(11);
+        let labels: Vec<usize> = (0..6).map(|i| i % 3).collect();
+        let fit = Multinomial::from_labels(&labels, 3);
+        let mut z = Mat::zeros(6, 3);
+        for v in z.as_mut_slice() {
+            *v = rng.gaussian();
+        }
+        let mut full = Mat::zeros(6, 3);
+        fit.neg_grad(&z, &mut full);
+        for (l, yi) in full.as_mut_slice().iter_mut().zip(fit.targets().as_slice()) {
+            *l = yi - *l;
+        }
+        let mut part = full.clone();
+        let rows = [4usize, 1, 2];
+        for &i in &rows {
+            for k in 0..3 {
+                part[(i, k)] = f64::NAN;
+            }
+        }
+        fit.refresh_link_rows(&z, &rows, &mut part);
+        for i in 0..6 {
+            for k in 0..3 {
+                assert_eq!(
+                    full[(i, k)].to_bits(),
+                    part[(i, k)].to_bits(),
+                    "({i},{k}) diverged"
+                );
+            }
+        }
     }
 }

@@ -23,6 +23,13 @@
 //! requests ([`coordinator::BatchRunner`]). `threads = 1` always takes the
 //! exact serial path.
 //!
+//! As screening shrinks the problem, the CD solver *compacts* it: the
+//! surviving columns are physically repacked into a contiguous working
+//! matrix ([`linalg::compact::CompactDesign`]) so epochs and gap passes
+//! stop scanning the dead 90%+ of the design. Compaction is
+//! bitwise-transparent (`PathConfig::compact`, on by default; see the
+//! "Working-set compaction" section of the [`screening`] docs).
+//!
 //! On top of it sits a resident model-serving subsystem ([`serve`]):
 //! `gapsafe serve` runs a std-only HTTP server whose model registry keeps
 //! fitted paths alive between requests, answering repeat fits from cache

@@ -1,0 +1,248 @@
+//! Active-set compaction: physically repacked working designs.
+//!
+//! Gap Safe screening only pays off if the solver stops *touching* the
+//! coordinates it screens. Skipping dead columns through a bitmap still
+//! scans the full feature range every epoch and strides through the full
+//! design in memory; after 90%+ of the columns are provably dead, the
+//! effective problem is tiny but the working set is not *contiguous*.
+//!
+//! [`CompactDesign`] fixes that: whenever a screening event kills more
+//! than a threshold fraction of the remaining features, the solver
+//! repacks the surviving columns into a fresh dense matrix (or CSC slice)
+//! plus an index map and cached column norms. Coordinate-descent epochs,
+//! the gap-pass correlation sweep and the screening statistics then
+//! iterate over a small contiguous matrix.
+//!
+//! # Bitwise transparency
+//!
+//! Packing copies column data verbatim ([`Design::select_cols`]), so every
+//! per-column kernel (`col_dot`, `col_axpy`, `col_dot_diff`) produces the
+//! exact same floating-point results on the packed matrix as on the full
+//! one — compaction changes *which memory is read*, never *what is
+//! computed*. The solver tests pin packed and full paths bit-for-bit.
+//!
+//! # Safety contract
+//!
+//! A view packed from active set `A` serves any later active set `A' ⊆ A`
+//! (safe screening only shrinks the active set within one lambda). The
+//! solver rebuilds the view from scratch whenever that monotonicity is
+//! broken (KKT repair re-activating strong-rule casualties, a new lambda).
+
+use super::sparse::Design;
+
+/// Sentinel for "feature not in the view" in the full → compact map.
+const DEAD: usize = usize::MAX;
+
+/// A physically repacked view over the surviving columns of a design.
+///
+/// All public column accessors are addressed by the *full* feature index
+/// and map to the packed column internally; iteration over the view uses
+/// [`CompactDesign::width`] / [`CompactDesign::feat_of`].
+#[derive(Debug, Clone)]
+pub struct CompactDesign {
+    /// Packed design (n x width), same storage kind as the source.
+    design: Design,
+    /// Compact column -> full feature index (strictly ascending).
+    feat_of: Vec<usize>,
+    /// Full feature index -> compact column (`DEAD` when not in the view).
+    compact_of: Vec<usize>,
+    /// `||X_j||_2^2` per packed column (cached at pack time).
+    col_norms_sq: Vec<f64>,
+}
+
+impl CompactDesign {
+    /// Pack the columns with `keep[j] == true` (ascending order preserved).
+    pub fn pack(x: &Design, keep: &[bool]) -> CompactDesign {
+        assert_eq!(keep.len(), x.cols(), "keep mask must cover all columns");
+        let feat_of: Vec<usize> =
+            (0..keep.len()).filter(|&j| keep[j]).collect();
+        let mut compact_of = vec![DEAD; keep.len()];
+        for (c, &j) in feat_of.iter().enumerate() {
+            compact_of[j] = c;
+        }
+        let design = x.select_cols(&feat_of);
+        let col_norms_sq = design.col_norms_sq();
+        CompactDesign { design, feat_of, compact_of, col_norms_sq }
+    }
+
+    /// Number of packed columns.
+    #[inline]
+    pub fn width(&self) -> usize {
+        self.feat_of.len()
+    }
+
+    /// Full feature count of the source design.
+    #[inline]
+    pub fn full_p(&self) -> usize {
+        self.compact_of.len()
+    }
+
+    /// Full feature index of packed column `c`.
+    #[inline]
+    pub fn feat_of(&self, c: usize) -> usize {
+        self.feat_of[c]
+    }
+
+    /// Packed column of full feature `j`, if it survived the pack.
+    #[inline]
+    pub fn compact_of(&self, j: usize) -> Option<usize> {
+        match self.compact_of[j] {
+            DEAD => None,
+            c => Some(c),
+        }
+    }
+
+    /// The packed design itself (compact column indexing).
+    #[inline]
+    pub fn design(&self) -> &Design {
+        &self.design
+    }
+
+    /// `||X_j||_2^2` of packed column `c`.
+    #[inline]
+    pub fn col_norm_sq_packed(&self, c: usize) -> f64 {
+        self.col_norms_sq[c]
+    }
+
+    #[inline]
+    fn col(&self, j_full: usize) -> usize {
+        let c = self.compact_of[j_full];
+        debug_assert!(c != DEAD, "feature {j_full} is not in the compact view");
+        c
+    }
+
+    /// `X_j^T v`, addressed by the full feature index.
+    #[inline]
+    pub fn col_dot(&self, j_full: usize, v: &[f64]) -> f64 {
+        self.design.col_dot(self.col(j_full), v)
+    }
+
+    /// `out += alpha * X_j`, addressed by the full feature index.
+    #[inline]
+    pub fn col_axpy(&self, j_full: usize, alpha: f64, out: &mut [f64]) {
+        self.design.col_axpy(self.col(j_full), alpha, out);
+    }
+
+    /// `sum_i X_j[i] * (a[i] - b[i])`, addressed by the full feature index.
+    #[inline]
+    pub fn col_dot_diff(&self, j_full: usize, a: &[f64], b: &[f64]) -> f64 {
+        self.design.col_dot_diff(self.col(j_full), a, b)
+    }
+
+    /// Row support of the column of full feature `j` (see
+    /// [`Design::col_rows`]).
+    #[inline]
+    pub fn col_rows(&self, j_full: usize) -> Option<&[usize]> {
+        self.design.col_rows(self.col(j_full))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::sparse::Csc;
+    use crate::linalg::Mat;
+    use crate::util::prng::Prng;
+
+    fn rand_dense(rng: &mut Prng, n: usize, p: usize) -> Design {
+        let mut m = Mat::zeros(n, p);
+        for v in m.as_mut_slice() {
+            *v = rng.gaussian();
+        }
+        Design::Dense(m)
+    }
+
+    fn rand_sparse(rng: &mut Prng, n: usize, p: usize, density: f64) -> Design {
+        let mut trip = Vec::new();
+        for c in 0..p {
+            for r in 0..n {
+                if rng.bernoulli(density) {
+                    trip.push((c, r, rng.gaussian()));
+                }
+            }
+        }
+        Design::Sparse(Csc::from_triplets(n, p, trip))
+    }
+
+    fn mask(p: usize, keep: &[usize]) -> Vec<bool> {
+        let mut m = vec![false; p];
+        for &j in keep {
+            m[j] = true;
+        }
+        m
+    }
+
+    #[test]
+    fn pack_maps_round_trip() {
+        let mut rng = Prng::new(21);
+        let x = rand_dense(&mut rng, 6, 10);
+        let keep = [1usize, 4, 5, 9];
+        let cd = CompactDesign::pack(&x, &mask(10, &keep));
+        assert_eq!(cd.width(), 4);
+        assert_eq!(cd.full_p(), 10);
+        for (c, &j) in keep.iter().enumerate() {
+            assert_eq!(cd.feat_of(c), j);
+            assert_eq!(cd.compact_of(j), Some(c));
+        }
+        assert_eq!(cd.compact_of(0), None);
+        assert_eq!(cd.compact_of(8), None);
+    }
+
+    #[test]
+    fn packed_kernels_bitwise_match_full() {
+        let mut rng = Prng::new(22);
+        for x in [rand_dense(&mut rng, 15, 30), rand_sparse(&mut rng, 15, 30, 0.3)] {
+            let keep: Vec<usize> = (0..30).filter(|j| j % 3 != 1).collect();
+            let cd = CompactDesign::pack(&x, &mask(30, &keep));
+            let v: Vec<f64> = (0..15).map(|_| rng.gaussian()).collect();
+            let w: Vec<f64> = (0..15).map(|_| rng.gaussian()).collect();
+            for &j in &keep {
+                assert_eq!(
+                    x.col_dot(j, &v).to_bits(),
+                    cd.col_dot(j, &v).to_bits(),
+                    "col_dot differs at {j}"
+                );
+                assert_eq!(
+                    x.col_dot_diff(j, &v, &w).to_bits(),
+                    cd.col_dot_diff(j, &v, &w).to_bits(),
+                    "col_dot_diff differs at {j}"
+                );
+                let mut a = vec![0.25; 15];
+                let mut b = vec![0.25; 15];
+                x.col_axpy(j, -1.75, &mut a);
+                cd.col_axpy(j, -1.75, &mut b);
+                for i in 0..15 {
+                    assert_eq!(a[i].to_bits(), b[i].to_bits(), "axpy differs at ({j},{i})");
+                }
+            }
+            // cached norms match the full design's norms exactly
+            let full_norms = x.col_norms_sq();
+            for (c, &j) in keep.iter().enumerate() {
+                assert_eq!(cd.col_norm_sq_packed(c).to_bits(), full_norms[j].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_row_support_preserved() {
+        let mut rng = Prng::new(23);
+        let x = rand_sparse(&mut rng, 10, 12, 0.4);
+        let keep: Vec<usize> = (0..12).step_by(2).collect();
+        let cd = CompactDesign::pack(&x, &mask(12, &keep));
+        for &j in &keep {
+            assert_eq!(cd.col_rows(j), x.col_rows(j));
+        }
+        let xd = rand_dense(&mut rng, 10, 4);
+        let cdd = CompactDesign::pack(&xd, &mask(4, &[0, 2]));
+        assert!(cdd.col_rows(0).is_none());
+    }
+
+    #[test]
+    fn empty_pack_is_valid() {
+        let mut rng = Prng::new(24);
+        let x = rand_dense(&mut rng, 5, 8);
+        let cd = CompactDesign::pack(&x, &[false; 8]);
+        assert_eq!(cd.width(), 0);
+        assert_eq!(cd.full_p(), 8);
+    }
+}

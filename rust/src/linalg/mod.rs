@@ -6,6 +6,7 @@
 //! and screening live here: `gemv`, `xtv` (feature–residual correlations),
 //! column norms, block spectral norms (power iteration), axpy updates.
 
+pub mod compact;
 pub mod sparse;
 
 /// Dense column-major matrix of `f64`.

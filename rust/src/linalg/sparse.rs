@@ -21,7 +21,12 @@ pub struct Csc {
 }
 
 impl Csc {
-    /// Build from (col, row, value) triplets.
+    /// Build from (col, row, value) triplets. Duplicate `(col, row)` entries
+    /// are merged by summing their values — the standard COO-to-CSC
+    /// semantics — so `col_norm_sq` / `nnz` always agree with the dense
+    /// equivalent. (Keeping duplicates as separate nonzeros would silently
+    /// corrupt `||x_j||`, the exact ingredient of the Gap Safe sphere test
+    /// `|x_j^T theta| + r ||x_j|| < 1`.)
     pub fn from_triplets(
         rows: usize,
         cols: usize,
@@ -29,13 +34,29 @@ impl Csc {
     ) -> Self {
         trip.sort_by_key(|&(c, r, _)| (c, r));
         let mut indptr = vec![0usize; cols + 1];
-        let mut indices = Vec::with_capacity(trip.len());
-        let mut values = Vec::with_capacity(trip.len());
+        let mut indices: Vec<usize> = Vec::with_capacity(trip.len());
+        let mut values: Vec<f64> = Vec::with_capacity(trip.len());
+        let mut last: Option<(usize, usize)> = None;
         for &(c, r, v) in &trip {
             assert!(c < cols && r < rows, "triplet out of bounds");
-            indptr[c + 1] += 1;
-            indices.push(r);
-            values.push(v);
+            if last == Some((c, r)) {
+                // Same (col, row) as the previously emitted entry: merge.
+                *values.last_mut().unwrap() += v;
+            } else {
+                indptr[c + 1] += 1;
+                indices.push(r);
+                values.push(v);
+                last = Some((c, r));
+            }
+            // An exactly-cancelled merge (or an explicitly zero triplet)
+            // must not leave a structural zero behind, or nnz() would
+            // disagree with the dense rebuild this doc comment promises.
+            if *values.last().unwrap() == 0.0 {
+                values.pop();
+                indices.pop();
+                indptr[c + 1] -= 1;
+                last = None;
+            }
         }
         for c in 0..cols {
             indptr[c + 1] += indptr[c];
@@ -101,6 +122,24 @@ impl Csc {
         dot(val, val)
     }
 
+    /// Physically repack the listed columns into a new, contiguous CSC
+    /// matrix (column `c` of the result is column `cols[c]` of `self`,
+    /// with identical row indices and values — unit-stride after packing).
+    pub fn select_cols(&self, cols: &[usize]) -> Csc {
+        let nnz: usize = cols.iter().map(|&j| self.indptr[j + 1] - self.indptr[j]).sum();
+        let mut indptr = Vec::with_capacity(cols.len() + 1);
+        let mut indices = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        indptr.push(0);
+        for &j in cols {
+            let (a, b) = (self.indptr[j], self.indptr[j + 1]);
+            indices.extend_from_slice(&self.indices[a..b]);
+            values.extend_from_slice(&self.values[a..b]);
+            indptr.push(indices.len());
+        }
+        Csc { rows: self.rows, cols: cols.len(), indptr, indices, values }
+    }
+
     /// Convert back to dense (tests).
     pub fn to_dense(&self) -> Mat {
         let mut m = Mat::zeros(self.rows, self.cols);
@@ -157,11 +196,66 @@ impl Design {
         }
     }
 
+    /// `sum_i X_j[i] * (a[i] - b[i])` — the logistic / multinomial CD
+    /// gradient inner loop, fused so the difference vector is never
+    /// materialized. Kept as one simple accumulation loop (not the
+    /// unrolled `dot`) so the packed and full code paths are bitwise
+    /// identical.
+    #[inline]
+    pub fn col_dot_diff(&self, j: usize, a: &[f64], b: &[f64]) -> f64 {
+        match self {
+            Design::Dense(m) => {
+                let col = m.col(j);
+                let mut s = 0.0;
+                for i in 0..col.len() {
+                    s += col[i] * (a[i] - b[i]);
+                }
+                s
+            }
+            Design::Sparse(sp) => {
+                let (idx, val) = sp.col(j);
+                let mut s = 0.0;
+                for (&i, &x) in idx.iter().zip(val) {
+                    s += x * (a[i] - b[i]);
+                }
+                s
+            }
+        }
+    }
+
+    /// Row support of column j: `Some(rows)` for a sparse design (the rows
+    /// an update to coefficient j touches), `None` when the column is dense
+    /// (every row is touched).
+    #[inline]
+    pub fn col_rows(&self, j: usize) -> Option<&[usize]> {
+        match self {
+            Design::Dense(_) => None,
+            Design::Sparse(s) => Some(s.col(j).0),
+        }
+    }
+
     /// Per-column squared norms.
     pub fn col_norms_sq(&self) -> Vec<f64> {
         match self {
             Design::Dense(m) => super::col_norms_sq(m),
             Design::Sparse(s) => (0..s.cols()).map(|j| s.col_norm_sq(j)).collect(),
+        }
+    }
+
+    /// Physically repack the listed columns into a new design of the same
+    /// storage kind (see [`Csc::select_cols`]; the dense path copies the
+    /// column slices). Column data is preserved exactly, so every
+    /// per-column kernel is bitwise identical on the packed matrix.
+    pub fn select_cols(&self, cols: &[usize]) -> Design {
+        match self {
+            Design::Dense(m) => {
+                let mut out = Mat::zeros(m.rows(), cols.len());
+                for (c, &j) in cols.iter().enumerate() {
+                    out.col_mut(c).copy_from_slice(m.col(j));
+                }
+                Design::Dense(out)
+            }
+            Design::Sparse(s) => Design::Sparse(s.select_cols(cols)),
         }
     }
 
@@ -307,5 +401,106 @@ mod tests {
         let (idx, _) = s.col(2);
         assert!(idx.is_empty());
         assert_eq!(s.col_norm_sq(2), 0.0);
+    }
+
+    #[test]
+    fn duplicate_triplets_merge_by_summing() {
+        // Regression: duplicates must collapse into one entry with the
+        // summed value, so norms / nnz match the dense equivalent. With
+        // unmerged duplicates, col 0 would report ||x||^2 = 1 + 4 = 5
+        // instead of (1+2)^2 = 9 and screening norms would be corrupt.
+        let trip = vec![
+            (0, 2, 1.0),
+            (0, 2, 2.0), // duplicate of (col 0, row 2)
+            (1, 0, -1.5),
+            (1, 0, 0.5), // duplicate of (col 1, row 0)
+            (1, 3, 4.0),
+            (2, 1, 7.0),
+        ];
+        let s = Csc::from_triplets(4, 4, trip);
+        assert_eq!(s.nnz(), 4, "duplicates must merge");
+        assert_eq!(s.col(0), (&[2usize][..], &[3.0][..]));
+        assert_eq!(s.col(1), (&[0usize, 3][..], &[-1.0, 4.0][..]));
+        let d = Design::Sparse(s.clone());
+        let from_dense = Csc::from_dense(&s.to_dense());
+        let n1 = d.col_norms_sq();
+        let n2 = Design::Sparse(from_dense.clone()).col_norms_sq();
+        for j in 0..4 {
+            assert_eq!(n1[j].to_bits(), n2[j].to_bits(), "col {j} norm corrupt");
+        }
+        assert_eq!(s.nnz(), from_dense.nnz());
+        // exact expected norms
+        assert_eq!(n1[0], 9.0);
+        assert_eq!(n1[1], 17.0);
+        assert_eq!(n1[2], 49.0);
+        assert_eq!(n1[3], 0.0);
+    }
+
+    #[test]
+    fn cancelling_and_zero_triplets_leave_no_structural_zeros() {
+        // Exactly-cancelling duplicates and explicitly zero triplets must
+        // not survive as structural entries, so nnz() matches the dense
+        // rebuild even in the degenerate cases.
+        let trip = vec![
+            (0, 2, 1.0),
+            (0, 2, -1.0), // cancels exactly
+            (1, 1, 0.0),  // explicit zero
+            (1, 3, 2.0),
+            (2, 0, -3.0),
+            (2, 0, 3.0),  // cancels exactly ...
+            (2, 0, 5.0),  // ... then re-appears
+        ];
+        let s = Csc::from_triplets(4, 3, trip);
+        assert_eq!(s.nnz(), 2);
+        assert_eq!(s.nnz(), Csc::from_dense(&s.to_dense()).nnz());
+        let (idx0, _) = s.col(0);
+        assert!(idx0.is_empty(), "cancelled entry survived");
+        assert_eq!(s.col(1), (&[3usize][..], &[2.0][..]));
+        assert_eq!(s.col(2), (&[0usize][..], &[5.0][..]));
+    }
+
+    #[test]
+    fn select_cols_packs_exact_column_data() {
+        let mut rng = Prng::new(9);
+        let s = rand_sparse(&mut rng, 12, 20, 0.3);
+        let keep: Vec<usize> = vec![0, 3, 4, 11, 19];
+        let packed = s.select_cols(&keep);
+        assert_eq!(packed.cols(), keep.len());
+        assert_eq!(packed.rows(), 12);
+        for (c, &j) in keep.iter().enumerate() {
+            assert_eq!(packed.col(c), s.col(j), "column {j} not preserved");
+        }
+        // dense path too
+        let d = Design::Dense(s.to_dense());
+        let dp = d.select_cols(&keep);
+        let v: Vec<f64> = (0..12).map(|_| rng.gaussian()).collect();
+        for (c, &j) in keep.iter().enumerate() {
+            assert_eq!(
+                d.col_dot(j, &v).to_bits(),
+                dp.col_dot(c, &v).to_bits(),
+                "packed dense col_dot differs at {j}"
+            );
+        }
+    }
+
+    #[test]
+    fn col_dot_diff_and_col_rows_agree_with_naive() {
+        let mut rng = Prng::new(10);
+        let s = rand_sparse(&mut rng, 9, 7, 0.5);
+        let dd = Design::Dense(s.to_dense());
+        let ds = Design::Sparse(s);
+        let a: Vec<f64> = (0..9).map(|_| rng.gaussian()).collect();
+        let b: Vec<f64> = (0..9).map(|_| rng.gaussian()).collect();
+        for j in 0..7 {
+            let naive = dd.col_dot(j, &a) - dd.col_dot(j, &b);
+            assert!((dd.col_dot_diff(j, &a, &b) - naive).abs() < 1e-10);
+            assert!((ds.col_dot_diff(j, &a, &b) - naive).abs() < 1e-10);
+        }
+        assert!(dd.col_rows(0).is_none());
+        let rows = ds.col_rows(0).unwrap();
+        // sparse row support matches the structural nonzeros
+        if let Design::Sparse(s) = &ds {
+            assert_eq!(rows, s.col(0).0);
+        }
     }
 }

@@ -83,10 +83,12 @@ fn usage() {
            --task lasso|group-lasso|sgl[:tau]|logreg|multitask|multinomial\n\
            --data synth:leukemia | synth:meg | synth:climate | csv:<path> | synth:reg:<n>x<p>\n\
            --rule none|static|elghaoui|dst3|bonnefoy|gap-seq|gap-dyn|gap|strong\n\
-           --warm standard|active|strong     --eps 1e-6   --grid 100   --delta 3\n\
+           --warm standard|active|strong     --eps 1e-6   --grid 100 (>= 1)   --delta 3\n\
            --threads 1 (1 = serial, 0 = all cores; path chunks / CV folds / batch jobs)\n\
            --seed 42   --small (shrink synthetic workloads)   --out results\n\
            --max-epochs 10000   --fce 10 (gap/screening cadence)\n\
+           --no-compact (path/solve/cv/batch/serve: disable active-set compaction;\n\
+                         bitwise-identical, slower — fig3..fig6 always compact)\n\
          per-subcommand flags:\n\
            cv:        --folds 5\n\
            batch:     --jobs 8\n\
@@ -138,6 +140,23 @@ fn flag_usize(o: &Flags, k: &str, default: usize) -> Result<usize, String> {
     }
 }
 
+/// `--grid` validated at parse time: `lambda_grid` requires at least one
+/// point, so `--grid 0` must be a clean CLI error, not a panic (the serve
+/// fit endpoint applies the same rule in `ModelKey::from_json`).
+fn flag_grid(o: &Flags, default: usize) -> Result<usize, String> {
+    let n = flag_usize(o, "grid", default)?;
+    if n == 0 {
+        return Err("--grid must be >= 1 (the lambda grid needs at least one point)".into());
+    }
+    Ok(n)
+}
+
+/// Active-set compaction toggle (on unless `--no-compact`; bitwise
+/// transparent either way — see `linalg::compact`).
+fn flag_compact(o: &Flags) -> bool {
+    !o.contains_key("no-compact")
+}
+
 fn cmd_serve(o: &Flags) -> Result<(), String> {
     let host = flag(o, "host", "127.0.0.1");
     let port = flag_usize(o, "port", 7878)?;
@@ -146,6 +165,7 @@ fn cmd_serve(o: &Flags) -> Result<(), String> {
         http_threads: flag_usize(o, "threads", 0)?,
         fit_workers: flag_usize(o, "workers", 0)?,
         cache_mb: flag_usize(o, "cache-mb", 256)?,
+        compact: flag_compact(o),
     };
     let server = Server::bind(&cfg)?;
     println!(
@@ -165,7 +185,7 @@ fn cmd_path(o: &Flags) -> Result<(), String> {
     let task = Task::parse(flag(o, "task", "lasso"))?;
     let prob = build_problem(ds, task)?;
     let cfg = PathConfig {
-        n_lambdas: flag_usize(o, "grid", 100)?,
+        n_lambdas: flag_grid(o, 100)?,
         delta: flag_f64(o, "delta", 3.0)?,
         rule: Rule::parse(flag(o, "rule", "gap"))?,
         warm: WarmStart::parse(flag(o, "warm", "standard"))?,
@@ -174,16 +194,18 @@ fn cmd_path(o: &Flags) -> Result<(), String> {
         max_epochs: flag_usize(o, "max-epochs", 10_000)?,
         screen_every: flag_usize(o, "fce", 10)?,
         threads: flag_usize(o, "threads", 1)?,
+        compact: flag_compact(o),
     };
+    cfg.validate()?;
     let res = solve_path(&prob, &cfg);
     println!(
-        "{:>4} {:>12} {:>10} {:>8} {:>8} {:>8} {:>10}",
-        "t", "lambda", "gap", "epochs", "active", "nnz", "seconds"
+        "{:>4} {:>12} {:>10} {:>8} {:>8} {:>9} {:>9} {:>10}",
+        "t", "lambda", "gap", "epochs", "active", "nnz_rows", "nnz_coef", "seconds"
     );
     for (t, p) in res.points.iter().enumerate() {
         println!(
-            "{:>4} {:>12.5e} {:>10.2e} {:>8} {:>8} {:>8} {:>10.4}",
-            t, p.lam, p.gap, p.epochs, p.n_active_feats, p.nnz, p.seconds
+            "{:>4} {:>12.5e} {:>10.2e} {:>8} {:>8} {:>9} {:>9} {:>10.4}",
+            t, p.lam, p.gap, p.epochs, p.n_active_feats, p.nnz_rows, p.nnz_coefs, p.seconds
         );
     }
     println!(
@@ -203,7 +225,7 @@ fn cmd_cv(o: &Flags) -> Result<(), String> {
     let ds = load_spec(flag(o, "data", "synth:leukemia"), seed, small)?;
     let task = Task::parse(flag(o, "task", "lasso"))?;
     let cfg = PathConfig {
-        n_lambdas: flag_usize(o, "grid", 50)?,
+        n_lambdas: flag_grid(o, 50)?,
         delta: flag_f64(o, "delta", 3.0)?,
         rule: Rule::parse(flag(o, "rule", "gap"))?,
         warm: WarmStart::parse(flag(o, "warm", "standard"))?,
@@ -212,7 +234,9 @@ fn cmd_cv(o: &Flags) -> Result<(), String> {
         max_epochs: flag_usize(o, "max-epochs", 10_000)?,
         screen_every: flag_usize(o, "fce", 10)?,
         threads: 1,
+        compact: flag_compact(o),
     };
+    cfg.validate()?;
     let cv = CvConfig {
         folds: flag_usize(o, "folds", 5)?,
         seed,
@@ -247,7 +271,7 @@ fn cmd_batch(o: &Flags) -> Result<(), String> {
     let task = Task::parse(flag(o, "task", "lasso"))?;
     let spec = flag(o, "data", "synth:reg:100x2000");
     let cfg = PathConfig {
-        n_lambdas: flag_usize(o, "grid", 50)?,
+        n_lambdas: flag_grid(o, 50)?,
         delta: flag_f64(o, "delta", 2.5)?,
         rule: Rule::parse(flag(o, "rule", "gap"))?,
         warm: WarmStart::parse(flag(o, "warm", "active"))?,
@@ -256,7 +280,9 @@ fn cmd_batch(o: &Flags) -> Result<(), String> {
         max_epochs: flag_usize(o, "max-epochs", 10_000)?,
         screen_every: flag_usize(o, "fce", 10)?,
         threads: 1,
+        compact: flag_compact(o),
     };
+    cfg.validate()?;
     let mut requests = Vec::with_capacity(jobs);
     for j in 0..jobs {
         let ds = load_spec(spec, seed + j as u64, small)?;
@@ -299,6 +325,7 @@ fn cmd_solve(o: &Flags) -> Result<(), String> {
         max_epochs: flag_usize(o, "max-epochs", 10_000)?,
         screen_every: flag_usize(o, "fce", 10)?,
         max_kkt_rounds: 20,
+        compact: flag_compact(o),
     };
     let res = solve_fixed_lambda(&prob, lam, rule.as_mut(), &opts);
     println!(
@@ -380,7 +407,7 @@ fn cmd_fig(o: &Flags, fig: u8) -> Result<(), String> {
         _ => unreachable!(),
     };
     let prob = build_problem(ds, task)?;
-    let n_lambdas = flag_usize(o, "grid", if small { 30 } else { 100 })?;
+    let n_lambdas = flag_grid(o, if small { 30 } else { 100 })?;
     // Left panel: active fractions for K = 2 .. 2^9.
     let budgets: Vec<usize> = (1..=9).map(|e| 1usize << e).collect();
     let rows = active_fraction_experiment(&prob, Rule::GapSafeFull, &budgets, n_lambdas, delta, 10);

@@ -14,6 +14,7 @@
 //! `python/compile/model.py`; integration tests pin the two paths together.
 
 use crate::datafit::DataFit;
+use crate::linalg::compact::CompactDesign;
 use crate::linalg::sparse::Design;
 use crate::linalg::Mat;
 use crate::penalty::{dual_norm_active, ActiveSet, GroupNorms, Penalty, ScreenStats};
@@ -167,31 +168,11 @@ impl Problem {
 
     /// One feature's correlation block: acc[k] = X_j^T V[:, k], with V in
     /// the row-major scratch layout. The single shared inner kernel of the
-    /// q > 1 sweep — serial and parallel paths both call it, so they
-    /// cannot drift apart numerically.
+    /// q > 1 sweep — serial, parallel and compacted paths all call it, so
+    /// they cannot drift apart numerically.
     #[inline]
     fn accumulate_feature(&self, j: usize, vrm: &[f64], q: usize, acc: &mut [f64]) {
-        acc.iter_mut().for_each(|a| *a = 0.0);
-        match &self.x {
-            Design::Dense(m) => {
-                let col = m.col(j);
-                for (i, &xij) in col.iter().enumerate() {
-                    let row = &vrm[i * q..i * q + q];
-                    for k in 0..q {
-                        acc[k] += xij * row[k];
-                    }
-                }
-            }
-            Design::Sparse(s) => {
-                let (idx, val) = s.col(j);
-                for (&i, &xij) in idx.iter().zip(val) {
-                    let row = &vrm[i * q..i * q + q];
-                    for k in 0..q {
-                        acc[k] += xij * row[k];
-                    }
-                }
-            }
-        }
+        accumulate_col(&self.x, j, vrm, q, acc);
     }
 
     fn corr_active_serial(&self, v: &Mat, active: &ActiveSet, out: &mut Mat) {
@@ -261,6 +242,121 @@ impl Problem {
         }
     }
 
+    /// Compaction-aware correlation sweep: with a packed view the sweep
+    /// iterates the view's contiguous columns instead of bitmap-skipping
+    /// through the full design; with `None` it is exactly [`Self::corr_active`].
+    ///
+    /// Safety contract: every feature active in `active` must be present
+    /// in the view (the solver packs by live group and only shrinks the
+    /// active set between repacks). Each per-column kernel runs on data
+    /// copied verbatim at pack time, so the filled entries are bitwise
+    /// identical to the full sweep.
+    pub fn corr_active_with(
+        &self,
+        v: &Mat,
+        active: &ActiveSet,
+        out: &mut Mat,
+        view: Option<&CompactDesign>,
+    ) {
+        let Some(cd) = view else {
+            self.corr_active(v, active, out);
+            return;
+        };
+        debug_assert!(
+            (0..self.p()).all(|j| !active.feat[j] || cd.compact_of(j).is_some()),
+            "compact view is missing an active feature"
+        );
+        let threads = self.screen_threads();
+        if threads > 1 {
+            let work = active.n_active_feats() * self.n() * v.cols();
+            if work >= PAR_SCREEN_MIN_WORK {
+                self.corr_compact_parallel(v, active, out, cd, threads);
+                return;
+            }
+        }
+        self.corr_compact_serial(v, active, out, cd);
+    }
+
+    fn corr_compact_serial(
+        &self,
+        v: &Mat,
+        active: &ActiveSet,
+        out: &mut Mat,
+        cd: &CompactDesign,
+    ) {
+        let q = v.cols();
+        if q == 1 {
+            for c in 0..cd.width() {
+                let j = cd.feat_of(c);
+                if active.feat[j] {
+                    out[(j, 0)] = cd.design().col_dot(c, v.col(0));
+                }
+            }
+            return;
+        }
+        let vrm = Self::transpose_to_row_major(v);
+        let mut acc = vec![0.0; q];
+        for c in 0..cd.width() {
+            let j = cd.feat_of(c);
+            if !active.feat[j] {
+                continue;
+            }
+            accumulate_col(cd.design(), c, &vrm, q, &mut acc);
+            for k in 0..q {
+                out[(j, k)] = acc[k];
+            }
+        }
+    }
+
+    /// Parallel counterpart of [`Self::corr_compact_serial`]: ranges are
+    /// split over the *packed* columns, so the per-worker stride is over
+    /// the small contiguous working matrix.
+    fn corr_compact_parallel(
+        &self,
+        v: &Mat,
+        active: &ActiveSet,
+        out: &mut Mat,
+        cd: &CompactDesign,
+        threads: usize,
+    ) {
+        use crate::solver::parallel::{parallel_map, split_ranges};
+        let q = v.cols();
+        let vrm: Vec<f64> = if q > 1 { Self::transpose_to_row_major(v) } else { Vec::new() };
+        let ranges = split_ranges(cd.width(), threads * 4);
+        let chunks = parallel_map(threads, ranges, |_, (lo, hi)| {
+            let mut buf = vec![0.0; (hi - lo) * q];
+            if q == 1 {
+                for c in lo..hi {
+                    let j = cd.feat_of(c);
+                    if active.feat[j] {
+                        buf[c - lo] = cd.design().col_dot(c, v.col(0));
+                    }
+                }
+                return (lo, hi, buf);
+            }
+            let mut acc = vec![0.0; q];
+            for c in lo..hi {
+                let j = cd.feat_of(c);
+                if !active.feat[j] {
+                    continue;
+                }
+                accumulate_col(cd.design(), c, &vrm, q, &mut acc);
+                buf[(c - lo) * q..(c - lo) * q + q].copy_from_slice(&acc);
+            }
+            (lo, hi, buf)
+        });
+        for (lo, hi, buf) in chunks {
+            for c in lo..hi {
+                let j = cd.feat_of(c);
+                if active.feat[j] {
+                    for k in 0..q {
+                        out[(j, k)] = buf[(c - lo) * q + k];
+                    }
+                }
+            }
+        }
+    }
+
     /// lambda_max = Omega^D(X^T G(0)) (Prop. 3): the smallest lambda for
     /// which 0 is optimal.
     pub fn lambda_max(&self) -> f64 {
@@ -284,11 +380,25 @@ impl Problem {
     ///
     /// Cost: O(n * q_active) thanks to the active-set trick.
     pub fn gap_pass(&self, beta: &Mat, z: &Mat, lam: f64, active: &ActiveSet) -> GapResult {
+        self.gap_pass_with(beta, z, lam, active, None)
+    }
+
+    /// [`Self::gap_pass`] with an optional compact working view: the O(np)
+    /// correlation stage then sweeps the packed columns only (bitwise
+    /// identical entries — see [`crate::linalg::compact`]).
+    pub fn gap_pass_with(
+        &self,
+        beta: &Mat,
+        z: &Mat,
+        lam: f64,
+        active: &ActiveSet,
+        view: Option<&CompactDesign>,
+    ) -> GapResult {
         let (n, q) = (self.n(), self.q());
         let mut rho = Mat::zeros(n, q);
         self.fit.neg_grad(z, &mut rho);
         let mut corr = Mat::zeros(self.p(), q);
-        self.corr_active(&rho, active, &mut corr);
+        self.corr_active_with(&rho, active, &mut corr, view);
         let mut buf = Vec::new();
         let dnorm = dual_norm_active(self.pen.as_ref(), &corr, active, &mut buf);
         let alpha = lam.max(dnorm);
@@ -309,8 +419,25 @@ impl Problem {
     /// Screening statistics of an arbitrary dual-feasible center theta_c
     /// (static rule Eq. 12, Bonnefoy center y/lambda, DST3 projections).
     pub fn stats_for_center(&self, theta_c: &Mat, active: &ActiveSet) -> ScreenStats {
+        self.stats_for_center_with(theta_c, active, None)
+    }
+
+    /// [`Self::stats_for_center`] over an optional compact working view.
+    /// The caller's active set must be a subset of the view's — the KKT
+    /// repair pass, which statistics *all* groups, must pass `None`, and
+    /// the stock screening rules compute their center statistics over full
+    /// active sets in `begin_lambda` (before any view exists), so today
+    /// only the solver's gap passes and direct callers of this method run
+    /// compacted; the hook is here for rules that statistic mid-lambda
+    /// centers.
+    pub fn stats_for_center_with(
+        &self,
+        theta_c: &Mat,
+        active: &ActiveSet,
+        view: Option<&CompactDesign>,
+    ) -> ScreenStats {
         let mut corr = Mat::zeros(self.p(), theta_c.cols());
-        self.corr_active(theta_c, active, &mut corr);
+        self.corr_active_with(theta_c, active, &mut corr, view);
         self.pen.stats(&corr, active)
     }
 
@@ -328,6 +455,34 @@ impl Problem {
         th.as_mut_slice().iter_mut().for_each(|v| *v /= scale);
         let _ = lam;
         (th, scale)
+    }
+}
+
+/// acc[k] = X_col^T V[:, k] with V in the row-major scratch layout — the
+/// shared inner kernel of every q > 1 correlation sweep (full, parallel
+/// and compacted), so no two paths can drift apart numerically.
+#[inline]
+fn accumulate_col(x: &Design, col: usize, vrm: &[f64], q: usize, acc: &mut [f64]) {
+    acc.iter_mut().for_each(|a| *a = 0.0);
+    match x {
+        Design::Dense(m) => {
+            let c = m.col(col);
+            for (i, &xij) in c.iter().enumerate() {
+                let row = &vrm[i * q..i * q + q];
+                for k in 0..q {
+                    acc[k] += xij * row[k];
+                }
+            }
+        }
+        Design::Sparse(s) => {
+            let (idx, val) = s.col(col);
+            for (&i, &xij) in idx.iter().zip(val) {
+                let row = &vrm[i * q..i * q + q];
+                for k in 0..q {
+                    acc[k] += xij * row[k];
+                }
+            }
+        }
     }
 }
 
@@ -544,6 +699,76 @@ mod tests {
         for j in 0..800 {
             for k in 0..4 {
                 assert_eq!(serial[(j, k)].to_bits(), par[(j, k)].to_bits(), "({j},{k})");
+            }
+        }
+    }
+
+    #[test]
+    fn compact_sweep_matches_full_bitwise() {
+        use crate::linalg::compact::CompactDesign;
+        // q = 1, serial and parallel: packing must not change a single bit
+        // of the correlations.
+        let (prob, y) = lasso_problem(12, 30, 400);
+        let v = Mat::col_vec(&y);
+        let mut active = ActiveSet::full(prob.pen.groups());
+        for g in (0..400).step_by(3) {
+            active.kill_group(prob.pen.groups(), g);
+        }
+        let cd = CompactDesign::pack(&prob.x, &active.feat);
+        let mut full = Mat::zeros(400, 1);
+        let mut compact = Mat::zeros(400, 1);
+        prob.corr_active_with(&v, &active, &mut full, None);
+        prob.corr_active_with(&v, &active, &mut compact, Some(&cd));
+        for j in 0..400 {
+            if active.feat[j] {
+                assert_eq!(
+                    full[(j, 0)].to_bits(),
+                    compact[(j, 0)].to_bits(),
+                    "compact sweep diverged at feature {j}"
+                );
+            }
+        }
+        let mut par = Mat::zeros(400, 1);
+        prob.corr_compact_parallel(&v, &active, &mut par, &cd, 4);
+        for j in 0..400 {
+            if active.feat[j] {
+                assert_eq!(full[(j, 0)].to_bits(), par[(j, 0)].to_bits(), "parallel {j}");
+            }
+        }
+        // screening statistics through the view match the full sweep
+        let sf = prob.stats_for_center_with(&v, &active, None);
+        let sc = prob.stats_for_center_with(&v, &active, Some(&cd));
+        for g in 0..prob.n_groups() {
+            if active.group[g] {
+                assert_eq!(sf.group_dual[g].to_bits(), sc.group_dual[g].to_bits(), "stats {g}");
+            }
+        }
+        // q > 1 through the shared accumulate_col kernel.
+        let mut rng = Prng::new(31);
+        let x = rand_dense(&mut rng, 20, 120);
+        let mut ym = Mat::zeros(20, 3);
+        for v in ym.as_mut_slice() {
+            *v = rng.gaussian();
+        }
+        let probm = Problem::new(
+            x,
+            Box::new(Quadratic::new(ym.clone())),
+            Box::new(GroupL2::new(Groups::singletons(120))),
+        );
+        let mut am = ActiveSet::full(probm.pen.groups());
+        for g in (0..120).step_by(4) {
+            am.kill_group(probm.pen.groups(), g);
+        }
+        let cdm = CompactDesign::pack(&probm.x, &am.feat);
+        let mut fm = Mat::zeros(120, 3);
+        let mut cm = Mat::zeros(120, 3);
+        probm.corr_active_with(&ym, &am, &mut fm, None);
+        probm.corr_active_with(&ym, &am, &mut cm, Some(&cdm));
+        for j in 0..120 {
+            if am.feat[j] {
+                for k in 0..3 {
+                    assert_eq!(fm[(j, k)].to_bits(), cm[(j, k)].to_bits(), "({j},{k})");
+                }
             }
         }
     }

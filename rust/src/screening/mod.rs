@@ -70,6 +70,37 @@
 //! The O(np) correlation stage feeding these tests fans out over the
 //! worker pool when the owning [`crate::problem::Problem`] has
 //! `set_screen_threads > 1` (see [`crate::solver::parallel`]).
+//!
+//! # Working-set compaction
+//!
+//! Screening only pays off if the solver stops *touching* what it
+//! screened. The CD solver therefore maintains a physically repacked
+//! working design ([`crate::linalg::compact::CompactDesign`]): whenever a
+//! screening event kills more than ~25% of the columns the current view
+//! still carries, the surviving columns are copied into a fresh
+//! contiguous matrix (dense copy or CSC slice) with an index map and
+//! cached column norms, and every subsequent CD epoch, gap pass and
+//! screening sweep iterates that small matrix instead of bitmap-skipping
+//! through the full design (the working-set idea of Blitz / celer-style
+//! active-set solvers).
+//!
+//! **When repacking triggers.** The view packs whole *live groups* (an
+//! SGL feature screened inside a still-active group stays in the view —
+//! the CD epoch visits every feature of an active group either way) and
+//! is rebuilt only when the surviving column count drops below 75% of the
+//! view's current width, so the total packing cost of a solve is
+//! geometrically bounded by a small multiple of one full column copy.
+//!
+//! **Why safety is preserved.** Compaction is purely an iteration-space
+//! change: packed columns hold the very same values, every per-column
+//! kernel (`col_dot`, `col_axpy`, the fused gradient dot) runs the same
+//! arithmetic in the same order, and the view only ever serves active
+//! sets that are *subsets* of the set it was packed from (safe rules only
+//! deactivate within a lambda; the KKT repair of the un-safe strong rule
+//! re-activates groups, and the solver drops the view there and repacks
+//! later). Solver tests pin packed vs. full paths bit-for-bit — the
+//! sphere tests see identical statistics, so every Gap Safe certificate
+//! is untouched.
 
 mod baselines;
 mod gap_safe;

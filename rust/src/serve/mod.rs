@@ -86,6 +86,9 @@ pub struct ServeConfig {
     pub fit_workers: usize,
     /// Registry byte budget in MiB.
     pub cache_mb: usize,
+    /// Active-set compaction for registry fits (`--no-compact` turns it
+    /// off; bitwise-transparent either way — see `linalg::compact`).
+    pub compact: bool,
 }
 
 impl Default for ServeConfig {
@@ -95,6 +98,7 @@ impl Default for ServeConfig {
             http_threads: 0,
             fit_workers: 0,
             cache_mb: 256,
+            compact: true,
         }
     }
 }
@@ -122,7 +126,8 @@ impl Server {
         let listener = TcpListener::bind(&cfg.addr)
             .map_err(|e| format!("bind {}: {e}", cfg.addr))?;
         let metrics = Arc::new(Metrics::default());
-        let registry = Arc::new(Registry::new(cfg.cache_mb, metrics.clone()));
+        let registry =
+            Arc::new(Registry::new(cfg.cache_mb, metrics.clone()).with_compact(cfg.compact));
         let jobs = JobQueue::start(
             registry.clone(),
             metrics.clone(),

@@ -139,6 +139,7 @@ impl ModelKey {
             max_epochs: self.max_epochs,
             screen_every: 10,
             threads: 1,
+            compact: true,
         }
     }
 
@@ -290,6 +291,8 @@ pub struct Registry {
     cv: Condvar,
     metrics: Arc<Metrics>,
     cap_bytes: usize,
+    /// Active-set compaction for fits solved here (`serve --no-compact`).
+    compact: bool,
 }
 
 impl Registry {
@@ -307,7 +310,15 @@ impl Registry {
             cv: Condvar::new(),
             metrics,
             cap_bytes: cache_mb.saturating_mul(1024 * 1024),
+            compact: true,
         }
+    }
+
+    /// Toggle active-set compaction for every fit this registry solves
+    /// (bitwise-transparent either way; `gapsafe serve --no-compact`).
+    pub fn with_compact(mut self, compact: bool) -> Registry {
+        self.compact = compact;
+        self
     }
 
     /// Fit (or fetch) the model for `key`. Exact hits return the cached
@@ -420,7 +431,8 @@ impl Registry {
                 Arc::new(build_problem(ds, task)?)
             }
         };
-        let cfg = key.path_config();
+        let mut cfg = key.path_config();
+        cfg.compact = self.compact;
         let (path, warm_started) = match seed {
             Some(s) => (solve_path_seeded(&prob, &cfg, s), true),
             None => (solve_path(&prob, &cfg), false),
@@ -540,6 +552,7 @@ pub fn solve_path_seeded(prob: &Problem, cfg: &PathConfig, seed: &FittedModel) -
         screen_every: cfg.screen_every,
         eps,
         max_kkt_rounds: 20,
+        compact: cfg.compact,
     };
     let mut rule = cfg.rule.build();
     let mut prev: Option<PrevSolution> = None;

@@ -8,7 +8,9 @@ pub mod parallel;
 pub mod path;
 pub mod working_set;
 
-use crate::datafit::FitKind;
+use crate::datafit::{DataFit, FitKind};
+use crate::linalg::compact::CompactDesign;
+use crate::linalg::sparse::Design;
 use crate::linalg::Mat;
 use crate::penalty::{gather_block, scatter_block, ActiveSet};
 use crate::problem::{GapResult, Problem};
@@ -25,13 +27,32 @@ pub struct SolveOptions {
     pub eps: f64,
     /// Max strong-rule KKT repair rounds.
     pub max_kkt_rounds: usize,
+    /// Active-set compaction (`linalg::compact`): physically repack the
+    /// surviving columns whenever screening kills a large fraction of the
+    /// remaining features, so CD epochs and gap passes iterate a small
+    /// contiguous working matrix. Bitwise-transparent — disabling it only
+    /// changes speed, never a single output bit.
+    pub compact: bool,
 }
 
 impl Default for SolveOptions {
     fn default() -> Self {
-        SolveOptions { max_epochs: 10_000, screen_every: 10, eps: 1e-8, max_kkt_rounds: 20 }
+        SolveOptions {
+            max_epochs: 10_000,
+            screen_every: 10,
+            eps: 1e-8,
+            max_kkt_rounds: 20,
+            compact: true,
+        }
     }
 }
+
+/// Repack when the surviving columns are at most this fraction of the
+/// columns the current view still carries — i.e. a screening event killed
+/// more than 25% of the remaining features. The geometric shrink bounds
+/// the total packing cost of a solve by a small multiple of one full
+/// column copy.
+const COMPACT_REPACK_FRACTION: f64 = 0.75;
 
 /// Outcome of one fixed-lambda solve.
 #[derive(Debug, Clone)]
@@ -79,7 +100,7 @@ pub fn solve_fixed_lambda_with(
     };
     rule.begin_lambda(prob, lam, lam_max, prev, &mut active);
     zero_screened(prob, &mut beta, &active);
-    let mut state = CdState::new(prob, &beta);
+    let mut state = CdState::new(prob, &beta, &active, opts.compact);
 
     let mut epochs = 0usize;
     let mut gap_passes = 0usize;
@@ -93,7 +114,7 @@ pub fn solve_fixed_lambda_with(
         for k in 0..opts.max_epochs {
             if k % opts.screen_every == 0 {
                 let z = state.z(prob);
-                let res = prob.gap_pass(&beta, &z, lam, &active);
+                let res = prob.gap_pass_with(&beta, &z, lam, &active, state.view());
                 gap_passes += 1;
                 // Screen before the stopping test (Alg. 2 performs both at
                 // the same event; screening first makes the recorded active
@@ -103,6 +124,9 @@ pub fn solve_fixed_lambda_with(
                 if zero_screened(prob, &mut beta, &active) {
                     state.resync(prob, &beta);
                 }
+                // Repack the working view when this screening event killed
+                // a large enough fraction of the remaining columns.
+                state.maybe_repack(prob, &active);
                 screen_trace.push((epochs, active.n_active_groups(), active.n_active_feats()));
                 let stop = res.gap <= opts.eps;
                 last = Some(res);
@@ -116,7 +140,7 @@ pub fn solve_fixed_lambda_with(
         }
         if last.is_none() {
             let z = state.z(prob);
-            last = Some(prob.gap_pass(&beta, &z, lam, &active));
+            last = Some(prob.gap_pass_with(&beta, &z, lam, &active, state.view()));
             gap_passes += 1;
         }
         // KKT post-convergence check for un-safe rules (Sec. 3.6): any
@@ -138,6 +162,9 @@ pub fn solve_fixed_lambda_with(
                 }
             }
             if violated {
+                // Reactivation breaks the view's shrink-only contract:
+                // drop it and let the next screening event repack.
+                state.reset_compact(prob);
                 kkt_round += 1;
                 converged = false;
                 continue 'outer;
@@ -195,6 +222,16 @@ fn zero_screened(prob: &Problem, beta: &mut Mat, active: &ActiveSet) -> bool {
 /// Coordinate-descent state: for quadratic fits we maintain the residual
 /// rho = Y - X B (classic CD); for logistic / multinomial we maintain the
 /// linear predictor Z = X B and the per-row link values.
+///
+/// The state also owns the *compact working view*
+/// ([`crate::linalg::compact::CompactDesign`]): once screening has killed
+/// enough columns, the surviving ones are physically repacked so every
+/// subsequent epoch and gap pass iterates a small contiguous matrix. The
+/// view packs whole live groups (coarser than the feature bitmap — SGL
+/// screens single features inside live groups, and `cd_epoch` visits every
+/// feature of an active group either way), visits groups in the same
+/// ascending order as the bitmap scan, and reads column data copied
+/// verbatim, so packed and full paths are bitwise identical.
 struct CdState {
     kind: FitKind,
     /// Quadratic: rho = Y - Z. Others: Z itself.
@@ -204,10 +241,24 @@ struct CdState {
     /// Scratch for block updates.
     blk: Vec<f64>,
     grad: Vec<f64>,
+    /// Packed working view (None = full design).
+    compact: Option<CompactDesign>,
+    /// Surviving group ids at the last repack (ascending full ids).
+    live_groups: Vec<usize>,
+    /// Per-live-group Lipschitz constants (the same values as
+    /// `prob.lipschitz[g]`, gathered at pack time for locality).
+    live_lipschitz: Vec<f64>,
+    /// Columns the current view carries (p when not packed).
+    view_width: usize,
+    /// Compaction enabled ([`SolveOptions::compact`]).
+    enabled: bool,
+    /// Scratch for the batched link refresh over touched rows.
+    row_mark: Vec<bool>,
+    rows_buf: Vec<usize>,
 }
 
 impl CdState {
-    fn new(prob: &Problem, beta: &Mat) -> Self {
+    fn new(prob: &Problem, beta: &Mat, active: &ActiveSet, compact_enabled: bool) -> Self {
         let kind = prob.fit.kind();
         let (n, q) = (prob.n(), prob.q());
         let mut st = CdState {
@@ -216,9 +267,72 @@ impl CdState {
             link: Mat::zeros(n, q),
             blk: Vec::new(),
             grad: Vec::new(),
+            compact: None,
+            live_groups: Vec::new(),
+            live_lipschitz: Vec::new(),
+            view_width: prob.p(),
+            enabled: compact_enabled,
+            row_mark: vec![false; n],
+            rows_buf: Vec::new(),
         };
         st.resync(prob, beta);
+        // Sequential / static rules may have screened in begin_lambda
+        // already — compact before the first epoch when they did.
+        st.maybe_repack(prob, active);
         st
+    }
+
+    /// The current packed view, if any (handed to the gap passes).
+    fn view(&self) -> Option<&CompactDesign> {
+        self.compact.as_ref()
+    }
+
+    /// Repack when the surviving columns are at most
+    /// [`COMPACT_REPACK_FRACTION`] of what the current view carries.
+    /// Counting the prospective columns is O(G); the pack itself is
+    /// O(nnz of the survivors).
+    fn maybe_repack(&mut self, prob: &Problem, active: &ActiveSet) {
+        if !self.enabled {
+            return;
+        }
+        let groups = prob.pen.groups();
+        let keep: usize = (0..groups.len())
+            .filter(|&g| active.group[g])
+            .map(|g| groups.feats(g).len())
+            .sum();
+        if keep < self.view_width
+            && (keep as f64) <= COMPACT_REPACK_FRACTION * self.view_width as f64
+        {
+            self.repack(prob, active);
+        }
+    }
+
+    fn repack(&mut self, prob: &Problem, active: &ActiveSet) {
+        let groups = prob.pen.groups();
+        let mut keep = vec![false; prob.p()];
+        self.live_groups.clear();
+        self.live_lipschitz.clear();
+        for g in 0..groups.len() {
+            if active.group[g] {
+                self.live_groups.push(g);
+                self.live_lipschitz.push(prob.lipschitz[g]);
+                for &j in groups.feats(g) {
+                    keep[j] = true;
+                }
+            }
+        }
+        let cd = CompactDesign::pack(&prob.x, &keep);
+        self.view_width = cd.width();
+        self.compact = Some(cd);
+    }
+
+    /// Drop the view (KKT repair re-activated groups, breaking the
+    /// shrink-only contract); the next screening event may repack.
+    fn reset_compact(&mut self, prob: &Problem) {
+        self.compact = None;
+        self.live_groups.clear();
+        self.live_lipschitz.clear();
+        self.view_width = prob.p();
     }
 
     /// Recompute state from beta (after screening zeroed coefficients).
@@ -240,19 +354,10 @@ impl CdState {
             }
             FitKind::Logistic | FitKind::Multinomial => {
                 self.buf.copy_from(&z);
-                self.refresh_link(prob);
+                // link = Y - neg_grad(Z): the mean parameter (sigma(z) /
+                // softmax rows) stored directly.
+                refresh_link_full(&*prob.fit, &self.buf, &mut self.link);
             }
-        }
-    }
-
-    fn refresh_link(&mut self, prob: &Problem) {
-        // link = -neg_grad(z) + Y ... we store the mean parameter directly:
-        // logistic: sigma(z); multinomial: softmax rows. Both obtained from
-        // neg_grad: link = Y - neg_grad(Z).
-        let y = prob.fit.targets();
-        prob.fit.neg_grad(&self.buf, &mut self.link);
-        for (l, yi) in self.link.as_mut_slice().iter_mut().zip(y.as_slice()) {
-            *l = yi - *l;
         }
     }
 
@@ -276,26 +381,35 @@ impl CdState {
         }
     }
 
-    /// One (block) coordinate-descent epoch over the active set.
+    /// One (block) coordinate-descent epoch over the active set. With a
+    /// packed view the loop visits only the surviving groups and reads
+    /// columns from the contiguous working matrix; the link refresh for
+    /// logistic / multinomial fits is batched over exactly the rows the
+    /// changed columns touch (sparse designs) instead of a full O(n q)
+    /// pass per group.
     fn cd_epoch(&mut self, prob: &Problem, beta: &mut Mat, active: &ActiveSet, lam: f64) {
         let groups = prob.pen.groups();
         let q = prob.q();
-        for g in 0..groups.len() {
+        let packed = self.compact.is_some();
+        let n_visit = if packed { self.live_groups.len() } else { groups.len() };
+        for t in 0..n_visit {
+            let g = if packed { self.live_groups[t] } else { t };
             if !active.group[g] {
                 continue;
             }
             let feats = groups.feats(g);
-            let lg = prob.lipschitz[g];
+            let lg = if packed { self.live_lipschitz[t] } else { prob.lipschitz[g] };
             if lg <= 0.0 {
                 continue;
             }
+            let view = self.compact.as_ref();
             // gradient block: grad[(i,k)] = -X_j^T rho_k   (rho = -G(Z))
             self.grad.clear();
             match self.kind {
                 FitKind::Quadratic => {
                     for &j in feats {
                         for k in 0..q {
-                            self.grad.push(-prob.x.col_dot(j, self.buf.col(k)));
+                            self.grad.push(-design_col_dot(&prob.x, view, j, self.buf.col(k)));
                         }
                     }
                 }
@@ -304,57 +418,55 @@ impl CdState {
                     let y = prob.fit.targets();
                     for &j in feats {
                         for k in 0..q {
-                            let mut s = 0.0;
-                            // dot with (link - y) column k
-                            let lk = self.link.col(k);
-                            let yk = y.col(k);
-                            match &prob.x {
-                                crate::linalg::sparse::Design::Dense(m) => {
-                                    let col = m.col(j);
-                                    for i in 0..col.len() {
-                                        s += col[i] * (lk[i] - yk[i]);
-                                    }
-                                }
-                                crate::linalg::sparse::Design::Sparse(sp) => {
-                                    let (idx, val) = sp.col(j);
-                                    for (&i, &v) in idx.iter().zip(val) {
-                                        s += v * (lk[i] - yk[i]);
-                                    }
-                                }
-                            }
-                            self.grad.push(s);
+                            self.grad.push(design_col_dot_diff(
+                                &prob.x,
+                                view,
+                                j,
+                                self.link.col(k),
+                                y.col(k),
+                            ));
                         }
                     }
                 }
             }
             // v = beta_g - grad / L_g ; prox ; delta update
             gather_block(beta, feats, &mut self.blk);
-            let mut any_nonzero_before = false;
             for (b, gr) in self.blk.iter_mut().zip(&self.grad) {
-                if *b != 0.0 {
-                    any_nonzero_before = true;
-                }
                 *b -= gr / lg;
             }
             prob.pen.prox_group(g, &mut self.blk, lam / lg);
-            // compute delta vs old beta and apply
+            // Apply the delta to the prediction state and collect the rows
+            // the changed columns touch, so the link refresh below runs on
+            // exactly those rows (a full pass is only needed when a dense
+            // column — which touches every row — changed).
             let mut changed = false;
+            let mut dense_touch = matches!(self.kind, FitKind::Quadratic);
+            self.rows_buf.clear();
             for (i, &j) in feats.iter().enumerate() {
+                let mut feat_changed = false;
                 for k in 0..q {
                     let new = self.blk[i * q + k];
                     let old = beta[(j, k)];
                     let delta = new - old;
                     if delta != 0.0 {
+                        feat_changed = true;
                         changed = true;
-                        match self.kind {
-                            FitKind::Quadratic => {
-                                // rho -= X_j * delta (column k)
-                                let col = self.buf.col_mut(k);
-                                prob.x.col_axpy(j, -delta, col);
-                            }
-                            _ => {
-                                let col = self.buf.col_mut(k);
-                                prob.x.col_axpy(j, delta, col);
+                        // Quadratic maintains rho = Y - Z (subtract the
+                        // update); the others maintain Z itself (add it).
+                        let alpha =
+                            if matches!(self.kind, FitKind::Quadratic) { -delta } else { delta };
+                        design_col_axpy(&prob.x, view, j, alpha, self.buf.col_mut(k));
+                    }
+                }
+                if feat_changed && !dense_touch {
+                    match design_col_rows(&prob.x, view, j) {
+                        None => dense_touch = true,
+                        Some(rows) => {
+                            for &r in rows {
+                                if !self.row_mark[r] {
+                                    self.row_mark[r] = true;
+                                    self.rows_buf.push(r);
+                                }
                             }
                         }
                     }
@@ -363,12 +475,84 @@ impl CdState {
             if changed {
                 scatter_block(beta, feats, &self.blk);
                 if !matches!(self.kind, FitKind::Quadratic) {
-                    self.refresh_link(prob);
+                    if dense_touch {
+                        for &r in &self.rows_buf {
+                            self.row_mark[r] = false;
+                        }
+                        refresh_link_full(&*prob.fit, &self.buf, &mut self.link);
+                    } else {
+                        // Rows outside `rows_buf` have an unchanged linear
+                        // predictor, and the link is a row-local function
+                        // of Z — the restricted refresh is bitwise
+                        // identical to the full pass.
+                        prob.fit.refresh_link_rows(&self.buf, &self.rows_buf, &mut self.link);
+                        for &r in &self.rows_buf {
+                            self.row_mark[r] = false;
+                        }
+                    }
                 }
-            } else if !any_nonzero_before {
-                // stayed at zero: nothing to do
             }
         }
+    }
+}
+
+/// Column kernels routed through the packed working view when one exists.
+/// Full-index addressing either way; the packed variants run on column
+/// data copied verbatim, so results are bitwise identical.
+#[inline]
+fn design_col_dot(x: &Design, view: Option<&CompactDesign>, j: usize, v: &[f64]) -> f64 {
+    match view {
+        Some(cd) => cd.col_dot(j, v),
+        None => x.col_dot(j, v),
+    }
+}
+
+#[inline]
+fn design_col_dot_diff(
+    x: &Design,
+    view: Option<&CompactDesign>,
+    j: usize,
+    a: &[f64],
+    b: &[f64],
+) -> f64 {
+    match view {
+        Some(cd) => cd.col_dot_diff(j, a, b),
+        None => x.col_dot_diff(j, a, b),
+    }
+}
+
+#[inline]
+fn design_col_axpy(
+    x: &Design,
+    view: Option<&CompactDesign>,
+    j: usize,
+    alpha: f64,
+    out: &mut [f64],
+) {
+    match view {
+        Some(cd) => cd.col_axpy(j, alpha, out),
+        None => x.col_axpy(j, alpha, out),
+    }
+}
+
+#[inline]
+fn design_col_rows<'a>(
+    x: &'a Design,
+    view: Option<&'a CompactDesign>,
+    j: usize,
+) -> Option<&'a [usize]> {
+    match view {
+        Some(cd) => cd.col_rows(j),
+        None => x.col_rows(j),
+    }
+}
+
+/// Full link refresh: link = Y - neg_grad(Z), elementwise over all rows.
+fn refresh_link_full(fit: &dyn DataFit, z: &Mat, link: &mut Mat) {
+    fit.neg_grad(z, link);
+    let y = fit.targets();
+    for (l, yi) in link.as_mut_slice().iter_mut().zip(y.as_slice()) {
+        *l = yi - *l;
     }
 }
 
@@ -484,6 +668,58 @@ mod tests {
         let opts = SolveOptions { eps: 1e-7, max_epochs: 20_000, ..Default::default() };
         let res = solve_fixed_lambda(&prob, lam, rule.as_mut(), &opts);
         assert!(res.converged, "gap={}", res.gap);
+    }
+
+    #[test]
+    fn compaction_is_bitwise_transparent_fixed_lambda() {
+        // The packed working view must not change a single output bit, for
+        // dense and sparse designs and for every fit family the CD state
+        // handles differently (residual vs link maintenance).
+        let cases: Vec<(Problem, f64)> = vec![
+            {
+                let p = small_lasso();
+                let l = 0.1 * p.lambda_max();
+                (p, l)
+            },
+            {
+                let ds = synth::sparse_regression(40, 120, 0.15, 3);
+                let p = build_problem(ds, Task::Lasso).unwrap();
+                let l = 0.1 * p.lambda_max();
+                (p, l)
+            },
+            {
+                let ds = synth::leukemia_like_scaled(30, 50, 5, true);
+                let p = build_problem(ds, Task::Logreg).unwrap();
+                let l = 0.2 * p.lambda_max();
+                (p, l)
+            },
+            {
+                let ds = synth::meg_like(18, 36, 3, 7);
+                let p = build_problem(ds, Task::MultiTask).unwrap();
+                let l = 0.3 * p.lambda_max();
+                (p, l)
+            },
+        ];
+        for (prob, lam) in &cases {
+            let base = SolveOptions { eps: 1e-10, ..Default::default() };
+            let on = SolveOptions { compact: true, ..base.clone() };
+            let off = SolveOptions { compact: false, ..base };
+            let mut r1 = Rule::GapSafeFull.build();
+            let mut r2 = Rule::GapSafeFull.build();
+            let a = solve_fixed_lambda(prob, *lam, r1.as_mut(), &on);
+            let b = solve_fixed_lambda(prob, *lam, r2.as_mut(), &off);
+            assert_eq!(a.epochs, b.epochs);
+            assert_eq!(a.gap.to_bits(), b.gap.to_bits(), "gap diverged");
+            for j in 0..prob.p() {
+                for k in 0..prob.q() {
+                    assert_eq!(
+                        a.beta[(j, k)].to_bits(),
+                        b.beta[(j, k)].to_bits(),
+                        "beta diverged at ({j},{k})"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -200,6 +200,7 @@ pub fn solve_path_parallel(prob: &Problem, cfg: &PathConfig, threads: usize) -> 
         screen_every: cfg.screen_every,
         eps,
         max_kkt_rounds: 20,
+        compact: cfg.compact,
     };
     let n_chunks = threads.min(lambdas.len());
     let bounds = weighted_chunk_bounds(lambdas.len(), n_chunks);

@@ -59,6 +59,11 @@ pub struct PathConfig {
     /// ([`crate::solver::parallel`]): `1` = the exact serial path (default),
     /// `0` = all available cores, `t > 1` = that many chunk workers.
     pub threads: usize,
+    /// Active-set compaction ([`crate::linalg::compact`], default on):
+    /// repack the surviving columns into a contiguous working matrix as
+    /// screening shrinks the problem. Bitwise-transparent — toggling it
+    /// changes speed only, never an output bit.
+    pub compact: bool,
 }
 
 impl Default for PathConfig {
@@ -73,7 +78,30 @@ impl Default for PathConfig {
             max_epochs: 10_000,
             screen_every: 10,
             threads: 1,
+            compact: true,
         }
+    }
+}
+
+impl PathConfig {
+    /// Validate user-facing grid parameters, returning a proper error
+    /// instead of letting [`lambda_grid`]'s internal assertion panic. The
+    /// CLI calls this at parse time; the serving layer enforces its own
+    /// (stricter) bounds in `ModelKey::from_json`. `eps = 0` stays legal —
+    /// it is the "run the full epoch budget" mode the experiment
+    /// coordinator relies on — and `delta = 0` is a degenerate but valid
+    /// constant grid; only non-finite or negative values are rejected.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_lambdas == 0 {
+            return Err("lambda grid must have at least 1 point (--grid >= 1)".into());
+        }
+        if !(self.delta.is_finite() && self.delta >= 0.0) {
+            return Err("grid decade span delta must be finite and >= 0".into());
+        }
+        if !(self.eps.is_finite() && self.eps >= 0.0) {
+            return Err("tolerance eps must be finite and >= 0".into());
+        }
+        Ok(())
     }
 }
 
@@ -85,7 +113,13 @@ pub struct PathPoint {
     pub epochs: usize,
     pub n_active_groups: usize,
     pub n_active_feats: usize,
-    pub nnz: usize,
+    /// Nonzero *coefficients* of beta (entries, over all q tasks).
+    pub nnz_coefs: usize,
+    /// Nonzero *rows* of beta (features with any nonzero task — the
+    /// support size; equals `nnz_coefs` when q = 1). The old scalar `nnz`
+    /// field reported rows, which mislabeled multi-task / multinomial
+    /// sparsity; both counts are now carried explicitly.
+    pub nnz_rows: usize,
     pub seconds: f64,
     pub converged: bool,
     pub kkt_violations: usize,
@@ -102,9 +136,11 @@ pub struct PathResult {
     pub lam_max: f64,
 }
 
-/// The standard logarithmic grid of Sec. 3.2.
+/// The standard logarithmic grid of Sec. 3.2. `n = 0` is a caller bug —
+/// user-facing layers validate it via [`PathConfig::validate`] before
+/// reaching this assertion.
 pub fn lambda_grid(lam_max: f64, n: usize, delta: f64) -> Vec<f64> {
-    assert!(n >= 1);
+    assert!(n >= 1, "lambda grid needs at least one point");
     if n == 1 {
         return vec![lam_max];
     }
@@ -166,6 +202,7 @@ pub fn solve_path_on_grid(prob: &Problem, cfg: &PathConfig, lambdas: &[f64]) -> 
         screen_every: cfg.screen_every,
         eps,
         max_kkt_rounds: 20,
+        compact: cfg.compact,
     };
     let mut rule = cfg.rule.build();
     let sw_total = Stopwatch::start();
@@ -271,7 +308,8 @@ pub(crate) fn point_from_result(
         epochs,
         n_active_groups: res.active.n_active_groups(),
         n_active_feats: res.active.n_active_feats(),
-        nnz: count_nnz(&res.beta),
+        nnz_coefs: count_nnz_coefs(&res.beta),
+        nnz_rows: count_nnz_rows(&res.beta),
         seconds,
         converged: res.converged,
         kkt_violations: res.kkt_violations,
@@ -298,7 +336,13 @@ pub(crate) fn prev_from_result(
     (prev, beta)
 }
 
-fn count_nnz(beta: &Mat) -> usize {
+/// Nonzero entries of beta (over all q tasks).
+fn count_nnz_coefs(beta: &Mat) -> usize {
+    beta.as_slice().iter().filter(|&&v| v != 0.0).count()
+}
+
+/// Rows of beta with at least one nonzero task (the feature support).
+fn count_nnz_rows(beta: &Mat) -> usize {
     (0..beta.rows()).filter(|&j| (0..beta.cols()).any(|k| beta[(j, k)] != 0.0)).count()
 }
 
@@ -330,6 +374,7 @@ mod tests {
             max_epochs: 3000,
             screen_every: 10,
             threads: 1,
+            compact: true,
         }
     }
 
@@ -341,9 +386,88 @@ mod tests {
         assert_eq!(res.points.len(), 12);
         assert!(res.points.iter().all(|p| p.converged));
         // support at lambda_max is empty
-        assert_eq!(res.points[0].nnz, 0);
+        assert_eq!(res.points[0].nnz_rows, 0);
+        assert_eq!(res.points[0].nnz_coefs, 0);
         // support grows (weakly, statistically) along the path
-        assert!(res.points.last().unwrap().nnz >= res.points[0].nnz);
+        assert!(res.points.last().unwrap().nnz_rows >= res.points[0].nnz_rows);
+    }
+
+    #[test]
+    fn nnz_counts_distinguish_coefs_and_rows() {
+        // Multi-task: q > 1 means a support row can hold several nonzero
+        // coefficients; the per-lambda record must report both counts.
+        let ds = synth::meg_like(16, 24, 4, 5);
+        let prob = build_problem(ds, Task::MultiTask).unwrap();
+        let res = solve_path(&prob, &quick_cfg(Rule::GapSafeFull, WarmStart::Standard));
+        let last = res.points.last().unwrap();
+        assert!(last.nnz_rows > 0, "trivial path end");
+        // row groups (l1/l2): supported rows carry several tasks, so the
+        // coefficient count must exceed the row count (the old scalar nnz
+        // conflated the two)
+        assert!(
+            last.nnz_coefs > last.nnz_rows,
+            "coefs {} rows {}",
+            last.nnz_coefs,
+            last.nnz_rows
+        );
+        for (p, b) in res.points.iter().zip(&res.betas) {
+            let rows = (0..b.rows())
+                .filter(|&j| (0..b.cols()).any(|k| b[(j, k)] != 0.0))
+                .count();
+            let coefs = b.as_slice().iter().filter(|&&v| v != 0.0).count();
+            assert_eq!(p.nnz_rows, rows);
+            assert_eq!(p.nnz_coefs, coefs);
+            assert!(p.nnz_coefs >= p.nnz_rows);
+        }
+    }
+
+    #[test]
+    fn compaction_is_bitwise_transparent_along_path() {
+        // The acceptance gate of this PR: whole-path solves with the
+        // packed working view must reproduce the full-scan path to the bit
+        // — betas and gaps — for dense and sparse designs.
+        for ds in [
+            synth::leukemia_like_scaled(28, 90, 11, false),
+            synth::sparse_regression(36, 150, 0.12, 13),
+        ] {
+            let prob = build_problem(ds, Task::Lasso).unwrap();
+            let on = quick_cfg(Rule::GapSafeFull, WarmStart::Standard);
+            let off = PathConfig { compact: false, ..on.clone() };
+            let a = solve_path(&prob, &on);
+            let b = solve_path(&prob, &off);
+            for (t, (ba, bb)) in a.betas.iter().zip(&b.betas).enumerate() {
+                for j in 0..prob.p() {
+                    assert_eq!(
+                        ba[(j, 0)].to_bits(),
+                        bb[(j, 0)].to_bits(),
+                        "beta diverged at lambda {t}, feature {j}"
+                    );
+                }
+            }
+            for (pa, pb) in a.points.iter().zip(&b.points) {
+                assert_eq!(pa.gap.to_bits(), pb.gap.to_bits());
+                assert_eq!(pa.epochs, pb.epochs);
+                assert_eq!(pa.n_active_feats, pb.n_active_feats);
+            }
+        }
+    }
+
+    #[test]
+    fn validate_rejects_empty_grid() {
+        let mut cfg = PathConfig::default();
+        assert!(cfg.validate().is_ok());
+        cfg.n_lambdas = 0;
+        assert!(cfg.validate().is_err());
+        cfg.n_lambdas = 5;
+        // eps = 0 (full-budget mode) and delta = 0 (constant grid) stay legal
+        cfg.delta = 0.0;
+        cfg.eps = 0.0;
+        assert!(cfg.validate().is_ok());
+        cfg.delta = -1.0;
+        assert!(cfg.validate().is_err());
+        cfg.delta = 2.0;
+        cfg.eps = f64::NAN;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -267,6 +267,7 @@ fn paths_all_estimators() {
         max_epochs: 5000,
         screen_every: 10,
         threads: 1,
+        compact: true,
     };
     let cases: Vec<(Task, gapsafe::data::Dataset)> = vec![
         (Task::Lasso, synth::leukemia_like_scaled(20, 50, 51, false)),
@@ -291,7 +292,7 @@ fn paths_all_estimators() {
             "{task:?}: some path points did not converge: {:?}",
             res.points.iter().map(|p| p.gap).collect::<Vec<_>>()
         );
-        assert_eq!(res.points[0].nnz, 0, "{task:?}: nonzero support at lambda_max");
+        assert_eq!(res.points[0].nnz_rows, 0, "{task:?}: nonzero support at lambda_max");
     }
 }
 

@@ -32,6 +32,7 @@ fn tight_cfg(threads: usize) -> PathConfig {
         max_epochs: 50_000,
         screen_every: 10,
         threads,
+        compact: true,
     }
 }
 

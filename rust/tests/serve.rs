@@ -57,6 +57,7 @@ fn direct_cfg(grid: usize, delta: f64, eps: f64) -> PathConfig {
         max_epochs: 10_000,
         screen_every: 10,
         threads: 1,
+        compact: true,
     }
 }
 
@@ -66,6 +67,7 @@ fn start_server() -> (Server, u16) {
         http_threads: 2,
         fit_workers: 2,
         cache_mb: 64,
+        compact: true,
     })
     .expect("bind");
     let port = server.port();

@@ -1,0 +1,250 @@
+//! Sparse-design end-to-end safety and active-set compaction equivalence.
+//!
+//! Two invariants are pinned here:
+//!
+//! * **Screening safety on sparse designs** — every screening rule must
+//!   produce the same path as no screening on a `Design::Sparse` problem,
+//!   including designs built from *duplicate* triplets (the
+//!   `Csc::from_triplets` merge regression) and designs with empty
+//!   columns, for Lasso and logistic regression.
+//! * **Compaction transparency** — `solve_path` with the packed working
+//!   view ([`gapsafe::linalg::compact::CompactDesign`]) is bitwise equal
+//!   to the full-scan path: identical betas, gaps and epoch counts.
+
+use gapsafe::data::Dataset;
+use gapsafe::linalg::sparse::{Csc, Design};
+use gapsafe::linalg::Mat;
+use gapsafe::screening::Rule;
+use gapsafe::solver::path::{solve_path, PathConfig, WarmStart};
+use gapsafe::util::prng::Prng;
+use gapsafe::{build_problem, Task};
+
+/// A sparse design built from triplets *with duplicates* (merged on
+/// construction) and with a few structurally empty columns, plus targets.
+/// `binary` turns the targets into {0,1} labels for logistic problems.
+fn tricky_sparse_dataset(n: usize, p: usize, seed: u64, binary: bool) -> Dataset {
+    let mut rng = Prng::new(seed);
+    let mut trip = Vec::new();
+    for j in 0..p {
+        if j % 11 == 7 {
+            continue; // empty column
+        }
+        for i in 0..n {
+            if rng.bernoulli(0.25) {
+                let v = rng.gaussian();
+                trip.push((j, i, v));
+                if rng.bernoulli(0.3) {
+                    // duplicate entry: must merge by summing, not corrupt
+                    // the column norms
+                    trip.push((j, i, 0.5 * v));
+                }
+            }
+        }
+    }
+    let x = Csc::from_triplets(n, p, trip);
+    // planted signal over a few nonempty columns
+    let mut y = vec![0.0; n];
+    for j in (0..p).step_by(9) {
+        if j % 11 != 7 {
+            x.col_axpy(j, if j % 2 == 0 { 1.0 } else { -1.0 }, &mut y);
+        }
+    }
+    for v in y.iter_mut() {
+        *v += 0.3 * rng.gaussian();
+    }
+    if binary {
+        for v in y.iter_mut() {
+            *v = if *v > 0.0 { 1.0 } else { 0.0 };
+        }
+    }
+    Dataset {
+        x: Design::Sparse(x),
+        y: Mat::col_vec(&y),
+        group_size: None,
+        name: format!("tricky-sparse(n={n},p={p},seed={seed})"),
+    }
+}
+
+fn cfg(rule: Rule, n_lambdas: usize, delta: f64, max_epochs: usize, eps: f64) -> PathConfig {
+    PathConfig {
+        n_lambdas,
+        delta,
+        rule,
+        warm: WarmStart::Standard,
+        eps,
+        eps_is_absolute: false,
+        max_epochs,
+        screen_every: 10,
+        threads: 1,
+        compact: true,
+    }
+}
+
+#[test]
+fn duplicate_triplet_design_matches_dense_rebuild() {
+    // The satellite regression: with unmerged duplicates, col_norms_sq
+    // (and nnz) disagree with the dense equivalent and every sphere test
+    // built on ||x_j|| is unsafe.
+    let ds = tricky_sparse_dataset(20, 45, 3, false);
+    let Design::Sparse(s) = &ds.x else { panic!("expected sparse") };
+    let dense_rebuild = Csc::from_dense(&s.to_dense());
+    assert_eq!(s.nnz(), dense_rebuild.nnz(), "duplicates were not merged");
+    let n1 = ds.x.col_norms_sq();
+    let n2 = Design::Sparse(dense_rebuild).col_norms_sq();
+    for j in 0..45 {
+        assert_eq!(
+            n1[j].to_bits(),
+            n2[j].to_bits(),
+            "column {j} norm corrupted by duplicate triplets"
+        );
+    }
+}
+
+#[test]
+fn rules_produce_identical_paths_sparse_lasso() {
+    let ds = tricky_sparse_dataset(24, 50, 5, false);
+    let prob = build_problem(ds, Task::Lasso).unwrap();
+    let base = solve_path(&prob, &cfg(Rule::None, 10, 2.0, 5000, 1e-8));
+    assert!(base.points.iter().all(|p| p.converged));
+    for rule in [
+        Rule::StaticGap,
+        Rule::StaticElGhaoui,
+        Rule::Dst3,
+        Rule::DynamicBonnefoy,
+        Rule::GapSafeSeq,
+        Rule::GapSafeDyn,
+        Rule::GapSafeFull,
+        Rule::Strong,
+    ] {
+        let other = solve_path(&prob, &cfg(rule, 10, 2.0, 5000, 1e-8));
+        for (t, (a, b)) in base.betas.iter().zip(&other.betas).enumerate() {
+            for j in 0..prob.p() {
+                assert!(
+                    (a[(j, 0)] - b[(j, 0)]).abs() < 1e-4,
+                    "rule {} diverged at lambda {t}, feature {j}: {} vs {}",
+                    rule.label(),
+                    a[(j, 0)],
+                    b[(j, 0)]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn rules_produce_identical_paths_sparse_logistic() {
+    let ds = tricky_sparse_dataset(30, 40, 7, true);
+    let prob = build_problem(ds, Task::Logreg).unwrap();
+    // shorter grid: separable tails need many epochs under plain CD
+    let base = solve_path(&prob, &cfg(Rule::None, 8, 1.5, 20_000, 1e-6));
+    assert!(base.points.iter().all(|p| p.converged));
+    for rule in [Rule::GapSafeSeq, Rule::GapSafeDyn, Rule::GapSafeFull, Rule::Strong] {
+        let other = solve_path(&prob, &cfg(rule, 8, 1.5, 20_000, 1e-6));
+        for (t, (a, b)) in base.betas.iter().zip(&other.betas).enumerate() {
+            for j in 0..prob.p() {
+                assert!(
+                    (a[(j, 0)] - b[(j, 0)]).abs() < 1e-4,
+                    "rule {} diverged at lambda {t}, feature {j}",
+                    rule.label()
+                );
+            }
+        }
+    }
+}
+
+/// Compaction equivalence on sparse problems with duplicate-built and
+/// empty columns: packed and full-scan paths must agree to the bit.
+#[test]
+fn compaction_bitwise_equal_on_tricky_sparse_designs() {
+    for (task, binary, grid, delta, epochs) in [
+        (Task::Lasso, false, 10, 2.0, 5000),
+        (Task::Logreg, true, 6, 1.5, 20_000),
+    ] {
+        let ds = tricky_sparse_dataset(26, 44, 17, binary);
+        let prob = build_problem(ds, task).unwrap();
+        let on = cfg(Rule::GapSafeFull, grid, delta, epochs, 1e-6);
+        let off = PathConfig { compact: false, ..on.clone() };
+        let a = solve_path(&prob, &on);
+        let b = solve_path(&prob, &off);
+        for (t, (ba, bb)) in a.betas.iter().zip(&b.betas).enumerate() {
+            for j in 0..prob.p() {
+                assert_eq!(
+                    ba[(j, 0)].to_bits(),
+                    bb[(j, 0)].to_bits(),
+                    "{task:?}: compaction changed beta at lambda {t}, feature {j}"
+                );
+            }
+        }
+        for (pa, pb) in a.points.iter().zip(&b.points) {
+            assert_eq!(pa.gap.to_bits(), pb.gap.to_bits(), "{task:?}: gap diverged");
+            assert_eq!(pa.epochs, pb.epochs, "{task:?}: epoch count diverged");
+        }
+    }
+}
+
+/// Compaction packs whole live groups, so SGL's feature-level screening
+/// (which can kill features inside an active group) must stay bitwise
+/// transparent too.
+#[test]
+fn compaction_bitwise_equal_sgl_and_multitask() {
+    use gapsafe::data::synth;
+    // SGL on a grouped climate-like dense design
+    let ds = synth::climate_like(36, 8, 21);
+    let prob = build_problem(ds, Task::SparseGroupLasso { tau: 0.4 }).unwrap();
+    let on = cfg(Rule::GapSafeFull, 8, 2.0, 8000, 1e-7);
+    let off = PathConfig { compact: false, ..on.clone() };
+    let a = solve_path(&prob, &on);
+    let b = solve_path(&prob, &off);
+    for (ba, bb) in a.betas.iter().zip(&b.betas) {
+        for j in 0..prob.p() {
+            assert_eq!(ba[(j, 0)].to_bits(), bb[(j, 0)].to_bits(), "sgl diverged at {j}");
+        }
+    }
+    // multi-task (q > 1): link-free quadratic path with row groups
+    let dsm = synth::meg_like(18, 30, 4, 23);
+    let probm = build_problem(dsm, Task::MultiTask).unwrap();
+    let am = solve_path(&probm, &cfg(Rule::GapSafeFull, 8, 2.0, 8000, 1e-7));
+    let offm = PathConfig { compact: false, ..cfg(Rule::GapSafeFull, 8, 2.0, 8000, 1e-7) };
+    let bm = solve_path(&probm, &offm);
+    for (ba, bb) in am.betas.iter().zip(&bm.betas) {
+        for j in 0..probm.p() {
+            for k in 0..probm.q() {
+                assert_eq!(
+                    ba[(j, k)].to_bits(),
+                    bb[(j, k)].to_bits(),
+                    "multitask diverged at ({j},{k})"
+                );
+            }
+        }
+    }
+}
+
+/// The serving warm-start path (`solve_path_seeded`) runs with compaction
+/// on; seed a registry fit and check the warm-started artifact still
+/// converges and matches a direct solve.
+#[test]
+fn registry_warm_start_with_compaction_converges() {
+    use gapsafe::serve::registry::{ModelKey, Registry};
+    use gapsafe::serve::Metrics;
+    use std::sync::Arc;
+    let reg = Registry::new(128, Arc::new(Metrics::default()));
+    let cold = ModelKey::new("synth:reg:30x80", "lasso", 9, false, 8, 2.0, 1e-6, 10_000);
+    let (c, _) = reg.fit(&cold).unwrap();
+    assert!(c.path.points.iter().all(|p| p.converged));
+    let warm = ModelKey::new("synth:reg:30x80", "lasso", 9, false, 8, 2.05, 1e-6, 10_000);
+    let (w, _) = reg.fit(&warm).unwrap();
+    assert!(w.warm_started);
+    assert!(w.path.points.iter().all(|p| p.converged));
+    // The warm-seeded path takes different iterates than a direct fit, but
+    // both certify the same duality-gap tolerance, so their objectives
+    // agree to ~2x the scaled eps at every lambda.
+    let direct = solve_path(&*w.prob, &warm.path_config());
+    for ((&lam, a), b) in w.path.lambdas.iter().zip(&w.path.betas).zip(&direct.betas) {
+        let pa = w.prob.primal(a, &w.prob.predict(a), lam);
+        let pb = w.prob.primal(b, &w.prob.predict(b), lam);
+        assert!(
+            (pa - pb).abs() < 1e-3,
+            "objectives diverged at lambda {lam}: {pa} vs {pb}"
+        );
+    }
+}
