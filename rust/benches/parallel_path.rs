@@ -40,6 +40,7 @@ fn main() {
         screen_every: 10,
         threads,
         compact: true,
+        ..Default::default()
     };
 
     let serial = solve_path(&prob, &cfg(1));

@@ -252,6 +252,7 @@ mod tests {
             screen_every: 10,
             threads: 1,
             compact: true,
+            ..Default::default()
         };
         let sel = select_tau_sgl(&ds, &cfg, 7);
         assert_eq!(sel.taus.len(), 11);

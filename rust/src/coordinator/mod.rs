@@ -94,6 +94,7 @@ pub fn active_fraction_experiment(
             eps: 0.0, // run the full budget
             max_kkt_rounds: 3,
             compact: true,
+            ..Default::default()
         };
         for &lam in &lambdas {
             let beta0 = prev
@@ -161,6 +162,7 @@ pub fn time_to_convergence(
                 screen_every: 10,
                 threads: 1,
                 compact: true,
+                ..Default::default()
             };
             let sw = Stopwatch::start();
             let res = solve_path(prob, &cfg);
@@ -188,6 +190,7 @@ pub fn identification_epoch(prob: &Problem, rule: Rule, lam: f64, eps: f64) -> O
         eps: scaled_eps(prob, eps),
         max_kkt_rounds: 5,
         compact: true,
+        ..Default::default()
     };
     let res = solve_fixed_lambda_with(prob, lam, lam_max, None, None, r.as_mut(), None, &opts);
     if !res.converged {

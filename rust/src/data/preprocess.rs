@@ -1,6 +1,13 @@
 //! Preprocessing used by the paper's experiments (Sec. 5.4): month-wise
 //! centering (seasonality removal), least-squares linear detrending, and
 //! unit-variance standardization.
+//!
+//! Sparse designs are first-class citizens here, not silent no-ops:
+//! [`standardize`] scales sparse columns to unit variance *without
+//! centering* (centering would densify every column — the standard
+//! sparse-regression treatment, as in glmnet's `standardize` on sparse
+//! input), and [`deseasonalize_detrend`] refuses sparse designs with an
+//! explicit error instead of quietly returning un-processed data.
 
 use super::Dataset;
 use crate::linalg::sparse::Design;
@@ -8,23 +15,40 @@ use crate::linalg::sparse::Design;
 /// Remove month-of-year means and the least-squares linear trend from every
 /// column (rows are assumed to be consecutive monthly observations, as in
 /// the NCEP/NCAR workload).
-pub fn deseasonalize_detrend(ds: &mut Dataset) {
+///
+/// Dense designs only: both steps subtract per-row offsets from every
+/// column, which turns structural zeros into nonzeros and would densify a
+/// sparse design in place. Sparse callers get an explicit error (the
+/// historical behavior was to silently skip X and deseasonalize only `y`
+/// — a sparse climate workload then ran on raw, seasonal features with no
+/// warning).
+pub fn deseasonalize_detrend(ds: &mut Dataset) -> Result<(), String> {
     let n = ds.n();
-    if let Design::Dense(x) = &mut ds.x {
-        for j in 0..x.cols() {
-            let col = x.col_mut(j);
-            // month-wise centering
-            for m in 0..12usize {
-                let idx: Vec<usize> = (m..n).step_by(12).collect();
-                if idx.is_empty() {
-                    continue;
+    match &mut ds.x {
+        Design::Dense(x) => {
+            for j in 0..x.cols() {
+                let col = x.col_mut(j);
+                // month-wise centering
+                for m in 0..12usize {
+                    let idx: Vec<usize> = (m..n).step_by(12).collect();
+                    if idx.is_empty() {
+                        continue;
+                    }
+                    let mean: f64 = idx.iter().map(|&i| col[i]).sum::<f64>() / idx.len() as f64;
+                    for &i in &idx {
+                        col[i] -= mean;
+                    }
                 }
-                let mean: f64 = idx.iter().map(|&i| col[i]).sum::<f64>() / idx.len() as f64;
-                for &i in &idx {
-                    col[i] -= mean;
-                }
+                detrend(col);
             }
-            detrend(col);
+        }
+        Design::Sparse(_) => {
+            return Err(format!(
+                "deseasonalize_detrend needs a dense design ({}: month-wise centering and \
+                 detrending subtract per-row offsets, which densifies every sparse column); \
+                 densify the dataset first",
+                ds.name
+            ));
         }
     }
     // same treatment for the target
@@ -42,6 +66,7 @@ pub fn deseasonalize_detrend(ds: &mut Dataset) {
         }
         detrend(col);
     }
+    Ok(())
 }
 
 /// Remove the least-squares line a + b*t in place.
@@ -65,17 +90,61 @@ fn detrend(col: &mut [f64]) {
     }
 }
 
-/// Center and scale every column of X to unit variance (and center y).
+/// Standardize every column of X to unit variance and center y.
+///
+/// * Dense designs: center **and** scale (the classical treatment).
+/// * Sparse designs: **scale only** — each column is divided by its
+///   standard deviation (computed about the true mean, zeros included),
+///   so the variance is exactly 1 while every structural zero stays zero
+///   and the nonzero pattern is untouched. Centering is deliberately
+///   skipped: subtracting a nonzero mean from a sparse column would
+///   materialize all n entries. Columns that are numerically constant
+///   (sd below 1e-12 of their own rms — empty and exactly-constant
+///   columns included) are left as-is: without centering, dividing by a
+///   rounding-residue sd would explode the column rather than degrade
+///   gracefully like the dense arm.
 pub fn standardize(ds: &mut Dataset) {
     let n = ds.n();
-    if let Design::Dense(x) = &mut ds.x {
-        for j in 0..x.cols() {
-            let col = x.col_mut(j);
-            let mean: f64 = col.iter().sum::<f64>() / n as f64;
-            col.iter_mut().for_each(|v| *v -= mean);
-            let sd = (col.iter().map(|v| v * v).sum::<f64>() / n as f64).sqrt();
-            if sd > 0.0 {
-                col.iter_mut().for_each(|v| *v /= sd);
+    match &mut ds.x {
+        Design::Dense(x) => {
+            for j in 0..x.cols() {
+                let col = x.col_mut(j);
+                let mean: f64 = col.iter().sum::<f64>() / n as f64;
+                col.iter_mut().for_each(|v| *v -= mean);
+                let sd = (col.iter().map(|v| v * v).sum::<f64>() / n as f64).sqrt();
+                if sd > 0.0 {
+                    col.iter_mut().for_each(|v| *v /= sd);
+                }
+            }
+        }
+        Design::Sparse(x) => {
+            for j in 0..x.cols() {
+                // Moments over all n rows, visiting only the stored
+                // values. The variance is accumulated from *centered*
+                // deviations (nonzeros contribute (v - mean)^2, the
+                // n - nnz structural zeros contribute mean^2 each) — the
+                // E[x^2] - mean^2 shortcut cancels catastrophically on a
+                // near-constant column. Even centered, a fully-stored
+                // constant column leaves ~ulp rounding residue in `var`
+                // (the mean of n equal floats is not exactly the value),
+                // and scale-only division by that residue would blow the
+                // column up by ~1e15 — unlike the dense arm, which
+                // centers first and therefore degrades gracefully. So a
+                // column only counts as varying when its sd is
+                // meaningfully large *relative to its own magnitude*
+                // (rms); below that it is constant for every numerical
+                // purpose and is left untouched.
+                let (_, vals) = x.col(j);
+                let nnz = vals.len();
+                let mean = vals.iter().sum::<f64>() / n as f64;
+                let dev_sq: f64 = vals.iter().map(|v| (v - mean) * (v - mean)).sum();
+                let var = (dev_sq + (n - nnz) as f64 * mean * mean) / n as f64;
+                let second_moment = vals.iter().map(|v| v * v).sum::<f64>() / n as f64;
+                // sd > 1e-12 * rms — rounding residue sits ~1e-16 * rms.
+                if var > second_moment * 1e-24 {
+                    let sd = var.sqrt();
+                    x.col_values_mut(j).iter_mut().for_each(|v| *v /= sd);
+                }
             }
         }
     }
@@ -89,6 +158,7 @@ pub fn standardize(ds: &mut Dataset) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::sparse::Csc;
     use crate::linalg::Mat;
 
     #[test]
@@ -119,11 +189,31 @@ mod tests {
         } else {
             unreachable!()
         };
-        deseasonalize_detrend(&mut ds);
+        deseasonalize_detrend(&mut ds).unwrap();
         if let Design::Dense(x) = &ds.x {
             let resid: f64 = x.col(0).iter().map(|v| v.abs()).sum::<f64>() / n as f64;
             assert!(resid < 0.1 * before, "seasonal residual {resid} vs before {before}");
         }
+    }
+
+    #[test]
+    fn deseasonalize_rejects_sparse_designs_without_touching_y() {
+        // Regression: the sparse arm used to silently skip X (and still
+        // deseasonalize y!), leaving the workload half-processed. Now it
+        // is an explicit error and the dataset is untouched.
+        let x = Csc::from_triplets(24, 2, vec![(0, 3, 1.0), (1, 7, -2.0)]);
+        let y: Vec<f64> = (0..24).map(|i| (i % 12) as f64).collect();
+        let mut ds = Dataset {
+            x: Design::Sparse(x),
+            y: Mat::col_vec(&y),
+            group_size: None,
+            name: "sparse-seasonal".into(),
+        };
+        let err = deseasonalize_detrend(&mut ds).unwrap_err();
+        assert!(err.contains("dense"), "unhelpful error: {err}");
+        assert!(err.contains("sparse-seasonal"), "error should name the dataset: {err}");
+        // y must not be half-processed on the error path
+        assert_eq!(ds.y.col(0), &y[..], "y was mutated despite the error");
     }
 
     #[test]
@@ -142,5 +232,115 @@ mod tests {
             assert!((var - 1.0).abs() < 1e-12);
         }
         assert!(ds.y.as_slice().iter().all(|v| v.abs() < 1e-12));
+    }
+
+    #[test]
+    fn standardize_sparse_scales_to_unit_variance_preserving_sparsity() {
+        // Regression: the sparse arm used to be a silent no-op. Scale-only
+        // standardization must leave the nonzero pattern identical and the
+        // per-column variance (about the true mean, zeros included) at 1.
+        let trip = vec![
+            (0, 0, 3.0),
+            (0, 2, -1.0),
+            (0, 5, 4.0),
+            (1, 1, 2.0),
+            (1, 4, 2.0),
+            // column 2 stays empty (zero variance — untouched)
+        ];
+        let x = Csc::from_triplets(6, 3, trip);
+        let dense_before = x.to_dense();
+        let y: Vec<f64> = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut ds = Dataset {
+            x: Design::Sparse(x),
+            y: Mat::col_vec(&y),
+            group_size: None,
+            name: "t".into(),
+        };
+        standardize(&mut ds);
+        let Design::Sparse(xs) = &ds.x else { unreachable!() };
+        assert_eq!(xs.nnz(), 5, "standardization changed the nonzero count");
+        let dense_after = xs.to_dense();
+        let n = 6.0;
+        for j in 0..2 {
+            let dense_col: Vec<f64> = (0..6).map(|i| dense_after[(i, j)]).collect();
+            let mean = dense_col.iter().sum::<f64>() / n;
+            let var = dense_col.iter().map(|v| v * v).sum::<f64>() / n - mean * mean;
+            assert!((var - 1.0).abs() < 1e-12, "col {j} variance {var} != 1");
+            // zeros stayed zeros, nonzeros stayed where they were
+            for i in 0..6 {
+                assert_eq!(
+                    dense_before[(i, j)] == 0.0,
+                    dense_col[i] == 0.0,
+                    "sparsity pattern changed at ({i},{j})"
+                );
+            }
+        }
+        // the scale factor is uniform per column: ratios are preserved
+        let d = xs.to_dense();
+        assert!((d[(0, 0)] / d[(2, 0)] - (3.0 / -1.0)).abs() < 1e-12);
+        // empty column untouched
+        assert_eq!(xs.col(2).0.len(), 0);
+        // y is centered exactly like the dense path
+        let ym: f64 = ds.y.as_slice().iter().sum::<f64>() / n;
+        assert!(ym.abs() < 1e-12);
+    }
+
+    #[test]
+    fn standardize_sparse_leaves_constant_columns_untouched() {
+        // A fully-stored constant column has variance exactly 0; the
+        // naive E[x^2] - mean^2 formula leaves ~ulp cancellation residue
+        // that would slip past the `sd > 0` guard and scale the column by
+        // ~1e8. The centered accumulation must yield var == 0 exactly.
+        let c = 0.1; // non-dyadic on purpose
+        let trip: Vec<(usize, usize, f64)> = (0..6).map(|i| (0, i, c)).collect();
+        let x = Csc::from_triplets(6, 1, trip);
+        let mut ds = Dataset {
+            x: Design::Sparse(x),
+            y: Mat::col_vec(&[0.0; 6]),
+            group_size: None,
+            name: "const".into(),
+        };
+        standardize(&mut ds);
+        let Design::Sparse(xs) = &ds.x else { unreachable!() };
+        for &v in xs.col(0).1 {
+            assert_eq!(v, c, "constant column was rescaled (sd residue slipped through)");
+        }
+    }
+
+    #[test]
+    fn standardize_sparse_matches_dense_scale_factor() {
+        // On the same data, the sparse scale-only path must apply exactly
+        // the sd the dense path computes (the dense path then also
+        // centers; compare variances, which centering does not change).
+        let trip = vec![(0, 0, 1.0), (0, 3, 5.0), (1, 2, -2.0), (1, 4, 7.0)];
+        let x = Csc::from_triplets(5, 2, trip);
+        let dense = x.to_dense();
+        let mut sp = Dataset {
+            x: Design::Sparse(x),
+            y: Mat::col_vec(&[0.0; 5]),
+            group_size: None,
+            name: "sp".into(),
+        };
+        let mut de = Dataset {
+            x: Design::Dense(dense),
+            y: Mat::col_vec(&[0.0; 5]),
+            group_size: None,
+            name: "de".into(),
+        };
+        standardize(&mut sp);
+        standardize(&mut de);
+        let Design::Sparse(xs) = &sp.x else { unreachable!() };
+        let Design::Dense(xd) = &de.x else { unreachable!() };
+        let sparse_after = xs.to_dense();
+        for j in 0..2 {
+            let sc: Vec<f64> = (0..5).map(|i| sparse_after[(i, j)]).collect();
+            let sparse_mean = sc.iter().sum::<f64>() / 5.0;
+            let sparse_var = sc.iter().map(|v| v * v).sum::<f64>() / 5.0 - sparse_mean.powi(2);
+            let dense_var = xd.col(j).iter().map(|v| v * v).sum::<f64>() / 5.0;
+            assert!(
+                (sparse_var - dense_var).abs() < 1e-12,
+                "col {j}: sparse var {sparse_var} vs dense var {dense_var}"
+            );
+        }
     }
 }

@@ -211,7 +211,8 @@ pub fn climate_like(n: usize, grid_points: usize, seed: u64) -> Dataset {
         group_size: Some(gs),
         name: format!("climate-like(n={n},groups={grid_points})"),
     };
-    super::preprocess::deseasonalize_detrend(&mut ds);
+    super::preprocess::deseasonalize_detrend(&mut ds)
+        .expect("climate-like designs are dense");
     super::preprocess::standardize(&mut ds);
     ds
 }

@@ -30,6 +30,14 @@
 //! bitwise-transparent (`PathConfig::compact`, on by default; see the
 //! "Working-set compaction" section of the [`screening`] docs).
 //!
+//! Every gap pass runs through a dual-point engine
+//! ([`screening::dual`]): the solver keeps the best dual objective seen
+//! per lambda (`PathConfig::dual`, default `best`), so the reported gap
+//! — and the Gap Safe radius built from it — is monotonically
+//! non-increasing across passes instead of oscillating with the raw
+//! residual rescaling (`rescale` restores the historical output bit for
+//! bit; `refine` adds a convex-combination line search).
+//!
 //! On top of it sits a resident model-serving subsystem ([`serve`]):
 //! `gapsafe serve` runs a std-only HTTP server whose model registry keeps
 //! fitted paths alive between requests, answering repeat fits from cache

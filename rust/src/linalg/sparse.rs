@@ -122,6 +122,16 @@ impl Csc {
         dot(val, val)
     }
 
+    /// Mutable view of column j's stored values (the structure — row
+    /// indices and nnz — is fixed; this supports in-place *scaling*, e.g.
+    /// the sparse standardization of `data::preprocess`, which must never
+    /// introduce or remove nonzeros).
+    #[inline]
+    pub fn col_values_mut(&mut self, j: usize) -> &mut [f64] {
+        let (a, b) = (self.indptr[j], self.indptr[j + 1]);
+        &mut self.values[a..b]
+    }
+
     /// Physically repack the listed columns into a new, contiguous CSC
     /// matrix (column `c` of the result is column `cols[c]` of `self`,
     /// with identical row indices and values — unit-stride after packing).

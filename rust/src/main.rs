@@ -6,9 +6,9 @@
 //!                     [--threads 4]   (chunked parallel path engine)
 //!   gapsafe solve     --task lasso --data synth:leukemia --lam-ratio 0.1 --rule gap-dyn
 //!                     [--threads 4]   (parallel screening sweep)
-//!   gapsafe cv        --task lasso --data ... --folds 5 [--threads 0]   (K-fold CV)
-//!   gapsafe batch     --jobs 8 [--threads 0]   (BatchRunner serving demo)
-//!   gapsafe serve     --port 7878 --threads 0 --cache-mb 256   (resident HTTP model server)
+//!   gapsafe cv        --task lasso --data ... --folds 5 [--threads auto]   (K-fold CV)
+//!   gapsafe batch     --jobs 8 [--threads auto]   (BatchRunner serving demo)
+//!   gapsafe serve     --port 7878 --threads auto --cache-mb 256   (resident HTTP model server)
 //!   gapsafe fig3|fig4|fig5|fig6    [--small] [--out results/]
 //!   gapsafe selftest  [--artifacts artifacts/]   (PJRT vs native gap check)
 //!   gapsafe artifacts [--artifacts artifacts/]   (list + validate manifest)
@@ -19,7 +19,7 @@ use gapsafe::coordinator::{active_fraction_experiment, report, time_to_convergen
 use gapsafe::data::{load_spec, synth};
 use gapsafe::penalty::ActiveSet;
 use gapsafe::runtime::{artifact, PjrtEngine};
-use gapsafe::screening::Rule;
+use gapsafe::screening::{DualStrategy, Rule};
 use gapsafe::serve::{ServeConfig, Server};
 use gapsafe::solver::path::{lambda_grid, solve_path, PathConfig, WarmStart};
 use gapsafe::solver::{solve_fixed_lambda, SolveOptions};
@@ -84,7 +84,10 @@ fn usage() {
            --data synth:leukemia | synth:meg | synth:climate | csv:<path> | synth:reg:<n>x<p>\n\
            --rule none|static|elghaoui|dst3|bonnefoy|gap-seq|gap-dyn|gap|strong\n\
            --warm standard|active|strong     --eps 1e-6   --grid 100 (>= 1)   --delta 3\n\
-           --threads 1 (1 = serial, 0 = all cores; path chunks / CV folds / batch jobs)\n\
+           --threads N|auto (>= 1 workers, auto = all cores; path chunks / CV folds /\n\
+                      batch jobs; path/solve default 1 = exact serial, cv/batch default auto)\n\
+           --dual rescale|best|refine (dual-point strategy of the gap passes; default\n\
+                      best = monotone Gap Safe radii, rescale = historical bitwise output)\n\
            --seed 42   --small (shrink synthetic workloads)   --out results\n\
            --max-epochs 10000   --fce 10 (gap/screening cadence)\n\
            --no-compact (path/solve/cv/batch/serve: disable active-set compaction;\n\
@@ -93,8 +96,9 @@ fn usage() {
            cv:        --folds 5\n\
            batch:     --jobs 8\n\
            solve:     --lam-ratio 0.1\n\
-           serve:     --port 7878   --host 127.0.0.1   --threads 0 (HTTP workers)\n\
-                      --workers 0 (fit workers)   --cache-mb 256 (registry budget)\n\
+           serve:     --port 7878   --host 127.0.0.1   --threads auto (HTTP workers)\n\
+                      --workers auto (fit workers)   --cache-mb 256 (registry budget)\n\
+                      --max-body-mb 16 (reject larger request bodies with 413)\n\
                       endpoints: GET /healthz | GET /metrics | POST /v1/fit\n\
                                  GET /v1/jobs/<id> | POST /v1/predict   (docs/SERVING.md)\n\
            selftest/artifacts: --artifacts artifacts (manifest dir)"
@@ -157,15 +161,57 @@ fn flag_compact(o: &Flags) -> bool {
     !o.contains_key("no-compact")
 }
 
+/// Dual-point strategy for the gap passes (`--dual rescale|best|refine`,
+/// default `best` — see the `screening::dual` module docs).
+fn flag_dual(o: &Flags) -> Result<DualStrategy, String> {
+    DualStrategy::parse(flag(o, "dual", "best")).map_err(|e| format!("--dual: {e}"))
+}
+
+/// Worker-count flag (`--threads`, `--workers`): `auto` / `all` resolve
+/// to every available core *at parse time*, a positive integer is taken
+/// literally, and a literal `0` is rejected with a pointer to `auto` —
+/// a zero-worker pool is never what the user meant, and letting it
+/// through historically made downstream layers silently reinterpret it
+/// (mirrors the `--grid 0` fix; `PathConfig::validate` backstops this).
+fn flag_workers(o: &Flags, key: &str, default: usize) -> Result<usize, String> {
+    match o.get(key).map(String::as_str) {
+        None => Ok(default),
+        Some("auto") | Some("all") => {
+            Ok(gapsafe::solver::parallel::effective_threads(0))
+        }
+        Some(v) => {
+            let n: usize = v.parse().map_err(|e| format!("--{key}: {e}"))?;
+            if n == 0 {
+                return Err(format!(
+                    "--{key} must be >= 1 (use --{key} auto, or omit the flag, for all cores)"
+                ));
+            }
+            Ok(n)
+        }
+    }
+}
+
+/// All-cores default for the subcommands whose historical default was
+/// "use the whole machine" (cv / batch / serve).
+fn auto_workers() -> usize {
+    gapsafe::solver::parallel::effective_threads(0)
+}
+
 fn cmd_serve(o: &Flags) -> Result<(), String> {
     let host = flag(o, "host", "127.0.0.1");
     let port = flag_usize(o, "port", 7878)?;
+    let max_body_mb = flag_usize(o, "max-body-mb", 16)?;
+    if max_body_mb == 0 {
+        return Err("--max-body-mb must be >= 1".into());
+    }
     let cfg = ServeConfig {
         addr: format!("{host}:{port}"),
-        http_threads: flag_usize(o, "threads", 0)?,
-        fit_workers: flag_usize(o, "workers", 0)?,
+        http_threads: flag_workers(o, "threads", auto_workers())?,
+        fit_workers: flag_workers(o, "workers", auto_workers())?,
         cache_mb: flag_usize(o, "cache-mb", 256)?,
         compact: flag_compact(o),
+        dual: flag_dual(o)?,
+        max_body_mb,
     };
     let server = Server::bind(&cfg)?;
     println!(
@@ -193,8 +239,9 @@ fn cmd_path(o: &Flags) -> Result<(), String> {
         eps_is_absolute: false,
         max_epochs: flag_usize(o, "max-epochs", 10_000)?,
         screen_every: flag_usize(o, "fce", 10)?,
-        threads: flag_usize(o, "threads", 1)?,
+        threads: flag_workers(o, "threads", 1)?,
         compact: flag_compact(o),
+        dual: flag_dual(o)?,
     };
     cfg.validate()?;
     let res = solve_path(&prob, &cfg);
@@ -235,12 +282,13 @@ fn cmd_cv(o: &Flags) -> Result<(), String> {
         screen_every: flag_usize(o, "fce", 10)?,
         threads: 1,
         compact: flag_compact(o),
+        dual: flag_dual(o)?,
     };
     cfg.validate()?;
     let cv = CvConfig {
         folds: flag_usize(o, "folds", 5)?,
         seed,
-        threads: flag_usize(o, "threads", 0)?,
+        threads: flag_workers(o, "threads", auto_workers())?,
     };
     let sw = gapsafe::util::Stopwatch::start();
     let res = kfold_cv(&ds, task, &cfg, &cv)?;
@@ -267,7 +315,7 @@ fn cmd_batch(o: &Flags) -> Result<(), String> {
     let seed = flag_usize(o, "seed", 42)? as u64;
     let small = o.contains_key("small");
     let jobs = flag_usize(o, "jobs", 8)?;
-    let threads = flag_usize(o, "threads", 0)?;
+    let threads = flag_workers(o, "threads", auto_workers())?;
     let task = Task::parse(flag(o, "task", "lasso"))?;
     let spec = flag(o, "data", "synth:reg:100x2000");
     let cfg = PathConfig {
@@ -281,6 +329,7 @@ fn cmd_batch(o: &Flags) -> Result<(), String> {
         screen_every: flag_usize(o, "fce", 10)?,
         threads: 1,
         compact: flag_compact(o),
+        dual: flag_dual(o)?,
     };
     cfg.validate()?;
     let mut requests = Vec::with_capacity(jobs);
@@ -317,7 +366,7 @@ fn cmd_solve(o: &Flags) -> Result<(), String> {
     let task = Task::parse(flag(o, "task", "lasso"))?;
     let prob = build_problem(ds, task)?;
     // Fan the O(np) screening-sweep correlations out over the pool.
-    prob.set_screen_threads(flag_usize(o, "threads", 1)?);
+    prob.set_screen_threads(flag_workers(o, "threads", 1)?);
     let lam = flag_f64(o, "lam-ratio", 0.1)? * prob.lambda_max();
     let mut rule = Rule::parse(flag(o, "rule", "gap-dyn"))?.build();
     let opts = SolveOptions {
@@ -326,6 +375,7 @@ fn cmd_solve(o: &Flags) -> Result<(), String> {
         screen_every: flag_usize(o, "fce", 10)?,
         max_kkt_rounds: 20,
         compact: flag_compact(o),
+        dual: flag_dual(o)?,
     };
     let res = solve_fixed_lambda(&prob, lam, rule.as_mut(), &opts);
     println!(
@@ -500,4 +550,41 @@ fn cmd_lmax(o: &Flags) -> Result<(), String> {
     let prob = build_problem(ds, task)?;
     println!("lambda_max = {:.10e}", prob.lambda_max());
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flags(pairs: &[(&str, &str)]) -> Flags {
+        pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+    }
+
+    #[test]
+    fn flag_workers_rejects_zero_and_resolves_auto() {
+        let err = flag_workers(&flags(&[("threads", "0")]), "threads", 1).unwrap_err();
+        assert!(err.contains("auto"), "unhelpful error: {err}");
+        assert!(flag_workers(&flags(&[("workers", "0")]), "workers", 1).is_err());
+        assert_eq!(flag_workers(&flags(&[("threads", "3")]), "threads", 1).unwrap(), 3);
+        // omitted flag takes the subcommand default untouched
+        assert_eq!(flag_workers(&flags(&[]), "threads", 7).unwrap(), 7);
+        // auto / all resolve to a concrete positive worker count
+        for spelled in ["auto", "all"] {
+            let n = flag_workers(&flags(&[("threads", spelled)]), "threads", 1).unwrap();
+            assert!(n >= 1, "--threads {spelled} resolved to {n}");
+        }
+        assert!(flag_workers(&flags(&[("threads", "many")]), "threads", 1).is_err());
+    }
+
+    #[test]
+    fn flag_dual_parses_strategies() {
+        assert_eq!(flag_dual(&flags(&[])).unwrap(), DualStrategy::BestKept);
+        assert_eq!(
+            flag_dual(&flags(&[("dual", "rescale")])).unwrap(),
+            DualStrategy::Rescale
+        );
+        assert_eq!(flag_dual(&flags(&[("dual", "refine")])).unwrap(), DualStrategy::Refine);
+        let err = flag_dual(&flags(&[("dual", "bogus")])).unwrap_err();
+        assert!(err.starts_with("--dual:"), "{err}");
+    }
 }

@@ -18,6 +18,7 @@ use crate::linalg::compact::CompactDesign;
 use crate::linalg::sparse::Design;
 use crate::linalg::Mat;
 use crate::penalty::{dual_norm_active, ActiveSet, GroupNorms, Penalty, ScreenStats};
+use crate::screening::dual::{DualPoint, DualStrategy};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -385,7 +386,9 @@ impl Problem {
 
     /// [`Self::gap_pass`] with an optional compact working view: the O(np)
     /// correlation stage then sweeps the packed columns only (bitwise
-    /// identical entries — see [`crate::linalg::compact`]).
+    /// identical entries — see [`crate::linalg::compact`]). Reports the
+    /// freshly rescaled dual point (strategy `rescale`); solvers that keep
+    /// a [`DualPoint`] tracker call [`Self::gap_pass_dual`] instead.
     pub fn gap_pass_with(
         &self,
         beta: &Mat,
@@ -393,6 +396,26 @@ impl Problem {
         lam: f64,
         active: &ActiveSet,
         view: Option<&CompactDesign>,
+    ) -> GapResult {
+        let mut dual_pt = DualPoint::new(DualStrategy::Rescale);
+        self.gap_pass_dual(beta, z, lam, active, view, &mut dual_pt)
+    }
+
+    /// [`Self::gap_pass_with`] consulting a [`DualPoint`] tracker: the
+    /// freshly rescaled candidate (Eq. 18) is offered to the tracker,
+    /// which may substitute (or mix in) the best dual point it has seen
+    /// at this lambda — see [`crate::screening::dual`] for the strategy
+    /// semantics and the safety argument. With a
+    /// [`DualStrategy::Rescale`] tracker this is statement-for-statement
+    /// the historical gap pass, so its output is bitwise identical.
+    pub fn gap_pass_dual(
+        &self,
+        beta: &Mat,
+        z: &Mat,
+        lam: f64,
+        active: &ActiveSet,
+        view: Option<&CompactDesign>,
+        dual_pt: &mut DualPoint,
     ) -> GapResult {
         let (n, q) = (self.n(), self.q());
         let mut rho = Mat::zeros(n, q);
@@ -408,9 +431,13 @@ impl Problem {
         // stats are functions of X^T theta = corr / alpha
         let mut corr_theta = corr;
         corr_theta.as_mut_slice().iter_mut().for_each(|v| *v /= alpha);
+        let dual_new = self.fit.dual(&theta, lam);
+        // The tracker picks the reported point (kept, fresh, or a convex
+        // combination) and hands back its correlations alongside, so the
+        // sphere statistics below never pay a second O(np) sweep.
+        let (theta, corr_theta, dual) = dual_pt.select(self, lam, theta, corr_theta, dual_new);
         let stats = self.pen.stats(&corr_theta, active);
         let primal = self.primal(beta, z, lam);
-        let dual = self.fit.dual(&theta, lam);
         let gap = (primal - dual).max(0.0);
         let radius = (2.0 * gap / self.fit.gamma()).sqrt() / lam;
         GapResult { primal, dual, gap, radius, theta, stats }
@@ -771,6 +798,79 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn gap_pass_dual_rescale_is_bitwise_identical() {
+        // A Rescale tracker must reproduce gap_pass_with exactly — every
+        // float to the bit — across several iterates of the same solve.
+        let (prob, _) = lasso_problem(21, 18, 40);
+        let lam = 0.4 * prob.lambda_max();
+        let active = ActiveSet::full(prob.pen.groups());
+        let mut rng = Prng::new(77);
+        let mut tracker = DualPoint::new(DualStrategy::Rescale);
+        for _ in 0..4 {
+            let mut beta = Mat::zeros(40, 1);
+            for j in 0..40 {
+                if rng.bernoulli(0.2) {
+                    beta[(j, 0)] = rng.gaussian();
+                }
+            }
+            let z = prob.predict(&beta);
+            let a = prob.gap_pass_with(&beta, &z, lam, &active, None);
+            let b = prob.gap_pass_dual(&beta, &z, lam, &active, None, &mut tracker);
+            assert_eq!(a.primal.to_bits(), b.primal.to_bits());
+            assert_eq!(a.dual.to_bits(), b.dual.to_bits());
+            assert_eq!(a.gap.to_bits(), b.gap.to_bits());
+            assert_eq!(a.radius.to_bits(), b.radius.to_bits());
+            for (x, y) in a.theta.as_slice().iter().zip(b.theta.as_slice()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            for g in 0..prob.n_groups() {
+                assert_eq!(a.stats.group_dual[g].to_bits(), b.stats.group_dual[g].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn gap_pass_dual_best_kept_dual_is_monotone() {
+        // Feed the tracker a good iterate, then a deliberately worse one:
+        // the reported dual must not drop, the reported gap must shrink
+        // (better beta) or use the kept dual point, and the kept stats /
+        // radius must stay a consistent (center, radius) pair.
+        let (prob, _) = lasso_problem(22, 16, 30);
+        let lam = 0.5 * prob.lambda_max();
+        let active = ActiveSet::full(prob.pen.groups());
+        let mut tracker = DualPoint::new(DualStrategy::BestKept);
+        // Iterate 1: beta = 0 (decent dual point at moderate lambda).
+        let b0 = Mat::zeros(30, 1);
+        let z0 = prob.predict(&b0);
+        let r0 = prob.gap_pass_dual(&b0, &z0, lam, &active, None, &mut tracker);
+        // Iterate 2: a large random beta — its rescaled dual point is much
+        // worse, so the tracker must report the kept one.
+        let mut rng = Prng::new(5);
+        let mut b1 = Mat::zeros(30, 1);
+        for j in 0..30 {
+            b1[(j, 0)] = 3.0 * rng.gaussian();
+        }
+        let z1 = prob.predict(&b1);
+        let r1 = prob.gap_pass_dual(&b1, &z1, lam, &active, None, &mut tracker);
+        assert!(r1.dual >= r0.dual, "best-kept dual decreased: {} < {}", r1.dual, r0.dual);
+        // compare against what plain rescaling would have reported for
+        // the same iterate: best-kept dominates it by construction
+        let fresh = prob.gap_pass_with(&b1, &z1, lam, &active, None);
+        assert!(fresh.dual <= r1.dual);
+        assert!(fresh.gap >= r1.gap, "best-kept widened the gap");
+        if fresh.dual < r0.dual {
+            // the fresh candidate lost: the kept point is returned verbatim
+            for (x, y) in r0.theta.as_slice().iter().zip(r1.theta.as_slice()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "kept theta was not returned");
+            }
+            assert_eq!(r0.dual.to_bits(), r1.dual.to_bits());
+        }
+        // the reported (gap, radius) pair stays consistent (Thm. 2 input)
+        let want_r = (2.0 * r1.gap / prob.fit.gamma()).sqrt() / lam;
+        assert!((r1.radius - want_r).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,385 @@
+//! Dual-point engine: strategies for choosing the dual feasible point a
+//! gap pass reports, and the per-lambda tracker that keeps the best one.
+//!
+//! The Gap Safe radius `r = sqrt(2 gap) / (lambda sqrt(gamma))` (Thm. 2)
+//! is only as tight as the dual point the gap is evaluated at. The plain
+//! residual rescaling Theta(z) (Eq. 18) rebuilds that point from scratch
+//! at every gap pass and throws it away — so the dual objective, and with
+//! it the radius, can *oscillate* between passes even though the primal
+//! is monotone. "Mind the duality gap" (Fercoq et al., 2015) observed
+//! that any dual feasible point is admissible in Thm. 2, so keeping the
+//! best one seen so far costs one comparison and makes the reported gap
+//! monotonically non-increasing within a lambda.
+//!
+//! Three strategies, selectable via `SolveOptions::dual` /
+//! `PathConfig::dual` / the CLI `--dual` flag:
+//!
+//! * [`DualStrategy::Rescale`] — today's behavior: report the freshly
+//!   rescaled point, remember nothing. Kept bitwise-identical to the
+//!   historical output so existing pins survive.
+//! * [`DualStrategy::BestKept`] — remember the point with the highest
+//!   dual objective seen so far at this lambda and report whichever of
+//!   {kept, fresh} is better. The reported dual is non-decreasing, so
+//!   the reported gap (primal is non-increasing under CD) and the Gap
+//!   Safe radius are non-increasing across gap passes.
+//! * [`DualStrategy::Refine`] — additionally probe a few convex
+//!   combinations between the kept and the fresh point and report the
+//!   combination with the largest dual objective. The dual feasible set
+//!   is convex, so every combination is feasible; evaluating the dual is
+//!   O(n q), negligible next to the O(n p) correlation sweep the pass
+//!   already paid for.
+//!
+//! Safety: Thm. 2 holds for *any* primal/dual feasible pair, so a sphere
+//! centered at the kept (or combined) point with the radius of its gap is
+//! exactly as safe as the rescaled one — only tighter. The tracker also
+//! keeps the correlations `X^T theta` of its point, so the sphere-test
+//! statistics are produced without a second O(n p) sweep; for convex
+//! combinations the correlations combine linearly (exactly in real
+//! arithmetic, to ~1 ulp in floats — absorbed by the conservative
+//! [`crate::penalty::SCREEN_MARGIN`]).
+
+use crate::linalg::Mat;
+use crate::problem::Problem;
+
+/// How the gap pass picks the dual feasible point it reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DualStrategy {
+    /// Fresh residual rescaling every pass (the historical behavior;
+    /// bitwise-identical to pre-tracker output).
+    Rescale,
+    /// Report the best-dual point seen so far at this lambda.
+    BestKept,
+    /// Best-kept plus a cheap convex-combination line search between the
+    /// kept and the fresh point.
+    Refine,
+}
+
+impl DualStrategy {
+    pub const ALL: [DualStrategy; 3] =
+        [DualStrategy::Rescale, DualStrategy::BestKept, DualStrategy::Refine];
+
+    /// Parse a CLI / request label.
+    ///
+    /// ```
+    /// use gapsafe::screening::DualStrategy;
+    ///
+    /// assert_eq!(DualStrategy::parse("rescale").unwrap(), DualStrategy::Rescale);
+    /// assert_eq!(DualStrategy::parse("best").unwrap(), DualStrategy::BestKept);
+    /// for s in DualStrategy::ALL {
+    ///     assert_eq!(DualStrategy::parse(s.label()).unwrap(), s);
+    /// }
+    /// assert!(DualStrategy::parse("bogus").is_err());
+    /// ```
+    pub fn parse(s: &str) -> Result<DualStrategy, String> {
+        match s {
+            "rescale" => Ok(DualStrategy::Rescale),
+            "best" | "best-kept" => Ok(DualStrategy::BestKept),
+            "refine" => Ok(DualStrategy::Refine),
+            other => Err(format!("unknown dual strategy '{other}' (rescale|best|refine)")),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            DualStrategy::Rescale => "rescale",
+            DualStrategy::BestKept => "best",
+            DualStrategy::Refine => "refine",
+        }
+    }
+}
+
+impl Default for DualStrategy {
+    /// `best`: monotone radii for one comparison per pass.
+    fn default() -> Self {
+        DualStrategy::BestKept
+    }
+}
+
+/// The kept point: its dual objective, the point itself and its
+/// correlations `X^T theta` (entries valid on every active set that is a
+/// subset of the one it was recorded under — safe rules only shrink the
+/// active set within a lambda; the KKT repair of un-safe rules grows it
+/// and must [`DualPoint::invalidate`] the tracker).
+struct BestDual {
+    dual: f64,
+    theta: Mat,
+    corr: Mat,
+}
+
+/// Per-lambda tracker of the best dual feasible point (owned by the
+/// solver state; every gap pass runs through
+/// [`Problem::gap_pass_dual`], which consults this).
+pub struct DualPoint {
+    strategy: DualStrategy,
+    /// Bit pattern of the lambda the kept point belongs to (the dual
+    /// objective is lambda-dependent, so the kept point resets when the
+    /// tracker is reused across path points).
+    lam_bits: u64,
+    best: Option<BestDual>,
+}
+
+/// Interior probe points of the Refine line search (endpoints are free:
+/// their duals are already known).
+const REFINE_PROBES: [f64; 3] = [0.25, 0.5, 0.75];
+
+impl DualPoint {
+    pub fn new(strategy: DualStrategy) -> Self {
+        DualPoint { strategy, lam_bits: f64::NAN.to_bits(), best: None }
+    }
+
+    pub fn strategy(&self) -> DualStrategy {
+        self.strategy
+    }
+
+    /// Drop the kept point. Must be called when the active set *grows*
+    /// (strong-rule KKT repair): the kept correlations are stale for
+    /// reactivated groups.
+    pub fn invalidate(&mut self) {
+        self.best = None;
+    }
+
+    /// Whether a kept point is currently held (diagnostics / tests).
+    pub fn has_kept(&self) -> bool {
+        self.best.is_some()
+    }
+
+    /// Choose the reported point given the freshly rescaled candidate
+    /// `(theta_new, corr_new, dual_new)` at `lam`. Returns the chosen
+    /// `(theta, corr, dual)`; updates the kept point so the reported dual
+    /// never decreases within a lambda (for `BestKept` / `Refine`).
+    pub(crate) fn select(
+        &mut self,
+        prob: &Problem,
+        lam: f64,
+        theta_new: Mat,
+        corr_new: Mat,
+        dual_new: f64,
+    ) -> (Mat, Mat, f64) {
+        if self.strategy == DualStrategy::Rescale {
+            // Bitwise-identical to the historical pass: hand the fresh
+            // candidate straight through, remember nothing.
+            return (theta_new, corr_new, dual_new);
+        }
+        if self.lam_bits != lam.to_bits() {
+            self.best = None;
+            self.lam_bits = lam.to_bits();
+        }
+        let Some(kept) = &self.best else {
+            self.best = Some(BestDual {
+                dual: dual_new,
+                theta: theta_new.clone(),
+                corr: corr_new.clone(),
+            });
+            return (theta_new, corr_new, dual_new);
+        };
+        // NaN guard: a degenerate fresh dual never displaces a kept point.
+        let fresh_wins = dual_new >= kept.dual;
+        match self.strategy {
+            DualStrategy::BestKept => {
+                if fresh_wins {
+                    self.best = Some(BestDual {
+                        dual: dual_new,
+                        theta: theta_new.clone(),
+                        corr: corr_new.clone(),
+                    });
+                    (theta_new, corr_new, dual_new)
+                } else {
+                    (kept.theta.clone(), kept.corr.clone(), kept.dual)
+                }
+            }
+            DualStrategy::Refine => {
+                // Line search over theta(t) = kept + t (fresh - kept),
+                // t in {0, probes, 1}; every point is a convex combination
+                // of two feasible points, hence feasible.
+                let (mut best_t, mut best_d) =
+                    if fresh_wins { (1.0, dual_new) } else { (0.0, kept.dual) };
+                let mut scratch = Mat::zeros(theta_new.rows(), theta_new.cols());
+                for &t in &REFINE_PROBES {
+                    for ((s, &a), &b) in scratch
+                        .as_mut_slice()
+                        .iter_mut()
+                        .zip(kept.theta.as_slice())
+                        .zip(theta_new.as_slice())
+                    {
+                        *s = a + t * (b - a);
+                    }
+                    let d = prob.fit.dual(&scratch, lam);
+                    if d > best_d {
+                        best_d = d;
+                        best_t = t;
+                    }
+                }
+                if best_t == 1.0 {
+                    self.best = Some(BestDual {
+                        dual: dual_new,
+                        theta: theta_new.clone(),
+                        corr: corr_new.clone(),
+                    });
+                    return (theta_new, corr_new, dual_new);
+                }
+                if best_t == 0.0 {
+                    return (kept.theta.clone(), kept.corr.clone(), kept.dual);
+                }
+                // Interior winner: materialize theta(t) and the linearly
+                // combined correlations, keep it as the new best.
+                let t = best_t;
+                let mut theta = kept.theta.clone();
+                for (s, &b) in theta.as_mut_slice().iter_mut().zip(theta_new.as_slice()) {
+                    *s += t * (b - *s);
+                }
+                let mut corr = kept.corr.clone();
+                for (s, &b) in corr.as_mut_slice().iter_mut().zip(corr_new.as_slice()) {
+                    *s += t * (b - *s);
+                }
+                self.best = Some(BestDual {
+                    dual: best_d,
+                    theta: theta.clone(),
+                    corr: corr.clone(),
+                });
+                (theta, corr, best_d)
+            }
+            DualStrategy::Rescale => unreachable!("handled above"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datafit::Quadratic;
+    use crate::linalg::sparse::Design;
+    use crate::penalty::{ActiveSet, L1};
+    use crate::util::prng::Prng;
+
+    fn toy(seed: u64, n: usize, p: usize) -> Problem {
+        let mut rng = Prng::new(seed);
+        let mut x = Mat::zeros(n, p);
+        for v in x.as_mut_slice() {
+            *v = rng.gaussian();
+        }
+        let y: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        Problem::new(Design::Dense(x), Box::new(Quadratic::from_vec(&y)), Box::new(L1::new(p)))
+    }
+
+    #[test]
+    fn parse_labels_roundtrip_and_default() {
+        for s in DualStrategy::ALL {
+            assert_eq!(DualStrategy::parse(s.label()).unwrap(), s);
+        }
+        assert_eq!(DualStrategy::parse("best-kept").unwrap(), DualStrategy::BestKept);
+        assert!(DualStrategy::parse("nope").is_err());
+        assert_eq!(DualStrategy::default(), DualStrategy::BestKept);
+    }
+
+    #[test]
+    fn rescale_hands_candidate_through_untouched() {
+        let prob = toy(1, 8, 10);
+        let mut dp = DualPoint::new(DualStrategy::Rescale);
+        let theta = Mat::col_vec(&[0.1; 8]);
+        let corr = Mat::col_vec(&[0.2; 10]);
+        let (t2, c2, d2) = dp.select(&prob, 1.0, theta.clone(), corr.clone(), -3.5);
+        assert_eq!(t2.as_slice(), theta.as_slice());
+        assert_eq!(c2.as_slice(), corr.as_slice());
+        assert_eq!(d2, -3.5);
+        assert!(!dp.has_kept(), "rescale must remember nothing");
+    }
+
+    #[test]
+    fn best_kept_reports_monotone_dual() {
+        let prob = toy(2, 10, 12);
+        let mut dp = DualPoint::new(DualStrategy::BestKept);
+        let mk = |v: f64| (Mat::col_vec(&[v; 10]), Mat::col_vec(&[v; 12]));
+        let lam = 0.7;
+        let mut reported = Vec::new();
+        for &d in &[1.0, 3.0, 2.0, 2.5, 4.0] {
+            let (theta, corr) = mk(d);
+            let (_, _, got) = dp.select(&prob, lam, theta, corr, d);
+            reported.push(got);
+        }
+        assert_eq!(reported, vec![1.0, 3.0, 3.0, 3.0, 4.0]);
+        // lambda rollover resets the kept point
+        let (theta, corr) = mk(0.5);
+        let (_, _, got) = dp.select(&prob, lam * 0.5, theta, corr, 0.5);
+        assert_eq!(got, 0.5);
+        // invalidate drops the kept point
+        assert!(dp.has_kept());
+        dp.invalidate();
+        assert!(!dp.has_kept());
+    }
+
+    #[test]
+    fn best_kept_returns_the_kept_point_itself() {
+        let prob = toy(3, 6, 8);
+        let mut dp = DualPoint::new(DualStrategy::BestKept);
+        let good_theta = Mat::col_vec(&[0.9; 6]);
+        let good_corr = Mat::col_vec(&[0.8; 8]);
+        let _ = dp.select(&prob, 1.0, good_theta.clone(), good_corr.clone(), 5.0);
+        let (t, c, d) =
+            dp.select(&prob, 1.0, Mat::col_vec(&[0.0; 6]), Mat::col_vec(&[0.0; 8]), 1.0);
+        assert_eq!(d, 5.0);
+        assert_eq!(t.as_slice(), good_theta.as_slice());
+        assert_eq!(c.as_slice(), good_corr.as_slice());
+    }
+
+    #[test]
+    fn refine_never_reports_below_either_endpoint() {
+        // Real dual objective: refine's pick must dominate both the kept
+        // and the fresh candidate by construction.
+        let prob = toy(4, 12, 16);
+        let lam = 0.6;
+        let mut dp = DualPoint::new(DualStrategy::Refine);
+        let mut rng = Prng::new(9);
+        let mut prev_reported = f64::NEG_INFINITY;
+        for _ in 0..6 {
+            let mut theta = Mat::zeros(12, 1);
+            for v in theta.as_mut_slice() {
+                *v = 0.05 * rng.gaussian();
+            }
+            // corr = X^T theta so the kept correlations stay consistent
+            let full = ActiveSet::full(prob.pen.groups());
+            let mut corr = Mat::zeros(16, 1);
+            prob.corr_active(&theta, &full, &mut corr);
+            let d = prob.fit.dual(&theta, lam);
+            let (_, _, got) = dp.select(&prob, lam, theta, corr, d);
+            assert!(got >= d - 1e-15, "refine reported below the fresh candidate");
+            assert!(
+                got >= prev_reported - 1e-15,
+                "refine dual decreased: {got} < {prev_reported}"
+            );
+            prev_reported = got;
+        }
+    }
+
+    #[test]
+    fn refine_combined_corr_matches_true_correlations() {
+        // The linear combination of correlations must equal X^T theta(t)
+        // to floating-point accuracy (this is what SCREEN_MARGIN absorbs).
+        let prob = toy(5, 10, 14);
+        let lam = 0.5;
+        let mut dp = DualPoint::new(DualStrategy::Refine);
+        let full = ActiveSet::full(prob.pen.groups());
+        let mk = |scale: f64, seed: u64| {
+            let mut rng = Prng::new(seed);
+            let mut theta = Mat::zeros(10, 1);
+            for v in theta.as_mut_slice() {
+                *v = scale * rng.gaussian();
+            }
+            let mut corr = Mat::zeros(14, 1);
+            prob.corr_active(&theta, &full, &mut corr);
+            let d = prob.fit.dual(&theta, lam);
+            (theta, corr, d)
+        };
+        let (t1, c1, d1) = mk(0.02, 1);
+        let _ = dp.select(&prob, lam, t1, c1, d1);
+        let (t2, c2, d2) = mk(0.03, 2);
+        let (theta_sel, corr_sel, _) = dp.select(&prob, lam, t2, c2, d2);
+        let mut true_corr = Mat::zeros(14, 1);
+        prob.corr_active(&theta_sel, &full, &mut true_corr);
+        for j in 0..14 {
+            assert!(
+                (corr_sel[(j, 0)] - true_corr[(j, 0)]).abs() < 1e-12,
+                "combined corr diverged at {j}"
+            );
+        }
+    }
+}

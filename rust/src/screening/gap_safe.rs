@@ -5,10 +5,12 @@
 //! `r = sqrt(2 * gap) / (lambda * sqrt(gamma))` (see the
 //! [module docs](crate::screening) for the full sphere math):
 //!
-//! * *sequential* — center `theta_{t-1}` (the rescaled dual point kept from
-//!   the previous path point), radius evaluated with the previous primal
-//!   value re-priced at the new lambda (Eq. 15-17); runs once in
-//!   `begin_lambda`;
+//! * *sequential* — center `theta_{t-1}` (the dual point kept from the
+//!   previous path point; with the default `dual = best` strategy this is
+//!   the *best* dual point that lambda ever saw, not whatever the last
+//!   pass produced — see [`crate::screening::dual`]), radius evaluated
+//!   with the previous primal value re-priced at the new lambda
+//!   (Eq. 15-17); runs once in `begin_lambda`;
 //! * *dynamic* — center the current iterate's dual point, radius from the
 //!   current gap (Eq. 19-21); runs at every gap pass, so the sphere shrinks
 //!   as the solver converges and screening keeps improving (Prop. 5-6).

@@ -101,12 +101,56 @@
 //! later). Solver tests pin packed vs. full paths bit-for-bit — the
 //! sphere tests see identical statistics, so every Gap Safe certificate
 //! is untouched.
+//!
+//! # Dual points
+//!
+//! Every sphere above is built from a dual feasible point, and Thm. 2
+//! accepts *any* such point: for every feasible pair `(beta, theta)`,
+//!
+//! ```text
+//! theta_hat in B(theta, sqrt(2 gap(beta, theta)) / (lambda sqrt(gamma)))
+//! ```
+//!
+//! The plain rescaling `Theta(rho)` (Eq. 18) rebuilds `theta` from the
+//! current residual at every pass and forgets it. Because the map from
+//! iterates to dual points is not monotone in the dual objective, the
+//! reported gap — and with it the Gap Safe radius — can *increase*
+//! between passes even though the primal only decreases.
+//!
+//! The [`dual`] module fixes the frame: a [`DualPoint`] tracker keeps the
+//! point with the **best dual objective seen so far** at the current
+//! lambda and reports `argmax {D(kept), D(fresh)}` (strategy `best`), or
+//! additionally line-searches convex combinations of the two (strategy
+//! `refine`; the dual feasible set is convex, so every combination is
+//! feasible). Two consequences, both pinned by tests:
+//!
+//! * **monotone radii** — the reported dual is non-decreasing by
+//!   construction, the CD primal is non-increasing, so the reported gap
+//!   and the radius `r = sqrt(2 gap)/(lambda sqrt(gamma))` are
+//!   non-increasing across the gap passes of one lambda: screening can
+//!   only get tighter, never bounce back;
+//! * **better sequential spheres** — the `PrevSolution::theta` handed to
+//!   the next path point is the tracker's pick, so the sequential rule
+//!   (Eq. 15-17) centers its sphere at the best dual point of the
+//!   previous lambda rather than whatever the last pass produced.
+//!
+//! Safety is unchanged: the kept point is feasible, its gap against the
+//! current primal is a valid Thm. 2 input, and the kept correlations
+//! `X^T theta` (reused so no extra O(np) sweep is paid) are exact for
+//! `best` and within ~1 ulp for `refine` combinations — absorbed by the
+//! conservative [`crate::penalty::SCREEN_MARGIN`]. The strategy is
+//! selected by `SolveOptions::dual` / `PathConfig::dual` / CLI `--dual`
+//! (default `best`; `rescale` reproduces the historical output bit for
+//! bit).
+
+pub mod dual;
 
 mod baselines;
 mod gap_safe;
 mod strong;
 
 pub use baselines::{Dst3Rule, DynamicBonnefoyRule, StaticElGhaouiRule, StaticGapRule};
+pub use dual::{DualPoint, DualStrategy};
 pub use gap_safe::{GapSafeRule, GapSafeVariant};
 pub use strong::StrongRule;
 

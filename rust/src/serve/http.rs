@@ -8,8 +8,11 @@
 //! trivial; curl and the test harness both reconnect per call).
 //!
 //! Resource bounds, so a misbehaving client cannot wedge a worker:
-//! header block ≤ 64 KiB, body ≤ 16 MiB, 10 s per-read timeouts, and a
-//! 20 s whole-request deadline (slow-loris trickle included).
+//! header block ≤ 64 KiB, body ≤ a configurable cap (default 16 MiB,
+//! `serve --max-body-mb`; an oversized `Content-Length` is answered with
+//! `413 Payload Too Large` before a single body byte is buffered), 10 s
+//! per-read timeouts, and a 20 s whole-request deadline (slow-loris
+//! trickle included).
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -18,8 +21,8 @@ use std::time::Duration;
 
 /// Max bytes of request head (request line + headers).
 const MAX_HEAD: usize = 64 * 1024;
-/// Max request body bytes.
-const MAX_BODY: usize = 16 * 1024 * 1024;
+/// Default max request body bytes (`ServeConfig::max_body_mb` overrides).
+pub const DEFAULT_MAX_BODY: usize = 16 * 1024 * 1024;
 /// Per-read socket timeout.
 const IO_TIMEOUT: Duration = Duration::from_secs(10);
 /// Whole-request deadline: a client trickling one byte per read (slow
@@ -86,6 +89,8 @@ impl Response {
             404 => "Not Found",
             405 => "Method Not Allowed",
             408 => "Request Timeout",
+            413 => "Payload Too Large",
+            431 => "Request Header Fields Too Large",
             500 => "Internal Server Error",
             503 => "Service Unavailable",
             _ => "Unknown",
@@ -93,8 +98,33 @@ impl Response {
     }
 }
 
-/// Read and parse one request from the stream.
-pub fn read_request(stream: &mut TcpStream) -> Result<Request, String> {
+/// Why a request could not be read: the HTTP status the worker should
+/// answer with, plus the human-readable detail for the error envelope.
+#[derive(Debug, Clone)]
+pub struct ReadError {
+    pub status: u16,
+    pub msg: String,
+}
+
+impl ReadError {
+    fn bad(msg: impl Into<String>) -> ReadError {
+        ReadError { status: 400, msg: msg.into() }
+    }
+}
+
+/// Read and parse one request from the stream with the default body cap.
+pub fn read_request(stream: &mut TcpStream) -> Result<Request, ReadError> {
+    read_request_limited(stream, DEFAULT_MAX_BODY)
+}
+
+/// Read and parse one request, rejecting any declared `Content-Length`
+/// above `max_body` with a 413 before a single body byte is buffered —
+/// the declared length is client-supplied, so it must never size an
+/// allocation or a read loop on its own.
+pub fn read_request_limited(
+    stream: &mut TcpStream,
+    max_body: usize,
+) -> Result<Request, ReadError> {
     let deadline = std::time::Instant::now() + REQUEST_DEADLINE;
     let mut buf: Vec<u8> = Vec::with_capacity(1024);
     let mut tmp = [0u8; 4096];
@@ -103,53 +133,66 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request, String> {
             break pos;
         }
         if buf.len() > MAX_HEAD {
-            return Err("request head too large".into());
+            // 431, not 413: the *header block* is over budget — a client
+            // reacting to 413 by shrinking its JSON body would retry
+            // forever (RFC 6585 assigns oversized headers their own code).
+            return Err(ReadError { status: 431, msg: "request head too large".into() });
         }
         if std::time::Instant::now() > deadline {
-            return Err("request deadline exceeded".into());
+            return Err(ReadError::bad("request deadline exceeded"));
         }
         match stream.read(&mut tmp) {
-            Ok(0) => return Err("connection closed mid-request".into()),
+            Ok(0) => return Err(ReadError::bad("connection closed mid-request")),
             Ok(n) => buf.extend_from_slice(&tmp[..n]),
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
-            Err(e) => return Err(format!("read: {e}")),
+            Err(e) => return Err(ReadError::bad(format!("read: {e}"))),
         }
     };
     let head = std::str::from_utf8(&buf[..head_end])
-        .map_err(|_| "request head is not UTF-8".to_string())?;
+        .map_err(|_| ReadError::bad("request head is not UTF-8"))?;
     let mut lines = head.split("\r\n");
-    let request_line = lines.next().ok_or("empty request")?;
+    let request_line = lines.next().ok_or_else(|| ReadError::bad("empty request"))?;
     let mut parts = request_line.split_whitespace();
-    let method = parts.next().ok_or("missing method")?.to_string();
-    let target = parts.next().ok_or("missing path")?;
+    let method = parts.next().ok_or_else(|| ReadError::bad("missing method"))?.to_string();
+    let target = parts.next().ok_or_else(|| ReadError::bad("missing path"))?;
     let path = target.split('?').next().unwrap_or(target).to_string();
     let mut headers = Vec::new();
     for line in lines {
         if line.is_empty() {
             continue;
         }
-        let (k, v) = line.split_once(':').ok_or_else(|| format!("bad header '{line}'"))?;
+        let (k, v) =
+            line.split_once(':').ok_or_else(|| ReadError::bad(format!("bad header '{line}'")))?;
         headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
     }
     let content_length: usize = headers
         .iter()
         .find(|(k, _)| k == "content-length")
-        .map(|(_, v)| v.parse().map_err(|_| "bad content-length".to_string()))
+        .map(|(_, v)| v.parse().map_err(|_| ReadError::bad("bad content-length")))
         .transpose()?
         .unwrap_or(0);
-    if content_length > MAX_BODY {
-        return Err("body too large".into());
+    if content_length > max_body {
+        return Err(ReadError {
+            status: 413,
+            msg: format!("body of {content_length} bytes exceeds the {max_body}-byte cap"),
+        });
     }
     let mut body: Vec<u8> = buf[head_end + 4..].to_vec();
     while body.len() < content_length {
         if std::time::Instant::now() > deadline {
-            return Err("request deadline exceeded".into());
+            return Err(ReadError::bad("request deadline exceeded"));
         }
         match stream.read(&mut tmp) {
-            Ok(0) => return Err("connection closed mid-body".into()),
-            Ok(n) => body.extend_from_slice(&tmp[..n]),
+            Ok(0) => return Err(ReadError::bad("connection closed mid-body")),
+            Ok(n) => {
+                // Never grow past the validated length: a client that
+                // streams more than it declared cannot outgrow the cap
+                // (the surplus dies with the connection).
+                let room = content_length - body.len();
+                body.extend_from_slice(&tmp[..n.min(room)]);
+            }
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
-            Err(e) => return Err(format!("read body: {e}")),
+            Err(e) => return Err(ReadError::bad(format!("read body: {e}"))),
         }
     }
     body.truncate(content_length);
@@ -175,12 +218,14 @@ pub fn write_response(stream: &mut TcpStream, resp: &Response) -> std::io::Resul
 }
 
 /// Serve connections until `stop` is set: `threads` workers accept on the
-/// shared listener and run `handler` per request. Returns once every
-/// worker has observed the stop flag and exited.
+/// shared listener and run `handler` per request, refusing bodies larger
+/// than `max_body` bytes with a 413. Returns once every worker has
+/// observed the stop flag and exited.
 pub fn serve<H>(
     listener: &TcpListener,
     threads: usize,
     stop: &AtomicBool,
+    max_body: usize,
     handler: H,
 ) -> std::io::Result<()>
 where
@@ -196,7 +241,7 @@ where
             match listener.accept() {
                 Ok((stream, _addr)) => {
                     idle_sleep = ACCEPT_POLL_MIN;
-                    handle_connection(stream, &handler);
+                    handle_connection(stream, max_body, &handler);
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     std::thread::sleep(idle_sleep);
@@ -209,7 +254,7 @@ where
     Ok(())
 }
 
-fn handle_connection<H>(mut stream: TcpStream, handler: &H)
+fn handle_connection<H>(mut stream: TcpStream, max_body: usize, handler: &H)
 where
     H: Fn(&Request) -> Response,
 {
@@ -220,9 +265,9 @@ where
     let _ = stream.set_nonblocking(false);
     let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
     let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
-    let resp = match read_request(&mut stream) {
+    let resp = match read_request_limited(&mut stream, max_body) {
         Ok(req) => handler(&req),
-        Err(e) => Response::error(400, &e),
+        Err(e) => Response::error(e.status, &e.msg),
     };
     let _ = write_response(&mut stream, &resp);
     let _ = stream.shutdown(std::net::Shutdown::Both);
@@ -234,7 +279,7 @@ mod tests {
     use std::sync::atomic::AtomicBool;
     use std::sync::Arc;
 
-    fn roundtrip(raw: &str) -> Result<Request, String> {
+    fn roundtrip_limited(raw: &str, max_body: usize) -> Result<Request, ReadError> {
         // Push raw bytes through a real socket pair so read_request sees
         // the same framing a client produces.
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
@@ -246,9 +291,13 @@ mod tests {
             let _ = c.shutdown(std::net::Shutdown::Write);
         });
         let (mut s, _) = listener.accept().unwrap();
-        let req = read_request(&mut s);
+        let req = read_request_limited(&mut s, max_body);
         writer.join().unwrap();
         req
+    }
+
+    fn roundtrip(raw: &str) -> Result<Request, ReadError> {
+        roundtrip_limited(raw, DEFAULT_MAX_BODY)
     }
 
     #[test]
@@ -273,7 +322,52 @@ mod tests {
 
     #[test]
     fn rejects_garbage() {
-        assert!(roundtrip("not-http\r\n\r\n").is_err());
+        let err = roundtrip("not-http\r\n\r\n").unwrap_err();
+        assert_eq!(err.status, 400);
+    }
+
+    #[test]
+    fn oversized_content_length_is_413_without_buffering() {
+        // The declared length alone must trigger the refusal: no body
+        // bytes are sent at all, yet the parse fails immediately with the
+        // payload-too-large status (a streaming client would otherwise
+        // hold a worker while it uploads gigabytes to a doomed request).
+        let err = roundtrip_limited(
+            "POST /v1/fit HTTP/1.1\r\nContent-Length: 1048576\r\n\r\n",
+            64 * 1024,
+        )
+        .unwrap_err();
+        assert_eq!(err.status, 413, "{}", err.msg);
+        assert!(err.msg.contains("1048576"), "unhelpful message: {}", err.msg);
+        // At the cap exactly: accepted (the body below is tiny, the
+        // declared length is what is judged).
+        let ok = roundtrip_limited("POST /x HTTP/1.1\r\nContent-Length: 4\r\n\r\nabcd", 4);
+        assert_eq!(ok.unwrap().body, b"abcd");
+        let err = roundtrip_limited("POST /x HTTP/1.1\r\nContent-Length: 5\r\n\r\nabcde", 4)
+            .unwrap_err();
+        assert_eq!(err.status, 413);
+    }
+
+    #[test]
+    fn serve_answers_413_over_tcp() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let server = std::thread::spawn(move || {
+            serve(&listener, 1, &stop2, 1024, |_| Response::text(200, "ok")).unwrap();
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.write_all(b"POST /v1/fit HTTP/1.1\r\nContent-Length: 999999\r\n\r\n").unwrap();
+        let _ = c.shutdown(std::net::Shutdown::Write);
+        let mut out = String::new();
+        c.read_to_string(&mut out).unwrap();
+        assert!(
+            out.starts_with("HTTP/1.1 413 Payload Too Large\r\n"),
+            "expected 413 status line, got: {out}"
+        );
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap();
     }
 
     #[test]
@@ -283,7 +377,7 @@ mod tests {
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
         let server = std::thread::spawn(move || {
-            serve(&listener, 2, &stop2, |req| {
+            serve(&listener, 2, &stop2, DEFAULT_MAX_BODY, |req| {
                 Response::text(200, &format!("echo {}", req.path))
             })
             .unwrap();

@@ -38,6 +38,7 @@ pub mod http;
 pub mod jobs;
 pub mod registry;
 
+use crate::screening::DualStrategy;
 use crate::solver::parallel::effective_threads;
 use crate::util::json::Json;
 use http::{Request, Response};
@@ -89,6 +90,14 @@ pub struct ServeConfig {
     /// Active-set compaction for registry fits (`--no-compact` turns it
     /// off; bitwise-transparent either way — see `linalg::compact`).
     pub compact: bool,
+    /// Dual-point strategy for registry fits (`--dual`, default `best`;
+    /// see [`crate::screening::dual`]).
+    pub dual: DualStrategy,
+    /// Max accepted request-body size in MiB (`--max-body-mb`): a
+    /// client-declared `Content-Length` above this is answered with
+    /// `413 Payload Too Large` before any body byte is buffered, so one
+    /// request cannot size an allocation on the resident server.
+    pub max_body_mb: usize,
 }
 
 impl Default for ServeConfig {
@@ -99,6 +108,8 @@ impl Default for ServeConfig {
             fit_workers: 0,
             cache_mb: 256,
             compact: true,
+            dual: DualStrategy::default(),
+            max_body_mb: 16,
         }
     }
 }
@@ -117,17 +128,26 @@ pub struct Server {
     state: ServerState,
     stop: Arc<AtomicBool>,
     http_threads: usize,
+    max_body: usize,
 }
 
 impl Server {
     /// Bind the listener and start the fit workers (no requests are
     /// served until [`Server::run`]).
     pub fn bind(cfg: &ServeConfig) -> Result<Server, String> {
+        if cfg.max_body_mb == 0 {
+            // Reject loudly instead of silently reinterpreting — the same
+            // contract the CLI enforces for --max-body-mb and --threads 0.
+            return Err("max_body_mb must be >= 1 (a 0-byte body cap rejects every POST)".into());
+        }
         let listener = TcpListener::bind(&cfg.addr)
             .map_err(|e| format!("bind {}: {e}", cfg.addr))?;
         let metrics = Arc::new(Metrics::default());
-        let registry =
-            Arc::new(Registry::new(cfg.cache_mb, metrics.clone()).with_compact(cfg.compact));
+        let registry = Arc::new(
+            Registry::new(cfg.cache_mb, metrics.clone())
+                .with_compact(cfg.compact)
+                .with_dual(cfg.dual),
+        );
         let jobs = JobQueue::start(
             registry.clone(),
             metrics.clone(),
@@ -138,6 +158,7 @@ impl Server {
             state: ServerState { registry, jobs, metrics, started: Instant::now() },
             stop: Arc::new(AtomicBool::new(false)),
             http_threads: effective_threads(cfg.http_threads),
+            max_body: cfg.max_body_mb.saturating_mul(1024 * 1024),
         })
     }
 
@@ -154,7 +175,7 @@ impl Server {
     /// Serve until the stop flag is set. Blocks the calling thread; the
     /// accept/worker pool runs on scoped threads underneath.
     pub fn run(&self) -> Result<(), String> {
-        http::serve(&self.listener, self.http_threads, &self.stop, |req| {
+        http::serve(&self.listener, self.http_threads, &self.stop, self.max_body, |req| {
             route(&self.state, req)
         })
         .map_err(|e| format!("serve: {e}"))

@@ -35,7 +35,7 @@ use crate::data::load_spec;
 use crate::linalg::Mat;
 use crate::penalty::ActiveSet;
 use crate::problem::Problem;
-use crate::screening::{PrevSolution, Rule};
+use crate::screening::{DualStrategy, PrevSolution, Rule};
 use crate::solver::path::{
     lambda_grid, point_from_result, prev_from_result, scaled_eps, solve_path, PathConfig,
     PathResult, WarmStart,
@@ -140,6 +140,7 @@ impl ModelKey {
             screen_every: 10,
             threads: 1,
             compact: true,
+            dual: DualStrategy::default(),
         }
     }
 
@@ -293,6 +294,11 @@ pub struct Registry {
     cap_bytes: usize,
     /// Active-set compaction for fits solved here (`serve --no-compact`).
     compact: bool,
+    /// Dual-point strategy for fits solved here (`serve --dual`): cached
+    /// artifacts carry the best-kept theta per lambda, so warm starts
+    /// seeded from them center their first sequential sphere at the best
+    /// dual point the original fit ever saw.
+    dual: DualStrategy,
 }
 
 impl Registry {
@@ -311,6 +317,7 @@ impl Registry {
             metrics,
             cap_bytes: cache_mb.saturating_mul(1024 * 1024),
             compact: true,
+            dual: DualStrategy::default(),
         }
     }
 
@@ -318,6 +325,13 @@ impl Registry {
     /// (bitwise-transparent either way; `gapsafe serve --no-compact`).
     pub fn with_compact(mut self, compact: bool) -> Registry {
         self.compact = compact;
+        self
+    }
+
+    /// Select the dual-point strategy for every fit this registry solves
+    /// (`gapsafe serve --dual`; see [`crate::screening::dual`]).
+    pub fn with_dual(mut self, dual: DualStrategy) -> Registry {
+        self.dual = dual;
         self
     }
 
@@ -433,6 +447,7 @@ impl Registry {
         };
         let mut cfg = key.path_config();
         cfg.compact = self.compact;
+        cfg.dual = self.dual;
         let (path, warm_started) = match seed {
             Some(s) => (solve_path_seeded(&prob, &cfg, s), true),
             None => (solve_path(&prob, &cfg), false),
@@ -553,6 +568,7 @@ pub fn solve_path_seeded(prob: &Problem, cfg: &PathConfig, seed: &FittedModel) -
         eps,
         max_kkt_rounds: 20,
         compact: cfg.compact,
+        dual: cfg.dual,
     };
     let mut rule = cfg.rule.build();
     let mut prev: Option<PrevSolution> = None;

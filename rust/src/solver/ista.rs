@@ -8,6 +8,7 @@
 use crate::linalg::Mat;
 use crate::penalty::{gather_block, scatter_block, ActiveSet};
 use crate::problem::Problem;
+use crate::screening::dual::DualPoint;
 use crate::screening::ScreeningRule;
 
 use super::{SolveOptions, SolveResult};
@@ -40,13 +41,19 @@ pub fn solve_fista(
     let mut gap_passes = 0;
     let mut converged = false;
     let mut trace = Vec::new();
+    let mut gap_trace = Vec::new();
     let mut last = None;
+    // Screening is solver-agnostic and so is the dual-point engine: FISTA
+    // iterates are not even primal-monotone (momentum), so keeping the
+    // best dual objective per lambda matters more here than under CD.
+    let mut dual_pt = DualPoint::new(opts.dual);
 
     for k in 0..opts.max_epochs {
         if k % opts.screen_every == 0 {
             let z = prob.predict(&beta);
-            let res = prob.gap_pass(&beta, &z, lam, &active);
+            let res = prob.gap_pass_dual(&beta, &z, lam, &active, None, &mut dual_pt);
             gap_passes += 1;
+            gap_trace.push(res.gap);
             let stop = res.gap <= opts.eps;
             if !stop {
                 rule.on_gap_pass(prob, lam, &res, &mut active);
@@ -109,7 +116,9 @@ pub fn solve_fista(
         Some(r) => r,
         None => {
             let z = prob.predict(&beta);
-            prob.gap_pass(&beta, &z, lam, &active)
+            let r = prob.gap_pass_dual(&beta, &z, lam, &active, None, &mut dual_pt);
+            gap_trace.push(r.gap);
+            r
         }
     };
     SolveResult {
@@ -124,6 +133,7 @@ pub fn solve_fista(
         converged,
         active,
         screen_trace: trace,
+        gap_trace,
         kkt_violations: 0,
     }
 }

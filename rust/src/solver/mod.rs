@@ -14,6 +14,7 @@ use crate::linalg::sparse::Design;
 use crate::linalg::Mat;
 use crate::penalty::{gather_block, scatter_block, ActiveSet};
 use crate::problem::{GapResult, Problem};
+use crate::screening::dual::{DualPoint, DualStrategy};
 use crate::screening::{PrevSolution, ScreeningRule};
 
 /// Inner-solver options (Alg. 2 inputs).
@@ -33,6 +34,12 @@ pub struct SolveOptions {
     /// contiguous working matrix. Bitwise-transparent — disabling it only
     /// changes speed, never a single output bit.
     pub compact: bool,
+    /// Dual-point strategy for the gap passes
+    /// ([`crate::screening::dual`]): `Rescale` reproduces the historical
+    /// output bit for bit; `BestKept` (default) / `Refine` keep the best
+    /// dual point seen per lambda so the reported gap — and the Gap Safe
+    /// radius — never increase between passes.
+    pub dual: DualStrategy,
 }
 
 impl Default for SolveOptions {
@@ -43,6 +50,7 @@ impl Default for SolveOptions {
             eps: 1e-8,
             max_kkt_rounds: 20,
             compact: true,
+            dual: DualStrategy::default(),
         }
     }
 }
@@ -72,6 +80,13 @@ pub struct SolveResult {
     pub active: ActiveSet,
     /// (epoch, active groups, active features) at each gap pass.
     pub screen_trace: Vec<(usize, usize, usize)>,
+    /// Reported duality gap at each gap pass (aligned with
+    /// `screen_trace` plus any fallback pass). For the CD solver with
+    /// `dual = best` / `refine` this sequence is non-increasing within a
+    /// KKT round (non-decreasing dual, non-increasing primal); FISTA
+    /// fills it too, but its momentum steps are not primal-monotone, so
+    /// only the dual side of the invariant holds there.
+    pub gap_trace: Vec<f64>,
     /// Strong-rule violations repaired.
     pub kkt_violations: usize,
 }
@@ -101,11 +116,17 @@ pub fn solve_fixed_lambda_with(
     rule.begin_lambda(prob, lam, lam_max, prev, &mut active);
     zero_screened(prob, &mut beta, &active);
     let mut state = CdState::new(prob, &beta, &active, opts.compact);
+    // Dual-point tracker (screening::dual): keeps the best dual objective
+    // seen at this lambda so the reported gap / Gap Safe radius cannot
+    // oscillate upward between passes (strategy `rescale` = historical
+    // behavior, tracker passes everything through untouched).
+    let mut dual_pt = DualPoint::new(opts.dual);
 
     let mut epochs = 0usize;
     let mut gap_passes = 0usize;
     let mut converged = false;
     let mut screen_trace = Vec::new();
+    let mut gap_trace = Vec::new();
     let mut kkt_violations = 0usize;
     let mut last: Option<GapResult> = None;
 
@@ -114,7 +135,7 @@ pub fn solve_fixed_lambda_with(
         for k in 0..opts.max_epochs {
             if k % opts.screen_every == 0 {
                 let z = state.z(prob);
-                let res = prob.gap_pass_with(&beta, &z, lam, &active, state.view());
+                let res = prob.gap_pass_dual(&beta, &z, lam, &active, state.view(), &mut dual_pt);
                 gap_passes += 1;
                 // Screen before the stopping test (Alg. 2 performs both at
                 // the same event; screening first makes the recorded active
@@ -128,6 +149,7 @@ pub fn solve_fixed_lambda_with(
                 // a large enough fraction of the remaining columns.
                 state.maybe_repack(prob, &active);
                 screen_trace.push((epochs, active.n_active_groups(), active.n_active_feats()));
+                gap_trace.push(res.gap);
                 let stop = res.gap <= opts.eps;
                 last = Some(res);
                 if stop {
@@ -140,7 +162,9 @@ pub fn solve_fixed_lambda_with(
         }
         if last.is_none() {
             let z = state.z(prob);
-            last = Some(prob.gap_pass_with(&beta, &z, lam, &active, state.view()));
+            let res = prob.gap_pass_dual(&beta, &z, lam, &active, state.view(), &mut dual_pt);
+            gap_trace.push(res.gap);
+            last = Some(res);
             gap_passes += 1;
         }
         // KKT post-convergence check for un-safe rules (Sec. 3.6): any
@@ -163,8 +187,11 @@ pub fn solve_fixed_lambda_with(
             }
             if violated {
                 // Reactivation breaks the view's shrink-only contract:
-                // drop it and let the next screening event repack.
+                // drop it and let the next screening event repack. The
+                // kept dual point's correlations are stale for the
+                // reactivated groups for the same reason — drop it too.
                 state.reset_compact(prob);
+                dual_pt.invalidate();
                 kkt_round += 1;
                 converged = false;
                 continue 'outer;
@@ -186,6 +213,7 @@ pub fn solve_fixed_lambda_with(
         converged,
         active,
         screen_trace,
+        gap_trace,
         kkt_violations,
     }
 }

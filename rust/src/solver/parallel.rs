@@ -201,6 +201,7 @@ pub fn solve_path_parallel(prob: &Problem, cfg: &PathConfig, threads: usize) -> 
         eps,
         max_kkt_rounds: 20,
         compact: cfg.compact,
+        dual: cfg.dual,
     };
     let n_chunks = threads.min(lambdas.len());
     let bounds = weighted_chunk_bounds(lambdas.len(), n_chunks);

@@ -11,7 +11,7 @@ use super::{solve_fixed_lambda_with, SolveOptions, SolveResult};
 use crate::linalg::Mat;
 
 use crate::problem::Problem;
-use crate::screening::{PrevSolution, Rule, StrongRule};
+use crate::screening::{DualStrategy, PrevSolution, Rule, StrongRule};
 use crate::util::Stopwatch;
 
 /// Warm-start strategy across the path.
@@ -56,14 +56,28 @@ pub struct PathConfig {
     pub max_epochs: usize,
     pub screen_every: usize,
     /// Worker threads for the chunked path engine
-    /// ([`crate::solver::parallel`]): `1` = the exact serial path (default),
-    /// `0` = all available cores, `t > 1` = that many chunk workers.
+    /// ([`crate::solver::parallel`]): `1` = the exact serial path
+    /// (default), `t > 1` = that many chunk workers. Programmatic callers
+    /// may pass `0` as the "all available cores" sentinel (resolved by
+    /// [`solve_path`] via
+    /// [`effective_threads`](crate::solver::parallel::effective_threads));
+    /// user-facing layers resolve `auto` to a concrete count at parse
+    /// time and reject a literal `0` — [`PathConfig::validate`] enforces
+    /// that, mirroring the `--grid 0` guard.
     pub threads: usize,
     /// Active-set compaction ([`crate::linalg::compact`], default on):
     /// repack the surviving columns into a contiguous working matrix as
     /// screening shrinks the problem. Bitwise-transparent — toggling it
     /// changes speed only, never an output bit.
     pub compact: bool,
+    /// Dual-point strategy for every gap pass along the path
+    /// ([`crate::screening::dual`]; CLI `--dual`, default `best`):
+    /// `rescale` reproduces the historical output bit for bit, `best` /
+    /// `refine` keep the best dual point per lambda so reported gaps and
+    /// Gap Safe radii are monotone — and the `PrevSolution::theta` each
+    /// path point hands its successor's sequential sphere is the best
+    /// point, not the last one.
+    pub dual: DualStrategy,
 }
 
 impl Default for PathConfig {
@@ -79,6 +93,7 @@ impl Default for PathConfig {
             screen_every: 10,
             threads: 1,
             compact: true,
+            dual: DualStrategy::default(),
         }
     }
 }
@@ -100,6 +115,17 @@ impl PathConfig {
         }
         if !(self.eps.is_finite() && self.eps >= 0.0) {
             return Err("tolerance eps must be finite and >= 0".into());
+        }
+        if self.threads == 0 {
+            // A zero-worker pool is never what a user meant: the CLI
+            // resolves `--threads auto` to a concrete core count before
+            // building the config, so a literal 0 surviving to this point
+            // is a request for an empty pool — reject it like `--grid 0`
+            // instead of silently reinterpreting it downstream.
+            return Err(
+                "--threads must be >= 1 (use --threads auto, or omit the flag, for all cores)"
+                    .into(),
+            );
         }
         Ok(())
     }
@@ -203,6 +229,7 @@ pub fn solve_path_on_grid(prob: &Problem, cfg: &PathConfig, lambdas: &[f64]) -> 
         eps,
         max_kkt_rounds: 20,
         compact: cfg.compact,
+        dual: cfg.dual,
     };
     let mut rule = cfg.rule.build();
     let sw_total = Stopwatch::start();
@@ -375,6 +402,7 @@ mod tests {
             screen_every: 10,
             threads: 1,
             compact: true,
+            dual: DualStrategy::default(),
         }
     }
 
@@ -468,6 +496,41 @@ mod tests {
         cfg.delta = 2.0;
         cfg.eps = f64::NAN;
         assert!(cfg.validate().is_err());
+        // a zero-worker pool is rejected like a zero-point grid; the CLI
+        // resolves `auto` to a concrete count before validation
+        cfg.eps = 1e-6;
+        cfg.threads = 0;
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("auto"), "unhelpful --threads 0 error: {err}");
+        cfg.threads = 4;
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn dual_strategies_agree_along_path() {
+        // All three dual-point strategies certify the same duality-gap
+        // tolerance, so the paths must agree; best/refine may only spend
+        // fewer or equal gap passes getting there.
+        let ds = synth::leukemia_like_scaled(26, 70, 3, false);
+        let prob = build_problem(ds, Task::Lasso).unwrap();
+        let base_cfg = PathConfig {
+            dual: DualStrategy::Rescale,
+            ..quick_cfg(Rule::GapSafeFull, WarmStart::Standard)
+        };
+        let base = solve_path(&prob, &base_cfg);
+        for dual in [DualStrategy::BestKept, DualStrategy::Refine] {
+            let other = solve_path(&prob, &PathConfig { dual, ..base_cfg.clone() });
+            for (t, (a, b)) in base.betas.iter().zip(&other.betas).enumerate() {
+                for j in 0..prob.p() {
+                    assert!(
+                        (a[(j, 0)] - b[(j, 0)]).abs() < 1e-4,
+                        "dual={} diverged at lambda {t}, feature {j}",
+                        dual.label()
+                    );
+                }
+            }
+            assert!(other.points.iter().all(|p| p.converged));
+        }
     }
 
     #[test]

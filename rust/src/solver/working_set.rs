@@ -58,6 +58,12 @@ pub fn solve_working_set(
         rounds += 1;
         // Priority of each group: dual-norm statistic of the current
         // residual-rescaled point (groups already in the support first).
+        // Deliberately a *fresh* rescale, not the best-kept point: the
+        // priorities must rank violators of the current iterate — a kept
+        // point from an earlier round would hide groups that only started
+        // violating after the last restricted solve. The dual-point
+        // engine still applies inside every restricted subsolve through
+        // `opts.inner.dual`.
         let z = prob.predict(&beta);
         let full = ActiveSet::full(groups);
         let gap = prob.gap_pass(&beta, &z, lam, &full);
@@ -120,7 +126,8 @@ pub fn solve_working_set(
     }
 
     let mut res = result.expect("at least one round");
-    // Final certification on the full problem.
+    // Final certification on the full problem (fresh point, like the
+    // round passes above — Thm. 2 needs nothing stronger here).
     let z = prob.predict(&beta);
     let full = ActiveSet::full(groups);
     let gap = prob.gap_pass(&beta, &z, lam, &full);

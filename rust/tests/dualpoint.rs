@@ -1,0 +1,208 @@
+//! End-to-end properties of the dual-point engine (`screening::dual`):
+//!
+//! * with `dual = best` / `refine` the gap reported at successive gap
+//!   passes is non-increasing for every estimator family (the reported
+//!   dual objective is non-decreasing by construction and the CD primal
+//!   only decreases — see the "Dual points" section of the `screening`
+//!   module docs);
+//! * no dual strategy ever screens a feature of the `rescale` reference
+//!   support, across the whole rule zoo (Thm. 2 holds for any feasible
+//!   pair, so the kept point's sphere is exactly as safe);
+//! * an adversarial strong-rule case where the heuristic discard is
+//!   provably wrong and only the KKT re-check saves the solution.
+
+use gapsafe::data::synth;
+use gapsafe::linalg::Mat;
+use gapsafe::penalty::ActiveSet;
+use gapsafe::screening::{DualStrategy, NoScreening, PrevSolution, Rule, StrongRule};
+use gapsafe::solver::path::scaled_eps;
+use gapsafe::solver::{solve_fixed_lambda, solve_fixed_lambda_with, SolveOptions};
+use gapsafe::{build_problem, Task};
+
+/// One workload per estimator family (Lasso / logistic / SGL /
+/// multi-task), with a lambda ratio each family converges comfortably at.
+fn family_cases() -> Vec<(Task, gapsafe::data::Dataset, f64)> {
+    vec![
+        (Task::Lasso, synth::leukemia_like_scaled(28, 80, 5, false), 0.1),
+        (Task::Logreg, synth::leukemia_like_scaled(28, 50, 6, true), 0.2),
+        (Task::SparseGroupLasso { tau: 0.4 }, synth::climate_like(36, 8, 7), 0.2),
+        (Task::MultiTask, synth::meg_like(18, 30, 4, 8), 0.2),
+    ]
+}
+
+/// Property: with the best-kept (or refined) dual point the reported gap
+/// never increases between gap passes — the exact monotonicity the Gap
+/// Safe radius inherits. A tiny relative slack absorbs floating-point
+/// rounding of the primal/dual evaluations; the sequence itself must not
+/// bounce.
+#[test]
+fn best_kept_gap_trace_is_monotone_non_increasing() {
+    for (task, ds, ratio) in family_cases() {
+        let prob = build_problem(ds, task).unwrap();
+        let lam = ratio * prob.lambda_max();
+        for dual in [DualStrategy::BestKept, DualStrategy::Refine] {
+            let opts = SolveOptions {
+                eps: scaled_eps(&prob, 1e-8),
+                screen_every: 5,
+                max_epochs: 30_000,
+                dual,
+                ..Default::default()
+            };
+            let mut rule = Rule::GapSafeFull.build();
+            let res = solve_fixed_lambda(&prob, lam, rule.as_mut(), &opts);
+            assert!(res.converged, "{task:?} dual={} did not converge", dual.label());
+            assert!(
+                res.gap_trace.len() >= 2,
+                "{task:?}: too few gap passes ({}) for a monotonicity check",
+                res.gap_trace.len()
+            );
+            for (i, w) in res.gap_trace.windows(2).enumerate() {
+                assert!(
+                    w[1] <= w[0] * (1.0 + 1e-9) + 1e-12,
+                    "{task:?} dual={}: gap increased at pass {}: {} -> {} (trace {:?})",
+                    dual.label(),
+                    i + 1,
+                    w[0],
+                    w[1],
+                    res.gap_trace
+                );
+            }
+        }
+    }
+}
+
+/// Safety across the rule zoo: the support of the `rescale` reference
+/// solution (no screening — the historical solver output) must survive
+/// every (rule, dual strategy) combination. Safe rules must also keep
+/// every reference-support feature in their final active set; the strong
+/// rule is un-safe by design, so for it only the repaired solution is
+/// pinned.
+#[test]
+fn no_dual_strategy_screens_the_rescale_reference_support() {
+    let ds = synth::leukemia_like_scaled(30, 90, 12, false);
+    let prob = build_problem(ds, Task::Lasso).unwrap();
+    let lam = 0.15 * prob.lambda_max();
+    let opts_with = |dual| SolveOptions { eps: 1e-9, dual, ..Default::default() };
+    let mut none = NoScreening;
+    let reference =
+        solve_fixed_lambda(&prob, lam, &mut none, &opts_with(DualStrategy::Rescale));
+    assert!(reference.converged);
+    let support: Vec<usize> = (0..prob.p())
+        .filter(|&j| reference.beta[(j, 0)].abs() > 1e-6)
+        .collect();
+    assert!(!support.is_empty(), "degenerate reference: empty support");
+
+    let safe_rules = [
+        Rule::StaticGap,
+        Rule::StaticElGhaoui,
+        Rule::Dst3,
+        Rule::DynamicBonnefoy,
+        Rule::GapSafeSeq,
+        Rule::GapSafeDyn,
+        Rule::GapSafeFull,
+    ];
+    for rule in safe_rules {
+        for dual in [DualStrategy::Rescale, DualStrategy::BestKept, DualStrategy::Refine] {
+            let mut r = rule.build();
+            let res = solve_fixed_lambda(&prob, lam, r.as_mut(), &opts_with(dual));
+            assert!(res.converged, "rule {} dual {}", rule.label(), dual.label());
+            for &j in &support {
+                assert!(
+                    res.active.feat[j],
+                    "rule {} with dual {} screened support feature {j}",
+                    rule.label(),
+                    dual.label()
+                );
+                assert!(
+                    (res.beta[(j, 0)] - reference.beta[(j, 0)]).abs() < 1e-4,
+                    "rule {} dual {} diverged from the rescale reference at {j}",
+                    rule.label(),
+                    dual.label()
+                );
+            }
+        }
+    }
+    // Strong rule: un-safe heuristic + KKT repair — the solution (not the
+    // intermediate active set) is what must match.
+    for dual in [DualStrategy::Rescale, DualStrategy::BestKept, DualStrategy::Refine] {
+        let mut r = Rule::Strong.build();
+        let res = solve_fixed_lambda(&prob, lam, r.as_mut(), &opts_with(dual));
+        assert!(res.converged, "strong dual {}", dual.label());
+        for &j in &support {
+            assert!(
+                (res.beta[(j, 0)] - reference.beta[(j, 0)]).abs() < 1e-4,
+                "strong rule with dual {} lost support feature {j}",
+                dual.label()
+            );
+        }
+    }
+}
+
+/// Adversarial strong-rule case: a *stale* previous dual point (theta = 0
+/// — feasible, but carrying no correlation information) makes the strong
+/// extrapolation (Eq. 23-24) under-estimate every group, so the heuristic
+/// discards the entire problem including the true support at
+/// lambda = 0.9 lambda_max. The discard is provably wrong — the KKT
+/// re-check at convergence must flag violators (`kkt_violations > 0`),
+/// reactivate them, and land on the no-screening solution.
+#[test]
+fn strong_rule_stale_theta_discard_is_repaired_by_kkt() {
+    let ds = synth::leukemia_like_scaled(20, 50, 21, false);
+    let prob = build_problem(ds, Task::Lasso).unwrap();
+    let lmax = prob.lambda_max();
+    let lam = 0.9 * lmax;
+    let beta0 = Mat::zeros(prob.p(), 1);
+    let z0 = prob.predict(&beta0);
+    let prev = PrevSolution {
+        lam: lmax,
+        beta: beta0.clone(),
+        z: z0.clone(),
+        theta: Mat::zeros(prob.n(), prob.q()),
+        loss: prob.fit.loss(&z0),
+        pen_value: 0.0,
+        active: ActiveSet::full(prob.pen.groups()),
+    };
+    // The heuristic really is wrong here: the strong threshold at
+    // lam = 0.9 lam_prev is 0.8, every stat of theta = 0 is 0, so the
+    // strong set is empty — yet the true support at 0.9 lambda_max is not.
+    let strong_set = StrongRule::strong_active_set(&prob, &prev, lam);
+    assert_eq!(
+        strong_set.n_active_feats(),
+        0,
+        "stale theta should have discarded every group"
+    );
+    let opts = SolveOptions { eps: 1e-9, ..Default::default() };
+    let mut rule = Rule::Strong.build();
+    let res = solve_fixed_lambda_with(
+        &prob,
+        lam,
+        lmax,
+        None,
+        None,
+        rule.as_mut(),
+        Some(&prev),
+        &opts,
+    );
+    assert!(
+        res.kkt_violations > 0,
+        "the wrong discard must surface as KKT violations"
+    );
+    assert!(res.converged, "gap={}", res.gap);
+    let mut none = NoScreening;
+    let want = solve_fixed_lambda(&prob, lam, &mut none, &opts);
+    for j in 0..prob.p() {
+        assert!(
+            (res.beta[(j, 0)] - want.beta[(j, 0)]).abs() < 1e-4,
+            "j={j}: repaired={} oracle={} (kkt_violations={})",
+            res.beta[(j, 0)],
+            want.beta[(j, 0)],
+            res.kkt_violations
+        );
+        if want.beta[(j, 0)].abs() > 1e-6 {
+            assert!(
+                res.active.feat[j],
+                "support feature {j} was never reactivated by the KKT re-check"
+            );
+        }
+    }
+}

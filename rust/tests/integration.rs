@@ -268,6 +268,7 @@ fn paths_all_estimators() {
         screen_every: 10,
         threads: 1,
         compact: true,
+        ..Default::default()
     };
     let cases: Vec<(Task, gapsafe::data::Dataset)> = vec![
         (Task::Lasso, synth::leukemia_like_scaled(20, 50, 51, false)),

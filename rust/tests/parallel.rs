@@ -33,6 +33,7 @@ fn tight_cfg(threads: usize) -> PathConfig {
         screen_every: 10,
         threads,
         compact: true,
+        ..Default::default()
     }
 }
 

@@ -58,6 +58,9 @@ fn direct_cfg(grid: usize, delta: f64, eps: f64) -> PathConfig {
         screen_every: 10,
         threads: 1,
         compact: true,
+        // `dual` (and any future knob) must track ModelKey::path_config —
+        // the Default impl is the shared source of both.
+        ..Default::default()
     }
 }
 
@@ -67,7 +70,7 @@ fn start_server() -> (Server, u16) {
         http_threads: 2,
         fit_workers: 2,
         cache_mb: 64,
-        compact: true,
+        ..Default::default()
     })
     .expect("bind");
     let port = server.port();

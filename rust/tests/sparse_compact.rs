@@ -77,6 +77,7 @@ fn cfg(rule: Rule, n_lambdas: usize, delta: f64, max_epochs: usize, eps: f64) ->
         screen_every: 10,
         threads: 1,
         compact: true,
+        ..Default::default()
     }
 }
 
