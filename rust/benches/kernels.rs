@@ -1,11 +1,14 @@
 //! Micro-benchmarks of the numerical hot spots (used by the §Perf pass):
 //! correlation kernel X^T v (native vs PJRT artifact), CD epochs,
-//! epsilon-norm evaluation (sorting vs bisection), and gap passes.
+//! epsilon-norm evaluation (sorting vs bisection), gap passes, and the
+//! per-backend kernel-engine sweep (scalar vs AVX2 GFLOP/s, recorded to
+//! `results/BENCH_kernels.json` per the BENCH_*.json convention).
 
 #[path = "common.rs"]
 mod common;
 
 use gapsafe::data::synth;
+use gapsafe::linalg::kernels;
 use gapsafe::linalg::Mat;
 use gapsafe::penalty::epsilon_norm::{epsilon_norm, epsilon_norm_bisect};
 use gapsafe::penalty::ActiveSet;
@@ -40,6 +43,89 @@ fn main() {
         flops / min / 1e9
     );
     rows.push(vec!["xtv_native".into(), format!("{mean}"), format!("{min}")]);
+
+    // ---- kernel engine: per-backend GFLOP/s (scalar vs AVX2) ---------------
+    // Every backend is bitwise identical (linalg::kernels contract), so
+    // this table is purely a speed comparison at the leukemia-like shape.
+    {
+        let xd = prob.x.to_dense();
+        let mut bench_metrics: Vec<(String, f64)> = vec![
+            ("n".to_string(), n as f64),
+            ("p".to_string(), p as f64),
+            ("avx2_supported".to_string(), if kernels::avx2_supported() { 1.0 } else { 0.0 }),
+        ];
+        let reps = common::reps(20);
+        // dense xtv (the acceptance metric), dot, gemv, CSC-style gather
+        let dot_len = 4096.min(xd.as_slice().len().max(4));
+        let mut rng_k = Prng::new(9);
+        let dv: Vec<f64> = (0..dot_len).map(|_| rng_k.gaussian()).collect();
+        let dw: Vec<f64> = (0..dot_len).map(|_| rng_k.gaussian()).collect();
+        let bvec: Vec<f64> = (0..p).map(|_| rng_k.gaussian()).collect();
+        let nnz = (n * p / 10).max(64);
+        let gidx: Vec<usize> = (0..nnz).map(|k| (k * 7 + 3) % n).collect();
+        let gval: Vec<f64> = (0..nnz).map(|_| rng_k.gaussian()).collect();
+        // cache-resident xtv shape (~1 MiB): isolates SIMD throughput from
+        // DRAM bandwidth, which bounds the full leukemia-size sweep
+        let (n2, p2) = (256usize, 480usize);
+        let mut x2 = Mat::zeros(n2, p2);
+        for w in x2.as_mut_slice() {
+            *w = rng_k.gaussian();
+        }
+        let v2: Vec<f64> = (0..n2).map(|_| rng_k.gaussian()).collect();
+        let mut out2 = vec![0.0; p2];
+        for table in kernels::available() {
+            let label = table.kind.label();
+            let (_, min_xtv) = common::time_it(reps, || {
+                (table.xtv)(&xd, &v, &mut out);
+                std::hint::black_box(&out);
+            });
+            let xtv_gflops = 2.0 * n as f64 * p as f64 / min_xtv / 1e9;
+            let (_, min_xtv2) = common::time_it(reps, || {
+                (table.xtv)(&x2, &v2, &mut out2);
+                std::hint::black_box(&out2);
+            });
+            let xtv_l2_gflops = 2.0 * n2 as f64 * p2 as f64 / min_xtv2 / 1e9;
+            bench_metrics.push((format!("xtv_l2_gflops_{label}"), xtv_l2_gflops));
+            let (_, min_dot) = common::time_it(reps, || {
+                std::hint::black_box((table.dot)(&dv, &dw));
+            });
+            let dot_gflops = 2.0 * dot_len as f64 / min_dot / 1e9;
+            let mut z = vec![0.0; n];
+            let (_, min_gemv) = common::time_it(reps, || {
+                (table.gemv)(&xd, &bvec, &mut z);
+                std::hint::black_box(&z);
+            });
+            let gemv_gflops = 2.0 * n as f64 * p as f64 / min_gemv / 1e9;
+            let (_, min_gather) = common::time_it(reps, || {
+                std::hint::black_box((table.gather_dot)(&gidx, &gval, &v));
+            });
+            let gather_gflops = 2.0 * nnz as f64 / min_gather / 1e9;
+            println!(
+                "kernel backend {label:>6}: xtv {xtv_gflops:6.2} GFLOP/s \
+                 (L2-resident {xtv_l2_gflops:6.2}) | dot {dot_gflops:6.2} \
+                 | gemv {gemv_gflops:6.2} | gather {gather_gflops:6.2}"
+            );
+            bench_metrics.push((format!("xtv_gflops_{label}"), xtv_gflops));
+            bench_metrics.push((format!("dot_gflops_{label}"), dot_gflops));
+            bench_metrics.push((format!("gemv_gflops_{label}"), gemv_gflops));
+            bench_metrics.push((format!("gather_gflops_{label}"), gather_gflops));
+            rows.push(vec![format!("xtv_{label}"), String::new(), format!("{min_xtv}")]);
+        }
+        let find = |key: &str| bench_metrics.iter().find(|(k, _)| k == key).map(|(_, v)| *v);
+        if let (Some(s), Some(a)) = (find("xtv_gflops_scalar"), find("xtv_gflops_avx2")) {
+            let speedup = a / s;
+            bench_metrics.push(("xtv_avx2_speedup".to_string(), speedup));
+            println!("kernel engine: AVX2 xtv speedup over scalar (n={n}, p={p}): {speedup:.2}x");
+            if speedup < 2.0 && !common::smoke() {
+                println!(
+                    "WARNING: AVX2 xtv speedup {speedup:.2}x is below the 2x target — \
+                     likely a memory-bandwidth-bound host or a noisy shared runner"
+                );
+            }
+        }
+        let refs: Vec<(&str, f64)> = bench_metrics.iter().map(|(k, m)| (k.as_str(), *m)).collect();
+        common::record_bench_json("kernels", &refs);
+    }
 
     // ---- full gap pass native ---------------------------------------------
     let beta = Mat::zeros(p, 1);

@@ -69,15 +69,9 @@ pub trait DataFit: Send + Sync {
         let _ = rows;
         let mut g = Mat::zeros(z.rows(), z.cols());
         self.neg_grad(z, &mut g);
-        let y = self.targets();
-        for ((l, gi), yi) in link
-            .as_mut_slice()
-            .iter_mut()
-            .zip(g.as_slice())
-            .zip(y.as_slice())
-        {
-            *l = yi - gi;
-        }
+        // link = Y - G through the dispatched SIMD `sub` kernel (bitwise
+        // identical under every backend — see `linalg::kernels`).
+        crate::linalg::sub(self.targets().as_slice(), g.as_slice(), link.as_mut_slice());
     }
 }
 

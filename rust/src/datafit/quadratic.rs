@@ -54,14 +54,9 @@ impl DataFit for Quadratic {
     }
 
     fn neg_grad(&self, z: &Mat, out: &mut Mat) {
-        for ((o, zi), yi) in out
-            .as_mut_slice()
-            .iter_mut()
-            .zip(z.as_slice())
-            .zip(self.y.as_slice())
-        {
-            *o = yi - zi;
-        }
+        // rho = Y - Z: the quadratic link refresh, through the dispatched
+        // SIMD `sub` kernel (bitwise identical under every backend).
+        crate::linalg::sub(self.y.as_slice(), z.as_slice(), out.as_mut_slice());
     }
 
     fn dual(&self, theta: &Mat, lam: f64) -> f64 {

@@ -38,6 +38,17 @@
 //! residual rescaling (`rescale` restores the historical output bit for
 //! bit; `refine` adds a convex-combination line search).
 //!
+//! All numerical hot loops — dense dots/axpys, the register-tiled
+//! `X^T v` correlation sweep, the CSC gather kernels — run through a
+//! runtime-dispatched SIMD engine ([`linalg::kernels`]): the best
+//! supported backend (AVX2 via stable `std::arch`, or portable scalar)
+//! is detected once at startup, overridable with
+//! `GAPSAFE_KERNEL=scalar|avx2|auto` or the CLI `--kernel` flag. Every
+//! backend is **bitwise identical** by contract, so the backend choice
+//! can never change a solver trajectory, a screening decision, or a
+//! served prediction — `rust/tests/kernel_parity.rs` pins whole
+//! `solve_path` runs bit-for-bit across backends.
+//!
 //! On top of it sits a resident model-serving subsystem ([`serve`]):
 //! `gapsafe serve` runs a std-only HTTP server whose model registry keeps
 //! fitted paths alive between requests, answering repeat fits from cache

@@ -20,6 +20,10 @@
 //! exact same floating-point results on the packed matrix as on the full
 //! one — compaction changes *which memory is read*, never *what is
 //! computed*. The solver tests pin packed and full paths bit-for-bit.
+//! The per-column kernels themselves dispatch into the SIMD engine of
+//! [`crate::linalg::kernels`], whose backends are bitwise identical by
+//! contract — so compaction and backend choice compose: any combination
+//! of (packed | full) × (scalar | avx2) yields the same bits.
 //!
 //! # Safety contract
 //!

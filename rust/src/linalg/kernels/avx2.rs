@@ -1,0 +1,322 @@
+//! AVX2 backend: 256-bit `std::arch` implementations of the hot kernels,
+//! bit-identical to [`super::scalar`] by construction.
+//!
+//! # How bitwise parity is achieved
+//!
+//! The scalar reduction kernels already accumulate in a 4-lane strided
+//! tree: lane `k` sums elements `4i + k`. A 256-bit register holds
+//! exactly those four lanes, so the vertical `vmulpd` + `vaddpd` sequence
+//! performs the *same* IEEE-754 operations on the *same* operands in the
+//! *same* order as the scalar code — only four at a time. No FMA is ever
+//! emitted (explicit `_mm256_mul_pd` / `_mm256_add_pd`; Rust never
+//! auto-contracts), the horizontal sum materializes the lanes and adds
+//! them in the fixed `((s0 + s1) + s2) + s3` order, and the `n % 4` tail
+//! is folded in element-by-element after the horizontal sum, exactly like
+//! the scalar remainder loop. Element-wise kernels map each scalar
+//! operation onto one vector lane, which is trivially exact.
+//!
+//! # Safety
+//!
+//! Every public function here assumes the CPU supports AVX2; the dispatch
+//! layer only hands out this table after `is_x86_feature_detected!`
+//! confirms it (see [`super::table`]), and the module is `pub(crate)` so
+//! no outside caller can bypass that gate. Debug builds re-assert
+//! detection at each entry point.
+
+use crate::linalg::Mat;
+use std::arch::x86_64::{
+    __m256d, _mm256_add_pd, _mm256_and_pd, _mm256_andnot_pd, _mm256_cmp_pd, _mm256_loadu_pd,
+    _mm256_mul_pd, _mm256_or_pd, _mm256_set1_pd, _mm256_set_pd, _mm256_setzero_pd,
+    _mm256_storeu_pd, _mm256_sub_pd, _CMP_GT_OQ,
+};
+
+#[inline]
+fn assert_avx2() {
+    debug_assert!(
+        std::arch::is_x86_feature_detected!("avx2"),
+        "AVX2 kernel invoked on a host without AVX2"
+    );
+}
+
+/// Horizontal sum in the scalar tree's fixed order: ((s0 + s1) + s2) + s3.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum(acc: __m256d) -> f64 {
+    let mut t = [0.0f64; 4];
+    _mm256_storeu_pd(t.as_mut_ptr(), acc);
+    ((t[0] + t[1]) + t[2]) + t[3]
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn dot_body(a: &[f64], b: &[f64]) -> f64 {
+    // min-clamped so the raw loads can never run past either slice even
+    // on a (debug-assert-guarded) length mismatch
+    let n = a.len().min(b.len());
+    let chunks = n / 4;
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    let mut acc = _mm256_setzero_pd();
+    for k in 0..chunks {
+        let i = 4 * k;
+        let va = _mm256_loadu_pd(pa.add(i));
+        let vb = _mm256_loadu_pd(pb.add(i));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(va, vb));
+    }
+    let mut s = hsum(acc);
+    for i in 4 * chunks..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+pub(crate) fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    assert_avx2();
+    unsafe { dot_body(a, b) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_body(alpha: f64, x: &[f64], y: &mut [f64]) {
+    let n = x.len().min(y.len());
+    let chunks = n / 4;
+    let va = _mm256_set1_pd(alpha);
+    let px = x.as_ptr();
+    let py = y.as_mut_ptr();
+    for k in 0..chunks {
+        let i = 4 * k;
+        let vy = _mm256_loadu_pd(py.add(i) as *const f64);
+        let vx = _mm256_loadu_pd(px.add(i));
+        _mm256_storeu_pd(py.add(i), _mm256_add_pd(vy, _mm256_mul_pd(va, vx)));
+    }
+    for i in 4 * chunks..n {
+        y[i] += alpha * x[i];
+    }
+}
+
+pub(crate) fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    assert_avx2();
+    unsafe { axpy_body(alpha, x, y) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn sub_body(a: &[f64], b: &[f64], out: &mut [f64]) {
+    let n = out.len().min(a.len()).min(b.len());
+    let chunks = n / 4;
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    let po = out.as_mut_ptr();
+    for k in 0..chunks {
+        let i = 4 * k;
+        let va = _mm256_loadu_pd(pa.add(i));
+        let vb = _mm256_loadu_pd(pb.add(i));
+        _mm256_storeu_pd(po.add(i), _mm256_sub_pd(va, vb));
+    }
+    for i in 4 * chunks..n {
+        out[i] = a[i] - b[i];
+    }
+}
+
+pub(crate) fn sub(a: &[f64], b: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    assert_avx2();
+    unsafe { sub_body(a, b, out) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn soft_threshold_body(v: &mut [f64], tau: f64) {
+    let n = v.len();
+    let chunks = n / 4;
+    let vtau = _mm256_set1_pd(tau);
+    let zero = _mm256_setzero_pd();
+    // Sign-bit mask: -0.0 is all-zero except the top bit.
+    let signmask = _mm256_set1_pd(-0.0);
+    let p = v.as_mut_ptr();
+    for k in 0..chunks {
+        let i = 4 * k;
+        let x = _mm256_loadu_pd(p.add(i) as *const f64);
+        // a = |x| - tau
+        let a = _mm256_sub_pd(_mm256_andnot_pd(signmask, x), vtau);
+        // keep lanes with a > 0 (ordered compare: NaN lanes are dropped,
+        // matching the scalar `if a > 0.0` which is false for NaN)
+        let keep = _mm256_cmp_pd::<_CMP_GT_OQ>(a, zero);
+        // signum(x) * a == a with x's sign bit OR-ed in, since a > 0
+        let signed = _mm256_or_pd(a, _mm256_and_pd(signmask, x));
+        // dropped lanes become +0.0, the scalar `else` branch's literal
+        _mm256_storeu_pd(p.add(i), _mm256_and_pd(signed, keep));
+    }
+    for x in &mut v[4 * chunks..] {
+        let a = x.abs() - tau;
+        *x = if a > 0.0 { x.signum() * a } else { 0.0 };
+    }
+}
+
+pub(crate) fn soft_threshold(v: &mut [f64], tau: f64) {
+    assert_avx2();
+    unsafe { soft_threshold_body(v, tau) }
+}
+
+/// Register-tiled `out[j] = X_j^T v`: four columns per pass share each
+/// 256-bit load of `v`, quartering the `v` traffic of the column sweep.
+/// Each column still accumulates its own 4-lane tree, so every entry is
+/// bit-identical to `dot(X_j, v)`.
+#[target_feature(enable = "avx2")]
+unsafe fn xtv_body(x: &Mat, v: &[f64], out: &mut [f64]) {
+    let n = x.rows().min(v.len());
+    let p = x.cols();
+    let chunks = n / 4;
+    let pv = v.as_ptr();
+    let mut j = 0;
+    while j + 4 <= p {
+        let c0 = x.col(j).as_ptr();
+        let c1 = x.col(j + 1).as_ptr();
+        let c2 = x.col(j + 2).as_ptr();
+        let c3 = x.col(j + 3).as_ptr();
+        let mut a0 = _mm256_setzero_pd();
+        let mut a1 = _mm256_setzero_pd();
+        let mut a2 = _mm256_setzero_pd();
+        let mut a3 = _mm256_setzero_pd();
+        for k in 0..chunks {
+            let i = 4 * k;
+            let vv = _mm256_loadu_pd(pv.add(i));
+            a0 = _mm256_add_pd(a0, _mm256_mul_pd(_mm256_loadu_pd(c0.add(i)), vv));
+            a1 = _mm256_add_pd(a1, _mm256_mul_pd(_mm256_loadu_pd(c1.add(i)), vv));
+            a2 = _mm256_add_pd(a2, _mm256_mul_pd(_mm256_loadu_pd(c2.add(i)), vv));
+            a3 = _mm256_add_pd(a3, _mm256_mul_pd(_mm256_loadu_pd(c3.add(i)), vv));
+        }
+        let mut s0 = hsum(a0);
+        let mut s1 = hsum(a1);
+        let mut s2 = hsum(a2);
+        let mut s3 = hsum(a3);
+        for i in 4 * chunks..n {
+            let vi = *pv.add(i);
+            s0 += *c0.add(i) * vi;
+            s1 += *c1.add(i) * vi;
+            s2 += *c2.add(i) * vi;
+            s3 += *c3.add(i) * vi;
+        }
+        out[j] = s0;
+        out[j + 1] = s1;
+        out[j + 2] = s2;
+        out[j + 3] = s3;
+        j += 4;
+    }
+    while j < p {
+        out[j] = dot_body(x.col(j), v);
+        j += 1;
+    }
+}
+
+pub(crate) fn xtv(x: &Mat, v: &[f64], out: &mut [f64]) {
+    assert_avx2();
+    unsafe { xtv_body(x, v, out) }
+}
+
+/// Apply four (column, coefficient) updates to `out` in one pass: each
+/// 256-bit load/store of `out` serves four columns. Per element the four
+/// additions happen in tile order, which the caller keeps equal to the
+/// increasing-column order of the scalar axpy sweep — bit-identical.
+#[target_feature(enable = "avx2")]
+unsafe fn gemv_tile4(tile: &[(*const f64, f64); 4], n: usize, po: *mut f64) {
+    let chunks = n / 4;
+    let (c0, b0) = tile[0];
+    let (c1, b1) = tile[1];
+    let (c2, b2) = tile[2];
+    let (c3, b3) = tile[3];
+    let vb0 = _mm256_set1_pd(b0);
+    let vb1 = _mm256_set1_pd(b1);
+    let vb2 = _mm256_set1_pd(b2);
+    let vb3 = _mm256_set1_pd(b3);
+    for k in 0..chunks {
+        let i = 4 * k;
+        let mut o = _mm256_loadu_pd(po.add(i) as *const f64);
+        o = _mm256_add_pd(o, _mm256_mul_pd(vb0, _mm256_loadu_pd(c0.add(i))));
+        o = _mm256_add_pd(o, _mm256_mul_pd(vb1, _mm256_loadu_pd(c1.add(i))));
+        o = _mm256_add_pd(o, _mm256_mul_pd(vb2, _mm256_loadu_pd(c2.add(i))));
+        o = _mm256_add_pd(o, _mm256_mul_pd(vb3, _mm256_loadu_pd(c3.add(i))));
+        _mm256_storeu_pd(po.add(i), o);
+    }
+    for i in 4 * chunks..n {
+        let o = po.add(i);
+        *o += b0 * *c0.add(i);
+        *o += b1 * *c1.add(i);
+        *o += b2 * *c2.add(i);
+        *o += b3 * *c3.add(i);
+    }
+}
+
+/// 4-column-tiled `out = X b`: nonzero-coefficient columns are buffered
+/// four at a time in a stack array (no heap allocation on this hot path)
+/// and flushed through [`gemv_tile4`]; the `< 4` leftover columns go
+/// through the plain AVX2 axpy. Column order — and therefore every
+/// per-element addition order — matches the scalar sweep exactly.
+#[target_feature(enable = "avx2")]
+unsafe fn gemv_body(x: &Mat, b: &[f64], out: &mut [f64]) {
+    out.iter_mut().for_each(|v| *v = 0.0);
+    let n = x.rows().min(out.len());
+    let po = out.as_mut_ptr();
+    let mut tile: [(*const f64, f64); 4] = [(std::ptr::null(), 0.0); 4];
+    let mut filled = 0usize;
+    for j in 0..x.cols() {
+        let bj = b[j];
+        if bj == 0.0 {
+            continue;
+        }
+        tile[filled] = (x.col(j).as_ptr(), bj);
+        filled += 1;
+        if filled == 4 {
+            gemv_tile4(&tile, n, po);
+            filled = 0;
+        }
+    }
+    for &(c, bj) in tile.iter().take(filled) {
+        let col = std::slice::from_raw_parts(c, n);
+        axpy_body(bj, col, out);
+    }
+}
+
+pub(crate) fn gemv(x: &Mat, b: &[f64], out: &mut [f64]) {
+    assert_avx2();
+    unsafe { gemv_body(x, b, out) }
+}
+
+/// `out = X^T V`: the AVX2 dot per (column, task) pair in the scalar
+/// iteration order.
+pub(crate) fn xtm(x: &Mat, v: &Mat, out: &mut Mat) {
+    assert_avx2();
+    for k in 0..v.cols() {
+        let vk = v.col(k);
+        for j in 0..x.cols() {
+            out[(j, k)] = unsafe { dot_body(x.col(j), vk) };
+        }
+    }
+}
+
+/// CSC gather dot: four `(val, v[idx])` products per pass feeding the
+/// same 4-lane tree as [`super::scalar::gather_dot`]. The four loads of
+/// `v` stay scalar (bounds-checked like the scalar kernel — AVX2 gathers
+/// would skip the check and are microcoded-slow on most cores anyway);
+/// the win is the four independent mul/add chains in one register.
+#[target_feature(enable = "avx2")]
+unsafe fn gather_dot_body(idx: &[usize], val: &[f64], v: &[f64]) -> f64 {
+    let n = idx.len().min(val.len());
+    let chunks = n / 4;
+    let mut acc = _mm256_setzero_pd();
+    for k in 0..chunks {
+        let i = 4 * k;
+        // set_pd takes lanes high-to-low: lane 0 holds element i.
+        let g = _mm256_set_pd(v[idx[i + 3]], v[idx[i + 2]], v[idx[i + 1]], v[idx[i]]);
+        let w = _mm256_loadu_pd(val.as_ptr().add(i));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(w, g));
+    }
+    let mut s = hsum(acc);
+    for i in 4 * chunks..n {
+        s += val[i] * v[idx[i]];
+    }
+    s
+}
+
+pub(crate) fn gather_dot(idx: &[usize], val: &[f64], v: &[f64]) -> f64 {
+    debug_assert_eq!(idx.len(), val.len());
+    assert_avx2();
+    unsafe { gather_dot_body(idx, val, v) }
+}

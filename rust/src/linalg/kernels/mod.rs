@@ -1,0 +1,505 @@
+//! Runtime-dispatched SIMD kernel engine with a bitwise-reproducibility
+//! contract.
+//!
+//! Every Gap Safe ingredient the solver iterates — the correlation sweep
+//! `X^T theta` feeding the sphere test `|x_j^T theta| + r ||x_j|| < 1`,
+//! the residual updates inside (block) coordinate descent, and the
+//! duality-gap evaluation itself — bottoms out in a handful of dense and
+//! CSC-gather loops. This module owns those loops and selects, **once at
+//! startup**, a backend implementation for all of them:
+//!
+//! * [`BackendKind::Scalar`] — portable Rust: the historical dense
+//!   kernels of `linalg::mod` verbatim, plus the CSC gather dot
+//!   restructured once into the shared 4-lane tree (see
+//!   [`scalar::gather_dot`] — the single deliberate numeric change that
+//!   makes SIMD parity possible);
+//! * [`BackendKind::Avx2`] — 256-bit `std::arch` intrinsics (runtime CPU
+//!   detection via `is_x86_feature_detected!`, stable only, zero deps).
+//!
+//! # The bitwise-reproducibility contract
+//!
+//! Every backend produces **bit-identical** outputs for every kernel. The
+//! AVX2 kernels achieve this by computing the *same 4-lane strided
+//! reduction tree* the scalar [`scalar::dot`] uses: lane `k` accumulates
+//! elements `4i + k` with vertical `vmulpd` + `vaddpd` (no FMA
+//! contraction — Rust never auto-contracts, and the intrinsics are
+//! explicit mul-then-add), the horizontal sum is taken in the fixed
+//! `((s0 + s1) + s2) + s3` order, and the `n % 4` tail is folded in
+//! element-by-element exactly like the scalar remainder loop. Per-element
+//! kernels (`axpy`, `sub`, `soft_threshold`) are trivially lane-exact.
+//! The CSC gather reduction ([`Kernels::gather_dot`]) uses the same
+//! 4-lane tree in *both* backends so the sparse solver path carries the
+//! identical guarantee. The one deliberate exception is the CSC scatter
+//! update ([`Kernels::scatter_axpy`]): AVX2 has no scatter store, so both
+//! backends share the scalar loop (its adds are the dependency chain;
+//! there is nothing to vectorize without changing results).
+//!
+//! Consequences: the backend choice can never change a solver trajectory,
+//! a screening decision, or a served prediction — `solve_path` returns
+//! bit-identical `PathResult`s under `scalar` and `avx2`, which is pinned
+//! by the cross-backend parity gate in `rust/tests/kernel_parity.rs` and
+//! keeps every pre-existing bitwise test (compaction transparency,
+//! dual-point rescale identity, serve round-trips) green under any
+//! backend.
+//!
+//! # Selection
+//!
+//! The active backend is resolved on first use from the `GAPSAFE_KERNEL`
+//! environment variable (`scalar` | `avx2` | `auto`, default `auto` =
+//! best supported), and can be overridden explicitly with [`select`] /
+//! [`select_str`] (the CLI `--kernel` flag and `gapsafe serve` do this at
+//! startup; `GET /metrics` and `/healthz` report the active backend).
+//! Because all backends are bitwise identical, switching backends at any
+//! point is always safe — the dispatch table is just a performance knob.
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2;
+pub mod scalar;
+
+use super::Mat;
+use std::sync::atomic::{AtomicPtr, Ordering};
+
+/// Which kernel backend a dispatch table implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Portable scalar Rust (the historical kernels; always available).
+    Scalar,
+    /// 256-bit AVX2 via `std::arch` (x86-64 with runtime detection).
+    Avx2,
+}
+
+impl BackendKind {
+    /// Stable lowercase name (CLI flag values, `/metrics` field).
+    pub fn label(self) -> &'static str {
+        match self {
+            BackendKind::Scalar => "scalar",
+            BackendKind::Avx2 => "avx2",
+        }
+    }
+}
+
+/// A dispatch table of the hot numerical kernels. All entries of all
+/// tables are bitwise-identical functions of their inputs (see the module
+/// docs); only their speed differs.
+pub struct Kernels {
+    pub kind: BackendKind,
+    /// Dot product, 4-lane strided reduction tree.
+    pub dot: fn(&[f64], &[f64]) -> f64,
+    /// `y[i] += alpha * x[i]`.
+    pub axpy: fn(f64, &[f64], &mut [f64]),
+    /// `out[i] = a[i] - b[i]` (residual / link refreshes).
+    pub sub: fn(&[f64], &[f64], &mut [f64]),
+    /// In-place soft-thresholding `S_tau` (Sec. 2.1).
+    pub soft_threshold: fn(&mut [f64], f64),
+    /// `out[j] = X_j^T v` over all columns (register-tiled on AVX2: four
+    /// columns per pass so each load of `v` is reused fourfold).
+    pub xtv: fn(&Mat, &[f64], &mut [f64]),
+    /// `out = X b` (column-major axpy sweep, 4-column tiles on AVX2).
+    pub gemv: fn(&Mat, &[f64], &mut [f64]),
+    /// `out = X^T V` (p x q), the multi-task correlation block.
+    pub xtm: fn(&Mat, &Mat, &mut Mat),
+    /// CSC column dot: `sum_k val[k] * v[idx[k]]`, 4-lane strided tree
+    /// (the `sptv` gather ingredient of sparse screening sweeps).
+    pub gather_dot: fn(&[usize], &[f64], &[f64]) -> f64,
+    /// CSC column update: `out[idx[k]] += alpha * val[k]` (the `spmv`
+    /// scatter ingredient; scalar in every backend — see module docs).
+    pub scatter_axpy: fn(&[usize], f64, &[f64], &mut [f64]),
+}
+
+static SCALAR_TABLE: Kernels = Kernels {
+    kind: BackendKind::Scalar,
+    dot: scalar::dot,
+    axpy: scalar::axpy,
+    sub: scalar::sub,
+    soft_threshold: scalar::soft_threshold,
+    xtv: scalar::xtv,
+    gemv: scalar::gemv,
+    xtm: scalar::xtm,
+    gather_dot: scalar::gather_dot,
+    scatter_axpy: scalar::scatter_axpy,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2_TABLE: Kernels = Kernels {
+    kind: BackendKind::Avx2,
+    dot: avx2::dot,
+    axpy: avx2::axpy,
+    sub: avx2::sub,
+    soft_threshold: avx2::soft_threshold,
+    xtv: avx2::xtv,
+    gemv: avx2::gemv,
+    xtm: avx2::xtm,
+    gather_dot: avx2::gather_dot,
+    // AVX2 has no scatter store; the add chain is the serial dependency,
+    // so the scalar loop *is* the kernel (and parity is trivial).
+    scatter_axpy: scalar::scatter_axpy,
+};
+
+/// True when this host can run the AVX2 backend.
+pub fn avx2_supported() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// The always-available scalar reference table (parity tests compare
+/// every other backend against this one).
+pub fn scalar_table() -> &'static Kernels {
+    &SCALAR_TABLE
+}
+
+/// The dispatch table for `kind`, or `None` when this host cannot run it
+/// (AVX2 missing, or a non-x86-64 build).
+pub fn table(kind: BackendKind) -> Option<&'static Kernels> {
+    match kind {
+        BackendKind::Scalar => Some(&SCALAR_TABLE),
+        BackendKind::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if avx2_supported() {
+                    return Some(&AVX2_TABLE);
+                }
+                None
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            {
+                None
+            }
+        }
+    }
+}
+
+/// Every backend this host can run, scalar first (test/bench sweep).
+pub fn available() -> Vec<&'static Kernels> {
+    let mut v = vec![scalar_table()];
+    if let Some(t) = table(BackendKind::Avx2) {
+        v.push(t);
+    }
+    v
+}
+
+/// The active dispatch table — selected once (null until first use) and
+/// then a single relaxed atomic load per call site.
+static ACTIVE: AtomicPtr<Kernels> = AtomicPtr::new(std::ptr::null_mut());
+
+/// The active kernel table, initializing from `GAPSAFE_KERNEL` / CPU
+/// detection on first use.
+///
+/// # Panics
+///
+/// Panics when `GAPSAFE_KERNEL` names an unknown backend or one this host
+/// cannot run (a forced-but-unsupported backend silently falling back
+/// would fake coverage in CI parity legs; use `auto` for best-supported).
+pub fn active() -> &'static Kernels {
+    let p = ACTIVE.load(Ordering::Relaxed);
+    if !p.is_null() {
+        // Tables are 'static and the pointer is only ever set to one of
+        // them, so dereferencing is always valid.
+        return unsafe { &*p };
+    }
+    init_from_env()
+}
+
+/// Backend of the active table (CLI summaries, serve `/metrics`).
+pub fn active_kind() -> BackendKind {
+    active().kind
+}
+
+#[cold]
+fn init_from_env() -> &'static Kernels {
+    let spec = std::env::var("GAPSAFE_KERNEL").unwrap_or_default();
+    let spec = if spec.is_empty() { "auto".to_string() } else { spec };
+    match resolve(&spec) {
+        Ok(kind) => {
+            // A racing initializer resolves the same environment to the
+            // same table, so last-write-wins is benign.
+            let t = table(kind).expect("resolve() only returns runnable backends");
+            ACTIVE.store(t as *const Kernels as *mut Kernels, Ordering::Relaxed);
+            t
+        }
+        Err(e) => panic!("GAPSAFE_KERNEL: {e}"),
+    }
+}
+
+/// Resolve a backend spec (`scalar` | `avx2` | `auto`) against this host
+/// without activating it.
+pub fn resolve(spec: &str) -> Result<BackendKind, String> {
+    match spec {
+        "auto" => Ok(if avx2_supported() { BackendKind::Avx2 } else { BackendKind::Scalar }),
+        "scalar" => Ok(BackendKind::Scalar),
+        "avx2" => {
+            if table(BackendKind::Avx2).is_some() {
+                Ok(BackendKind::Avx2)
+            } else {
+                Err("avx2 requested but this host does not support AVX2 \
+                     (use 'scalar' or 'auto')"
+                    .to_string())
+            }
+        }
+        other => Err(format!("unknown kernel backend '{other}' (scalar | avx2 | auto)")),
+    }
+}
+
+/// Activate a backend explicitly (overrides `GAPSAFE_KERNEL`). Errors
+/// when the host cannot run it. Always safe to call at any point: every
+/// backend is bitwise identical, so in-flight computations cannot drift.
+pub fn select(kind: BackendKind) -> Result<BackendKind, String> {
+    match table(kind) {
+        Some(t) => {
+            ACTIVE.store(t as *const Kernels as *mut Kernels, Ordering::Relaxed);
+            Ok(kind)
+        }
+        None => Err(format!("kernel backend '{}' is not supported on this host", kind.label())),
+    }
+}
+
+/// [`select`] from a spec string (the CLI `--kernel` flag).
+pub fn select_str(spec: &str) -> Result<BackendKind, String> {
+    select(resolve(spec)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    /// Naive single-accumulator references (deliberately *not* the 4-lane
+    /// tree): backends must agree with these to tolerance, and with the
+    /// scalar table to the bit.
+    fn naive_dot(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    fn rand_vec(rng: &mut Prng, n: usize) -> Vec<f64> {
+        (0..n).map(|_| rng.gaussian()).collect()
+    }
+
+    /// The edge shapes of the satellite brief: empty, below one lane,
+    /// exact lanes, remainder lanes, and big-ish.
+    const SHAPES: [usize; 14] = [0, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 33, 100];
+
+    #[test]
+    fn resolve_and_labels() {
+        assert_eq!(resolve("scalar").unwrap(), BackendKind::Scalar);
+        assert!(resolve("bogus").is_err());
+        let auto = resolve("auto").unwrap();
+        assert!(table(auto).is_some(), "auto resolved to an unrunnable backend");
+        assert_eq!(BackendKind::Scalar.label(), "scalar");
+        assert_eq!(BackendKind::Avx2.label(), "avx2");
+        if !avx2_supported() {
+            assert!(resolve("avx2").is_err());
+        }
+        // the active table is always one of the available ones
+        assert!(available().iter().any(|t| t.kind == active_kind()));
+    }
+
+    #[test]
+    fn dot_axpy_edge_shapes_all_backends() {
+        let mut rng = Prng::new(101);
+        for &n in &SHAPES {
+            let a = rand_vec(&mut rng, n);
+            let b = rand_vec(&mut rng, n);
+            let want = (scalar_table().dot)(&a, &b);
+            let naive = naive_dot(&a, &b);
+            assert!((want - naive).abs() <= 1e-12 * (1.0 + naive.abs()));
+            for t in available() {
+                let got = (t.dot)(&a, &b);
+                assert_eq!(got.to_bits(), want.to_bits(), "dot n={n} backend={:?}", t.kind);
+                let mut y1 = rand_vec(&mut rng, n);
+                let mut y2 = y1.clone();
+                (scalar_table().axpy)(-1.75, &a, &mut y1);
+                (t.axpy)(-1.75, &a, &mut y2);
+                for i in 0..n {
+                    assert_eq!(y1[i].to_bits(), y2[i].to_bits(), "axpy {i} {:?}", t.kind);
+                }
+                let (mut d1, mut d2) = (vec![0.0; n], vec![0.0; n]);
+                (scalar_table().sub)(&a, &b, &mut d1);
+                (t.sub)(&a, &b, &mut d2);
+                for i in 0..n {
+                    assert_eq!(d1[i].to_bits(), d2[i].to_bits(), "sub {i} {:?}", t.kind);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unaligned_subslices_all_backends() {
+        // Sub-slices starting at every offset mod 4 (and thus every
+        // 32-byte phase): the kernels use unaligned loads, so results must
+        // stay bit-identical regardless of the base pointer.
+        let mut rng = Prng::new(102);
+        let a = rand_vec(&mut rng, 70);
+        let b = rand_vec(&mut rng, 70);
+        for off in 0..4 {
+            for &n in &[0, 1, 3, 5, 17, 33] {
+                let (sa, sb) = (&a[off..off + n], &b[off..off + n]);
+                let want = (scalar_table().dot)(sa, sb);
+                for t in available() {
+                    assert_eq!(
+                        (t.dot)(sa, sb).to_bits(),
+                        want.to_bits(),
+                        "off={off} n={n} {:?}",
+                        t.kind
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn soft_threshold_edges_all_backends() {
+        let specials = [
+            0.0,
+            -0.0,
+            1.0,
+            -1.0,
+            0.5,
+            -0.5,
+            3.25,
+            -3.25,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+            f64::MIN_POSITIVE,
+            -f64::MIN_POSITIVE,
+        ];
+        let mut rng = Prng::new(103);
+        for tau in [0.0, 1.0, -1.0, 0.75] {
+            for &n in &SHAPES {
+                let mut base = rand_vec(&mut rng, n);
+                // splice the special values in cyclically
+                for (i, v) in base.iter_mut().enumerate() {
+                    if i % 3 == 0 {
+                        *v = specials[i % specials.len()];
+                    }
+                }
+                let mut want = base.clone();
+                (scalar_table().soft_threshold)(&mut want, tau);
+                for t in available() {
+                    let mut got = base.clone();
+                    (t.soft_threshold)(&mut got, tau);
+                    for i in 0..n {
+                        assert_eq!(
+                            got[i].to_bits(),
+                            want[i].to_bits(),
+                            "st tau={tau} i={i} in={} {:?}",
+                            base[i],
+                            t.kind
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn xtv_gemv_xtm_odd_matrices_all_backends() {
+        // Odd row counts make every Mat::col an unaligned sub-slice of the
+        // column-major buffer — exactly the satellite's edge case.
+        let mut rng = Prng::new(104);
+        for (n, p) in [(1, 1), (3, 2), (4, 4), (5, 7), (7, 5), (8, 9), (13, 11), (16, 6)] {
+            let mut x = Mat::zeros(n, p);
+            for v in x.as_mut_slice() {
+                *v = rng.gaussian();
+            }
+            let v = rand_vec(&mut rng, n);
+            let mut b = rand_vec(&mut rng, p);
+            b[0] = 0.0; // exercise the gemv skip-zero path
+            let mut want_c = vec![0.0; p];
+            (scalar_table().xtv)(&x, &v, &mut want_c);
+            let mut want_z = vec![0.0; n];
+            (scalar_table().gemv)(&x, &b, &mut want_z);
+            let vm = {
+                let mut m = Mat::zeros(n, 3);
+                for w in m.as_mut_slice() {
+                    *w = rng.gaussian();
+                }
+                m
+            };
+            let mut want_m = Mat::zeros(p, 3);
+            (scalar_table().xtm)(&x, &vm, &mut want_m);
+            for j in 0..p {
+                // per-column tiles must equal the plain dot of that column
+                assert_eq!(
+                    want_c[j].to_bits(),
+                    (scalar_table().dot)(x.col(j), &v).to_bits(),
+                    "scalar xtv is not dot-per-column at {j}"
+                );
+            }
+            for t in available() {
+                let mut c = vec![0.0; p];
+                (t.xtv)(&x, &v, &mut c);
+                let mut z = vec![1.0; n]; // gemv must overwrite, not accumulate
+                (t.gemv)(&x, &b, &mut z);
+                let mut m = Mat::zeros(p, 3);
+                (t.xtm)(&x, &vm, &mut m);
+                for j in 0..p {
+                    assert_eq!(c[j].to_bits(), want_c[j].to_bits(), "xtv {j} {:?}", t.kind);
+                }
+                for i in 0..n {
+                    assert_eq!(z[i].to_bits(), want_z[i].to_bits(), "gemv {i} {:?}", t.kind);
+                }
+                for (a, w) in m.as_slice().iter().zip(want_m.as_slice()) {
+                    assert_eq!(a.to_bits(), w.to_bits(), "xtm {:?}", t.kind);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_scatter_all_backends() {
+        let mut rng = Prng::new(105);
+        for &nnz in &SHAPES {
+            let rows = (3 * nnz).max(4);
+            let v = rand_vec(&mut rng, rows);
+            // strided + shuffled-ish indices, duplicates allowed for the
+            // raw kernel (CSC never produces them, but the kernel must not
+            // care for gather; scatter adds are order-exact anyway)
+            let idx: Vec<usize> = (0..nnz).map(|k| (k * 7 + 3) % rows).collect();
+            let val = rand_vec(&mut rng, nnz);
+            let want = (scalar_table().gather_dot)(&idx, &val, &v);
+            let naive: f64 = idx.iter().zip(&val).map(|(&i, &x)| x * v[i]).sum();
+            assert!((want - naive).abs() <= 1e-12 * (1.0 + naive.abs()));
+            let mut want_out = v.clone();
+            (scalar_table().scatter_axpy)(&idx, -0.75, &val, &mut want_out);
+            for t in available() {
+                assert_eq!(
+                    (t.gather_dot)(&idx, &val, &v).to_bits(),
+                    want.to_bits(),
+                    "gather nnz={nnz} {:?}",
+                    t.kind
+                );
+                let mut out = v.clone();
+                (t.scatter_axpy)(&idx, -0.75, &val, &mut out);
+                for i in 0..rows {
+                    assert_eq!(out[i].to_bits(), want_out[i].to_bits(), "scatter {:?}", t.kind);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn select_round_trips() {
+        // Switching backends is always observable through active_kind and
+        // always reversible. Restore the entry state at the end so a
+        // GAPSAFE_KERNEL-forced test run keeps its forced backend for
+        // co-resident tests (harmless either way — bitwise identical).
+        let before = active_kind();
+        select(BackendKind::Scalar).unwrap();
+        assert_eq!(active_kind(), BackendKind::Scalar);
+        if avx2_supported() {
+            assert_eq!(select_str("avx2").unwrap(), BackendKind::Avx2);
+            assert_eq!(active_kind(), BackendKind::Avx2);
+        } else {
+            assert!(select(BackendKind::Avx2).is_err());
+        }
+        assert!(select_str("nope").is_err());
+        select(before).unwrap();
+        assert_eq!(active_kind(), before);
+    }
+}

@@ -1,0 +1,131 @@
+//! Portable scalar backend: the reference implementation every other
+//! backend must match bit for bit.
+//!
+//! The dense kernels are the historical `linalg` loops moved here
+//! verbatim. The one deliberate numeric change versus the pre-engine
+//! crate is [`gather_dot`]: the historical CSC column dot accumulated in
+//! a single serial chain, which no SIMD backend can reproduce bitwise;
+//! it now uses the same 4-lane strided tree as the dense [`dot`] (lane
+//! `k` accumulates elements `4i + k`; horizontal sum in the fixed
+//! `((s0 + s1) + s2) + s3` order; remainder folded in sequentially), a
+//! one-time ~1-ulp-scale shift on sparse designs that makes
+//! cross-backend bitwise parity possible at all. Since the engine
+//! landed, *this* file is the bit-exact reference.
+//!
+//! Length contract (all backends): reduction and update kernels operate
+//! on the common prefix of their slices — mismatched lengths are a
+//! caller bug (the `linalg` forwarders debug-assert equality), and every
+//! backend clamps identically so even buggy callers cannot make two
+//! backends diverge.
+
+use crate::linalg::Mat;
+
+/// Dot product, 4-lane strided reduction tree (unrolled by 4 for the
+/// scalar pipeline; see EXPERIMENTS.md §Perf).
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // common-prefix clamp: identical mismatch behavior in every backend
+    let n = a.len().min(b.len());
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for k in 0..chunks {
+        let i = 4 * k;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in 4 * chunks..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `y += alpha * x`.
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `out = a - b` elementwise (residual / link refreshes).
+pub fn sub(a: &[f64], b: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    for ((o, ai), bi) in out.iter_mut().zip(a).zip(b) {
+        *o = ai - bi;
+    }
+}
+
+/// Soft-thresholding S_tau (Sec. 2.1), in place.
+pub fn soft_threshold(x: &mut [f64], tau: f64) {
+    for v in x {
+        let a = v.abs() - tau;
+        *v = if a > 0.0 { v.signum() * a } else { 0.0 };
+    }
+}
+
+/// `out[j] = X_j^T v` for all columns — the screening hot spot.
+pub fn xtv(x: &Mat, v: &[f64], out: &mut [f64]) {
+    for j in 0..x.cols() {
+        out[j] = dot(x.col(j), v);
+    }
+}
+
+/// `out = X * b` (n-vector), walking columns so memory access is
+/// unit-stride.
+pub fn gemv(x: &Mat, b: &[f64], out: &mut [f64]) {
+    out.iter_mut().for_each(|v| *v = 0.0);
+    for j in 0..x.cols() {
+        let bj = b[j];
+        if bj != 0.0 {
+            axpy(bj, x.col(j), out);
+        }
+    }
+}
+
+/// `out = X^T V` (p×q), for the multi-task case.
+pub fn xtm(x: &Mat, v: &Mat, out: &mut Mat) {
+    for k in 0..v.cols() {
+        let vk = v.col(k);
+        for j in 0..x.cols() {
+            out[(j, k)] = dot(x.col(j), vk);
+        }
+    }
+}
+
+/// CSC column dot `sum_k val[k] * v[idx[k]]`, 4-lane strided tree — the
+/// same reduction shape as [`dot`], so the AVX2 gather kernel can match
+/// it bit for bit (four independent accumulator chains also let the
+/// scalar pipeline overlap the loads, where the historical single-chain
+/// loop serialized on the add latency).
+pub fn gather_dot(idx: &[usize], val: &[f64], v: &[f64]) -> f64 {
+    debug_assert_eq!(idx.len(), val.len());
+    let n = idx.len().min(val.len());
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for k in 0..chunks {
+        let i = 4 * k;
+        s0 += val[i] * v[idx[i]];
+        s1 += val[i + 1] * v[idx[i + 1]];
+        s2 += val[i + 2] * v[idx[i + 2]];
+        s3 += val[i + 3] * v[idx[i + 3]];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in 4 * chunks..n {
+        s += val[i] * v[idx[i]];
+    }
+    s
+}
+
+/// CSC column update `out[idx[k]] += alpha * val[k]` (scatter). Shared by
+/// every backend: the scattered adds are a genuine dependency chain only
+/// when indices repeat, but AVX2 has no scatter store either way.
+pub fn scatter_axpy(idx: &[usize], alpha: f64, val: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(idx.len(), val.len());
+    for (&i, &x) in idx.iter().zip(val) {
+        out[i] += alpha * x;
+    }
+}

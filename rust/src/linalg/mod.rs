@@ -5,8 +5,16 @@
 //! paper's Cython implementation). All the O(np) kernels used by solvers
 //! and screening live here: `gemv`, `xtv` (feature–residual correlations),
 //! column norms, block spectral norms (power iteration), axpy updates.
+//!
+//! The hot kernels (`dot`, `axpy`, `sub`, `soft_threshold`, `xtv`,
+//! `gemv`, `xtm` and the CSC gather/scatter loops in [`sparse`]) are thin
+//! forwarders into the runtime-dispatched SIMD engine in [`kernels`]: a
+//! backend (scalar or AVX2) is detected once at startup and every backend
+//! is **bitwise identical** by contract, so the choice is purely a
+//! performance knob (`GAPSAFE_KERNEL=scalar|avx2|auto`, CLI `--kernel`).
 
 pub mod compact;
+pub mod kernels;
 pub mod sparse;
 
 /// Dense column-major matrix of `f64`.
@@ -153,34 +161,28 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
 // Vector kernels
 // ---------------------------------------------------------------------------
 
-/// Dot product (unrolled by 4 for the scalar pipeline; see EXPERIMENTS.md §Perf).
+/// Dot product — 4-lane strided reduction tree, dispatched to the active
+/// SIMD backend (see [`kernels`]; every backend is bitwise identical).
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    for k in 0..chunks {
-        let i = 4 * k;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
-    }
-    let mut s = s0 + s1 + s2 + s3;
-    for i in 4 * chunks..n {
-        s += a[i] * b[i];
-    }
-    s
+    (kernels::active().dot)(a, b)
 }
 
-/// `y += alpha * x`.
+/// `y += alpha * x` (backend-dispatched, bitwise identical everywhere).
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+    (kernels::active().axpy)(alpha, x, y)
+}
+
+/// `out = a - b` elementwise — the residual / link-refresh kernel
+/// (backend-dispatched, bitwise identical everywhere).
+#[inline]
+pub fn sub(a: &[f64], b: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    (kernels::active().sub)(a, b, out)
 }
 
 /// Squared Euclidean norm.
@@ -195,10 +197,26 @@ pub fn norm2(x: &[f64]) -> f64 {
     norm_sq(x).sqrt()
 }
 
-/// Sup norm.
+/// Sup norm, NaN-propagating.
+///
+/// `f64::max` silently *ignores* NaN (`NaN.max(x) == x`), so the old
+/// fold-based implementation mapped a poisoned residual to a perfectly
+/// ordinary-looking norm — and a gap check downstream could pass on
+/// garbage. A NaN anywhere in `x` now yields NaN, which every ordered
+/// comparison downstream rejects.
 #[inline]
 pub fn norm_inf(x: &[f64]) -> f64 {
-    x.iter().fold(0.0, |m, &v| m.max(v.abs()))
+    let mut m = 0.0_f64;
+    for &v in x {
+        let a = v.abs();
+        if a.is_nan() {
+            return f64::NAN;
+        }
+        if a > m {
+            m = a;
+        }
+    }
+    m
 }
 
 /// ell_1 norm.
@@ -207,13 +225,11 @@ pub fn norm1(x: &[f64]) -> f64 {
     x.iter().map(|v| v.abs()).sum()
 }
 
-/// Soft-thresholding S_tau (Sec. 2.1), in place.
+/// Soft-thresholding S_tau (Sec. 2.1), in place (backend-dispatched,
+/// bitwise identical everywhere).
 #[inline]
 pub fn soft_threshold(x: &mut [f64], tau: f64) {
-    for v in x {
-        let a = v.abs() - tau;
-        *v = if a > 0.0 { v.signum() * a } else { 0.0 };
-    }
+    (kernels::active().soft_threshold)(x, tau)
 }
 
 /// Scalar soft-threshold.
@@ -245,40 +261,31 @@ pub fn block_soft_threshold(v: &mut [f64], tau: f64) -> f64 {
 // Matrix kernels
 // ---------------------------------------------------------------------------
 
-/// `out = X * b` (n-vector), walking columns so memory access is unit-stride.
+/// `out = X * b` (n-vector), walking columns so memory access is
+/// unit-stride (backend-dispatched; the AVX2 backend applies four columns
+/// per pass over `out`, bitwise identically).
 pub fn gemv(x: &Mat, b: &[f64], out: &mut [f64]) {
     assert_eq!(x.cols(), b.len());
     assert_eq!(x.rows(), out.len());
-    out.iter_mut().for_each(|v| *v = 0.0);
-    for j in 0..x.cols() {
-        let bj = b[j];
-        if bj != 0.0 {
-            axpy(bj, x.col(j), out);
-        }
-    }
+    (kernels::active().gemv)(x, b, out)
 }
 
 /// `out[j] = X_j^T v` for all columns — the screening hot spot (L3 native
-/// counterpart of the L1 Pallas `xtv` kernel).
+/// counterpart of the L1 Pallas `xtv` kernel; backend-dispatched — the
+/// AVX2 backend register-tiles four columns per pass, bitwise
+/// identically).
 pub fn xtv(x: &Mat, v: &[f64], out: &mut [f64]) {
     assert_eq!(x.rows(), v.len());
     assert_eq!(x.cols(), out.len());
-    for j in 0..x.cols() {
-        out[j] = dot(x.col(j), v);
-    }
+    (kernels::active().xtv)(x, v, out)
 }
 
-/// `out = X^T V` (p×q), for the multi-task case.
+/// `out = X^T V` (p×q), for the multi-task case (backend-dispatched).
 pub fn xtm(x: &Mat, v: &Mat, out: &mut Mat) {
     assert_eq!(x.rows(), v.rows());
     assert_eq!(out.rows(), x.cols());
     assert_eq!(out.cols(), v.cols());
-    for k in 0..v.cols() {
-        let vk = v.col(k);
-        for j in 0..x.cols() {
-            out[(j, k)] = dot(x.col(j), vk);
-        }
-    }
+    (kernels::active().xtm)(x, v, out)
 }
 
 /// Per-column squared Euclidean norms of X.
@@ -289,10 +296,13 @@ pub fn col_norms_sq(x: &Mat) -> Vec<f64> {
 /// Spectral norm of the column block `cols` of X via power iteration.
 ///
 /// Used for the group operator norms Omega_g^D(X_g) in the sphere tests
-/// (Eq. 8). Deterministic start vector; `iters` defaults are ample because
-/// only an upper-accurate estimate is needed (we add a +1e-12 safety slack
-/// in callers... no: power iteration *under*-estimates, so callers use the
-/// Frobenius norm fallback when safety matters — see `penalty::GroupNorms`).
+/// (Eq. 8). The start vector is deterministic, so the estimate is
+/// reproducible run to run. Contract: power iteration converges to the
+/// true spectral norm **from below**, so the returned value may
+/// *under*-estimate it; callers that need a safe (never-too-small) bound
+/// must not lean on this estimate alone and instead fall back to the
+/// Frobenius norm of the block, which always upper-bounds the spectral
+/// norm — see `penalty::GroupNorms` for where each is used.
 pub fn block_spectral_norm(x: &Mat, cols: &[usize], iters: usize) -> f64 {
     let n = x.rows();
     if cols.is_empty() || n == 0 {
@@ -456,5 +466,33 @@ mod tests {
         assert_eq!(norm2(&v), 5.0);
         assert_eq!(norm1(&v), 7.0);
         assert_eq!(norm_inf(&v), 4.0);
+    }
+
+    #[test]
+    fn norm_inf_propagates_nan() {
+        // Regression: `f64::max` ignores NaN, so the old fold returned 2.0
+        // for every one of these poisoned inputs and a corrupted residual
+        // could sail through a gap check.
+        assert!(norm_inf(&[1.0, f64::NAN, 2.0]).is_nan());
+        assert!(norm_inf(&[f64::NAN]).is_nan());
+        assert!(norm_inf(&[2.0, 1.0, f64::NAN]).is_nan());
+        // finite inputs are untouched by the fix
+        assert_eq!(norm_inf(&[]), 0.0);
+        assert_eq!(norm_inf(&[-7.5, 2.0]), 7.5);
+        assert_eq!(norm_inf(&[f64::NEG_INFINITY]), f64::INFINITY);
+    }
+
+    #[test]
+    fn sub_matches_manual_loop() {
+        let mut rng = Prng::new(11);
+        for n in [0, 1, 3, 5, 17] {
+            let a: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let mut out = vec![0.0; n];
+            sub(&a, &b, &mut out);
+            for i in 0..n {
+                assert_eq!(out[i].to_bits(), (a[i] - b[i]).to_bits());
+            }
+        }
     }
 }

@@ -5,7 +5,7 @@
 //! so CSC gives the same unit-stride access pattern as the dense `Mat`.
 //! `Design` abstracts over both so solvers and screening are written once.
 
-use super::{dot, Mat};
+use super::{dot, kernels, Mat};
 
 /// CSC sparse matrix (f64 values).
 #[derive(Debug, Clone)]
@@ -96,24 +96,26 @@ impl Csc {
         (&self.indices[a..b], &self.values[a..b])
     }
 
-    /// Sparse dot of column j with a dense vector.
+    /// Sparse dot of column j with a dense vector — the `sptv` gather
+    /// ingredient of the sparse screening sweep, dispatched to the active
+    /// SIMD backend. Every backend computes the same 4-lane strided
+    /// reduction tree as the dense `dot` (see `linalg::kernels`), so the
+    /// result is bitwise identical under any backend. (The tree replaced
+    /// the historical single-chain accumulation when the kernel engine
+    /// landed — a one-time ~ulp-scale shift on sparse designs.)
     #[inline]
     pub fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
         let (idx, val) = self.col(j);
-        let mut s = 0.0;
-        for (&i, &x) in idx.iter().zip(val) {
-            s += x * v[i];
-        }
-        s
+        (kernels::active().gather_dot)(idx, val, v)
     }
 
-    /// `out += alpha * X_j`.
+    /// `out += alpha * X_j` — the `spmv` scatter ingredient
+    /// (backend-dispatched; scalar in every backend, see
+    /// `linalg::kernels`).
     #[inline]
     pub fn col_axpy(&self, j: usize, alpha: f64, out: &mut [f64]) {
         let (idx, val) = self.col(j);
-        for (&i, &x) in idx.iter().zip(val) {
-            out[i] += alpha * x;
-        }
+        (kernels::active().scatter_axpy)(idx, alpha, val, out)
     }
 
     /// Squared norm of column j.

@@ -36,7 +36,7 @@ fn main() -> ExitCode {
         return ExitCode::FAILURE;
     };
     let opts = parse_flags(rest);
-    let r = match cmd.as_str() {
+    let r = apply_kernel_flag(&opts).and_then(|()| match cmd.as_str() {
         "path" => cmd_path(&opts),
         "solve" => cmd_solve(&opts),
         "cv" => cmd_cv(&opts),
@@ -54,7 +54,7 @@ fn main() -> ExitCode {
             Ok(())
         }
         other => Err(format!("unknown command '{other}'")),
-    };
+    });
     match r {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
@@ -90,6 +90,9 @@ fn usage() {
                       best = monotone Gap Safe radii, rescale = historical bitwise output)\n\
            --seed 42   --small (shrink synthetic workloads)   --out results\n\
            --max-epochs 10000   --fce 10 (gap/screening cadence)\n\
+           --kernel scalar|avx2|auto (SIMD kernel backend, default auto = best\n\
+                      supported; GAPSAFE_KERNEL env equivalent. All backends are\n\
+                      bitwise identical — a pure performance knob)\n\
            --no-compact (path/solve/cv/batch/serve: disable active-set compaction;\n\
                          bitwise-identical, slower — fig3..fig6 always compact)\n\
          per-subcommand flags:\n\
@@ -197,6 +200,18 @@ fn auto_workers() -> usize {
     gapsafe::solver::parallel::effective_threads(0)
 }
 
+/// `--kernel scalar|avx2|auto`: select the SIMD kernel backend for the
+/// whole process (overrides `GAPSAFE_KERNEL`; every backend is bitwise
+/// identical — see `linalg::kernels` — so this is purely a perf knob).
+/// Applied before any subcommand runs so even `lambda_max` at parse time
+/// uses the requested backend.
+fn apply_kernel_flag(o: &Flags) -> Result<(), String> {
+    if let Some(spec) = o.get("kernel") {
+        gapsafe::linalg::kernels::select_str(spec).map_err(|e| format!("--kernel: {e}"))?;
+    }
+    Ok(())
+}
+
 fn cmd_serve(o: &Flags) -> Result<(), String> {
     let host = flag(o, "host", "127.0.0.1");
     let port = flag_usize(o, "port", 7878)?;
@@ -215,9 +230,10 @@ fn cmd_serve(o: &Flags) -> Result<(), String> {
     };
     let server = Server::bind(&cfg)?;
     println!(
-        "gapsafe serve: listening on {host}:{} (cache {} MiB)",
+        "gapsafe serve: listening on {host}:{} (cache {} MiB, kernel backend {})",
         server.port(),
-        cfg.cache_mb
+        cfg.cache_mb,
+        gapsafe::linalg::kernels::active_kind().label()
     );
     println!("endpoints: /healthz /metrics /v1/fit /v1/jobs/<id> /v1/predict  (docs/SERVING.md)");
     // Runs until the process is killed.
@@ -256,12 +272,13 @@ fn cmd_path(o: &Flags) -> Result<(), String> {
         );
     }
     println!(
-        "path: {} lambdas in {:.3}s (rule={}, warm={}, threads={})",
+        "path: {} lambdas in {:.3}s (rule={}, warm={}, threads={}, kernel={})",
         res.points.len(),
         res.total_seconds,
         cfg.rule.label(),
         cfg.warm.label(),
-        gapsafe::solver::parallel::effective_threads(cfg.threads)
+        gapsafe::solver::parallel::effective_threads(cfg.threads),
+        gapsafe::linalg::kernels::active_kind().label()
     );
     Ok(())
 }
@@ -574,6 +591,24 @@ mod tests {
             assert!(n >= 1, "--threads {spelled} resolved to {n}");
         }
         assert!(flag_workers(&flags(&[("threads", "many")]), "threads", 1).is_err());
+    }
+
+    #[test]
+    fn kernel_flag_selects_and_rejects() {
+        use gapsafe::linalg::kernels;
+        // restore on exit so a GAPSAFE_KERNEL-forced run stays forced for
+        // the co-resident tests in this binary
+        let entry = kernels::active_kind();
+        // no flag: no-op, keeps whatever GAPSAFE_KERNEL / detection chose
+        assert!(apply_kernel_flag(&flags(&[])).is_ok());
+        assert_eq!(kernels::active_kind(), entry);
+        // scalar is available on every host
+        assert!(apply_kernel_flag(&flags(&[("kernel", "scalar")])).is_ok());
+        assert_eq!(kernels::active_kind(), kernels::BackendKind::Scalar);
+        let err = apply_kernel_flag(&flags(&[("kernel", "bogus")])).unwrap_err();
+        assert!(err.starts_with("--kernel:"), "{err}");
+        kernels::select(entry).unwrap();
+        assert_eq!(kernels::active_kind(), entry);
     }
 
     #[test]

@@ -179,6 +179,14 @@ impl Problem {
     fn corr_active_serial(&self, v: &Mat, active: &ActiveSet, out: &mut Mat) {
         let q = v.cols();
         if q == 1 {
+            if active.n_active_feats() == self.p() {
+                // Nothing to mask: hand the whole sweep to the dispatched
+                // xtv kernel (register-tiled on AVX2). Bitwise identical
+                // to the per-column col_dot loop below by the kernel
+                // contract (see linalg::kernels).
+                self.x.xtv(v.col(0), out.col_mut(0));
+                return;
+            }
             for j in 0..self.p() {
                 if active.feat[j] {
                     out[(j, 0)] = self.x.col_dot(j, v.col(0));
@@ -287,6 +295,18 @@ impl Problem {
     ) {
         let q = v.cols();
         if q == 1 {
+            if (0..cd.width()).all(|c| active.feat[cd.feat_of(c)]) {
+                // Every packed column is live (always true right after a
+                // repack): run the dispatched xtv kernel over the small
+                // contiguous working matrix, then scatter by the index
+                // map. Bitwise identical to the per-column loop below.
+                let mut buf = vec![0.0; cd.width()];
+                cd.design().xtv(v.col(0), &mut buf);
+                for (c, s) in buf.into_iter().enumerate() {
+                    out[(cd.feat_of(c), 0)] = s;
+                }
+                return;
+            }
             for c in 0..cd.width() {
                 let j = cd.feat_of(c);
                 if active.feat[j] {

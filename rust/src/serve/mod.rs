@@ -216,6 +216,12 @@ fn handle_healthz(state: &ServerState) -> Response {
         &Json::obj([
             ("ok", Json::Bool(true)),
             ("uptime_seconds", Json::Num(state.started.elapsed().as_secs_f64())),
+            // Which SIMD kernel backend this process solves with (bitwise
+            // identical across backends — purely an ops/perf signal).
+            (
+                "kernel_backend",
+                Json::Str(crate::linalg::kernels::active_kind().label().to_string()),
+            ),
         ]),
     )
 }
@@ -365,6 +371,10 @@ fn handle_metrics(state: &ServerState) -> Response {
         200,
         &Json::obj([
             ("uptime_seconds", Json::Num(state.started.elapsed().as_secs_f64())),
+            (
+                "kernel_backend",
+                Json::Str(crate::linalg::kernels::active_kind().label().to_string()),
+            ),
             ("http_requests", load(&m.http_requests)),
             ("http_errors", load(&m.http_errors)),
             ("fit_requests", load(&m.fit_requests)),
@@ -421,8 +431,18 @@ mod tests {
     #[test]
     fn router_health_metrics_and_404() {
         let st = state();
-        assert_eq!(route(&st, &get("/healthz")).status, 200);
-        assert_eq!(route(&st, &get("/metrics")).status, 200);
+        // Both ops endpoints surface the active kernel backend by name.
+        let want_backend = crate::linalg::kernels::active_kind().label();
+        for path in ["/healthz", "/metrics"] {
+            let resp = route(&st, &get(path));
+            assert_eq!(resp.status, 200);
+            let v = Json::parse(&resp.body).unwrap();
+            assert_eq!(
+                v.get("kernel_backend").and_then(Json::as_str),
+                Some(want_backend),
+                "{path} missing kernel_backend"
+            );
+        }
         assert_eq!(route(&st, &get("/nope")).status, 404);
         let del = Request {
             method: "DELETE".to_string(),

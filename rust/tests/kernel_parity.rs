@@ -1,0 +1,197 @@
+//! Cross-backend parity gate for the SIMD kernel engine.
+//!
+//! The `linalg::kernels` contract says every backend is **bitwise
+//! identical**. This file enforces it at two levels:
+//!
+//! 1. raw kernels (`dot` / `xtv` / `gemv` / `xtm` / CSC gather+scatter /
+//!    `axpy` / `soft_threshold` / `sub`) on randomized shapes, including
+//!    remainder lanes and odd row counts;
+//! 2. whole `solve_path` runs (Lasso + logistic, dense + sparse designs)
+//!    executed once per backend, compared `PathResult`-deep to the bit.
+//!
+//! On hosts without AVX2 the tests log a `kernel-parity: SKIPPED` notice
+//! and pass vacuously (the scalar backend is its own reference); CI greps
+//! the notice to make sure the gate ran non-trivially where AVX2 exists.
+
+use gapsafe::data::{synth, Dataset};
+use gapsafe::linalg::kernels::{self, BackendKind, Kernels};
+use gapsafe::linalg::Mat;
+use gapsafe::solver::path::{solve_path, PathConfig, PathResult};
+use gapsafe::util::prng::Prng;
+use gapsafe::{build_problem, Task};
+
+/// The AVX2 table, or a logged skip.
+fn avx2_or_skip(gate: &str) -> Option<&'static Kernels> {
+    let t = kernels::table(BackendKind::Avx2);
+    if t.is_none() {
+        println!("kernel-parity: SKIPPED {gate} — AVX2 not available on this host (scalar only)");
+    }
+    t
+}
+
+fn rand_vec(rng: &mut Prng, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.gaussian()).collect()
+}
+
+fn rand_mat(rng: &mut Prng, n: usize, p: usize) -> Mat {
+    let mut m = Mat::zeros(n, p);
+    for v in m.as_mut_slice() {
+        *v = rng.gaussian();
+    }
+    m
+}
+
+#[test]
+fn raw_kernels_bitwise_parity_on_randomized_shapes() {
+    let Some(avx2) = avx2_or_skip("raw-kernel gate") else {
+        return;
+    };
+    let scalar = kernels::scalar_table();
+    let mut rng = Prng::new(7_700);
+    let mut compared = 0usize;
+    for trial in 0..40 {
+        // shapes deliberately indivisible by the 4-lane width most of the
+        // time, with a few exact multiples mixed in
+        let n = 1 + rng.below(97);
+        let p = 1 + rng.below(33);
+        let x = rand_mat(&mut rng, n, p);
+        let v = rand_vec(&mut rng, n);
+        let mut b = rand_vec(&mut rng, p);
+        if trial % 3 == 0 {
+            b[trial % p] = 0.0; // exercise the gemv zero-skip path
+        }
+
+        // dot / axpy / sub / soft_threshold
+        let a1 = rand_vec(&mut rng, n);
+        let a2 = rand_vec(&mut rng, n);
+        assert_eq!((scalar.dot)(&a1, &a2).to_bits(), (avx2.dot)(&a1, &a2).to_bits(), "dot n={n}");
+        let (mut y1, mut y2) = (a1.clone(), a1.clone());
+        (scalar.axpy)(-2.5, &a2, &mut y1);
+        (avx2.axpy)(-2.5, &a2, &mut y2);
+        let (mut d1, mut d2) = (vec![0.0; n], vec![0.0; n]);
+        (scalar.sub)(&a1, &a2, &mut d1);
+        (avx2.sub)(&a1, &a2, &mut d2);
+        let (mut s1, mut s2) = (a1.clone(), a1.clone());
+        (scalar.soft_threshold)(&mut s1, 0.6);
+        (avx2.soft_threshold)(&mut s2, 0.6);
+        for i in 0..n {
+            assert_eq!(y1[i].to_bits(), y2[i].to_bits(), "axpy {i}");
+            assert_eq!(d1[i].to_bits(), d2[i].to_bits(), "sub {i}");
+            assert_eq!(s1[i].to_bits(), s2[i].to_bits(), "soft_threshold {i}");
+        }
+
+        // xtv / gemv / xtm
+        let (mut c1, mut c2) = (vec![0.0; p], vec![0.0; p]);
+        (scalar.xtv)(&x, &v, &mut c1);
+        (avx2.xtv)(&x, &v, &mut c2);
+        let (mut z1, mut z2) = (vec![0.0; n], vec![0.0; n]);
+        (scalar.gemv)(&x, &b, &mut z1);
+        (avx2.gemv)(&x, &b, &mut z2);
+        for j in 0..p {
+            assert_eq!(c1[j].to_bits(), c2[j].to_bits(), "xtv n={n} p={p} j={j}");
+        }
+        for i in 0..n {
+            assert_eq!(z1[i].to_bits(), z2[i].to_bits(), "gemv n={n} p={p} i={i}");
+        }
+        let q = 1 + trial % 4;
+        let vm = rand_mat(&mut rng, n, q);
+        let (mut m1, mut m2) = (Mat::zeros(p, q), Mat::zeros(p, q));
+        (scalar.xtm)(&x, &vm, &mut m1);
+        (avx2.xtm)(&x, &vm, &mut m2);
+        for (w1, w2) in m1.as_slice().iter().zip(m2.as_slice()) {
+            assert_eq!(w1.to_bits(), w2.to_bits(), "xtm n={n} p={p} q={q}");
+        }
+
+        // CSC gather (sptv) / scatter (spmv) on a random sparsity pattern
+        let nnz = 1 + rng.below(60);
+        let idx: Vec<usize> = (0..nnz).map(|_| rng.below(n)).collect();
+        let val = rand_vec(&mut rng, nnz);
+        assert_eq!(
+            (scalar.gather_dot)(&idx, &val, &v).to_bits(),
+            (avx2.gather_dot)(&idx, &val, &v).to_bits(),
+            "gather_dot nnz={nnz}"
+        );
+        let (mut o1, mut o2) = (v.clone(), v.clone());
+        (scalar.scatter_axpy)(&idx, 1.25, &val, &mut o1);
+        (avx2.scatter_axpy)(&idx, 1.25, &val, &mut o2);
+        for i in 0..n {
+            assert_eq!(o1[i].to_bits(), o2[i].to_bits(), "scatter_axpy {i}");
+        }
+        compared += 1;
+    }
+    println!("kernel-parity: OK raw-kernel gate — {compared} randomized shapes, scalar vs avx2");
+}
+
+/// Binarize a regression dataset's targets so the sparse design can also
+/// drive the logistic fit.
+fn binarize(mut ds: Dataset) -> Dataset {
+    let mean = ds.y.as_slice().iter().sum::<f64>() / ds.y.as_slice().len() as f64;
+    for v in ds.y.as_mut_slice() {
+        *v = if *v > mean { 1.0 } else { 0.0 };
+    }
+    ds
+}
+
+fn solve_under(kind: BackendKind, ds: &Dataset, task: Task, cfg: &PathConfig) -> PathResult {
+    kernels::select(kind).expect("backend availability checked by caller");
+    let prob = build_problem(ds.clone(), task).unwrap();
+    solve_path(&prob, cfg)
+}
+
+fn assert_paths_bit_identical(a: &PathResult, b: &PathResult, label: &str) {
+    assert_eq!(a.lambdas.len(), b.lambdas.len(), "{label}: grid length");
+    for (la, lb) in a.lambdas.iter().zip(&b.lambdas) {
+        assert_eq!(la.to_bits(), lb.to_bits(), "{label}: lambda");
+    }
+    assert_eq!(a.lam_max.to_bits(), b.lam_max.to_bits(), "{label}: lam_max");
+    for (t, (pa, pb)) in a.points.iter().zip(&b.points).enumerate() {
+        assert_eq!(pa.gap.to_bits(), pb.gap.to_bits(), "{label}: gap at t={t}");
+        assert_eq!(pa.epochs, pb.epochs, "{label}: epochs at t={t}");
+        assert_eq!(pa.n_active_feats, pb.n_active_feats, "{label}: active at t={t}");
+        assert_eq!(pa.nnz_coefs, pb.nnz_coefs, "{label}: nnz at t={t}");
+        assert_eq!(pa.converged, pb.converged, "{label}: converged at t={t}");
+        assert_eq!(pa.kkt_violations, pb.kkt_violations, "{label}: kkt at t={t}");
+    }
+    for (t, (ba, bb)) in a.betas.iter().zip(&b.betas).enumerate() {
+        for (va, vb) in ba.as_slice().iter().zip(bb.as_slice()) {
+            assert_eq!(va.to_bits(), vb.to_bits(), "{label}: beta bits at t={t}");
+        }
+    }
+}
+
+#[test]
+fn solve_path_bit_identical_across_backends() {
+    if avx2_or_skip("solve_path gate").is_none() {
+        return;
+    }
+    let entry_backend = kernels::active_kind();
+    let cfg = PathConfig {
+        n_lambdas: 12,
+        delta: 2.0,
+        eps: 1e-5,
+        ..PathConfig::default()
+    };
+    let scenarios: Vec<(&str, Dataset, Task)> = vec![
+        ("lasso-dense", synth::leukemia_like_scaled(30, 120, 3, false), Task::Lasso),
+        ("logreg-dense", synth::leukemia_like_scaled(30, 120, 3, true), Task::Logreg),
+        ("lasso-sparse", synth::sparse_regression(40, 150, 0.15, 5), Task::Lasso),
+        ("logreg-sparse", binarize(synth::sparse_regression(40, 150, 0.15, 6)), Task::Logreg),
+    ];
+    for (label, ds, task) in &scenarios {
+        let on_scalar = solve_under(BackendKind::Scalar, ds, *task, &cfg);
+        let on_avx2 = solve_under(BackendKind::Avx2, ds, *task, &cfg);
+        assert_paths_bit_identical(&on_scalar, &on_avx2, label);
+        // sanity: the run did real work (several lambdas, nonzero coefs)
+        assert!(on_scalar.points.len() >= 12, "{label}: path too short");
+        assert!(
+            on_scalar.betas.last().unwrap().nnz() > 0,
+            "{label}: degenerate all-zero path"
+        );
+    }
+    // restore the entry backend (keeps a GAPSAFE_KERNEL-forced run forced)
+    kernels::select(entry_backend).unwrap();
+    println!(
+        "kernel-parity: OK solve_path gate — {} scenarios bit-identical scalar vs avx2",
+        scenarios.len()
+    );
+}
