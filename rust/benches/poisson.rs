@@ -1,0 +1,88 @@
+//! Poisson (KL) screening benchmark: the locally-bounded Gap Safe radius
+//! (Dantas, Soubies & Fevotte 2021) vs the quadratic family's global
+//! gamma = 1 radius, at the small lambda ratios where screening power
+//! decides the epoch count.
+//!
+//! The Poisson radius `r = (gap + sqrt(gap^2 + 2 gap v_max)) / lambda` is
+//! O(sqrt(gap)) like the global formula, so the dynamic rule keeps its
+//! converging-screening property — the table below shows the screened
+//! fraction and solver work side by side with a Lasso of the same shape.
+//!
+//! Records results/BENCH_poisson.json (see docs/BENCHMARKS.md):
+//! `epochs_<fit>_<ratio>`, `gap_passes_<fit>_<ratio>`,
+//! `screened_frac_<fit>_<ratio>`, `seconds_<fit>_<ratio>`.
+
+#[path = "common.rs"]
+mod common;
+
+use gapsafe::data::synth;
+use gapsafe::screening::Rule;
+use gapsafe::solver::path::scaled_eps;
+use gapsafe::solver::{solve_fixed_lambda, SolveOptions};
+use gapsafe::{build_problem, Task};
+
+fn main() {
+    let smoke = common::smoke();
+    let full = common::full_size();
+    let (n, p) = if smoke {
+        (30, 300)
+    } else if full {
+        (200, 5000)
+    } else {
+        (72, 2000)
+    };
+    common::banner(
+        "poisson",
+        "Gap Safe screening under the locally-bounded Poisson dual vs the\n\
+         quadratic family at the same shape: screened fraction and epochs at\n\
+         small lambda ratios",
+    );
+    let cases: Vec<(&str, Task, gapsafe::data::Dataset)> = vec![
+        ("poisson", Task::Poisson, synth::poisson_like(n, p, 42)),
+        ("quadratic", Task::Lasso, synth::leukemia_like_scaled(n, p, 42, false)),
+    ];
+    let ratios = [0.1, 0.05, 0.02];
+    let mut metrics: Vec<(String, f64)> = Vec::new();
+    for (label, task, ds) in cases {
+        let prob = build_problem(ds, task).unwrap();
+        let lmax = prob.lambda_max();
+        let eps = scaled_eps(&prob, 1e-8);
+        println!("\nfit {label}: n={} p={}", prob.n(), prob.p());
+        println!(
+            "{:>10} {:>8} {:>10} {:>13} {:>9}",
+            "lam/lmax", "epochs", "gap passes", "screened frac", "seconds"
+        );
+        for r in ratios {
+            let lam = r * lmax;
+            let rtag = format!("r{:03}", (r * 100.0).round() as usize);
+            let opts = SolveOptions { eps, max_epochs: 100_000, ..Default::default() };
+            // One measured solve for the solver-work counters ...
+            let mut rule = Rule::GapSafeFull.build();
+            let res = solve_fixed_lambda(&prob, lam, rule.as_mut(), &opts);
+            assert!(res.converged, "{label} r={r} did not converge (gap {})", res.gap);
+            let screened_frac = 1.0 - res.active.n_active_feats() as f64 / prob.p() as f64;
+            // ... and timed repetitions for the wall clock.
+            let reps = common::reps(3);
+            let (_, secs) = common::time_it(reps, || {
+                let mut rule = Rule::GapSafeFull.build();
+                std::hint::black_box(solve_fixed_lambda(&prob, lam, rule.as_mut(), &opts));
+            });
+            println!(
+                "{:>10.2} {:>8} {:>10} {:>13.3} {:>9.4}",
+                r, res.epochs, res.gap_passes, screened_frac, secs
+            );
+            if screened_frac <= 0.0 {
+                eprintln!(
+                    "warning: {label} r={r}: Gap Safe screened nothing — the sphere \
+                     never got tight enough on this workload"
+                );
+            }
+            metrics.push((format!("epochs_{label}_{rtag}"), res.epochs as f64));
+            metrics.push((format!("gap_passes_{label}_{rtag}"), res.gap_passes as f64));
+            metrics.push((format!("screened_frac_{label}_{rtag}"), screened_frac));
+            metrics.push((format!("seconds_{label}_{rtag}"), secs));
+        }
+    }
+    let borrowed: Vec<(&str, f64)> = metrics.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    common::record_bench_json("poisson", &borrowed);
+}

@@ -42,6 +42,8 @@ impl Dataset {
 /// * `synth:meg` — the multi-task MEG shape;
 /// * `synth:climate` — the SGL climate shape;
 /// * `synth:reg:<n>x<p>` — generic correlated regression;
+/// * `synth:counts` / `synth:counts:<n>x<p>` — Poisson count data with a
+///   sparse log-linear truth;
 /// * `csv:<path>` — load from disk.
 ///
 /// Specs are pure functions of `(spec, seed, small)` — two calls with the
@@ -78,6 +80,15 @@ pub fn load_spec(spec: &str, seed: u64, small: bool) -> Result<Dataset, String> 
             let cfg = synth::SynthConfig { n, p, k_sparse: 20, corr: 0.5, noise: 0.5, seed };
             Ok(synth::regression(&cfg).0)
         }
+        "synth:counts" => Ok(if small {
+            synth::poisson_like(60, 300, seed)
+        } else {
+            synth::poisson_like(500, 3000, seed)
+        }),
+        s if s.starts_with("synth:counts:") => {
+            let (n, p) = parse_counts_dims(s).ok_or("use synth:counts:<n>x<p>")?;
+            Ok(synth::poisson_like(n, p, seed))
+        }
         other => Err(format!("unknown data spec '{other}'")),
     }
 }
@@ -87,6 +98,13 @@ pub fn load_spec(spec: &str, seed: u64, small: bool) -> Result<Dataset, String> 
 /// validation. `None` when the spec is not `synth:reg:*` or malformed.
 pub fn parse_reg_dims(spec: &str) -> Option<(usize, usize)> {
     let dims = spec.strip_prefix("synth:reg:")?;
+    let (n, p) = dims.split_once('x')?;
+    Some((n.parse().ok()?, p.parse().ok()?))
+}
+
+/// Same grammar for `synth:counts:<n>x<p>`.
+pub fn parse_counts_dims(spec: &str) -> Option<(usize, usize)> {
+    let dims = spec.strip_prefix("synth:counts:")?;
     let (n, p) = dims.split_once('x')?;
     Some((n.parse().ok()?, p.parse().ok()?))
 }
@@ -101,6 +119,18 @@ mod tests {
         assert_eq!(parse_reg_dims("synth:reg:10"), None);
         assert_eq!(parse_reg_dims("synth:reg:ax2"), None);
         assert_eq!(parse_reg_dims("synth:leukemia"), None);
+        assert_eq!(parse_counts_dims("synth:counts:30x40"), Some((30, 40)));
+        assert_eq!(parse_counts_dims("synth:counts:30"), None);
+        assert_eq!(parse_counts_dims("synth:reg:10x20"), None);
+    }
+
+    #[test]
+    fn load_spec_counts() {
+        let a = load_spec("synth:counts:15x25", 2, false).unwrap();
+        assert_eq!((a.n(), a.p(), a.q()), (15, 25, 1));
+        let b = load_spec("synth:counts", 2, true).unwrap();
+        assert_eq!((b.n(), b.p()), (60, 300));
+        assert!(b.y.as_slice().iter().all(|&v| v >= 0.0));
     }
 
     #[test]

@@ -262,6 +262,55 @@ pub fn multinomial_like(n: usize, p: usize, q: usize, seed: u64) -> (Dataset, Ve
     )
 }
 
+/// Draw one count from Poisson(`rate`) by Knuth's product-of-uniforms
+/// method (exact for the bounded rates the generator below produces).
+fn poisson_draw(rng: &mut Prng, rate: f64) -> f64 {
+    let l = (-rate).exp();
+    let mut k = 0u64;
+    let mut prod = rng.uniform();
+    while prod > l {
+        prod *= rng.uniform();
+        k += 1;
+    }
+    k as f64
+}
+
+/// Sample `y_i ~ Poisson(rate_i)` for a whole rate vector. Rejects
+/// non-finite or negative rates loudly instead of producing garbage
+/// counts (NaN rates would otherwise sample an infinite loop or zeros).
+pub fn poisson_counts(rng: &mut Prng, rates: &[f64]) -> Vec<f64> {
+    for (i, r) in rates.iter().enumerate() {
+        assert!(
+            r.is_finite() && *r >= 0.0,
+            "poisson rate[{i}] = {r}: rates must be finite and >= 0"
+        );
+    }
+    rates.iter().map(|&r| poisson_draw(rng, r)).collect()
+}
+
+/// Count-data workload for the Poisson/KL fit: correlated standardized
+/// design, `k`-sparse planted signal, rates `exp(latent)` with the latent
+/// score clamped so the rates stay bounded (the screening dynamics only
+/// need a sparse log-linear truth, not heavy tails).
+pub fn poisson_like(n: usize, p: usize, seed: u64) -> Dataset {
+    let mut rng = Prng::new(seed);
+    let mut x = correlated_design(&mut rng, n, p, 0.5);
+    standardize_cols(&mut x);
+    let beta = planted_beta(&mut rng, p, 10.min(p), 1.0);
+    let mut z = vec![0.0; n];
+    crate::linalg::gemv(&x, &beta, &mut z);
+    let rms = (z.iter().map(|v| v * v).sum::<f64>() / n as f64).sqrt().max(1e-12);
+    let rates: Vec<f64> =
+        z.iter().map(|&v| (0.3 + (0.8 * v / rms).clamp(-3.0, 3.0)).exp()).collect();
+    let y = poisson_counts(&mut rng, &rates);
+    Dataset {
+        x: Design::Dense(x),
+        y: Mat::col_vec(&y),
+        group_size: None,
+        name: format!("poisson-like(n={n},p={p})"),
+    }
+}
+
 /// Sparse bag-of-words-like design (CSC) for the sparse-matrix code path.
 pub fn sparse_regression(n: usize, p: usize, density: f64, seed: u64) -> Dataset {
     let mut rng = Prng::new(seed);
@@ -351,6 +400,42 @@ mod tests {
             let s: f64 = (0..4).map(|k| ds.y[(i, k)]).sum();
             assert_eq!(s, 1.0);
         }
+    }
+
+    #[test]
+    fn poisson_like_counts_are_nonneg_integers() {
+        let ds = poisson_like(40, 25, 5);
+        assert_eq!((ds.n(), ds.p(), ds.q()), (40, 25, 1));
+        for &v in ds.y.as_slice() {
+            assert!(v >= 0.0 && v.fract() == 0.0, "not a count: {v}");
+        }
+        let total: f64 = ds.y.as_slice().iter().sum();
+        assert!(total > 0.0, "degenerate all-zero counts");
+        let b = poisson_like(40, 25, 5);
+        assert_eq!(ds.y.as_slice(), b.y.as_slice());
+    }
+
+    #[test]
+    fn poisson_counts_match_rates_on_average() {
+        let mut rng = Prng::new(17);
+        let rates = vec![4.0; 4000];
+        let y = poisson_counts(&mut rng, &rates);
+        let mean: f64 = y.iter().sum::<f64>() / y.len() as f64;
+        assert!((mean - 4.0).abs() < 0.2, "mean {mean} far from rate 4");
+    }
+
+    #[test]
+    #[should_panic(expected = "rates must be finite")]
+    fn poisson_counts_reject_negative_rates() {
+        let mut rng = Prng::new(1);
+        poisson_counts(&mut rng, &[1.0, -0.5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "rates must be finite")]
+    fn poisson_counts_reject_nan_rates() {
+        let mut rng = Prng::new(1);
+        poisson_counts(&mut rng, &[f64::NAN]);
     }
 
     #[test]

@@ -13,10 +13,12 @@
 
 mod logistic;
 mod multinomial;
+mod poisson;
 mod quadratic;
 
 pub use logistic::Logistic;
 pub use multinomial::Multinomial;
+pub use poisson::Poisson;
 pub use quadratic::Quadratic;
 
 use crate::linalg::Mat;
@@ -27,6 +29,7 @@ pub enum FitKind {
     Quadratic,
     Logistic,
     Multinomial,
+    Poisson,
 }
 
 /// A smooth, separable data-fitting term.
@@ -50,6 +53,19 @@ pub trait DataFit: Send + Sync {
 
     /// D_lambda(theta) = -sum_i f_i^*(-lambda theta_i).
     fn dual(&self, theta: &Mat, lam: f64) -> f64;
+
+    /// Gap Safe sphere radius centred at `theta` for duality gap `gap`
+    /// (Thm. 2). The default uses the *global* curvature bound gamma —
+    /// `sqrt(2 gap / gamma) / lambda` — verbatim, so fits with a globally
+    /// Lipschitz gradient keep their historical radii bit for bit. Fits
+    /// whose conjugate curvature is only *locally* bounded (Poisson/KL —
+    /// Dantas, Soubies & Fevotte 2021) override this with a per-center
+    /// bound valid on the ball the radius itself defines; see the
+    /// "Locally bounded duals" section of the `screening` module docs.
+    fn gap_safe_radius(&self, gap: f64, lam: f64, theta: &Mat) -> f64 {
+        let _ = theta;
+        (2.0 * gap / self.gamma()).sqrt() / lam
+    }
 
     /// Per-coordinate Lipschitz factor: L_j = lipschitz_scale() * ||X_j||^2.
     fn lipschitz_scale(&self) -> f64;

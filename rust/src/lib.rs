@@ -85,7 +85,7 @@ pub mod solver;
 pub mod util;
 
 use data::Dataset;
-use datafit::{Logistic, Multinomial, Quadratic};
+use datafit::{Logistic, Multinomial, Poisson, Quadratic};
 use penalty::{GroupL2, Groups, SparseGroup, L1};
 use problem::Problem;
 
@@ -104,6 +104,9 @@ pub enum Task {
     MultiTask,
     /// l1/l2 multinomial regression (Sec. 4.6).
     Multinomial,
+    /// l1 Poisson regression (KL data fit) with the locally-bounded dual
+    /// screening variant of Dantas, Soubies & Fevotte (2021).
+    Poisson,
 }
 
 impl Task {
@@ -114,6 +117,7 @@ impl Task {
             "logreg" | "logistic" => Ok(Task::Logreg),
             "multitask" | "multi-task" => Ok(Task::MultiTask),
             "multinomial" => Ok(Task::Multinomial),
+            "poisson" => Ok(Task::Poisson),
             s if s.starts_with("sgl") => {
                 let tau = s
                     .strip_prefix("sgl:")
@@ -122,7 +126,7 @@ impl Task {
                 Ok(Task::SparseGroupLasso { tau })
             }
             other => Err(format!(
-                "unknown task '{other}' (lasso | group-lasso | sgl[:tau] | logreg | multitask | multinomial)"
+                "unknown task '{other}' (lasso | group-lasso | sgl[:tau] | logreg | multitask | multinomial | poisson)"
             )),
         }
     }
@@ -170,6 +174,17 @@ pub fn build_problem(ds: Dataset, task: Task) -> Result<Problem, String> {
             Box::new(Multinomial::new(ds.y)),
             Box::new(GroupL2::new(Groups::singletons(p))),
         )),
+        Task::Poisson => {
+            if ds.q() != 1 {
+                return Err("poisson needs scalar counts".into());
+            }
+            let y: Vec<f64> = ds.y.as_slice().to_vec();
+            // Validate here (Err, not panic) so serve can answer 400.
+            if y.iter().any(|v| !v.is_finite() || *v < 0.0) {
+                return Err("poisson counts must be finite and >= 0".into());
+            }
+            Ok(Problem::new(ds.x, Box::new(Poisson::new(&y)), Box::new(L1::new(p))))
+        }
     }
 }
 
@@ -198,7 +213,21 @@ mod tests {
     fn task_parse() {
         assert_eq!(Task::parse("lasso").unwrap(), Task::Lasso);
         assert_eq!(Task::parse("sgl:0.25").unwrap(), Task::SparseGroupLasso { tau: 0.25 });
+        assert_eq!(Task::parse("poisson").unwrap(), Task::Poisson);
         assert!(Task::parse("nope").is_err());
+    }
+
+    #[test]
+    fn build_problem_poisson_validates_counts() {
+        let ds = data::synth::poisson_like(12, 18, 3);
+        assert!(build_problem(ds, Task::Poisson).is_ok());
+        let mut bad = data::synth::poisson_like(12, 18, 3);
+        bad.y[(0, 0)] = -1.0;
+        let err = build_problem(bad, Task::Poisson).unwrap_err();
+        assert!(err.contains("counts"), "unhelpful error: {err}");
+        let mut nan = data::synth::poisson_like(12, 18, 3);
+        nan.y[(0, 0)] = f64::NAN;
+        assert!(build_problem(nan, Task::Poisson).is_err());
     }
 
     #[test]

@@ -21,7 +21,7 @@ use gapsafe::penalty::ActiveSet;
 use gapsafe::runtime::{artifact, PjrtEngine};
 use gapsafe::screening::{DualStrategy, Rule};
 use gapsafe::serve::{ServeConfig, Server};
-use gapsafe::solver::path::{lambda_grid, solve_path, PathConfig, WarmStart};
+use gapsafe::solver::path::{lambda_grid, lambda_grid_checked, solve_path, PathConfig, WarmStart};
 use gapsafe::solver::{solve_fixed_lambda, SolveOptions};
 use gapsafe::{build_problem, Task};
 
@@ -80,8 +80,11 @@ fn usage() {
            lmax       print lambda_max for a (task, data) pair\n\
            help       this text\n\
          common flags:\n\
-           --task lasso|group-lasso|sgl[:tau]|logreg|multitask|multinomial\n\
-           --data synth:leukemia | synth:meg | synth:climate | csv:<path> | synth:reg:<n>x<p>\n\
+           --task lasso|group-lasso|sgl[:tau]|logreg|multitask|multinomial|poisson\n\
+           --data synth:leukemia | synth:meg | synth:climate | csv:<path> |\n\
+                      synth:reg:<n>x<p> | synth:counts[:<n>x<p>]\n\
+           --datafit quadratic|logistic|poisson (family shorthand: picks the task and\n\
+                      a matching default dataset; --task / --data still override)\n\
            --rule none|static|elghaoui|dst3|bonnefoy|gap-seq|gap-dyn|gap|strong\n\
            --warm standard|active|strong     --eps 1e-6   --grid 100 (>= 1)   --delta 3\n\
            --threads N|auto (>= 1 workers, auto = all cores; path chunks / CV folds /\n\
@@ -156,6 +159,29 @@ fn flag_grid(o: &Flags, default: usize) -> Result<usize, String> {
         return Err("--grid must be >= 1 (the lambda grid needs at least one point)".into());
     }
     Ok(n)
+}
+
+/// Resolve `(task, data spec)` from `--task` / `--data`, honoring
+/// `--datafit quadratic|logistic|poisson` as a family shorthand: it picks
+/// both the task and a matching default dataset, each still overridable
+/// by the explicit flag.
+fn flag_task_data(
+    o: &Flags,
+    default_task: &str,
+    default_data: &str,
+) -> Result<(Task, String), String> {
+    let (task_s, data_s) = match o.get("datafit").map(String::as_str) {
+        None => (default_task, default_data),
+        Some("quadratic") | Some("ls") => ("lasso", "synth:leukemia"),
+        Some("logistic") => ("logreg", "synth:leukemia-binary"),
+        Some("poisson") => ("poisson", "synth:counts"),
+        Some(other) => {
+            return Err(format!(
+                "--datafit: unknown family '{other}' (quadratic | logistic | poisson)"
+            ))
+        }
+    };
+    Ok((Task::parse(flag(o, "task", task_s))?, flag(o, "data", data_s).to_string()))
 }
 
 /// Active-set compaction toggle (on unless `--no-compact`; bitwise
@@ -243,8 +269,8 @@ fn cmd_serve(o: &Flags) -> Result<(), String> {
 fn cmd_path(o: &Flags) -> Result<(), String> {
     let seed = flag_usize(o, "seed", 42)? as u64;
     let small = o.contains_key("small");
-    let ds = load_spec(flag(o, "data", "synth:leukemia"), seed, small)?;
-    let task = Task::parse(flag(o, "task", "lasso"))?;
+    let (task, data) = flag_task_data(o, "lasso", "synth:leukemia")?;
+    let ds = load_spec(&data, seed, small)?;
     let prob = build_problem(ds, task)?;
     let cfg = PathConfig {
         n_lambdas: flag_grid(o, 100)?,
@@ -260,6 +286,9 @@ fn cmd_path(o: &Flags) -> Result<(), String> {
         dual: flag_dual(o)?,
     };
     cfg.validate()?;
+    // Degenerate anchors (e.g. Poisson lambda_max = 0 on all-zero counts)
+    // must fail here with a message, not produce a NaN-filled grid.
+    lambda_grid_checked(prob.lambda_max(), cfg.n_lambdas, cfg.delta)?;
     let res = solve_path(&prob, &cfg);
     println!(
         "{:>4} {:>12} {:>10} {:>8} {:>8} {:>9} {:>9} {:>10}",
@@ -379,8 +408,8 @@ fn cmd_batch(o: &Flags) -> Result<(), String> {
 
 fn cmd_solve(o: &Flags) -> Result<(), String> {
     let seed = flag_usize(o, "seed", 42)? as u64;
-    let ds = load_spec(flag(o, "data", "synth:leukemia"), seed, o.contains_key("small"))?;
-    let task = Task::parse(flag(o, "task", "lasso"))?;
+    let (task, data) = flag_task_data(o, "lasso", "synth:leukemia")?;
+    let ds = load_spec(&data, seed, o.contains_key("small"))?;
     let prob = build_problem(ds, task)?;
     // Fan the O(np) screening-sweep correlations out over the pool.
     prob.set_screen_threads(flag_workers(o, "threads", 1)?);
@@ -562,8 +591,8 @@ fn cmd_artifacts(o: &Flags) -> Result<(), String> {
 
 fn cmd_lmax(o: &Flags) -> Result<(), String> {
     let seed = flag_usize(o, "seed", 42)? as u64;
-    let ds = load_spec(flag(o, "data", "synth:leukemia"), seed, o.contains_key("small"))?;
-    let task = Task::parse(flag(o, "task", "lasso"))?;
+    let (task, data) = flag_task_data(o, "lasso", "synth:leukemia")?;
+    let ds = load_spec(&data, seed, o.contains_key("small"))?;
     let prob = build_problem(ds, task)?;
     println!("lambda_max = {:.10e}", prob.lambda_max());
     Ok(())
@@ -609,6 +638,29 @@ mod tests {
         assert!(err.starts_with("--kernel:"), "{err}");
         kernels::select(entry).unwrap();
         assert_eq!(kernels::active_kind(), entry);
+    }
+
+    #[test]
+    fn flag_task_data_resolves_datafit_families() {
+        let (t, d) = flag_task_data(&flags(&[]), "lasso", "synth:leukemia").unwrap();
+        assert_eq!((t, d.as_str()), (Task::Lasso, "synth:leukemia"));
+        let (t, d) =
+            flag_task_data(&flags(&[("datafit", "poisson")]), "lasso", "synth:leukemia").unwrap();
+        assert_eq!((t, d.as_str()), (Task::Poisson, "synth:counts"));
+        let (t, d) =
+            flag_task_data(&flags(&[("datafit", "logistic")]), "lasso", "synth:leukemia")
+                .unwrap();
+        assert_eq!((t, d.as_str()), (Task::Logreg, "synth:leukemia-binary"));
+        // explicit flags still win over the shorthand's defaults
+        let (t, d) = flag_task_data(
+            &flags(&[("datafit", "poisson"), ("data", "synth:counts:10x20")]),
+            "lasso",
+            "synth:leukemia",
+        )
+        .unwrap();
+        assert_eq!((t, d.as_str()), (Task::Poisson, "synth:counts:10x20"));
+        let err = flag_task_data(&flags(&[("datafit", "bogus")]), "lasso", "x").unwrap_err();
+        assert!(err.starts_with("--datafit:"), "{err}");
     }
 
     #[test]

@@ -459,7 +459,11 @@ impl Problem {
         let stats = self.pen.stats(&corr_theta, active);
         let primal = self.primal(beta, z, lam);
         let gap = (primal - dual).max(0.0);
-        let radius = (2.0 * gap / self.fit.gamma()).sqrt() / lam;
+        // Radius through the datafit's curvature hook: the default is the
+        // verbatim global-gamma formula (bitwise identical for the
+        // Table-1 fits); locally-bounded duals (Poisson) use a per-center
+        // bound instead.
+        let radius = self.fit.gap_safe_radius(gap, lam, &theta);
         GapResult { primal, dual, gap, radius, theta, stats }
     }
 

@@ -55,7 +55,10 @@ impl ScreeningRule for StaticGapRule {
         let primal = prob.fit.loss(&z0);
         let dual = prob.fit.dual(&theta_max, lam);
         let gap = (primal - dual).max(0.0);
-        let radius = (2.0 * gap / prob.fit.gamma()).sqrt() / lam;
+        // Curvature hook: bitwise-identical global-gamma radius for the
+        // Table-1 fits, per-center local bound for Poisson (theta_max is
+        // dual feasible for it: v = y (1 - lam/lam_max) + lam/lam_max >= 0).
+        let radius = prob.fit.gap_safe_radius(gap, lam, &theta_max);
         let full = ActiveSet::full(prob.pen.groups());
         let stats = prob.stats_for_center(&theta_max, &full);
         let (kg, _) = apply_sphere(prob, &stats, radius, active);

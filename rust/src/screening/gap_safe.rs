@@ -70,7 +70,10 @@ impl ScreeningRule for GapSafeRule {
         let primal_t = prev.loss + lam * prev.pen_value;
         let dual_t = prob.fit.dual(&prev.theta, lam);
         let gap_t = (primal_t - dual_t).max(0.0);
-        let radius = (2.0 * gap_t / prob.fit.gamma()).sqrt() / lam;
+        // Radius through the curvature hook: global-gamma fits keep the
+        // historical formula bit for bit; locally-bounded duals (Poisson)
+        // get a bound centred at this sphere's own center, prev.theta.
+        let radius = prob.fit.gap_safe_radius(gap_t, lam, &prev.theta);
         // The previous active set is not safe for lambda_t, so statistics are
         // computed over all groups.
         let full = ActiveSet::full(prob.pen.groups());
@@ -101,10 +104,10 @@ impl ScreeningRule for GapSafeRule {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::datafit::Quadratic;
+    use crate::datafit::{FitKind, Logistic, Multinomial, Poisson, Quadratic};
     use crate::linalg::sparse::Design;
     use crate::linalg::Mat;
-    use crate::penalty::L1;
+    use crate::penalty::{GroupL2, Groups, L1};
     use crate::problem::Problem;
     use crate::util::prng::Prng;
 
@@ -116,6 +119,123 @@ mod tests {
         }
         let y: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
         Problem::new(Design::Dense(x), Box::new(Quadratic::from_vec(&y)), Box::new(L1::new(p)))
+    }
+
+    /// One problem per datafit family, all sharing one random design.
+    fn all_fit_problems(seed: u64) -> Vec<Problem> {
+        let mut rng = Prng::new(seed);
+        let (n, p, q) = (18, 30, 3);
+        let mut x = Mat::zeros(n, p);
+        for v in x.as_mut_slice() {
+            *v = rng.gaussian();
+        }
+        let yq: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let yb: Vec<f64> =
+            (0..n).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect();
+        let mut counts: Vec<f64> = (0..n).map(|_| rng.below(6) as f64).collect();
+        counts[0] = counts[0].max(1.0);
+        let mut ym = Mat::zeros(n, q);
+        for i in 0..n {
+            ym[(i, rng.below(q))] = 1.0;
+        }
+        vec![
+            Problem::new(
+                Design::Dense(x.clone()),
+                Box::new(Quadratic::from_vec(&yq)),
+                Box::new(L1::new(p)),
+            ),
+            Problem::new(
+                Design::Dense(x.clone()),
+                Box::new(Logistic::new(&yb)),
+                Box::new(L1::new(p)),
+            ),
+            Problem::new(
+                Design::Dense(x.clone()),
+                Box::new(Multinomial::new(ym)),
+                Box::new(GroupL2::new(Groups::singletons(p))),
+            ),
+            Problem::new(Design::Dense(x), Box::new(Poisson::new(&counts)), Box::new(L1::new(p))),
+        ]
+    }
+
+    /// Omega^D(X^T theta) for the L1 / singleton-group penalties above:
+    /// the max per-feature row norm of the correlation matrix.
+    fn max_corr_row_norm(prob: &Problem, theta: &Mat) -> f64 {
+        let mut m = 0.0_f64;
+        for j in 0..prob.p() {
+            let mut sq = 0.0;
+            for c in 0..prob.q() {
+                let d = prob.x.col_dot(j, theta.col(c));
+                sq += d * d;
+            }
+            m = m.max(sq.sqrt());
+        }
+        m
+    }
+
+    #[test]
+    fn rescaled_dual_points_are_feasible_with_nonnegative_gaps() {
+        // For every datafit family: the rescaled theta of a gap pass is
+        // dual feasible (unit dual-ball constraint + conjugate domain for
+        // Poisson) and the reported duality gap is non-negative, at
+        // arbitrary (non-optimal) iterates and several lambdas.
+        for seed in 0..5u64 {
+            for prob in all_fit_problems(seed) {
+                let label = prob.fit.kind();
+                let mut rng = Prng::new(seed ^ 0xD0D0);
+                let mut beta = Mat::zeros(prob.p(), prob.q());
+                for _ in 0..4 {
+                    let j = rng.below(prob.p());
+                    for c in 0..prob.q() {
+                        beta[(j, c)] = 0.3 * rng.gaussian();
+                    }
+                }
+                let z = prob.predict(&beta);
+                let active = ActiveSet::full(prob.pen.groups());
+                for ratio in [0.9, 0.5, 0.2] {
+                    let lam = ratio * prob.lambda_max();
+                    let res = prob.gap_pass(&beta, &z, lam, &active);
+                    assert!(
+                        res.gap >= 0.0,
+                        "{label:?} ratio {ratio}: negative gap {}",
+                        res.gap
+                    );
+                    assert!(res.radius.is_finite() && res.radius >= 0.0);
+                    let dn = max_corr_row_norm(&prob, &res.theta);
+                    assert!(
+                        dn <= 1.0 + 1e-9,
+                        "{label:?} ratio {ratio}: infeasible theta, Omega^D = {dn}"
+                    );
+                    if label == FitKind::Poisson {
+                        // conjugate domain: v = y - lam * theta >= 0
+                        let ys = prob.fit.targets();
+                        for (ti, yi) in res.theta.as_slice().iter().zip(ys.as_slice()) {
+                            let v = yi - lam * ti;
+                            assert!(v >= -1e-12, "poisson conjugate arg {v} < 0");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dynamic_screens_poisson_near_lambda_max() {
+        let ds = crate::data::synth::poisson_like(20, 60, 3);
+        let prob = crate::build_problem(ds, crate::Task::Poisson).unwrap();
+        let lam = 0.95 * prob.lambda_max();
+        let beta = Mat::zeros(60, 1);
+        let z = prob.predict(&beta);
+        let mut active = ActiveSet::full(prob.pen.groups());
+        let res = prob.gap_pass(&beta, &z, lam, &active);
+        assert!(res.radius.is_finite() && res.radius > 0.0);
+        let mut rule = GapSafeRule::new(GapSafeVariant::Dynamic);
+        rule.on_gap_pass(&prob, lam, &res, &mut active);
+        assert!(
+            active.n_active_feats() < 60,
+            "poisson dynamic sphere screened nothing at 0.95 lambda_max"
+        );
+        assert!(active.n_active_feats() >= 1);
     }
 
     #[test]

@@ -142,6 +142,37 @@
 //! selected by `SolveOptions::dual` / `PathConfig::dual` / CLI `--dual`
 //! (default `best`; `rescale` reproduces the historical output bit for
 //! bit).
+//!
+//! # Locally bounded duals
+//!
+//! The Thm. 2 radius needs the data fit to be `gamma`-strongly smooth
+//! *globally* — equivalently, its conjugate `gamma`-strongly convex on the
+//! whole dual space. The Poisson/KL fit has no such constant: the
+//! conjugate of `e^z - y z` is `v ln v - v` at `v = u + y`, whose
+//! curvature `1/v` vanishes as `v` grows, so `sup gamma = 0` and the
+//! global formula degenerates (an "infinite-gamma" radius of 0 would
+//! screen everything, unsafely). Following Dantas, Soubies & Fevotte
+//! (2021, *Expanding Boundaries of Gap Safe Screening*), the crate uses
+//! the **locally bounded** variant instead: strong convexity only needs to
+//! hold on a ball `B(theta_c, r)` that already contains `theta_hat`. On
+//! that ball every conjugate argument satisfies
+//! `v_i <= v_max + lambda r` with `v_max = max_i (y_i - lambda
+//! theta_c,i)_+`, the local strong-convexity modulus is
+//! `1 / (v_max + lambda r)`, and plugging it into Thm. 2 turns the radius
+//! into a fixed point `lambda^2 r^2 = 2 gap (v_max + lambda r)` with the
+//! closed-form solution
+//!
+//! ```text
+//! r = (gap + sqrt(gap^2 + 2 gap v_max)) / lambda
+//! ```
+//!
+//! — still `O(sqrt(gap))` as the solver converges, so the dynamic rule
+//! keeps its converging-screening property. Mechanically this is the
+//! [`crate::datafit::DataFit::gap_safe_radius`] hook: Table-1 fits keep
+//! the default (the verbatim global formula, bit for bit), while the
+//! Poisson fit overrides it with the per-center bound above — every
+//! sphere site (dynamic gap passes, the sequential rule, the static gap
+//! rule at `theta_max`) passes its own center through the hook.
 
 pub mod dual;
 

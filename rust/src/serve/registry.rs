@@ -203,6 +203,17 @@ fn validate_data_spec(data: &str) -> Result<(), String> {
             ));
         }
     }
+    if data.starts_with("synth:counts:") {
+        let (n, p) = crate::data::parse_counts_dims(data).ok_or("use synth:counts:<n>x<p>")?;
+        if n == 0 || p == 0 {
+            return Err("synth:counts dimensions must be positive".into());
+        }
+        if n.checked_mul(p).map(|cells| cells > MAX_SYNTH_CELLS).unwrap_or(true) {
+            return Err(format!(
+                "synth:counts:{n}x{p} exceeds the serving cap of {MAX_SYNTH_CELLS} cells"
+            ));
+        }
+    }
     Ok(())
 }
 
@@ -448,6 +459,9 @@ impl Registry {
         let mut cfg = key.path_config();
         cfg.compact = self.compact;
         cfg.dual = self.dual;
+        // Degenerate grid anchors (e.g. Poisson lambda_max = 0 on all-zero
+        // counts) become a client-visible error, not a NaN-filled path.
+        crate::solver::path::lambda_grid_checked(prob.lambda_max(), cfg.n_lambdas, cfg.delta)?;
         let (path, warm_started) = match seed {
             Some(s) => (solve_path_seeded(&prob, &cfg, s), true),
             None => (solve_path(&prob, &cfg), false),
@@ -734,12 +748,16 @@ mod tests {
             r#"{"data":"synth:reg:1000000x1000000"}"#,
             r#"{"data":"synth:reg:0x10"}"#,
             r#"{"data":"synth:reg:10"}"#,
+            r#"{"data":"synth:counts:1000000x1000000"}"#,
+            r#"{"data":"synth:counts:0x10"}"#,
+            r#"{"data":"synth:counts:10"}"#,
             r#"{"data":"csv:/etc/passwd"}"#,
         ] {
             let v = Json::parse(doc).unwrap();
             assert!(ModelKey::from_json(&v).is_err(), "{doc} should be rejected");
         }
         assert!(validate_data_spec("synth:reg:100x2000").is_ok());
+        assert!(validate_data_spec("synth:counts:100x2000").is_ok());
         assert!(validate_data_spec("synth:leukemia").is_ok());
     }
 

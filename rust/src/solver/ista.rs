@@ -5,6 +5,7 @@
 //! tests and (b) in the ablation bench showing Gap Safe also accelerates
 //! first-order methods, not just CD.
 
+use crate::datafit::FitKind;
 use crate::linalg::Mat;
 use crate::penalty::{gather_block, scatter_block, ActiveSet};
 use crate::problem::Problem;
@@ -33,7 +34,11 @@ pub fn solve_fista(
     let lam_max = prob.lambda_max();
     let mut active = ActiveSet::full(prob.pen.groups());
     rule.begin_lambda(prob, lam, lam_max, None, &mut active);
-    let l = global_lipschitz(prob);
+    // Poisson has no global Lipschitz gradient: `l` is only a trial
+    // constant there, validated per step by Beck-Teboulle backtracking
+    // (the sufficient-decrease test below) and doubled on violation.
+    let backtracks = prob.fit.kind() == FitKind::Poisson;
+    let mut l = global_lipschitz(prob);
     let mut beta = Mat::zeros(p, q);
     let mut v = beta.clone(); // momentum point
     let mut t_k = 1.0f64;
@@ -77,27 +82,53 @@ pub fn solve_fista(
         let zv = prob.predict(&v);
         let mut rho = Mat::zeros(prob.n(), q);
         prob.fit.neg_grad(&zv, &mut rho);
-        let mut next = v.clone();
-        for j in 0..p {
-            if !active.feat[j] {
-                continue;
+        let f_v = if backtracks { prob.fit.loss(&zv) } else { 0.0 };
+        let next = loop {
+            let mut next = v.clone();
+            for j in 0..p {
+                if !active.feat[j] {
+                    continue;
+                }
+                for c in 0..q {
+                    let g = -prob.x.col_dot(j, rho.col(c));
+                    next[(j, c)] -= g / l;
+                }
             }
-            for c in 0..q {
-                let g = -prob.x.col_dot(j, rho.col(c));
-                next[(j, c)] -= g / l;
+            // prox per group
+            let groups = prob.pen.groups();
+            let mut blk = Vec::new();
+            for g in 0..groups.len() {
+                if !active.group[g] {
+                    continue;
+                }
+                gather_block(&next, groups.feats(g), &mut blk);
+                prob.pen.prox_group(g, &mut blk, lam / l);
+                scatter_block(&mut next, groups.feats(g), &blk);
             }
-        }
-        // prox per group
-        let groups = prob.pen.groups();
-        let mut blk = Vec::new();
-        for g in 0..groups.len() {
-            if !active.group[g] {
-                continue;
+            if !backtracks {
+                break next;
             }
-            gather_block(&next, groups.feats(g), &mut blk);
-            prob.pen.prox_group(g, &mut blk, lam / l);
-            scatter_block(&mut next, groups.feats(g), &blk);
-        }
+            // sufficient decrease: f(next) <= f(v) + <grad, next - v>
+            //                                + (l/2) ||next - v||^2,
+            // with the inner product taken in prediction space
+            // (<grad F(v), next - v> = <-rho, X next - X v>).
+            let zn = prob.predict(&next);
+            let f_n = prob.fit.loss(&zn);
+            let mut lin = 0.0;
+            for ((r, a), b) in rho.as_slice().iter().zip(zn.as_slice()).zip(zv.as_slice()) {
+                lin += -r * (a - b);
+            }
+            let mut dsq = 0.0;
+            for (a, b) in next.as_slice().iter().zip(v.as_slice()) {
+                let d = a - b;
+                dsq += d * d;
+            }
+            let bound = f_v + lin + 0.5 * l * dsq;
+            if f_n <= bound + 1e-12 * (1.0 + bound.abs()) || l >= 1e300 {
+                break next;
+            }
+            l *= 2.0;
+        };
         // FISTA momentum
         let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t_k * t_k).sqrt());
         let coef = (t_k - 1.0) / t_next;

@@ -283,6 +283,16 @@ struct CdState {
     /// Scratch for the batched link refresh over touched rows.
     row_mark: Vec<bool>,
     rows_buf: Vec<usize>,
+    /// Poisson only: persistent per-group step multipliers. The fit's
+    /// `lipschitz_scale()` is the curvature at z = 0, not a global bound
+    /// (e^z is unbounded), so each group's step is validated against the
+    /// true loss change and the multiplier doubled on violation — and kept
+    /// for later epochs, bounding the total backtracking work of a solve.
+    step_mult: Vec<f64>,
+    /// Saved pre-step block for the backtracking retries.
+    blk0: Vec<f64>,
+    /// Dense scratch w = X_g delta used by the majorization check.
+    step_w: Vec<f64>,
 }
 
 impl CdState {
@@ -302,6 +312,13 @@ impl CdState {
             enabled: compact_enabled,
             row_mark: vec![false; n],
             rows_buf: Vec::new(),
+            step_mult: if kind == FitKind::Poisson {
+                vec![1.0; prob.n_groups()]
+            } else {
+                Vec::new()
+            },
+            blk0: Vec::new(),
+            step_w: if kind == FitKind::Poisson { vec![0.0; n] } else { Vec::new() },
         };
         st.resync(prob, beta);
         // Sequential / static rules may have screened in begin_lambda
@@ -380,10 +397,10 @@ impl CdState {
                     *b = yi - zi;
                 }
             }
-            FitKind::Logistic | FitKind::Multinomial => {
+            FitKind::Logistic | FitKind::Multinomial | FitKind::Poisson => {
                 self.buf.copy_from(&z);
                 // link = Y - neg_grad(Z): the mean parameter (sigma(z) /
-                // softmax rows) stored directly.
+                // softmax rows / e^z) stored directly.
                 refresh_link_full(&*prob.fit, &self.buf, &mut self.link);
             }
         }
@@ -441,7 +458,7 @@ impl CdState {
                         }
                     }
                 }
-                FitKind::Logistic | FitKind::Multinomial => {
+                FitKind::Logistic | FitKind::Multinomial | FitKind::Poisson => {
                     // grad = X_j^T (link - y)
                     let y = prob.fit.targets();
                     for &j in feats {
@@ -459,10 +476,19 @@ impl CdState {
             }
             // v = beta_g - grad / L_g ; prox ; delta update
             gather_block(beta, feats, &mut self.blk);
-            for (b, gr) in self.blk.iter_mut().zip(&self.grad) {
-                *b -= gr / lg;
+            if self.kind == FitKind::Poisson {
+                // The trial L_g only majorizes where e^z <= 1: validate the
+                // step against the true loss change and backtrack.
+                self.poisson_group_step(prob, g, feats, lam, lg);
+            } else {
+                for (b, gr) in self.blk.iter_mut().zip(&self.grad) {
+                    *b -= gr / lg;
+                }
+                prob.pen.prox_group(g, &mut self.blk, lam / lg);
             }
-            prob.pen.prox_group(g, &mut self.blk, lam / lg);
+            // Re-borrow: the Poisson step above took &mut self, which ends
+            // the earlier view borrow.
+            let view = self.compact.as_ref();
             // Apply the delta to the prediction state and collect the rows
             // the changed columns touch, so the link refresh below runs on
             // exactly those rows (a full pass is only needed when a dense
@@ -520,6 +546,102 @@ impl CdState {
                     }
                 }
             }
+        }
+    }
+
+    /// One Poisson block step with persistent backtracking. The trial
+    /// constant `mult * lg` (curvature at z = 0) is accepted only when the
+    /// true restricted loss change is majorized,
+    ///
+    ///   sum_i [e^{z_i + w_i} - e^{z_i} - y_i w_i]
+    ///     <= grad_g^T delta + (L/2) ||delta||^2,       w = X_g delta,
+    ///
+    /// computable in O(nnz of the group's columns). On violation the
+    /// multiplier doubles and *stays* doubled for the rest of the solve,
+    /// so the total number of rejected trials is logarithmic in the final
+    /// constant rather than per-epoch.
+    fn poisson_group_step(&mut self, prob: &Problem, g: usize, feats: &[usize], lam: f64, lg: f64) {
+        debug_assert_eq!(prob.q(), 1, "poisson is a scalar-count fit");
+        self.blk0.clear();
+        self.blk0.extend_from_slice(&self.blk);
+        loop {
+            let l_used = self.step_mult[g] * lg;
+            for i in 0..self.blk.len() {
+                self.blk[i] = self.blk0[i] - self.grad[i] / l_used;
+            }
+            prob.pen.prox_group(g, &mut self.blk, lam / l_used);
+            let mut lin = 0.0;
+            let mut dsq = 0.0;
+            let mut moved = false;
+            for i in 0..self.blk.len() {
+                let d = self.blk[i] - self.blk0[i];
+                lin += self.grad[i] * d;
+                dsq += d * d;
+                if d != 0.0 {
+                    moved = true;
+                }
+            }
+            if !moved {
+                return; // zero step: nothing to validate
+            }
+            // w = X_g delta, accumulated over the rows the changed columns
+            // touch (a dense column forces the full-row scan).
+            let view = self.compact.as_ref();
+            let mut dense_touch = false;
+            self.rows_buf.clear();
+            for (i, &j) in feats.iter().enumerate() {
+                let d = self.blk[i] - self.blk0[i];
+                if d == 0.0 {
+                    continue;
+                }
+                design_col_axpy(&prob.x, view, j, d, &mut self.step_w);
+                match design_col_rows(&prob.x, view, j) {
+                    None => dense_touch = true,
+                    Some(rows) => {
+                        for &r in rows {
+                            if !self.row_mark[r] {
+                                self.row_mark[r] = true;
+                                self.rows_buf.push(r);
+                            }
+                        }
+                    }
+                }
+            }
+            let zs = self.buf.col(0);
+            let ys = prob.fit.targets().as_slice();
+            let mut actual = 0.0;
+            if dense_touch {
+                for (i, &w) in self.step_w.iter().enumerate() {
+                    if w != 0.0 {
+                        actual += (zs[i] + w).exp() - zs[i].exp() - ys[i] * w;
+                    }
+                }
+            } else {
+                for &r in &self.rows_buf {
+                    let w = self.step_w[r];
+                    actual += (zs[r] + w).exp() - zs[r].exp() - ys[r] * w;
+                }
+            }
+            // reset the scratch before either exit
+            if dense_touch {
+                self.step_w.iter_mut().for_each(|v| *v = 0.0);
+            } else {
+                for &r in &self.rows_buf {
+                    self.step_w[r] = 0.0;
+                }
+            }
+            for &r in &self.rows_buf {
+                self.row_mark[r] = false;
+            }
+            self.rows_buf.clear();
+            let bound = lin + 0.5 * l_used * dsq;
+            // tiny relative slack so rounding at actual ~ bound cannot
+            // force a spurious doubling; NaN/overflow trials compare false
+            // and keep backtracking toward an accept-by-cap zero step.
+            if actual <= bound + 1e-12 * (1.0 + bound.abs()) || self.step_mult[g] >= 1e15 {
+                return;
+            }
+            self.step_mult[g] *= 2.0;
         }
     }
 }

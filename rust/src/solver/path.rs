@@ -175,6 +175,28 @@ pub fn lambda_grid(lam_max: f64, n: usize, delta: f64) -> Vec<f64> {
         .collect()
 }
 
+/// [`lambda_grid`] with the degenerate anchors rejected as a
+/// [`PathConfig::validate`]-style error instead of propagating NaN (or an
+/// all-zero grid whose solves divide by lambda = 0) downstream. The
+/// classic trigger is Poisson on all-zero counts under a column-centered
+/// design: rho(0) = y - 1 is constant, so X^T rho(0) = 0 and
+/// lambda_max = 0 — a dataset with no signal to regularize against.
+pub fn lambda_grid_checked(lam_max: f64, n: usize, delta: f64) -> Result<Vec<f64>, String> {
+    if n == 0 {
+        return Err("lambda grid must have at least 1 point (--grid >= 1)".into());
+    }
+    if !lam_max.is_finite() {
+        return Err(format!("lambda_max is not finite ({lam_max}); check the data for NaN/inf"));
+    }
+    if lam_max <= 0.0 {
+        return Err(format!(
+            "lambda_max = {lam_max}: the null model is optimal at every lambda > 0 \
+             (all-zero targets under a centered design?); there is no path to solve"
+        ));
+    }
+    Ok(lambda_grid(lam_max, n, delta))
+}
+
 /// Tolerance scaling of Sec. 5: eps <- eps ||y||^2 for regression,
 /// eps * min(n_1, n_2)/n for logistic (class counts), eps * n log(q) for
 /// multinomial.
@@ -192,6 +214,13 @@ pub fn scaled_eps(prob: &Problem, eps: f64) -> f64 {
             let n = prob.n() as f64;
             let q = prob.q() as f64;
             eps * n * q.ln()
+        }
+        FitKind::Poisson => {
+            // The KL loss scale is the total count mass ||y||_1 (the
+            // quadratic analog of ||y||^2); floor at 1 so sparse-count
+            // problems keep a usable tolerance.
+            let mass: f64 = prob.fit.targets().as_slice().iter().sum();
+            eps * mass.max(1.0)
         }
     }
 }
@@ -504,6 +533,18 @@ mod tests {
         assert!(err.contains("auto"), "unhelpful --threads 0 error: {err}");
         cfg.threads = 4;
         assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn lambda_grid_checked_rejects_degenerate_anchors() {
+        let g = lambda_grid_checked(10.0, 5, 2.0).unwrap();
+        assert_eq!(g, lambda_grid(10.0, 5, 2.0));
+        assert!(lambda_grid_checked(10.0, 0, 2.0).is_err());
+        let err = lambda_grid_checked(0.0, 5, 2.0).unwrap_err();
+        assert!(err.contains("lambda_max"), "unhelpful error: {err}");
+        assert!(lambda_grid_checked(-1.0, 5, 2.0).is_err());
+        assert!(lambda_grid_checked(f64::NAN, 5, 2.0).is_err());
+        assert!(lambda_grid_checked(f64::INFINITY, 5, 2.0).is_err());
     }
 
     #[test]

@@ -20,13 +20,15 @@ use gapsafe::solver::{solve_fixed_lambda, solve_fixed_lambda_with, SolveOptions}
 use gapsafe::{build_problem, Task};
 
 /// One workload per estimator family (Lasso / logistic / SGL /
-/// multi-task), with a lambda ratio each family converges comfortably at.
+/// multi-task / Poisson), with a lambda ratio each family converges
+/// comfortably at.
 fn family_cases() -> Vec<(Task, gapsafe::data::Dataset, f64)> {
     vec![
         (Task::Lasso, synth::leukemia_like_scaled(28, 80, 5, false), 0.1),
         (Task::Logreg, synth::leukemia_like_scaled(28, 50, 6, true), 0.2),
         (Task::SparseGroupLasso { tau: 0.4 }, synth::climate_like(36, 8, 7), 0.2),
         (Task::MultiTask, synth::meg_like(18, 30, 4, 8), 0.2),
+        (Task::Poisson, synth::poisson_like(24, 50, 9), 0.2),
     ]
 }
 
@@ -68,6 +70,48 @@ fn best_kept_gap_trace_is_monotone_non_increasing() {
                 );
             }
         }
+    }
+}
+
+/// Regression pin for the `gap_safe_radius` curvature-hook refactor: for
+/// every global-gamma datafit (quadratic / logistic / multinomial) the
+/// radius of a gap pass must be `sqrt(2 gap / gamma) / lambda` **bit for
+/// bit** — the verbatim pre-hook formula — both at beta = 0 and at a
+/// partially solved iterate. Only the Poisson fit (no global gamma) may
+/// deviate from it.
+#[test]
+fn global_gamma_radii_are_bitwise_the_historical_formula() {
+    let cases: Vec<(Task, gapsafe::data::Dataset, f64)> = vec![
+        (Task::Lasso, synth::leukemia_like_scaled(22, 40, 31, false), 0.3),
+        (Task::Logreg, synth::leukemia_like_scaled(22, 40, 32, true), 0.3),
+        (Task::Multinomial, synth::multinomial_like(22, 30, 3, 33).0, 0.3),
+    ];
+    for (task, ds, ratio) in cases {
+        let prob = build_problem(ds, task).unwrap();
+        let lam = ratio * prob.lambda_max();
+        let active = ActiveSet::full(prob.pen.groups());
+        let beta0 = Mat::zeros(prob.p(), prob.q());
+        let z0 = prob.predict(&beta0);
+        let at0 = prob.gap_pass(&beta0, &z0, lam, &active);
+        let want0 = (2.0 * at0.gap / prob.fit.gamma()).sqrt() / lam;
+        assert_eq!(
+            at0.radius.to_bits(),
+            want0.to_bits(),
+            "{task:?}: radius at beta=0 deviates from the global-gamma formula"
+        );
+        // a handful of epochs away from zero, where gap and theta are
+        // nontrivial
+        let mut none = NoScreening;
+        let opts = SolveOptions { eps: 0.0, max_epochs: 5, ..Default::default() };
+        let part = solve_fixed_lambda(&prob, lam, &mut none, &opts);
+        let z = prob.predict(&part.beta);
+        let mid = prob.gap_pass(&part.beta, &z, lam, &active);
+        let want = (2.0 * mid.gap / prob.fit.gamma()).sqrt() / lam;
+        assert_eq!(
+            mid.radius.to_bits(),
+            want.to_bits(),
+            "{task:?}: radius at a partial iterate deviates from the global-gamma formula"
+        );
     }
 }
 

@@ -5,14 +5,14 @@
 //! designs, zero columns, constant targets).
 
 use gapsafe::data::synth;
+use gapsafe::datafit::{Logistic, Multinomial, Poisson, Quadratic};
 use gapsafe::linalg::sparse::{Csc, Design};
 use gapsafe::linalg::Mat;
-use gapsafe::penalty::{ActiveSet, Groups, L1};
-use gapsafe::datafit::Quadratic;
+use gapsafe::penalty::{ActiveSet, GroupL2, Groups, L1};
 use gapsafe::problem::Problem;
-use gapsafe::screening::{NoScreening, Rule};
+use gapsafe::screening::{NoScreening, PrevSolution, Rule};
 use gapsafe::solver::path::{lambda_grid, solve_path, PathConfig, WarmStart};
-use gapsafe::solver::{solve_fixed_lambda, SolveOptions};
+use gapsafe::solver::{solve_fixed_lambda, solve_fixed_lambda_with, SolveOptions};
 use gapsafe::util::{check_property, prng::Prng};
 use gapsafe::{build_problem, Task};
 
@@ -247,6 +247,234 @@ fn grid_matches_paper_formula() {
         let want = lmax * 10f64.powf(-3.0 * t as f64 / 99.0);
         assert!((l - want).abs() < 1e-12 * want);
     }
+}
+
+/// Datafit families covered by the randomized safety harness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FitFam {
+    Quadratic,
+    Logistic,
+    Multinomial,
+    Poisson,
+}
+
+impl FitFam {
+    const ALL: [FitFam; 4] =
+        [FitFam::Quadratic, FitFam::Logistic, FitFam::Multinomial, FitFam::Poisson];
+
+    fn label(&self) -> &'static str {
+        match self {
+            FitFam::Quadratic => "quadratic",
+            FitFam::Logistic => "logistic",
+            FitFam::Multinomial => "multinomial",
+            FitFam::Poisson => "poisson",
+        }
+    }
+
+    /// Per-combination salt so every (fit, design) cell draws distinct
+    /// problems even though `check_property` reseeds per case only.
+    fn salt(&self) -> u64 {
+        match self {
+            FitFam::Quadratic => 0x51AD,
+            FitFam::Logistic => 0x106,
+            FitFam::Multinomial => 0x3017,
+            FitFam::Poisson => 0x9015,
+        }
+    }
+}
+
+/// A small random problem of the given family on a dense or CSC design.
+fn random_problem(fit: FitFam, sparse: bool, rng: &mut Prng) -> Problem {
+    let n = 10 + rng.below(5);
+    let p = 12 + rng.below(5);
+    let x: Design = if sparse {
+        let mut trip = Vec::new();
+        for j in 0..p {
+            for i in 0..n {
+                if rng.bernoulli(0.5) {
+                    trip.push((j, i, rng.gaussian()));
+                }
+            }
+        }
+        Design::Sparse(Csc::from_triplets(n, p, trip))
+    } else {
+        let mut m = Mat::zeros(n, p);
+        for v in m.as_mut_slice() {
+            *v = rng.gaussian();
+        }
+        Design::Dense(m)
+    };
+    match fit {
+        FitFam::Quadratic => {
+            let y: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            Problem::new(x, Box::new(Quadratic::from_vec(&y)), Box::new(L1::new(p)))
+        }
+        FitFam::Logistic => {
+            let y: Vec<f64> =
+                (0..n).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect();
+            Problem::new(x, Box::new(Logistic::new(&y)), Box::new(L1::new(p)))
+        }
+        FitFam::Multinomial => {
+            let q = 3;
+            let mut y = Mat::zeros(n, q);
+            for i in 0..n {
+                y[(i, rng.below(q))] = 1.0;
+            }
+            Problem::new(
+                x,
+                Box::new(Multinomial::new(y)),
+                Box::new(GroupL2::new(Groups::singletons(p))),
+            )
+        }
+        FitFam::Poisson => {
+            let mut counts: Vec<f64> = (0..n).map(|_| rng.below(5) as f64).collect();
+            counts[0] = counts[0].max(1.0);
+            Problem::new(x, Box::new(Poisson::new(&counts)), Box::new(L1::new(p)))
+        }
+    }
+}
+
+/// Randomized rule-zoo safety harness: for every (rule x datafit x
+/// dense/CSC) combination, 200 seeded trials assert that no safe rule
+/// ever screens a coordinate of the high-precision no-screening reference
+/// support, and that every rule's solution (including the un-safe strong
+/// rule after its KKT repair) matches the reference. Each trial hands the
+/// rules a converged `PrevSolution` at a larger lambda so the sequential
+/// spheres are exercised, not just the dynamic ones. The
+/// `SAFETY-HARNESS ... trials=N` marker lines below are grepped by CI.
+#[test]
+fn safety_harness_rule_zoo_never_screens_reference_support() {
+    const TRIALS: u64 = 200;
+    for fit in FitFam::ALL {
+        for sparse in [false, true] {
+            let design = if sparse { "csc" } else { "dense" };
+            let combo = format!("safety_{}_{}", fit.label(), design);
+            let salt = fit.salt() ^ if sparse { 0xC5C0_0000 } else { 0 };
+            check_property(&combo, TRIALS, |seed_rng| {
+                let mut rng = Prng::new(seed_rng.next_u64() ^ salt);
+                let prob = random_problem(fit, sparse, &mut rng);
+                let lmax = prob.lambda_max();
+                if !(lmax.is_finite() && lmax > 0.0) {
+                    return Err(format!("degenerate lambda_max {lmax}"));
+                }
+                let lam = (0.1 + 0.5 * rng.uniform()) * lmax;
+                let opts =
+                    SolveOptions { eps: 1e-9, max_epochs: 50_000, ..Default::default() };
+                let mut none = NoScreening;
+                let reference = solve_fixed_lambda(&prob, lam, &mut none, &opts);
+                if !reference.converged {
+                    return Err(format!("reference did not converge (gap {})", reference.gap));
+                }
+                let support: Vec<usize> = (0..prob.p())
+                    .filter(|&j| (0..prob.q()).any(|c| reference.beta[(j, c)].abs() > 1e-5))
+                    .collect();
+                // A converged previous path point at a larger lambda feeds
+                // the sequential spheres and the strong extrapolation.
+                let lam_prev = (1.3 * lam).min(lmax);
+                let mut none2 = NoScreening;
+                let prev_res = solve_fixed_lambda(&prob, lam_prev, &mut none2, &opts);
+                if !prev_res.converged {
+                    return Err(format!("prev point did not converge (gap {})", prev_res.gap));
+                }
+                let prev = PrevSolution {
+                    lam: lam_prev,
+                    loss: prob.fit.loss(&prev_res.z),
+                    pen_value: prob.pen.value(&prev_res.beta),
+                    z: prev_res.z.clone(),
+                    theta: prev_res.theta.clone(),
+                    active: prev_res.active.clone(),
+                    beta: prev_res.beta.clone(),
+                };
+                for rule in Rule::ALL {
+                    if rule.regression_only() && fit != FitFam::Quadratic {
+                        continue;
+                    }
+                    let mut r = rule.build();
+                    let res = solve_fixed_lambda_with(
+                        &prob,
+                        lam,
+                        lmax,
+                        None,
+                        None,
+                        r.as_mut(),
+                        Some(&prev),
+                        &opts,
+                    );
+                    if !res.converged {
+                        return Err(format!(
+                            "rule {} did not converge (gap {})",
+                            rule.label(),
+                            res.gap
+                        ));
+                    }
+                    let safe = rule != Rule::Strong;
+                    for &j in &support {
+                        if safe && !res.active.feat[j] {
+                            return Err(format!(
+                                "rule {} screened reference-support feature {j}",
+                                rule.label()
+                            ));
+                        }
+                        for c in 0..prob.q() {
+                            let (a, b) = (res.beta[(j, c)], reference.beta[(j, c)]);
+                            if (a - b).abs() > 1e-4 {
+                                return Err(format!(
+                                    "rule {} diverged from the reference at ({j},{c}): {a} vs {b}",
+                                    rule.label()
+                                ));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            });
+            for rule in Rule::ALL {
+                if rule.regression_only() && fit != FitFam::Quadratic {
+                    continue;
+                }
+                println!(
+                    "SAFETY-HARNESS rule={} fit={} design={} trials={}",
+                    rule.label(),
+                    fit.label(),
+                    design,
+                    TRIALS
+                );
+            }
+        }
+    }
+}
+
+/// Poisson lambda_max = 0 edge: all-zero counts under a column-centered
+/// design make the null residual a constant that centered columns cannot
+/// correlate with — `lambda_grid` must refuse to build a path there
+/// (`lambda_grid_checked` errors instead of producing NaNs).
+#[test]
+fn poisson_all_zero_counts_has_zero_lambda_max() {
+    use gapsafe::solver::path::lambda_grid_checked;
+    let mut rng = Prng::new(23);
+    let (n, p) = (12, 9);
+    let mut x = Mat::zeros(n, p);
+    // exactly balanced +-c columns: every column sums to 0.0 *exactly*
+    // (partial sums are small integer multiples of c), so the constant
+    // null residual of all-zero counts correlates to exactly 0
+    for j in 0..p {
+        let c = 0.5 + rng.uniform();
+        let mut vals: Vec<f64> = (0..n).map(|i| if i < n / 2 { c } else { -c }).collect();
+        rng.shuffle(&mut vals);
+        for (i, v) in vals.into_iter().enumerate() {
+            x[(i, j)] = v;
+        }
+    }
+    let counts = vec![0.0; n];
+    let prob = Problem::new(
+        Design::Dense(x),
+        Box::new(Poisson::new(&counts)),
+        Box::new(L1::new(p)),
+    );
+    let lmax = prob.lambda_max();
+    assert_eq!(lmax, 0.0, "expected lambda_max = 0, got {lmax}");
+    let err = lambda_grid_checked(lmax, 10, 2.0).unwrap_err();
+    assert!(err.contains("lambda_max"), "unhelpful error: {err}");
 }
 
 /// Multinomial path with the full rule set that applies to it.
