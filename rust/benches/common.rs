@@ -59,17 +59,47 @@ pub fn banner(name: &str, detail: &str) {
     println!("================================================================");
 }
 
+/// The shared environment-metadata block every `BENCH_*.json` carries
+/// under `"meta"`: which kernel backend produced the numbers, how many
+/// cores the host offers, whether the run was a smoke-mode plumbing check,
+/// and the source revision (`git describe`, "unknown" outside a checkout).
+/// Perf-trajectory diffs need this to tell a regression from a machine or
+/// backend change.
+fn meta_block() -> gapsafe::util::json::Json {
+    use gapsafe::util::json::Json;
+    let git = std::process::Command::new("git")
+        .args(["describe", "--always", "--dirty", "--tags"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string());
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    Json::obj([
+        (
+            "kernel",
+            Json::Str(gapsafe::linalg::kernels::active_kind().label().to_string()),
+        ),
+        ("threads", Json::Num(threads as f64)),
+        ("smoke", Json::Bool(smoke())),
+        ("git", Json::Str(git)),
+    ])
+}
+
 /// Record headline numbers as `results/BENCH_<name>.json` — the perf-
 /// trajectory convention (docs/BENCHMARKS.md): one flat object of numeric
-/// metrics per bench, overwritten on each run so successive commits can be
-/// diffed. Serialized through the crate's own `util::json` (JSON has no
-/// NaN/inf literals, so non-finite metrics are recorded as null).
+/// metrics per bench plus a shared `"meta"` environment block, overwritten
+/// on each run so successive commits can be diffed. Serialized through the
+/// crate's own `util::json` (JSON has no NaN/inf literals, so non-finite
+/// metrics are recorded as null).
 pub fn record_bench_json(name: &str, metrics: &[(&str, f64)]) {
     use gapsafe::util::json::Json;
     use std::collections::BTreeMap;
     let mut obj = BTreeMap::new();
     obj.insert("bench".to_string(), Json::Str(name.to_string()));
     obj.insert("full_size".to_string(), Json::Bool(full_size()));
+    obj.insert("meta".to_string(), meta_block());
     for (k, v) in metrics {
         let val = if v.is_finite() { Json::Num(*v) } else { Json::Null };
         obj.insert((*k).to_string(), val);

@@ -1,0 +1,108 @@
+//! Observability overhead benchmark: the same `solve_path` run with no
+//! trace sink, and again with a JSONL [`FileSink`] installed.
+//!
+//! The contract (see `gapsafe::obs`): with no sink the entire layer costs
+//! one relaxed atomic load per instrumented region — no clock reads, no
+//! event construction — so the disabled runs must sit inside the
+//! run-to-run noise floor (two independent disabled timings are recorded
+//! so the floor itself is visible in the JSON). With a sink installed the
+//! run pays for clocks and serialization, but stays bitwise identical:
+//! this bench asserts every path beta bit-for-bit before timing anything.
+//!
+//! Records results/BENCH_obs.json (see docs/BENCHMARKS.md).
+
+#[path = "common.rs"]
+mod common;
+
+use gapsafe::data::synth;
+use gapsafe::obs;
+use gapsafe::obs::trace::FileSink;
+use gapsafe::solver::path::{solve_path, PathConfig};
+use gapsafe::{build_problem, Task};
+
+fn main() {
+    let smoke = common::smoke();
+    let full = common::full_size();
+    let (n, p) = if smoke {
+        (24, 200)
+    } else if full {
+        (72, 7000)
+    } else {
+        (48, 2000)
+    };
+    common::banner(
+        "obs",
+        "solve_path with tracing disabled vs a JSONL FileSink installed \
+         (disabled must be inside the noise floor; enabled must be bitwise identical)",
+    );
+    let ds = synth::leukemia_like_scaled(n, p, 42, false);
+    let prob = build_problem(ds, Task::Lasso).unwrap();
+    let cfg = PathConfig {
+        n_lambdas: if smoke { 10 } else { 40 },
+        delta: 2.5,
+        eps: 1e-6,
+        max_epochs: 10_000,
+        ..Default::default()
+    };
+    let trace_path =
+        std::env::temp_dir().join(format!("gapsafe_bench_obs_{}.jsonl", std::process::id()));
+    let trace_str = trace_path.to_string_lossy().to_string();
+
+    // Transparency gate before timing: tracing on/off must not change an
+    // output bit anywhere along the path.
+    obs::uninstall();
+    let base = solve_path(&prob, &cfg);
+    obs::install(Box::new(FileSink::create(&trace_str).unwrap()));
+    let traced = solve_path(&prob, &cfg);
+    obs::uninstall();
+    assert_eq!(base.betas.len(), traced.betas.len());
+    for (t, (a, b)) in base.betas.iter().zip(&traced.betas).enumerate() {
+        for j in 0..a.rows() {
+            for c in 0..a.cols() {
+                assert_eq!(
+                    a[(j, c)].to_bits(),
+                    b[(j, c)].to_bits(),
+                    "tracing changed beta at lambda {t}, ({j},{c})"
+                );
+            }
+        }
+    }
+    let events = std::fs::read_to_string(&trace_path)
+        .map(|s| s.lines().filter(|l| !l.trim().is_empty()).count())
+        .unwrap_or(0);
+    println!("bitwise gate passed ({events} events traced)");
+
+    let reps = common::reps(3);
+    // Two independent disabled timings: their delta is the measurement
+    // noise floor the disabled-path overhead must hide under.
+    let (_, t_off_a) = common::time_it(reps, || {
+        std::hint::black_box(solve_path(&prob, &cfg));
+    });
+    let (_, t_off_b) = common::time_it(reps, || {
+        std::hint::black_box(solve_path(&prob, &cfg));
+    });
+    obs::install(Box::new(FileSink::create(&trace_str).unwrap()));
+    let (_, t_on) = common::time_it(reps, || {
+        std::hint::black_box(solve_path(&prob, &cfg));
+    });
+    obs::uninstall();
+    let _ = std::fs::remove_file(&trace_path);
+
+    let noise_pct = 100.0 * (t_off_a - t_off_b).abs() / t_off_a.min(t_off_b).max(1e-12);
+    let on_pct = 100.0 * (t_on - t_off_a.min(t_off_b)) / t_off_a.min(t_off_b).max(1e-12);
+    println!(
+        "disabled {t_off_a:.4}s / {t_off_b:.4}s (noise floor {noise_pct:.2}%)  \
+         file sink {t_on:.4}s ({on_pct:+.2}% vs best disabled)"
+    );
+    common::record_bench_json(
+        "obs",
+        &[
+            ("seconds_disabled_a", t_off_a),
+            ("seconds_disabled_b", t_off_b),
+            ("seconds_file_sink", t_on),
+            ("noise_floor_pct", noise_pct),
+            ("file_sink_overhead_pct", on_pct),
+            ("events_per_path", events as f64),
+        ],
+    );
+}

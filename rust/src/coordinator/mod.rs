@@ -196,12 +196,12 @@ pub fn identification_epoch(prob: &Problem, rule: Rule, lam: f64, eps: f64) -> O
     if !res.converged {
         return None;
     }
-    let final_active = res.screen_trace.last()?.2;
+    let final_active = res.screen_trace.last()?.active_after;
     // first epoch index whose trace entry already equals the final count
     res.screen_trace
         .iter()
-        .find(|&&(_, _, feats)| feats == final_active)
-        .map(|&(epoch, _, _)| epoch)
+        .find(|ev| ev.active_after == final_active)
+        .map(|ev| ev.epoch)
 }
 
 #[cfg(test)]

@@ -76,6 +76,7 @@ pub mod coordinator;
 pub mod data;
 pub mod datafit;
 pub mod linalg;
+pub mod obs;
 pub mod penalty;
 pub mod problem;
 pub mod runtime;

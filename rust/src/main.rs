@@ -36,7 +36,8 @@ fn main() -> ExitCode {
         return ExitCode::FAILURE;
     };
     let opts = parse_flags(rest);
-    let r = apply_kernel_flag(&opts).and_then(|()| match cmd.as_str() {
+    let setup = apply_kernel_flag(&opts).and_then(|()| apply_trace_flag(&opts));
+    let r = setup.and_then(|()| match cmd.as_str() {
         "path" => cmd_path(&opts),
         "solve" => cmd_solve(&opts),
         "cv" => cmd_cv(&opts),
@@ -49,6 +50,7 @@ fn main() -> ExitCode {
         "selftest" => cmd_selftest(&opts),
         "artifacts" => cmd_artifacts(&opts),
         "lmax" => cmd_lmax(&opts),
+        "trace" => cmd_trace(rest, &opts),
         "help" | "--help" | "-h" => {
             usage();
             Ok(())
@@ -78,6 +80,7 @@ fn usage() {
            selftest   PJRT-vs-native duality-gap consistency check\n\
            artifacts  list + validate the AOT artifact manifest\n\
            lmax       print lambda_max for a (task, data) pair\n\
+           trace      analyze a --trace-out JSONL file (summarize | lambda-table | flame)\n\
            help       this text\n\
          common flags:\n\
            --task lasso|group-lasso|sgl[:tau]|logreg|multitask|multinomial|poisson\n\
@@ -98,6 +101,8 @@ fn usage() {
                       bitwise identical — a pure performance knob)\n\
            --no-compact (path/solve/cv/batch/serve: disable active-set compaction;\n\
                          bitwise-identical, slower — fig3..fig6 always compact)\n\
+           --trace-out FILE (write structured solver/serve trace events as JSONL;\n\
+                         bitwise-transparent — read it back with `gapsafe trace`)\n\
          per-subcommand flags:\n\
            cv:        --folds 5\n\
            batch:     --jobs 8\n\
@@ -107,7 +112,8 @@ fn usage() {
                       --max-body-mb 16 (reject larger request bodies with 413)\n\
                       endpoints: GET /healthz | GET /metrics | POST /v1/fit\n\
                                  GET /v1/jobs/<id> | POST /v1/predict   (docs/SERVING.md)\n\
-           selftest/artifacts: --artifacts artifacts (manifest dir)"
+           selftest/artifacts: --artifacts artifacts (manifest dir)\n\
+           trace:     --in trace.jsonl (a file produced by --trace-out)"
     );
 }
 
@@ -235,6 +241,46 @@ fn apply_kernel_flag(o: &Flags) -> Result<(), String> {
     if let Some(spec) = o.get("kernel") {
         gapsafe::linalg::kernels::select_str(spec).map_err(|e| format!("--kernel: {e}"))?;
     }
+    Ok(())
+}
+
+/// `--trace-out <file>`: install a process-wide JSONL trace sink before
+/// the subcommand runs, so every solver span and serve request lands in
+/// the file (`gapsafe trace` reads it back). Absent flag = no sink = the
+/// zero-overhead fast path (see `obs`).
+fn apply_trace_flag(o: &Flags) -> Result<(), String> {
+    if let Some(path) = o.get("trace-out") {
+        let sink =
+            gapsafe::obs::trace::FileSink::create(path).map_err(|e| format!("--trace-out: {e}"))?;
+        gapsafe::obs::install(Box::new(sink));
+    }
+    Ok(())
+}
+
+/// `gapsafe trace [summarize|lambda-table|flame] --in <trace.jsonl>`:
+/// offline analysis of a `--trace-out` file.
+fn cmd_trace(rest: &[String], o: &Flags) -> Result<(), String> {
+    let mode = rest
+        .first()
+        .filter(|a| !a.starts_with("--"))
+        .map(String::as_str)
+        .unwrap_or("summarize");
+    let path = o
+        .get("in")
+        .map(String::as_str)
+        .ok_or("trace needs --in <trace.jsonl> (write one with --trace-out)")?;
+    let events = gapsafe::obs::analyze::load(path)?;
+    let out = match mode {
+        "summarize" => gapsafe::obs::analyze::summarize(&events),
+        "lambda-table" => gapsafe::obs::analyze::lambda_table(&events),
+        "flame" => gapsafe::obs::analyze::flame(&events),
+        other => {
+            return Err(format!(
+                "unknown trace mode '{other}' (summarize | lambda-table | flame)"
+            ))
+        }
+    };
+    println!("{out}");
     Ok(())
 }
 

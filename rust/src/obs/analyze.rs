@@ -1,0 +1,335 @@
+//! Trace analysis: turn a `--trace-out` JSONL file back into answers
+//! ("where did the time go", "what did screening buy, per lambda").
+//! Backs the `gapsafe trace summarize|lambda-table|flame` subcommand.
+
+use crate::util::json::Json;
+
+/// Load a JSONL trace. Every line must parse through the crate's own
+/// JSON layer — a malformed line is a hard error (this is also the CI
+/// well-formedness gate for trace files), with its line number.
+pub fn load(path: &str) -> Result<Vec<Json>, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read trace file {path}: {e}"))?;
+    let mut events = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let ev = Json::parse(line)
+            .map_err(|e| format!("{path}:{}: malformed trace line: {e}", i + 1))?;
+        if ev.get("type").and_then(|t| t.as_str()).is_none() {
+            return Err(format!("{path}:{}: trace line has no \"type\" tag", i + 1));
+        }
+        events.push(ev);
+    }
+    Ok(events)
+}
+
+fn typed<'a>(events: &'a [Json], kind: &str) -> impl Iterator<Item = &'a Json> {
+    let kind = kind.to_string();
+    events.iter().filter(move |e| e.get("type").and_then(|t| t.as_str()) == Some(kind.as_str()))
+}
+
+fn num(ev: &Json, key: &str) -> f64 {
+    ev.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0)
+}
+
+fn unum(ev: &Json, key: &str) -> usize {
+    ev.get(key).and_then(|v| v.as_usize()).unwrap_or(0)
+}
+
+/// One per-lambda rollup row (solve spans + gap passes, first-seen order).
+#[derive(Debug, Clone, Default)]
+struct LamRow {
+    lam: f64,
+    epochs: usize,
+    passes: usize,
+    active: usize,
+    initial: usize,
+    converged: bool,
+    cd_secs: f64,
+    gap_secs: f64,
+    link_secs: f64,
+    total_secs: f64,
+    kkt: usize,
+}
+
+/// Aggregate solve spans and gap passes by lambda (keyed on the exact
+/// f64 bits, so distinct lambdas never merge).
+fn lambda_rows(events: &[Json]) -> Vec<LamRow> {
+    let mut rows: Vec<(u64, LamRow)> = Vec::new();
+    let mut row = |lam: f64, rows: &mut Vec<(u64, LamRow)>| -> usize {
+        let bits = lam.to_bits();
+        if let Some(i) = rows.iter().position(|(b, _)| *b == bits) {
+            i
+        } else {
+            rows.push((bits, LamRow { lam, ..LamRow::default() }));
+            rows.len() - 1
+        }
+    };
+    for ev in typed(events, "solve") {
+        let i = row(num(ev, "lam"), &mut rows);
+        let r = &mut rows[i].1;
+        r.epochs += unum(ev, "epochs");
+        r.passes += unum(ev, "gap_passes");
+        r.active = unum(ev, "active_feats");
+        r.converged = ev.get("converged").and_then(|v| v.as_bool()).unwrap_or(false);
+        r.cd_secs += num(ev, "cd_secs");
+        r.gap_secs += num(ev, "gap_secs");
+        r.link_secs += num(ev, "link_secs");
+        r.total_secs += num(ev, "total_secs");
+        r.kkt += unum(ev, "kkt_violations");
+    }
+    for ev in typed(events, "gap_pass") {
+        let i = row(num(ev, "lam"), &mut rows);
+        let before = unum(ev, "active_feats") + unum(ev, "screened");
+        let r = &mut rows[i].1;
+        r.initial = r.initial.max(before);
+    }
+    rows.into_iter().map(|(_, r)| r).collect()
+}
+
+/// The per-lambda table: epochs, passes, final active count, screened
+/// fraction, and the cd/gap/link time split.
+pub fn lambda_table(events: &[Json]) -> String {
+    let rows = lambda_rows(events);
+    let mut out = String::new();
+    if rows.is_empty() {
+        out.push_str("no solver spans in trace (serve-only trace? try `summarize`)\n");
+        return out;
+    }
+    out.push_str(&format!(
+        "{:>12} {:>7} {:>6} {:>7} {:>6} {:>9} {:>9} {:>9} {:>9} {:>5} {:>4}\n",
+        "lambda", "epochs", "passes", "active", "scr%", "cd_s", "gap_s", "link_s", "total_s",
+        "kkt", "conv"
+    ));
+    for r in &rows {
+        let scr = if r.initial > 0 {
+            100.0 * (1.0 - r.active as f64 / r.initial as f64)
+        } else {
+            0.0
+        };
+        out.push_str(&format!(
+            "{:>12.6e} {:>7} {:>6} {:>7} {:>5.1}% {:>9.4} {:>9.4} {:>9.4} {:>9.4} {:>5} {:>4}\n",
+            r.lam,
+            r.epochs,
+            r.passes,
+            r.active,
+            scr,
+            r.cd_secs,
+            r.gap_secs,
+            r.link_secs,
+            r.total_secs,
+            r.kkt,
+            if r.converged { "yes" } else { "NO" }
+        ));
+    }
+    out
+}
+
+/// Aggregate phase breakdown as text bars: CD epochs (excluding link
+/// refreshes), link refreshes, gap passes, and the unattributed rest.
+pub fn flame(events: &[Json]) -> String {
+    let mut cd = 0.0;
+    let mut gap = 0.0;
+    let mut link = 0.0;
+    let mut total = 0.0;
+    for ev in typed(events, "solve") {
+        cd += num(ev, "cd_secs");
+        gap += num(ev, "gap_secs");
+        link += num(ev, "link_secs");
+        total += num(ev, "total_secs");
+    }
+    let mut out = String::new();
+    if total <= 0.0 {
+        out.push_str("no solver time recorded in trace\n");
+        return out;
+    }
+    let cd_only = (cd - link).max(0.0);
+    let other = (total - cd - gap).max(0.0);
+    let phases =
+        [("cd epochs", cd_only), ("link refresh", link), ("gap passes", gap), ("other", other)];
+    for (name, secs) in phases {
+        let frac = secs / total;
+        let bar = "#".repeat((frac * 50.0).round() as usize);
+        out.push_str(&format!("{name:>13} {secs:>9.4}s {:>5.1}% |{bar}\n", 100.0 * frac));
+    }
+    out.push_str(&format!("{:>13} {total:>9.4}s\n", "total"));
+    out
+}
+
+/// Headline summary: event counts, solver rollup (lambdas, epochs, time
+/// split) and — when present — the serve-side request/fit aggregates.
+pub fn summarize(events: &[Json]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("events: {}\n", events.len()));
+    // count per type, first-seen order
+    let mut kinds: Vec<(String, usize)> = Vec::new();
+    for ev in events {
+        let k = ev.get("type").and_then(|t| t.as_str()).unwrap_or("?").to_string();
+        match kinds.iter_mut().find(|(n, _)| *n == k) {
+            Some((_, c)) => *c += 1,
+            None => kinds.push((k, 1)),
+        }
+    }
+    for (k, c) in &kinds {
+        out.push_str(&format!("  {k:>10} x{c}\n"));
+    }
+    if let Some(start) = typed(events, "path_start").next() {
+        out.push_str(&format!(
+            "path: {} lambdas, lam_max {:.6e}, threads {}, kernel {}\n",
+            unum(start, "n_lambdas"),
+            num(start, "lam_max"),
+            unum(start, "threads"),
+            start.get("kernel").and_then(|v| v.as_str()).unwrap_or("?"),
+        ));
+    }
+    let rows = lambda_rows(events);
+    if !rows.is_empty() {
+        out.push_str(&format!(
+            "solver: {} lambdas, {} epochs, {} gap passes, {:.4}s\n",
+            rows.len(),
+            rows.iter().map(|r| r.epochs).sum::<usize>(),
+            rows.iter().map(|r| r.passes).sum::<usize>(),
+            rows.iter().map(|r| r.total_secs).sum::<f64>(),
+        ));
+        out.push('\n');
+        out.push_str(&lambda_table(events));
+        out.push('\n');
+        out.push_str(&flame(events));
+    }
+    // serve-side aggregates, when the trace came from `serve --trace-out`
+    let mut endpoints: Vec<(String, usize, f64)> = Vec::new();
+    for ev in typed(events, "request") {
+        let e = ev.get("endpoint").and_then(|v| v.as_str()).unwrap_or("?").to_string();
+        let secs = num(ev, "secs");
+        match endpoints.iter_mut().find(|(n, _, _)| *n == e) {
+            Some((_, c, s)) => {
+                *c += 1;
+                *s += secs;
+            }
+            None => endpoints.push((e, 1, secs)),
+        }
+    }
+    if !endpoints.is_empty() {
+        out.push_str("\nrequests:\n");
+        for (e, c, s) in &endpoints {
+            out.push_str(&format!(
+                "  {e:>8} x{c:<6} total {s:.4}s  mean {:.6}s\n",
+                s / *c as f64
+            ));
+        }
+    }
+    let fits: Vec<&Json> = typed(events, "fit").collect();
+    if !fits.is_empty() {
+        for kind in ["cold", "warm", "hit"] {
+            let of_kind: Vec<&&Json> = fits
+                .iter()
+                .filter(|f| f.get("kind").and_then(|v| v.as_str()) == Some(kind))
+                .collect();
+            if !of_kind.is_empty() {
+                let secs: f64 = of_kind.iter().map(|f| num(f, "secs")).sum();
+                out.push_str(&format!("fits ({kind}): x{} total {secs:.4}s\n", of_kind.len()));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Event;
+
+    fn demo_events() -> Vec<Json> {
+        vec![
+            Event::PathStart { n_lambdas: 2, lam_max: 2.0, threads: 1, kernel: "scalar" }
+                .to_json(),
+            Event::GapPass {
+                lam: 1.0,
+                epoch: 0,
+                gap: 0.5,
+                radius: 0.3,
+                active_groups: 40,
+                active_feats: 40,
+                screened: 60,
+                view_cols: 100,
+                dual_choice: "fresh",
+                secs: 1e-4,
+            }
+            .to_json(),
+            Event::SolveSpan {
+                lam: 1.0,
+                epochs: 30,
+                gap_passes: 4,
+                gap: 1e-9,
+                converged: true,
+                kkt_violations: 0,
+                active_feats: 10,
+                cd_secs: 0.03,
+                gap_secs: 0.01,
+                link_secs: 0.005,
+                total_secs: 0.05,
+                kernel: "scalar",
+            }
+            .to_json(),
+            Event::SolveSpan {
+                lam: 0.5,
+                epochs: 50,
+                gap_passes: 6,
+                gap: 1e-9,
+                converged: true,
+                kkt_violations: 1,
+                active_feats: 20,
+                cd_secs: 0.08,
+                gap_secs: 0.02,
+                link_secs: 0.0,
+                total_secs: 0.11,
+                kernel: "scalar",
+            }
+            .to_json(),
+        ]
+    }
+
+    #[test]
+    fn lambda_table_rolls_up_by_lambda() {
+        let t = lambda_table(&demo_events());
+        assert!(t.contains("lambda"), "missing header: {t}");
+        // two distinct lambdas -> header + 2 rows
+        assert_eq!(t.lines().count(), 3, "{t}");
+        // screened fraction of lam=1.0: initial 100 (40 active + 60
+        // screened), final 10 -> 90%
+        assert!(t.contains("90.0%"), "{t}");
+    }
+
+    #[test]
+    fn flame_attributes_all_time() {
+        let f = flame(&demo_events());
+        assert!(f.contains("cd epochs"));
+        assert!(f.contains("link refresh"));
+        assert!(f.contains("gap passes"));
+        assert!(f.contains("total"));
+    }
+
+    #[test]
+    fn summarize_counts_and_embeds_table() {
+        let s = summarize(&demo_events());
+        assert!(s.contains("events: 4"));
+        assert!(s.contains("solve x2"));
+        assert!(s.contains("lambda")); // the embedded per-lambda table
+        assert!(s.contains("kernel scalar"));
+    }
+
+    #[test]
+    fn load_rejects_malformed_lines_with_line_number() {
+        let path =
+            std::env::temp_dir().join(format!("gapsafe_trace_bad_{}.jsonl", std::process::id()));
+        std::fs::write(&path, "{\"type\":\"kkt\"}\nnot json\n").unwrap();
+        let err = load(path.to_str().unwrap()).unwrap_err();
+        assert!(err.contains(":2:"), "error should carry line number: {err}");
+        std::fs::write(&path, "{\"type\":\"kkt\"}\n{\"no_tag\":1}\n").unwrap();
+        let err = load(path.to_str().unwrap()).unwrap_err();
+        assert!(err.contains("type"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,225 @@
+//! Lock-free log-bucketed latency histograms (HDR-style).
+//!
+//! A [`LogHistogram`] holds atomic counters over a fixed 1-2-5 log-spaced
+//! grid of upper bounds from 1 microsecond to 5000 seconds, so `record`
+//! is a binary search plus three relaxed atomic adds — safe to hammer
+//! from every HTTP worker with no lock. Quantiles are read as the upper
+//! bound of the first bucket whose cumulative count reaches the rank, so
+//! `p50 <= p99 <= p999` holds *structurally* (cumulative counts are
+//! monotone by construction), and the same cumulative counts render
+//! directly as Prometheus `_bucket{le="..."}` lines.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// The shared 1-2-5 bucket grid, in seconds.
+fn default_bounds() -> Vec<f64> {
+    let mut b = Vec::with_capacity(30);
+    let mut decade = 1e-6;
+    while decade < 1.5e3 {
+        for m in [1.0, 2.0, 5.0] {
+            b.push(m * decade);
+        }
+        decade *= 10.0;
+    }
+    b
+}
+
+/// A fixed-bucket histogram of durations in seconds.
+#[derive(Debug)]
+pub struct LogHistogram {
+    /// Ascending bucket upper bounds (seconds).
+    bounds: Vec<f64>,
+    /// One counter per bound, plus one overflow bucket at the end.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// Total observed time in integer nanoseconds (f64 atomics don't
+    /// exist; nanos keep the sum exact for any realistic uptime).
+    sum_nanos: AtomicU64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        let bounds = default_bounds();
+        let buckets = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
+        LogHistogram { bounds, buckets, count: AtomicU64::new(0), sum_nanos: AtomicU64::new(0) }
+    }
+
+    /// Record one observation (negative / NaN clamp to zero).
+    pub fn record(&self, secs: f64) {
+        let s = if secs.is_finite() && secs > 0.0 { secs } else { 0.0 };
+        let idx = self.bounds.partition_point(|&b| b < s);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_nanos.fetch_add((s * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Total observed seconds.
+    pub fn sum_secs(&self) -> f64 {
+        self.sum_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Non-cumulative per-bucket counts (last entry = overflow bucket).
+    pub fn snapshot(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// The bucket upper bounds (seconds); `snapshot()[bounds.len()]` is
+    /// the overflow bucket above the last bound.
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Quantile estimate in `[0, 1]`: the upper bound of the first bucket
+    /// whose cumulative count reaches rank `ceil(p * count)`. Returns 0
+    /// with no observations; overflow observations clamp to the largest
+    /// bound (5000 s). Because the estimate only moves to later buckets as
+    /// p grows, `quantile(a) <= quantile(b)` whenever `a <= b`.
+    pub fn quantile(&self, p: f64) -> f64 {
+        let count = self.count();
+        if count == 0 {
+            return 0.0;
+        }
+        let target = ((p.clamp(0.0, 1.0) * count as f64).ceil() as u64).clamp(1, count);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= target {
+                return self.bounds[i.min(self.bounds.len() - 1)];
+            }
+        }
+        *self.bounds.last().unwrap()
+    }
+
+    /// Append this histogram in Prometheus text exposition format:
+    /// `# TYPE` header, cumulative `_bucket{le="..."}` series ending in
+    /// `le="+Inf"`, then `_sum` and `_count`. `labels` is either empty or
+    /// a comma-joined `key="value"` list (no braces).
+    pub fn render_prometheus(&self, out: &mut String, name: &str, labels: &str, with_type: bool) {
+        use std::fmt::Write;
+        if with_type {
+            let _ = writeln!(out, "# TYPE {name} histogram");
+        }
+        let sep = if labels.is_empty() { "" } else { "," };
+        let mut cum = 0u64;
+        for (i, bound) in self.bounds.iter().enumerate() {
+            cum += self.buckets[i].load(Ordering::Relaxed);
+            let _ = writeln!(out, "{name}_bucket{{{labels}{sep}le=\"{bound}\"}} {cum}");
+        }
+        cum += self.buckets[self.bounds.len()].load(Ordering::Relaxed);
+        let _ = writeln!(out, "{name}_bucket{{{labels}{sep}le=\"+Inf\"}} {cum}");
+        let braces = if labels.is_empty() { String::new() } else { format!("{{{labels}}}") };
+        let _ = writeln!(out, "{name}_sum{braces} {}", self.sum_secs());
+        let _ = writeln!(out, "{name}_count{braces} {}", self.count());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn bounds_are_ascending_and_span_micro_to_kilo_seconds() {
+        let h = LogHistogram::new();
+        let b = h.bounds();
+        assert!(b.windows(2).all(|w| w[0] < w[1]), "bounds not ascending");
+        assert_eq!(b[0], 1e-6);
+        assert!(*b.last().unwrap() >= 1e3);
+    }
+
+    #[test]
+    fn record_places_observations_and_quantiles_are_monotone() {
+        let h = LogHistogram::new();
+        for _ in 0..90 {
+            h.record(1e-4); // 100us
+        }
+        for _ in 0..10 {
+            h.record(0.5); // 500ms
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile(0.50);
+        let p99 = h.quantile(0.99);
+        let p999 = h.quantile(0.999);
+        assert!(p50 <= p99 && p99 <= p999, "p50={p50} p99={p99} p999={p999}");
+        // p50 lands in the 100us bucket, p99 in the 500ms one
+        assert!(p50 <= 2e-4, "p50={p50}");
+        assert!((0.1..=1.0).contains(&p99), "p99={p99}");
+        assert!(h.sum_secs() > 5.0 && h.sum_secs() < 5.1, "sum={}", h.sum_secs());
+    }
+
+    #[test]
+    fn degenerate_inputs_clamp() {
+        let h = LogHistogram::new();
+        h.record(f64::NAN);
+        h.record(-1.0);
+        h.record(f64::INFINITY);
+        h.record(1e9); // overflow bucket
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.quantile(0.999), *h.bounds().last().unwrap());
+        let snap = h.snapshot();
+        assert_eq!(*snap.last().unwrap(), 2, "inf + 1e9 land in overflow");
+        assert_eq!(snap[0], 2, "NaN and negative clamp to the first bucket");
+    }
+
+    #[test]
+    fn prometheus_rendering_is_cumulative_and_well_formed() {
+        let h = LogHistogram::new();
+        h.record(1e-4);
+        h.record(1e-2);
+        h.record(2.0);
+        let mut out = String::new();
+        h.render_prometheus(&mut out, "t_seconds", "endpoint=\"fit\"", true);
+        assert!(out.starts_with("# TYPE t_seconds histogram\n"));
+        assert!(out.contains("t_seconds_bucket{endpoint=\"fit\",le=\"+Inf\"} 3"));
+        assert!(out.contains("t_seconds_count{endpoint=\"fit\"} 3"));
+        // cumulative counts never decrease down the le ladder
+        let mut last = 0u64;
+        for line in out.lines().filter(|l| l.contains("_bucket{")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "bucket counts not cumulative: {line}");
+            last = v;
+        }
+    }
+
+    /// Satellite: hammer one histogram from N threads; total count and
+    /// cumulative-bucket monotonicity must survive.
+    #[test]
+    fn concurrent_recording_is_lossless() {
+        let h = Arc::new(LogHistogram::new());
+        let threads = 8;
+        let per = 5_000;
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let h = Arc::clone(&h);
+                s.spawn(move || {
+                    for i in 0..per {
+                        // deterministic spread across several decades
+                        let secs = 1e-6 * ((t * per + i) % 1_000_000 + 1) as f64;
+                        h.record(secs);
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), (threads * per) as u64);
+        let snap = h.snapshot();
+        assert_eq!(snap.iter().sum::<u64>(), (threads * per) as u64);
+        let mut cum = 0u64;
+        for c in snap {
+            let next = cum.checked_add(c).expect("no overflow");
+            assert!(next >= cum);
+            cum = next;
+        }
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+        assert!(h.quantile(0.99) <= h.quantile(0.999));
+    }
+}

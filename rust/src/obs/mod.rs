@@ -1,0 +1,370 @@
+//! Observability: structured tracing + metrics, std-only.
+//!
+//! The paper's whole argument is a *certificate* — the duality gap — and
+//! this module makes it (and everything the solver does to shrink it)
+//! observable in production, not just in tests:
+//!
+//! * **Tracing** — a process-wide [`Sink`] receives typed [`Event`]s from
+//!   the solver (per-lambda spans, gap passes, KKT repairs, working-set
+//!   rounds, path chunks) and the server (request / fit / predict / job
+//!   spans). Installed via [`install`] (the CLI's `--trace-out <file>`
+//!   writes JSONL through [`trace::FileSink`]); absent by default.
+//! * **Metrics** — [`metrics::LogHistogram`], a lock-free log-bucketed
+//!   latency histogram feeding `GET /metrics` (JSON quantiles and
+//!   Prometheus text exposition — see `serve`).
+//! * **Analysis** — [`analyze`] renders per-lambda tables and phase
+//!   breakdowns from a JSONL trace (`gapsafe trace summarize|...`).
+//!
+//! # Overhead and transparency contract
+//!
+//! With no sink installed, the entire layer costs **one relaxed atomic
+//! load** per instrumented region ([`enabled`]); no event is constructed,
+//! no clock is read. With a sink installed, clocks are read and events
+//! are built — but timing values never feed solver arithmetic, so tracing
+//! on/off is **bitwise-transparent**: it can never change a solver
+//! trajectory, a screening decision, or a served byte
+//! (`rust/tests/obs_trace.rs` pins whole `solve_path` runs bit for bit
+//! with and without a sink).
+
+pub mod analyze;
+pub mod metrics;
+pub mod trace;
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicPtr, Ordering};
+
+/// A tracing backend. Implementations must be cheap and non-blocking
+/// enough for the hot path they observe (the bundled [`trace::FileSink`]
+/// buffers writes behind a mutex; contention only exists when tracing is
+/// on, which is already the "observed" regime).
+pub trait Sink: Send + Sync {
+    fn record(&self, ev: &Event);
+}
+
+/// The global sink. `dyn Sink` is a fat pointer, so the atomic holds a
+/// thin pointer to a heap-allocated `Box<dyn Sink>` instead.
+static SINK: AtomicPtr<Box<dyn Sink>> = AtomicPtr::new(std::ptr::null_mut());
+
+/// Install a process-wide sink. A replaced sink is deliberately leaked:
+/// another thread may still be inside its `record`, and a sink lives for
+/// the process in every real use (CLI flag, serve flag, test harness) —
+/// leaking trades a few bytes for not needing hazard pointers.
+pub fn install(sink: Box<dyn Sink>) {
+    let ptr = Box::into_raw(Box::new(sink));
+    SINK.swap(ptr, Ordering::AcqRel);
+}
+
+/// Remove the sink (tracing returns to the no-op fast path). The old sink
+/// is leaked, not dropped — see [`install`]. Intended for tests; callers
+/// that need the sink's data should keep their own `Arc` into it.
+pub fn uninstall() {
+    SINK.swap(std::ptr::null_mut(), Ordering::AcqRel);
+}
+
+/// Is a sink installed? One relaxed load — callers capture this once per
+/// solve / request and skip all clock reads and event construction when
+/// false.
+#[inline]
+pub fn enabled() -> bool {
+    !SINK.load(Ordering::Relaxed).is_null()
+}
+
+/// Deliver an event to the installed sink, if any.
+#[inline]
+pub fn emit(ev: &Event) {
+    let p = SINK.load(Ordering::Acquire);
+    if !p.is_null() {
+        // Safety: `p` came from Box::into_raw in `install` and is never
+        // freed (replaced sinks leak), so it is valid for the process.
+        unsafe { (*p).record(ev) }
+    }
+}
+
+/// A structured trace event. Everything is plain data (no matrices): an
+/// event is a *span summary*, sized for a JSONL line, not a data dump.
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// One gap/screening pass inside a fixed-lambda solve (Alg. 2 line 5):
+    /// the duality-gap certificate, the Gap Safe radius it induces, what
+    /// screening did with it, and what the pass cost.
+    GapPass {
+        lam: f64,
+        /// CD epochs completed when the pass ran.
+        epoch: usize,
+        gap: f64,
+        /// Gap Safe sphere radius from this pass's dual point.
+        radius: f64,
+        active_groups: usize,
+        active_feats: usize,
+        /// Features killed by this pass (active before - after).
+        screened: usize,
+        /// Columns the compact working view carries (p when not packed).
+        view_cols: usize,
+        /// Dual-point engine decision: "fresh" | "kept" | "refined".
+        dual_choice: &'static str,
+        secs: f64,
+    },
+    /// A whole fixed-lambda solve, with the phase time split.
+    SolveSpan {
+        lam: f64,
+        epochs: usize,
+        gap_passes: usize,
+        gap: f64,
+        converged: bool,
+        kkt_violations: usize,
+        active_feats: usize,
+        /// Time inside CD epochs (includes `link_secs`).
+        cd_secs: f64,
+        /// Time inside gap passes (dual point + stats + screening).
+        gap_secs: f64,
+        /// Time inside logistic/multinomial/Poisson link refreshes.
+        link_secs: f64,
+        total_secs: f64,
+        /// Active SIMD kernel backend label.
+        kernel: &'static str,
+    },
+    /// Strong-rule KKT repair reactivated groups (Sec. 3.6).
+    Kkt { lam: f64, reactivated: usize, round: usize },
+    /// A Blitz working-set round (Sec. 5.1).
+    WsRound { lam: f64, round: usize, ws_feats: usize, gap: f64 },
+    /// A lambda path run started.
+    PathStart { n_lambdas: usize, lam_max: f64, threads: usize, kernel: &'static str },
+    /// One path point finished (rollup over its warm-start phases).
+    PathPoint {
+        lam: f64,
+        epochs: usize,
+        gap: f64,
+        active_feats: usize,
+        nnz_coefs: usize,
+        converged: bool,
+        secs: f64,
+    },
+    /// A lambda path run finished.
+    PathEnd { n_lambdas: usize, total_epochs: usize, secs: f64 },
+    /// A parallel-path work span: the coarse warm-start pre-pass or one
+    /// weighted lambda chunk.
+    Chunk { kind: &'static str, lo: usize, hi: usize, secs: f64 },
+    /// One served HTTP request.
+    Request { endpoint: &'static str, status: u16, secs: f64 },
+    /// One registry fit ("hit" | "warm" | "cold").
+    Fit { key: String, kind: &'static str, secs: f64, epochs: usize },
+    /// One served prediction.
+    Predict { key: String, t: usize, secs: f64 },
+    /// One background fit job, with the queueing delay made visible.
+    Job { id: u64, queue_secs: f64, run_secs: f64, ok: bool },
+}
+
+impl Event {
+    /// The event's `type` tag as serialized.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::GapPass { .. } => "gap_pass",
+            Event::SolveSpan { .. } => "solve",
+            Event::Kkt { .. } => "kkt",
+            Event::WsRound { .. } => "ws_round",
+            Event::PathStart { .. } => "path_start",
+            Event::PathPoint { .. } => "path_point",
+            Event::PathEnd { .. } => "path_end",
+            Event::Chunk { .. } => "chunk",
+            Event::Request { .. } => "request",
+            Event::Fit { .. } => "fit",
+            Event::Predict { .. } => "predict",
+            Event::Job { .. } => "job",
+        }
+    }
+
+    /// Serialize through the crate's JSON layer (f64s round-trip bitwise;
+    /// non-finite values become null). One object per event; the schema is
+    /// documented in docs/OBSERVABILITY.md.
+    pub fn to_json(&self) -> Json {
+        let mut obj = match self {
+            Event::GapPass {
+                lam,
+                epoch,
+                gap,
+                radius,
+                active_groups,
+                active_feats,
+                screened,
+                view_cols,
+                dual_choice,
+                secs,
+            } => Json::obj(vec![
+                ("lam", Json::Num(*lam)),
+                ("epoch", Json::Num(*epoch as f64)),
+                ("gap", Json::Num(*gap)),
+                ("radius", Json::Num(*radius)),
+                ("active_groups", Json::Num(*active_groups as f64)),
+                ("active_feats", Json::Num(*active_feats as f64)),
+                ("screened", Json::Num(*screened as f64)),
+                ("view_cols", Json::Num(*view_cols as f64)),
+                ("dual_choice", Json::Str((*dual_choice).to_string())),
+                ("secs", Json::Num(*secs)),
+            ]),
+            Event::SolveSpan {
+                lam,
+                epochs,
+                gap_passes,
+                gap,
+                converged,
+                kkt_violations,
+                active_feats,
+                cd_secs,
+                gap_secs,
+                link_secs,
+                total_secs,
+                kernel,
+            } => Json::obj(vec![
+                ("lam", Json::Num(*lam)),
+                ("epochs", Json::Num(*epochs as f64)),
+                ("gap_passes", Json::Num(*gap_passes as f64)),
+                ("gap", Json::Num(*gap)),
+                ("converged", Json::Bool(*converged)),
+                ("kkt_violations", Json::Num(*kkt_violations as f64)),
+                ("active_feats", Json::Num(*active_feats as f64)),
+                ("cd_secs", Json::Num(*cd_secs)),
+                ("gap_secs", Json::Num(*gap_secs)),
+                ("link_secs", Json::Num(*link_secs)),
+                ("total_secs", Json::Num(*total_secs)),
+                ("kernel", Json::Str((*kernel).to_string())),
+            ]),
+            Event::Kkt { lam, reactivated, round } => Json::obj(vec![
+                ("lam", Json::Num(*lam)),
+                ("reactivated", Json::Num(*reactivated as f64)),
+                ("round", Json::Num(*round as f64)),
+            ]),
+            Event::WsRound { lam, round, ws_feats, gap } => Json::obj(vec![
+                ("lam", Json::Num(*lam)),
+                ("round", Json::Num(*round as f64)),
+                ("ws_feats", Json::Num(*ws_feats as f64)),
+                ("gap", Json::Num(*gap)),
+            ]),
+            Event::PathStart { n_lambdas, lam_max, threads, kernel } => Json::obj(vec![
+                ("n_lambdas", Json::Num(*n_lambdas as f64)),
+                ("lam_max", Json::Num(*lam_max)),
+                ("threads", Json::Num(*threads as f64)),
+                ("kernel", Json::Str((*kernel).to_string())),
+            ]),
+            Event::PathPoint { lam, epochs, gap, active_feats, nnz_coefs, converged, secs } => {
+                Json::obj(vec![
+                    ("lam", Json::Num(*lam)),
+                    ("epochs", Json::Num(*epochs as f64)),
+                    ("gap", Json::Num(*gap)),
+                    ("active_feats", Json::Num(*active_feats as f64)),
+                    ("nnz_coefs", Json::Num(*nnz_coefs as f64)),
+                    ("converged", Json::Bool(*converged)),
+                    ("secs", Json::Num(*secs)),
+                ])
+            }
+            Event::PathEnd { n_lambdas, total_epochs, secs } => Json::obj(vec![
+                ("n_lambdas", Json::Num(*n_lambdas as f64)),
+                ("total_epochs", Json::Num(*total_epochs as f64)),
+                ("secs", Json::Num(*secs)),
+            ]),
+            Event::Chunk { kind, lo, hi, secs } => Json::obj(vec![
+                ("kind", Json::Str((*kind).to_string())),
+                ("lo", Json::Num(*lo as f64)),
+                ("hi", Json::Num(*hi as f64)),
+                ("secs", Json::Num(*secs)),
+            ]),
+            Event::Request { endpoint, status, secs } => Json::obj(vec![
+                ("endpoint", Json::Str((*endpoint).to_string())),
+                ("status", Json::Num(*status as f64)),
+                ("secs", Json::Num(*secs)),
+            ]),
+            Event::Fit { key, kind, secs, epochs } => Json::obj(vec![
+                ("key", Json::Str(key.clone())),
+                ("kind", Json::Str((*kind).to_string())),
+                ("secs", Json::Num(*secs)),
+                ("epochs", Json::Num(*epochs as f64)),
+            ]),
+            Event::Predict { key, t, secs } => Json::obj(vec![
+                ("key", Json::Str(key.clone())),
+                ("t", Json::Num(*t as f64)),
+                ("secs", Json::Num(*secs)),
+            ]),
+            Event::Job { id, queue_secs, run_secs, ok } => Json::obj(vec![
+                ("id", Json::Num(*id as f64)),
+                ("queue_secs", Json::Num(*queue_secs)),
+                ("run_secs", Json::Num(*run_secs)),
+                ("ok", Json::Bool(*ok)),
+            ]),
+        };
+        if let Json::Obj(map) = &mut obj {
+            map.insert("type".to_string(), Json::Str(self.kind().to_string()));
+        }
+        obj
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_event_serializes_with_type_tag() {
+        let events = vec![
+            Event::GapPass {
+                lam: 0.5,
+                epoch: 10,
+                gap: 1e-3,
+                radius: 0.1,
+                active_groups: 4,
+                active_feats: 4,
+                screened: 2,
+                view_cols: 6,
+                dual_choice: "kept",
+                secs: 1e-4,
+            },
+            Event::SolveSpan {
+                lam: 0.5,
+                epochs: 100,
+                gap_passes: 11,
+                gap: 1e-9,
+                converged: true,
+                kkt_violations: 0,
+                active_feats: 4,
+                cd_secs: 0.1,
+                gap_secs: 0.02,
+                link_secs: 0.0,
+                total_secs: 0.13,
+                kernel: "scalar",
+            },
+            Event::Kkt { lam: 0.5, reactivated: 1, round: 1 },
+            Event::WsRound { lam: 0.5, round: 0, ws_feats: 20, gap: 0.3 },
+            Event::PathStart { n_lambdas: 10, lam_max: 2.0, threads: 1, kernel: "scalar" },
+            Event::PathPoint {
+                lam: 0.5,
+                epochs: 40,
+                gap: 1e-9,
+                active_feats: 4,
+                nnz_coefs: 4,
+                converged: true,
+                secs: 0.01,
+            },
+            Event::PathEnd { n_lambdas: 10, total_epochs: 400, secs: 0.1 },
+            Event::Chunk { kind: "chunk", lo: 0, hi: 5, secs: 0.05 },
+            Event::Request { endpoint: "fit", status: 202, secs: 1e-3 },
+            Event::Fit { key: "k".into(), kind: "cold", secs: 1.0, epochs: 100 },
+            Event::Predict { key: "k".into(), t: 9, secs: 1e-4 },
+            Event::Job { id: 3, queue_secs: 0.01, run_secs: 1.0, ok: true },
+        ];
+        for ev in &events {
+            let j = ev.to_json();
+            let tag = j.get("type").and_then(|t| t.as_str()).expect("type tag");
+            assert_eq!(tag, ev.kind());
+            // round-trips through the crate's own parser
+            let text = format!("{j}");
+            let back = Json::parse(&text).expect("event JSON parses");
+            assert_eq!(back.get("type").and_then(|t| t.as_str()).unwrap(), ev.kind());
+        }
+    }
+
+    #[test]
+    fn emit_without_sink_is_a_noop() {
+        // No unit test installs a global sink (the install/uninstall tests
+        // live in the dedicated integration binary rust/tests/obs_trace.rs,
+        // which owns the process-global), so emit here hits the null path.
+        emit(&Event::Kkt { lam: 1.0, reactivated: 0, round: 0 });
+    }
+}

@@ -1,0 +1,89 @@
+//! Trace sinks: JSONL file output (the CLI's `--trace-out`) and an
+//! in-memory collector for tests.
+
+use super::{Event, Sink};
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::sync::Mutex;
+
+/// Writes one JSON object per line (JSONL) through a buffered writer.
+/// Every line is flushed on write: traces exist to survive the run that
+/// produced them (a crashed solve with an empty trace file is useless),
+/// and the flush only costs anything when tracing is on.
+pub struct FileSink {
+    out: Mutex<BufWriter<File>>,
+}
+
+impl FileSink {
+    /// Create (truncate) the trace file.
+    pub fn create(path: &str) -> Result<FileSink, String> {
+        let f = File::create(path).map_err(|e| format!("cannot create trace file {path}: {e}"))?;
+        Ok(FileSink { out: Mutex::new(BufWriter::new(f)) })
+    }
+}
+
+impl Sink for FileSink {
+    fn record(&self, ev: &Event) {
+        let line = format!("{}\n", ev.to_json());
+        let mut out = self.out.lock().unwrap();
+        let _ = out.write_all(line.as_bytes());
+        let _ = out.flush();
+    }
+}
+
+/// Collects events in memory; tests keep a clone of the inner `Arc` so
+/// the data stays reachable after the global sink is uninstalled (the
+/// global deliberately leaks — see [`super::install`]).
+#[derive(Clone, Default)]
+pub struct CollectSink {
+    pub events: std::sync::Arc<Mutex<Vec<Event>>>,
+}
+
+impl CollectSink {
+    pub fn new() -> CollectSink {
+        CollectSink::default()
+    }
+
+    pub fn take(&self) -> Vec<Event> {
+        std::mem::take(&mut self.events.lock().unwrap())
+    }
+}
+
+impl Sink for CollectSink {
+    fn record(&self, ev: &Event) {
+        self.events.lock().unwrap().push(ev.clone());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn file_sink_writes_parseable_jsonl() {
+        let path = std::env::temp_dir()
+            .join(format!("gapsafe_trace_unit_{}.jsonl", std::process::id()));
+        let path_s = path.to_str().unwrap().to_string();
+        let sink = FileSink::create(&path_s).unwrap();
+        sink.record(&Event::Kkt { lam: 0.5, reactivated: 2, round: 1 });
+        sink.record(&Event::PathEnd { n_lambdas: 3, total_epochs: 30, secs: 0.1 });
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("type").and_then(|t| t.as_str()).unwrap(), "kkt");
+        assert_eq!(first.get("reactivated").and_then(|v| v.as_usize()).unwrap(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn collect_sink_accumulates() {
+        let sink = CollectSink::new();
+        sink.record(&Event::Kkt { lam: 1.0, reactivated: 0, round: 0 });
+        sink.record(&Event::Kkt { lam: 0.5, reactivated: 1, round: 1 });
+        let evs = sink.take();
+        assert_eq!(evs.len(), 2);
+        assert!(sink.take().is_empty());
+    }
+}

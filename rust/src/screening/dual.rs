@@ -116,6 +116,9 @@ pub struct DualPoint {
     /// tracker is reused across path points).
     lam_bits: u64,
     best: Option<BestDual>,
+    /// What the last [`DualPoint::select`] reported ("fresh" | "kept" |
+    /// "refined") — a tracing/diagnostics label, never read by the math.
+    last_choice: &'static str,
 }
 
 /// Interior probe points of the Refine line search (endpoints are free:
@@ -124,11 +127,19 @@ const REFINE_PROBES: [f64; 3] = [0.25, 0.5, 0.75];
 
 impl DualPoint {
     pub fn new(strategy: DualStrategy) -> Self {
-        DualPoint { strategy, lam_bits: f64::NAN.to_bits(), best: None }
+        DualPoint { strategy, lam_bits: f64::NAN.to_bits(), best: None, last_choice: "fresh" }
     }
 
     pub fn strategy(&self) -> DualStrategy {
         self.strategy
+    }
+
+    /// The last [`DualPoint::select`] decision: `"fresh"` (the rescaled
+    /// candidate won or the strategy is `Rescale`), `"kept"` (the stored
+    /// best point was reported) or `"refined"` (an interior convex
+    /// combination won).
+    pub fn last_choice(&self) -> &'static str {
+        self.last_choice
     }
 
     /// Drop the kept point. Must be called when the active set *grows*
@@ -155,6 +166,7 @@ impl DualPoint {
         corr_new: Mat,
         dual_new: f64,
     ) -> (Mat, Mat, f64) {
+        self.last_choice = "fresh";
         if self.strategy == DualStrategy::Rescale {
             // Bitwise-identical to the historical pass: hand the fresh
             // candidate straight through, remember nothing.
@@ -184,6 +196,7 @@ impl DualPoint {
                     });
                     (theta_new, corr_new, dual_new)
                 } else {
+                    self.last_choice = "kept";
                     (kept.theta.clone(), kept.corr.clone(), kept.dual)
                 }
             }
@@ -218,6 +231,7 @@ impl DualPoint {
                     return (theta_new, corr_new, dual_new);
                 }
                 if best_t == 0.0 {
+                    self.last_choice = "kept";
                     return (kept.theta.clone(), kept.corr.clone(), kept.dual);
                 }
                 // Interior winner: materialize theta(t) and the linearly
@@ -236,6 +250,7 @@ impl DualPoint {
                     theta: theta.clone(),
                     corr: corr.clone(),
                 });
+                self.last_choice = "refined";
                 (theta, corr, best_d)
             }
             DualStrategy::Rescale => unreachable!("handled above"),
@@ -305,6 +320,23 @@ mod tests {
         assert!(dp.has_kept());
         dp.invalidate();
         assert!(!dp.has_kept());
+    }
+
+    #[test]
+    fn last_choice_tracks_decisions() {
+        let prob = toy(7, 10, 12);
+        let mut dp = DualPoint::new(DualStrategy::BestKept);
+        assert_eq!(dp.last_choice(), "fresh");
+        let mk = |v: f64| (Mat::col_vec(&[v; 10]), Mat::col_vec(&[v; 12]));
+        let (t, c) = mk(0.1);
+        let _ = dp.select(&prob, 1.0, t, c, 3.0);
+        assert_eq!(dp.last_choice(), "fresh");
+        let (t, c) = mk(0.2);
+        let _ = dp.select(&prob, 1.0, t, c, 1.0);
+        assert_eq!(dp.last_choice(), "kept");
+        let (t, c) = mk(0.3);
+        let _ = dp.select(&prob, 1.0, t, c, 5.0);
+        assert_eq!(dp.last_choice(), "fresh");
     }
 
     #[test]

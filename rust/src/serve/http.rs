@@ -41,6 +41,8 @@ pub struct Request {
     pub method: String,
     /// Path with the query string stripped.
     pub path: String,
+    /// Raw query string (after `?`, empty when absent).
+    pub query: String,
     /// Lower-cased header names.
     pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
@@ -50,6 +52,14 @@ impl Request {
     pub fn header(&self, name: &str) -> Option<&str> {
         let name = name.to_ascii_lowercase();
         self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Value of a `k=v` query parameter (`k` alone yields an empty value).
+    pub fn query_param(&self, name: &str) -> Option<&str> {
+        self.query.split('&').find_map(|kv| {
+            let (k, v) = kv.split_once('=').unwrap_or((kv, ""));
+            (k == name).then_some(v)
+        })
     }
 
     /// Body as UTF-8 (endpoints are JSON).
@@ -155,7 +165,10 @@ pub fn read_request_limited(
     let mut parts = request_line.split_whitespace();
     let method = parts.next().ok_or_else(|| ReadError::bad("missing method"))?.to_string();
     let target = parts.next().ok_or_else(|| ReadError::bad("missing path"))?;
-    let path = target.split('?').next().unwrap_or(target).to_string();
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
     let mut headers = Vec::new();
     for line in lines {
         if line.is_empty() {
@@ -196,7 +209,7 @@ pub fn read_request_limited(
         }
     }
     body.truncate(content_length);
-    Ok(Request { method, path, headers, body })
+    Ok(Request { method, path, query, headers, body })
 }
 
 fn find_head_end(buf: &[u8]) -> Option<usize> {
@@ -308,6 +321,9 @@ mod tests {
         .unwrap();
         assert_eq!(req.method, "POST");
         assert_eq!(req.path, "/v1/fit");
+        assert_eq!(req.query, "x=1");
+        assert_eq!(req.query_param("x"), Some("1"));
+        assert_eq!(req.query_param("y"), None);
         assert_eq!(req.header("host"), Some("h"));
         assert_eq!(req.body, b"abcd");
     }
@@ -317,6 +333,7 @@ mod tests {
         let req = roundtrip("GET /healthz HTTP/1.1\r\n\r\n").unwrap();
         assert_eq!(req.method, "GET");
         assert_eq!(req.path, "/healthz");
+        assert!(req.query.is_empty());
         assert!(req.body.is_empty());
     }
 

@@ -16,6 +16,7 @@
 
 use super::registry::{FitKind, ModelKey, Registry};
 use super::Metrics;
+use crate::obs;
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::Ordering;
@@ -55,6 +56,27 @@ pub struct JobRecord {
     pub state: JobState,
     /// Set once the job is done.
     pub outcome: Option<JobOutcome>,
+    /// When the job entered the queue.
+    pub submitted: Instant,
+    /// When a worker picked it up (None while queued).
+    pub started: Option<Instant>,
+    /// When it reached a terminal state (None until done/failed).
+    pub finished: Option<Instant>,
+}
+
+impl JobRecord {
+    /// Submit → start delay (the queueing cost a client paid), once known.
+    pub fn queue_seconds(&self) -> Option<f64> {
+        self.started.map(|s| s.saturating_duration_since(self.submitted).as_secs_f64())
+    }
+
+    /// Start → finish wall time, once the job is terminal.
+    pub fn run_seconds(&self) -> Option<f64> {
+        match (self.started, self.finished) {
+            (Some(s), Some(f)) => Some(f.saturating_duration_since(s).as_secs_f64()),
+            _ => None,
+        }
+    }
 }
 
 /// What a completed fit reports back.
@@ -135,7 +157,15 @@ impl JobQueue {
         st.next_id += 1;
         st.jobs.insert(
             id,
-            JobRecord { id, key, state: JobState::Queued, outcome: None },
+            JobRecord {
+                id,
+                key,
+                state: JobState::Queued,
+                outcome: None,
+                submitted: Instant::now(),
+                started: None,
+                finished: None,
+            },
         );
         st.queue.push_back(id);
         self.inner.metrics.jobs_submitted.fetch_add(1, Ordering::Relaxed);
@@ -175,6 +205,20 @@ impl JobQueue {
         self.inner.state.lock().unwrap().queue.len()
     }
 
+    /// Jobs currently executing on a worker (the `jobs_running` gauge).
+    /// A scan over the (retention-bounded) job table — cheap enough for a
+    /// metrics poll.
+    pub fn running(&self) -> usize {
+        self.inner
+            .state
+            .lock()
+            .unwrap()
+            .jobs
+            .values()
+            .filter(|r| r.state == JobState::Running)
+            .count()
+    }
+
     /// Stop accepting work and join the workers (in-flight jobs finish).
     pub fn shutdown(&mut self) {
         {
@@ -205,6 +249,7 @@ fn worker_loop(inner: &Inner) {
                     // so the record is present; skip defensively if not.
                     if let Some(rec) = st.jobs.get_mut(&id) {
                         rec.state = JobState::Running;
+                        rec.started = Some(Instant::now());
                         break (id, rec.key.clone());
                     }
                     continue;
@@ -219,6 +264,8 @@ fn worker_loop(inner: &Inner) {
         let result = inner.registry.fit(&key);
         let mut st = inner.state.lock().unwrap();
         if let Some(rec) = st.jobs.get_mut(&id) {
+            rec.finished = Some(Instant::now());
+            let ok = result.is_ok();
             match result {
                 Ok((model, kind)) => {
                     rec.state = JobState::Done;
@@ -235,6 +282,13 @@ fn worker_loop(inner: &Inner) {
                     rec.state = JobState::Failed(e);
                     inner.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
                 }
+            }
+            let queue_secs = rec.queue_seconds().unwrap_or(0.0);
+            let run_secs = rec.run_seconds().unwrap_or(0.0);
+            inner.metrics.job_queue_wait.record(queue_secs);
+            inner.metrics.job_run.record(run_secs);
+            if obs::enabled() {
+                obs::emit(&obs::Event::Job { id, queue_secs, run_secs, ok });
             }
             st.mark_finished(id);
         }
@@ -263,6 +317,9 @@ mod tests {
         let id = q.submit(small_key(1.5));
         let rec = q.wait(id, Duration::from_secs(60)).expect("job exists");
         assert_eq!(rec.state, JobState::Done, "job did not finish: {rec:?}");
+        // queue-wait and run durations are stamped on the way through
+        assert!(rec.queue_seconds().is_some(), "started timestamp missing");
+        assert!(rec.run_seconds().is_some(), "finished timestamp missing");
         let out = rec.outcome.expect("outcome recorded");
         assert_eq!(out.n_lambdas, 4);
         assert!(out.converged);
@@ -293,7 +350,15 @@ mod tests {
         for id in 0..(MAX_FINISHED as u64 + 10) {
             st.jobs.insert(
                 id,
-                JobRecord { id, key: small_key(1.0), state: JobState::Done, outcome: None },
+                JobRecord {
+                    id,
+                    key: small_key(1.0),
+                    state: JobState::Done,
+                    outcome: None,
+                    submitted: Instant::now(),
+                    started: None,
+                    finished: None,
+                },
             );
             st.mark_finished(id);
         }

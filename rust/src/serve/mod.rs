@@ -38,6 +38,8 @@ pub mod http;
 pub mod jobs;
 pub mod registry;
 
+use crate::obs;
+use crate::obs::metrics::LogHistogram;
 use crate::screening::DualStrategy;
 use crate::solver::parallel::effective_threads;
 use crate::util::json::Json;
@@ -57,7 +59,10 @@ use std::time::{Duration, Instant};
 /// HTTP threads hostage.
 const WAIT_FIT_TIMEOUT: Duration = Duration::from_secs(60);
 
-/// Serving counters (all monotone; `/metrics` adds the gauges).
+/// Serving counters (all monotone; `/metrics` adds the gauges) plus
+/// lock-free latency histograms (see [`LogHistogram`]): recording is a
+/// handful of relaxed atomic adds, so it stays on even without a trace
+/// sink — quantiles must be there *before* anyone turns tracing on.
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub http_requests: AtomicU64,
@@ -74,6 +79,52 @@ pub struct Metrics {
     pub jobs_failed: AtomicU64,
     pub epochs_total: AtomicU64,
     pub epochs_saved: AtomicU64,
+    /// End-to-end router latency, all endpoints together.
+    pub lat_all: LogHistogram,
+    /// Router latency per endpoint family (the `/metrics` exposition
+    /// labels them `endpoint="fit"` etc.).
+    pub lat_fit: LogHistogram,
+    pub lat_predict: LogHistogram,
+    pub lat_jobs: LogHistogram,
+    pub lat_health: LogHistogram,
+    pub lat_metrics: LogHistogram,
+    pub lat_other: LogHistogram,
+    /// Wall time of registry fits actually solved (hits excluded).
+    pub fit_duration: LogHistogram,
+    /// Wall time of successful predict bodies.
+    pub predict_duration: LogHistogram,
+    /// Background jobs: submit → start delay, and start → finish run.
+    pub job_queue_wait: LogHistogram,
+    pub job_run: LogHistogram,
+}
+
+impl Metrics {
+    /// The per-endpoint latency histogram for a label from
+    /// [`endpoint_label`].
+    pub fn latency_for(&self, endpoint: &str) -> &LogHistogram {
+        match endpoint {
+            "fit" => &self.lat_fit,
+            "predict" => &self.lat_predict,
+            "jobs" => &self.lat_jobs,
+            "healthz" => &self.lat_health,
+            "metrics" => &self.lat_metrics,
+            _ => &self.lat_other,
+        }
+    }
+}
+
+/// Endpoint family of a request — the `endpoint` label on latency series
+/// and request trace events (unknown paths collapse into "other" so a URL
+/// scanner cannot mint unbounded label values).
+fn endpoint_label(req: &Request) -> &'static str {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => "healthz",
+        ("GET", "/metrics") => "metrics",
+        ("POST", "/v1/fit") => "fit",
+        ("POST", "/v1/predict") => "predict",
+        ("GET", p) if p.starts_with("/v1/jobs/") => "jobs",
+        _ => "other",
+    }
 }
 
 /// Server configuration (`gapsafe serve --port/--threads/--cache-mb`).
@@ -186,9 +237,10 @@ impl Server {
 /// socket).
 pub fn route(state: &ServerState, req: &Request) -> Response {
     state.metrics.http_requests.fetch_add(1, Ordering::Relaxed);
+    let t0 = Instant::now();
     let resp = match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => handle_healthz(state),
-        ("GET", "/metrics") => handle_metrics(state),
+        ("GET", "/metrics") => handle_metrics(state, req),
         ("POST", "/v1/fit") => handle_fit(state, req),
         ("POST", "/v1/predict") => handle_predict(state, req),
         ("GET", p) if p.starts_with("/v1/jobs/") => handle_job(state, p),
@@ -197,6 +249,13 @@ pub fn route(state: &ServerState, req: &Request) -> Response {
     };
     if resp.status >= 400 {
         state.metrics.http_errors.fetch_add(1, Ordering::Relaxed);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let endpoint = endpoint_label(req);
+    state.metrics.lat_all.record(secs);
+    state.metrics.latency_for(endpoint).record(secs);
+    if obs::enabled() {
+        obs::emit(&obs::Event::Request { endpoint, status: resp.status, secs });
     }
     resp
 }
@@ -278,6 +337,12 @@ fn job_response(rec: &JobRecord) -> Response {
     if let JobState::Failed(e) = &rec.state {
         pairs.push(("error".to_string(), Json::Str(e.clone())));
     }
+    if let Some(q) = rec.queue_seconds() {
+        pairs.push(("queue_seconds".to_string(), Json::Num(q)));
+    }
+    if let Some(r) = rec.run_seconds() {
+        pairs.push(("run_seconds".to_string(), Json::Num(r)));
+    }
     if let Some(out) = &rec.outcome {
         pairs.push(("fit".to_string(), Json::Str(out.kind.label().to_string())));
         pairs.push(("warm".to_string(), Json::Bool(out.kind == FitKind::Warm)));
@@ -318,6 +383,7 @@ fn handle_predict(state: &ServerState, req: &Request) -> Response {
     let Some(model) = model else {
         return Response::error(404, "model not fitted (POST /v1/fit first)");
     };
+    let t0 = Instant::now();
     let n_betas = model.path.betas.len();
     let t = match body.get("t") {
         None => n_betas.saturating_sub(1),
@@ -357,46 +423,151 @@ fn handle_predict(state: &ServerState, req: &Request) -> Response {
         }
         pairs.push(("beta".to_string(), Json::arr_f64(&b_flat)));
     }
+    let secs = t0.elapsed().as_secs_f64();
+    state.metrics.predict_duration.record(secs);
+    if obs::enabled() {
+        obs::emit(&obs::Event::Predict { key: model.key.canonical(), t, secs });
+    }
     Response::json(200, &Json::obj(pairs))
 }
 
-fn handle_metrics(state: &ServerState) -> Response {
+/// `GET /metrics` content negotiation: JSON by default, Prometheus text
+/// exposition when the client asks via `?format=prometheus` or an
+/// `Accept` header naming `text/plain` / `openmetrics`.
+fn wants_prometheus(req: &Request) -> bool {
+    if req.query_param("format") == Some("prometheus") {
+        return true;
+    }
+    req.header("accept")
+        .map(|a| a.contains("text/plain") || a.contains("openmetrics"))
+        .unwrap_or(false)
+}
+
+fn handle_metrics(state: &ServerState, req: &Request) -> Response {
+    if wants_prometheus(req) {
+        return Response {
+            status: 200,
+            content_type: "text/plain; version=0.0.4; charset=utf-8",
+            body: render_prometheus(state),
+        };
+    }
     let m = &state.metrics;
     let reg = state.registry.stats();
     let load = |c: &AtomicU64| Json::Num(c.load(Ordering::Relaxed) as f64);
     let hits = m.cache_hits.load(Ordering::Relaxed) as f64;
     let misses = m.cache_misses.load(Ordering::Relaxed) as f64;
     let hit_rate = if hits + misses > 0.0 { hits / (hits + misses) } else { 0.0 };
-    Response::json(
-        200,
-        &Json::obj([
-            ("uptime_seconds", Json::Num(state.started.elapsed().as_secs_f64())),
-            (
-                "kernel_backend",
-                Json::Str(crate::linalg::kernels::active_kind().label().to_string()),
-            ),
-            ("http_requests", load(&m.http_requests)),
-            ("http_errors", load(&m.http_errors)),
-            ("fit_requests", load(&m.fit_requests)),
-            ("predict_requests", load(&m.predict_requests)),
-            ("cache_hits", load(&m.cache_hits)),
-            ("cache_misses", load(&m.cache_misses)),
-            ("cache_hit_rate", Json::Num(hit_rate)),
-            ("warm_hits", load(&m.warm_hits)),
-            ("cold_fits", load(&m.cold_fits)),
-            ("evictions", load(&m.evictions)),
-            ("jobs_submitted", load(&m.jobs_submitted)),
-            ("jobs_completed", load(&m.jobs_completed)),
-            ("jobs_failed", load(&m.jobs_failed)),
-            ("queue_depth", Json::Num(state.jobs.depth() as f64)),
-            ("epochs_total", load(&m.epochs_total)),
-            ("epochs_saved", load(&m.epochs_saved)),
-            ("registry_models", Json::Num(reg.models as f64)),
-            ("registry_pending", Json::Num(reg.pending as f64)),
-            ("registry_bytes", Json::Num(reg.bytes as f64)),
-            ("registry_cap_bytes", Json::Num(reg.cap_bytes as f64)),
-        ]),
-    )
+    let mut pairs: Vec<(String, Json)> = vec![
+        ("uptime_seconds".into(), Json::Num(state.started.elapsed().as_secs_f64())),
+        (
+            "kernel_backend".into(),
+            Json::Str(crate::linalg::kernels::active_kind().label().to_string()),
+        ),
+        ("http_requests".into(), load(&m.http_requests)),
+        ("http_errors".into(), load(&m.http_errors)),
+        ("fit_requests".into(), load(&m.fit_requests)),
+        ("predict_requests".into(), load(&m.predict_requests)),
+        ("cache_hits".into(), load(&m.cache_hits)),
+        ("cache_misses".into(), load(&m.cache_misses)),
+        ("cache_hit_rate".into(), Json::Num(hit_rate)),
+        ("warm_hits".into(), load(&m.warm_hits)),
+        ("cold_fits".into(), load(&m.cold_fits)),
+        ("evictions".into(), load(&m.evictions)),
+        ("jobs_submitted".into(), load(&m.jobs_submitted)),
+        ("jobs_completed".into(), load(&m.jobs_completed)),
+        ("jobs_failed".into(), load(&m.jobs_failed)),
+        ("queue_depth".into(), Json::Num(state.jobs.depth() as f64)),
+        ("jobs_running".into(), Json::Num(state.jobs.running() as f64)),
+        ("epochs_total".into(), load(&m.epochs_total)),
+        ("epochs_saved".into(), load(&m.epochs_saved)),
+        ("registry_models".into(), Json::Num(reg.models as f64)),
+        ("registry_pending".into(), Json::Num(reg.pending as f64)),
+        ("registry_bytes".into(), Json::Num(reg.bytes as f64)),
+        ("registry_cap_bytes".into(), Json::Num(reg.cap_bytes as f64)),
+    ];
+    // Latency quantiles: derived from the same histograms the Prometheus
+    // view exposes raw, so `p50 <= p99 <= p999` holds structurally.
+    for (prefix, h) in [
+        ("request_seconds", &m.lat_all),
+        ("fit_seconds", &m.fit_duration),
+        ("predict_seconds", &m.predict_duration),
+        ("job_queue_seconds", &m.job_queue_wait),
+        ("job_run_seconds", &m.job_run),
+    ] {
+        pairs.push((format!("{prefix}_count"), Json::Num(h.count() as f64)));
+        pairs.push((format!("{prefix}_p50"), Json::Num(h.quantile(0.50))));
+        pairs.push((format!("{prefix}_p99"), Json::Num(h.quantile(0.99))));
+        pairs.push((format!("{prefix}_p999"), Json::Num(h.quantile(0.999))));
+    }
+    Response::json(200, &Json::obj(pairs))
+}
+
+/// Render every counter, gauge and histogram in Prometheus text
+/// exposition format (version 0.0.4): `# TYPE` per metric name, label
+/// values only from fixed internal sets (endpoint families, backend
+/// labels), histograms as cumulative `le` ladders.
+fn render_prometheus(state: &ServerState) -> String {
+    use std::fmt::Write;
+    let m = &state.metrics;
+    let reg = state.registry.stats();
+    let mut out = String::with_capacity(8 * 1024);
+    let counter = |out: &mut String, name: &str, v: u64| {
+        let _ = writeln!(out, "# TYPE {name} counter\n{name} {v}");
+    };
+    let c = |a: &AtomicU64| a.load(Ordering::Relaxed);
+    counter(&mut out, "gapsafe_http_requests_total", c(&m.http_requests));
+    counter(&mut out, "gapsafe_http_errors_total", c(&m.http_errors));
+    counter(&mut out, "gapsafe_fit_requests_total", c(&m.fit_requests));
+    counter(&mut out, "gapsafe_predict_requests_total", c(&m.predict_requests));
+    counter(&mut out, "gapsafe_cache_hits_total", c(&m.cache_hits));
+    counter(&mut out, "gapsafe_cache_misses_total", c(&m.cache_misses));
+    counter(&mut out, "gapsafe_warm_hits_total", c(&m.warm_hits));
+    counter(&mut out, "gapsafe_cold_fits_total", c(&m.cold_fits));
+    counter(&mut out, "gapsafe_evictions_total", c(&m.evictions));
+    counter(&mut out, "gapsafe_jobs_submitted_total", c(&m.jobs_submitted));
+    counter(&mut out, "gapsafe_jobs_completed_total", c(&m.jobs_completed));
+    counter(&mut out, "gapsafe_jobs_failed_total", c(&m.jobs_failed));
+    counter(&mut out, "gapsafe_solver_epochs_total", c(&m.epochs_total));
+    counter(&mut out, "gapsafe_solver_epochs_saved_total", c(&m.epochs_saved));
+    let gauge = |out: &mut String, name: &str, v: f64| {
+        let _ = writeln!(out, "# TYPE {name} gauge\n{name} {v}");
+    };
+    gauge(&mut out, "gapsafe_uptime_seconds", state.started.elapsed().as_secs_f64());
+    gauge(&mut out, "gapsafe_jobs_queued", state.jobs.depth() as f64);
+    gauge(&mut out, "gapsafe_jobs_running", state.jobs.running() as f64);
+    gauge(&mut out, "gapsafe_registry_models", reg.models as f64);
+    gauge(&mut out, "gapsafe_registry_pending", reg.pending as f64);
+    gauge(&mut out, "gapsafe_registry_bytes", reg.bytes as f64);
+    gauge(&mut out, "gapsafe_registry_cap_bytes", reg.cap_bytes as f64);
+    let _ = writeln!(
+        out,
+        "# TYPE gapsafe_kernel_backend gauge\ngapsafe_kernel_backend{{backend=\"{}\"}} 1",
+        crate::linalg::kernels::active_kind().label()
+    );
+    // Per-endpoint request latency: one metric name, endpoint label.
+    for (i, (label, h)) in [
+        ("fit", &m.lat_fit),
+        ("predict", &m.lat_predict),
+        ("jobs", &m.lat_jobs),
+        ("healthz", &m.lat_health),
+        ("metrics", &m.lat_metrics),
+        ("other", &m.lat_other),
+    ]
+    .iter()
+    .enumerate()
+    {
+        h.render_prometheus(
+            &mut out,
+            "gapsafe_request_duration_seconds",
+            &format!("endpoint=\"{label}\""),
+            i == 0,
+        );
+    }
+    m.fit_duration.render_prometheus(&mut out, "gapsafe_fit_duration_seconds", "", true);
+    m.predict_duration.render_prometheus(&mut out, "gapsafe_predict_duration_seconds", "", true);
+    m.job_queue_wait.render_prometheus(&mut out, "gapsafe_job_queue_seconds", "", true);
+    m.job_run.render_prometheus(&mut out, "gapsafe_job_run_seconds", "", true);
+    out
 }
 
 #[cfg(test)]
@@ -414,6 +585,7 @@ mod tests {
         Request {
             method: "POST".to_string(),
             path: path.to_string(),
+            query: String::new(),
             headers: Vec::new(),
             body: body.as_bytes().to_vec(),
         }
@@ -423,6 +595,7 @@ mod tests {
         Request {
             method: "GET".to_string(),
             path: path.to_string(),
+            query: String::new(),
             headers: Vec::new(),
             body: Vec::new(),
         }
@@ -447,11 +620,48 @@ mod tests {
         let del = Request {
             method: "DELETE".to_string(),
             path: "/healthz".to_string(),
+            query: String::new(),
             headers: Vec::new(),
             body: Vec::new(),
         };
         assert_eq!(route(&st, &del).status, 405);
         assert!(st.metrics.http_errors.load(Ordering::Relaxed) >= 2);
+    }
+
+    #[test]
+    fn metrics_negotiates_prometheus_exposition() {
+        let st = state();
+        // warm the histograms with a couple of routed requests
+        assert_eq!(route(&st, &get("/healthz")).status, 200);
+        assert_eq!(route(&st, &get("/metrics")).status, 200);
+        // query-string negotiation
+        let mut prom = get("/metrics");
+        prom.query = "format=prometheus".to_string();
+        let resp = route(&st, &prom);
+        assert_eq!(resp.status, 200);
+        assert!(resp.content_type.starts_with("text/plain"), "{}", resp.content_type);
+        assert!(resp.body.contains("# TYPE gapsafe_http_requests_total counter"));
+        assert!(resp.body.contains("# TYPE gapsafe_request_duration_seconds histogram"));
+        assert!(resp
+            .body
+            .contains("gapsafe_request_duration_seconds_bucket{endpoint=\"healthz\",le=\"+Inf\"}"));
+        assert!(resp.body.contains("gapsafe_jobs_running "));
+        // the TYPE header for the labeled histogram appears exactly once
+        let types = resp
+            .body
+            .matches("# TYPE gapsafe_request_duration_seconds histogram")
+            .count();
+        assert_eq!(types, 1);
+        // Accept-header negotiation
+        let mut acc = get("/metrics");
+        acc.headers.push(("accept".to_string(), "text/plain".to_string()));
+        assert!(route(&st, &acc).body.starts_with("# TYPE "));
+        // default stays JSON, now with structurally ordered quantiles
+        let v = Json::parse(&route(&st, &get("/metrics")).body).unwrap();
+        let q = |k: &str| v.get(k).and_then(Json::as_f64).unwrap();
+        assert!(q("request_seconds_p50") <= q("request_seconds_p99"));
+        assert!(q("request_seconds_p99") <= q("request_seconds_p999"));
+        assert!(v.get("jobs_running").is_some());
     }
 
     #[test]

@@ -352,6 +352,7 @@ impl Registry {
     /// concurrent waiter of the same key.
     pub fn fit(&self, key: &ModelKey) -> Result<(Arc<FittedModel>, FitKind), String> {
         let canon = key.canonical();
+        let sw = crate::obs::enabled().then(Stopwatch::start);
         let seed: Option<Arc<FittedModel>>;
         {
             let mut st = self.state.lock().unwrap();
@@ -362,7 +363,16 @@ impl Registry {
                     Some(Entry::Done(slot)) => {
                         slot.last_used = tick;
                         self.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
-                        return Ok((slot.model.clone(), FitKind::Hit));
+                        let model = slot.model.clone();
+                        if let Some(sw) = &sw {
+                            crate::obs::emit(&crate::obs::Event::Fit {
+                                key: canon.clone(),
+                                kind: FitKind::Hit.label(),
+                                secs: sw.secs(),
+                                epochs: model.total_epochs,
+                            });
+                        }
+                        return Ok((model, FitKind::Hit));
                     }
                     Some(Entry::Pending) => {
                         st = self.cv.wait(st).unwrap();
@@ -401,6 +411,15 @@ impl Registry {
                     FitKind::Warm => self.metrics.warm_hits.fetch_add(1, Ordering::Relaxed),
                     _ => self.metrics.cold_fits.fetch_add(1, Ordering::Relaxed),
                 };
+                self.metrics.fit_duration.record(model.fit_seconds);
+                if crate::obs::enabled() {
+                    crate::obs::emit(&crate::obs::Event::Fit {
+                        key: canon.clone(),
+                        kind: kind.label(),
+                        secs: model.fit_seconds,
+                        epochs: model.total_epochs,
+                    });
+                }
                 Ok((model, kind))
             }
             Err(e) => {

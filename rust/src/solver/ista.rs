@@ -12,7 +12,8 @@ use crate::problem::Problem;
 use crate::screening::dual::DualPoint;
 use crate::screening::ScreeningRule;
 
-use super::{SolveOptions, SolveResult};
+use super::{ScreenEvent, SolveOptions, SolveResult};
+use crate::obs;
 
 /// Global Lipschitz constant of grad F: scale * ||X||_2^2 via power iteration
 /// over all (active) columns.
@@ -53,12 +54,17 @@ pub fn solve_fista(
     // best dual objective per lambda matters more here than under CD.
     let mut dual_pt = DualPoint::new(opts.dual);
 
+    // Tracing (obs): captured once; timing never feeds the math.
+    let tracing = obs::enabled();
+
     for k in 0..opts.max_epochs {
         if k % opts.screen_every == 0 {
+            let t_pass = tracing.then(std::time::Instant::now);
             let z = prob.predict(&beta);
             let res = prob.gap_pass_dual(&beta, &z, lam, &active, None, &mut dual_pt);
             gap_passes += 1;
             gap_trace.push(res.gap);
+            let active_before = active.n_active_feats();
             let stop = res.gap <= opts.eps;
             if !stop {
                 rule.on_gap_pass(prob, lam, &res, &mut active);
@@ -71,7 +77,22 @@ pub fn solve_fista(
                     }
                 }
             }
-            trace.push((epochs, active.n_active_groups(), active.n_active_feats()));
+            let active_after = active.n_active_feats();
+            trace.push(ScreenEvent { epoch: epochs, active_before, active_after });
+            if let Some(t0) = t_pass {
+                obs::emit(&obs::Event::GapPass {
+                    lam,
+                    epoch: epochs,
+                    gap: res.gap,
+                    radius: res.radius,
+                    active_groups: active.n_active_groups(),
+                    active_feats: active_after,
+                    screened: active_before - active_after,
+                    view_cols: p,
+                    dual_choice: dual_pt.last_choice(),
+                    secs: t0.elapsed().as_secs_f64(),
+                });
+            }
             last = Some(res);
             if stop {
                 converged = true;

@@ -12,10 +12,12 @@ use crate::datafit::{DataFit, FitKind};
 use crate::linalg::compact::CompactDesign;
 use crate::linalg::sparse::Design;
 use crate::linalg::Mat;
+use crate::obs;
 use crate::penalty::{gather_block, scatter_block, ActiveSet};
 use crate::problem::{GapResult, Problem};
 use crate::screening::dual::{DualPoint, DualStrategy};
 use crate::screening::{PrevSolution, ScreeningRule};
+use std::time::Instant;
 
 /// Inner-solver options (Alg. 2 inputs).
 #[derive(Debug, Clone)]
@@ -62,6 +64,20 @@ impl Default for SolveOptions {
 /// column copy.
 const COMPACT_REPACK_FRACTION: f64 = 0.75;
 
+/// One screening event of a solve: the active-feature count around one
+/// gap pass (`active_before - active_after` is what that pass killed).
+/// This is the payload tracing serializes and the figures' "fraction of
+/// active variables" protocols consume.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScreenEvent {
+    /// CD epochs completed when the pass ran.
+    pub epoch: usize,
+    /// Active features before the pass screened.
+    pub active_before: usize,
+    /// Active features after (the safe superset the next epoch iterates).
+    pub active_after: usize,
+}
+
 /// Outcome of one fixed-lambda solve.
 #[derive(Debug, Clone)]
 pub struct SolveResult {
@@ -78,8 +94,8 @@ pub struct SolveResult {
     pub converged: bool,
     /// Active set at exit (safe superset of the support).
     pub active: ActiveSet,
-    /// (epoch, active groups, active features) at each gap pass.
-    pub screen_trace: Vec<(usize, usize, usize)>,
+    /// One [`ScreenEvent`] per gap pass.
+    pub screen_trace: Vec<ScreenEvent>,
     /// Reported duality gap at each gap pass (aligned with
     /// `screen_trace` plus any fallback pass). For the CD solver with
     /// `dual = best` / `refine` this sequence is non-increasing within a
@@ -115,7 +131,15 @@ pub fn solve_fixed_lambda_with(
     };
     rule.begin_lambda(prob, lam, lam_max, prev, &mut active);
     zero_screened(prob, &mut beta, &active);
-    let mut state = CdState::new(prob, &beta, &active, opts.compact);
+    // Tracing (obs): captured once per solve. When false, no clock is
+    // read and no event is built anywhere below; when true, timing values
+    // never feed solver arithmetic — tracing is bitwise-transparent
+    // (pinned by rust/tests/obs_trace.rs).
+    let tracing = obs::enabled();
+    let t_solve = tracing.then(Instant::now);
+    let mut t_cd = 0.0f64;
+    let mut t_gap = 0.0f64;
+    let mut state = CdState::new(prob, &beta, &active, opts.compact, tracing);
     // Dual-point tracker (screening::dual): keeps the best dual objective
     // seen at this lambda so the reported gap / Gap Safe radius cannot
     // oscillate upward between passes (strategy `rescale` = historical
@@ -134,9 +158,11 @@ pub fn solve_fixed_lambda_with(
     'outer: loop {
         for k in 0..opts.max_epochs {
             if k % opts.screen_every == 0 {
+                let t_pass = tracing.then(Instant::now);
                 let z = state.z(prob);
                 let res = prob.gap_pass_dual(&beta, &z, lam, &active, state.view(), &mut dual_pt);
                 gap_passes += 1;
+                let active_before = active.n_active_feats();
                 // Screen before the stopping test (Alg. 2 performs both at
                 // the same event; screening first makes the recorded active
                 // set meaningful even when the gap already certifies
@@ -148,8 +174,25 @@ pub fn solve_fixed_lambda_with(
                 // Repack the working view when this screening event killed
                 // a large enough fraction of the remaining columns.
                 state.maybe_repack(prob, &active);
-                screen_trace.push((epochs, active.n_active_groups(), active.n_active_feats()));
+                let active_after = active.n_active_feats();
+                screen_trace.push(ScreenEvent { epoch: epochs, active_before, active_after });
                 gap_trace.push(res.gap);
+                if let Some(t0) = t_pass {
+                    let secs = t0.elapsed().as_secs_f64();
+                    t_gap += secs;
+                    obs::emit(&obs::Event::GapPass {
+                        lam,
+                        epoch: epochs,
+                        gap: res.gap,
+                        radius: res.radius,
+                        active_groups: active.n_active_groups(),
+                        active_feats: active_after,
+                        screened: active_before - active_after,
+                        view_cols: state.view_width,
+                        dual_choice: dual_pt.last_choice(),
+                        secs,
+                    });
+                }
                 let stop = res.gap <= opts.eps;
                 last = Some(res);
                 if stop {
@@ -157,15 +200,24 @@ pub fn solve_fixed_lambda_with(
                     break;
                 }
             }
-            state.cd_epoch(prob, &mut beta, &active, lam);
+            if let Some(t0) = tracing.then(Instant::now) {
+                state.cd_epoch(prob, &mut beta, &active, lam);
+                t_cd += t0.elapsed().as_secs_f64();
+            } else {
+                state.cd_epoch(prob, &mut beta, &active, lam);
+            }
             epochs += 1;
         }
         if last.is_none() {
+            let t_pass = tracing.then(Instant::now);
             let z = state.z(prob);
             let res = prob.gap_pass_dual(&beta, &z, lam, &active, state.view(), &mut dual_pt);
             gap_trace.push(res.gap);
             last = Some(res);
             gap_passes += 1;
+            if let Some(t0) = t_pass {
+                t_gap += t0.elapsed().as_secs_f64();
+            }
         }
         // KKT post-convergence check for un-safe rules (Sec. 3.6): any
         // inactive group whose dual-norm statistic exceeds 1 was wrongly
@@ -175,6 +227,7 @@ pub fn solve_fixed_lambda_with(
             let full = ActiveSet::full(prob.pen.groups());
             let stats = prob.stats_for_center(theta, &full);
             let mut violated = false;
+            let mut reactivated = 0usize;
             for g in 0..prob.n_groups() {
                 if !active.group[g] && stats.group_dual[g] > 1.0 + 1e-12 {
                     active.group[g] = true;
@@ -183,9 +236,13 @@ pub fn solve_fixed_lambda_with(
                     }
                     violated = true;
                     kkt_violations += 1;
+                    reactivated += 1;
                 }
             }
             if violated {
+                if tracing {
+                    obs::emit(&obs::Event::Kkt { lam, reactivated, round: kkt_round + 1 });
+                }
                 // Reactivation breaks the view's shrink-only contract:
                 // drop it and let the next screening event repack. The
                 // kept dual point's correlations are stale for the
@@ -201,6 +258,22 @@ pub fn solve_fixed_lambda_with(
     }
 
     let res = last.expect("at least one gap pass");
+    if let Some(t0) = t_solve {
+        obs::emit(&obs::Event::SolveSpan {
+            lam,
+            epochs,
+            gap_passes,
+            gap: res.gap,
+            converged,
+            kkt_violations,
+            active_feats: active.n_active_feats(),
+            cd_secs: t_cd,
+            gap_secs: t_gap,
+            link_secs: state.t_link,
+            total_secs: t0.elapsed().as_secs_f64(),
+            kernel: crate::linalg::kernels::active_kind().label(),
+        });
+    }
     SolveResult {
         z: state.z(prob),
         beta,
@@ -293,10 +366,21 @@ struct CdState {
     blk0: Vec<f64>,
     /// Dense scratch w = X_g delta used by the majorization check.
     step_w: Vec<f64>,
+    /// Tracing enabled for this solve (captured once; see [`crate::obs`]).
+    timing: bool,
+    /// Accumulated wall time inside link refreshes (timing only; never
+    /// read by solver arithmetic).
+    t_link: f64,
 }
 
 impl CdState {
-    fn new(prob: &Problem, beta: &Mat, active: &ActiveSet, compact_enabled: bool) -> Self {
+    fn new(
+        prob: &Problem,
+        beta: &Mat,
+        active: &ActiveSet,
+        compact_enabled: bool,
+        timing: bool,
+    ) -> Self {
         let kind = prob.fit.kind();
         let (n, q) = (prob.n(), prob.q());
         let mut st = CdState {
@@ -319,6 +403,8 @@ impl CdState {
             },
             blk0: Vec::new(),
             step_w: if kind == FitKind::Poisson { vec![0.0; n] } else { Vec::new() },
+            timing,
+            t_link: 0.0,
         };
         st.resync(prob, beta);
         // Sequential / static rules may have screened in begin_lambda
@@ -529,6 +615,7 @@ impl CdState {
             if changed {
                 scatter_block(beta, feats, &self.blk);
                 if !matches!(self.kind, FitKind::Quadratic) {
+                    let t0 = self.timing.then(Instant::now);
                     if dense_touch {
                         for &r in &self.rows_buf {
                             self.row_mark[r] = false;
@@ -543,6 +630,9 @@ impl CdState {
                         for &r in &self.rows_buf {
                             self.row_mark[r] = false;
                         }
+                    }
+                    if let Some(t0) = t0 {
+                        self.t_link += t0.elapsed().as_secs_f64();
                     }
                 }
             }
@@ -769,7 +859,8 @@ mod tests {
         assert!(res.converged);
         // by the end, active set should be well below p
         let last = res.screen_trace.last().unwrap();
-        assert!(last.2 < 60, "no screening at convergence: {last:?}");
+        assert!(last.active_after < 60, "no screening at convergence: {last:?}");
+        assert!(last.active_after <= last.active_before);
     }
 
     #[test]

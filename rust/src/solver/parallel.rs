@@ -32,6 +32,7 @@
 
 use super::path::{lambda_grid, run_grid_segment, scaled_eps, PathConfig, PathResult};
 use super::{solve_fixed_lambda_with, SolveOptions};
+use crate::obs;
 use crate::problem::Problem;
 use crate::screening::PrevSolution;
 use crate::util::Stopwatch;
@@ -205,11 +206,21 @@ pub fn solve_path_parallel(prob: &Problem, cfg: &PathConfig, threads: usize) -> 
     };
     let n_chunks = threads.min(lambdas.len());
     let bounds = weighted_chunk_bounds(lambdas.len(), n_chunks);
+    let tracing = obs::enabled();
+    if tracing {
+        obs::emit(&obs::Event::PathStart {
+            n_lambdas: lambdas.len(),
+            lam_max,
+            threads: n_chunks,
+            kernel: crate::linalg::kernels::active_kind().label(),
+        });
+    }
 
     // Coarse pre-pass: seed every chunk head (chunk 0 starts cold at
     // lambda_max, exactly like the serial path).
     let mut seeds: Vec<Option<PrevSolution>> = vec![None; bounds.len()];
     {
+        let sw_pre = tracing.then(Stopwatch::start);
         let coarse_opts = SolveOptions { eps: eps * COARSE_RELAX, ..opts.clone() };
         let mut rule = cfg.rule.build();
         let mut prev: Option<PrevSolution> = None;
@@ -238,14 +249,23 @@ pub fn solve_path_parallel(prob: &Problem, cfg: &PathConfig, threads: usize) -> 
             seeds[c] = Some(sol.clone());
             prev = Some(sol);
         }
+        if let Some(sw) = sw_pre {
+            obs::emit(&obs::Event::Chunk {
+                kind: "pre-pass",
+                lo: 0,
+                hi: lambdas.len(),
+                secs: sw.secs(),
+            });
+        }
     }
 
     // Fan the chunks out; results come back in grid order.
     let jobs: Vec<usize> = (0..bounds.len()).collect();
     let segments = parallel_map(n_chunks, jobs, |_, c| {
         let (lo, hi) = bounds[c];
+        let sw_chunk = tracing.then(Stopwatch::start);
         let mut rule = cfg.rule.build();
-        run_grid_segment(
+        let seg = run_grid_segment(
             prob,
             &lambdas[lo..hi],
             lam_max,
@@ -253,7 +273,11 @@ pub fn solve_path_parallel(prob: &Problem, cfg: &PathConfig, threads: usize) -> 
             &opts,
             rule.as_mut(),
             seeds[c].clone(),
-        )
+        );
+        if let Some(sw) = sw_chunk {
+            obs::emit(&obs::Event::Chunk { kind: "chunk", lo, hi, secs: sw.secs() });
+        }
+        seg
     });
 
     let mut points = Vec::with_capacity(lambdas.len());
@@ -262,7 +286,15 @@ pub fn solve_path_parallel(prob: &Problem, cfg: &PathConfig, threads: usize) -> 
         points.extend(pts);
         betas.extend(bs);
     }
-    PathResult { lambdas, points, betas, total_seconds: sw_total.secs(), lam_max }
+    let total_seconds = sw_total.secs();
+    if tracing {
+        obs::emit(&obs::Event::PathEnd {
+            n_lambdas: points.len(),
+            total_epochs: points.iter().map(|p| p.epochs).sum(),
+            secs: total_seconds,
+        });
+    }
+    PathResult { lambdas, points, betas, total_seconds, lam_max }
 }
 
 #[cfg(test)]

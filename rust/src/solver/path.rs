@@ -9,7 +9,7 @@
 
 use super::{solve_fixed_lambda_with, SolveOptions, SolveResult};
 use crate::linalg::Mat;
-
+use crate::obs;
 use crate::problem::Problem;
 use crate::screening::{DualStrategy, PrevSolution, Rule, StrongRule};
 use crate::util::Stopwatch;
@@ -261,16 +261,27 @@ pub fn solve_path_on_grid(prob: &Problem, cfg: &PathConfig, lambdas: &[f64]) -> 
         dual: cfg.dual,
     };
     let mut rule = cfg.rule.build();
+    let tracing = obs::enabled();
+    if tracing {
+        obs::emit(&obs::Event::PathStart {
+            n_lambdas: lambdas.len(),
+            lam_max,
+            threads: 1,
+            kernel: crate::linalg::kernels::active_kind().label(),
+        });
+    }
     let sw_total = Stopwatch::start();
     let (points, betas, _) =
         run_grid_segment(prob, lambdas, lam_max, cfg, &opts, rule.as_mut(), None);
-    PathResult {
-        lambdas: lambdas.to_vec(),
-        points,
-        betas,
-        total_seconds: sw_total.secs(),
-        lam_max,
+    let total_seconds = sw_total.secs();
+    if tracing {
+        obs::emit(&obs::Event::PathEnd {
+            n_lambdas: points.len(),
+            total_epochs: points.iter().map(|p| p.epochs).sum(),
+            secs: total_seconds,
+        });
     }
+    PathResult { lambdas: lambdas.to_vec(), points, betas, total_seconds, lam_max }
 }
 
 /// One contiguous run of lambdas with sequential warm starts — the body of
@@ -340,7 +351,19 @@ pub(crate) fn run_grid_segment(
             opts,
         );
         let secs = sw.secs();
-        points.push(point_from_result(lam, &res, res.epochs, secs));
+        let point = point_from_result(lam, &res, res.epochs, secs);
+        if obs::enabled() {
+            obs::emit(&obs::Event::PathPoint {
+                lam,
+                epochs: point.epochs,
+                gap: point.gap,
+                active_feats: point.n_active_feats,
+                nnz_coefs: point.nnz_coefs,
+                converged: point.converged,
+                secs,
+            });
+        }
+        points.push(point);
         let (pv, beta) = prev_from_result(prob, lam, res);
         prev = Some(pv);
         betas.push(beta);

@@ -12,6 +12,7 @@ use crate::problem::Problem;
 use crate::screening::NoScreening;
 
 use super::{solve_fixed_lambda_with, SolveOptions, SolveResult};
+use crate::obs;
 
 /// Working-set options.
 #[derive(Debug, Clone)]
@@ -106,6 +107,14 @@ pub fn solve_working_set(
         let mut ws = ActiveSet::full(groups);
         for &g in order.iter().skip(ws_size) {
             ws.kill_group(groups, g);
+        }
+        if obs::enabled() {
+            obs::emit(&obs::Event::WsRound {
+                lam,
+                round: rounds,
+                ws_feats: ws.n_active_feats(),
+                gap: gap.gap,
+            });
         }
         // Solve the restricted subproblem to the final tolerance.
         let res = solve_fixed_lambda_with(

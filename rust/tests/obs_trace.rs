@@ -1,0 +1,83 @@
+//! The observability transparency contract, end to end: installing a
+//! trace sink must never change an output bit, and the JSONL it writes
+//! must round-trip through the crate's own JSON layer and the
+//! `gapsafe trace` analyzers.
+//!
+//! Everything lives in ONE test function: the sink registry is a
+//! process-wide global (`obs::install` / `obs::uninstall`), and the test
+//! harness runs `#[test]` fns of one binary concurrently — two tests
+//! toggling the global sink would race each other's solves.
+
+use gapsafe::data::synth;
+use gapsafe::obs;
+use gapsafe::obs::trace::FileSink;
+use gapsafe::solver::path::{solve_path, PathConfig};
+use gapsafe::{build_problem, Task};
+
+#[test]
+fn tracing_is_bitwise_transparent_and_jsonl_round_trips() {
+    let ds = synth::leukemia_like_scaled(24, 200, 7, false);
+    let prob = build_problem(ds, Task::Lasso).unwrap();
+    let cfg = PathConfig { n_lambdas: 8, delta: 2.0, eps: 1e-6, ..Default::default() };
+
+    // Baseline: no sink installed (the default process state, but be
+    // explicit so the test owns the global).
+    obs::uninstall();
+    let base = solve_path(&prob, &cfg);
+
+    let path = std::env::temp_dir().join(format!("gapsafe_obs_trace_{}.jsonl", std::process::id()));
+    let path_s = path.to_str().unwrap().to_string();
+    obs::install(Box::new(FileSink::create(&path_s).unwrap()));
+    let traced = solve_path(&prob, &cfg);
+    obs::uninstall();
+
+    // 1. Bitwise transparency: every coefficient, lambda and reported gap
+    //    is identical bit for bit with the sink on.
+    assert_eq!(base.lambdas.len(), traced.lambdas.len());
+    for (a, b) in base.lambdas.iter().zip(&traced.lambdas) {
+        assert_eq!(a.to_bits(), b.to_bits(), "tracing changed a lambda");
+    }
+    for (t, (a, b)) in base.points.iter().zip(&traced.points).enumerate() {
+        assert_eq!(a.gap.to_bits(), b.gap.to_bits(), "tracing changed the gap at lambda {t}");
+        assert_eq!(a.epochs, b.epochs, "tracing changed the epoch count at lambda {t}");
+    }
+    for (t, (a, b)) in base.betas.iter().zip(&traced.betas).enumerate() {
+        for j in 0..a.rows() {
+            for c in 0..a.cols() {
+                assert_eq!(
+                    a[(j, c)].to_bits(),
+                    b[(j, c)].to_bits(),
+                    "tracing changed beta at lambda {t}, ({j},{c})"
+                );
+            }
+        }
+    }
+
+    // 2. The trace file is well-formed JSONL (load() hard-errors on any
+    //    malformed or untagged line) and carries the solver span events.
+    let events = gapsafe::obs::analyze::load(&path_s).expect("trace must parse");
+    assert!(!events.is_empty(), "trace file is empty");
+    let count = |kind: &str| {
+        events
+            .iter()
+            .filter(|e| e.get("type").and_then(|t| t.as_str()) == Some(kind))
+            .count()
+    };
+    assert_eq!(count("path_start"), 1, "exactly one path_start span");
+    assert_eq!(count("path_end"), 1, "exactly one path_end span");
+    assert_eq!(count("path_point"), cfg.n_lambdas, "one path_point per lambda");
+    assert_eq!(count("solve"), cfg.n_lambdas, "one solve span per lambda");
+    assert!(count("gap_pass") >= cfg.n_lambdas, "every solve runs at least one gap pass");
+
+    // 3. The analyzers render from a real trace: the per-lambda table has
+    //    header + one row per lambda, and the summary embeds the rollup.
+    let table = gapsafe::obs::analyze::lambda_table(&events);
+    assert_eq!(table.lines().count(), 1 + cfg.n_lambdas, "table:\n{table}");
+    let summary = gapsafe::obs::analyze::summarize(&events);
+    assert!(summary.contains(&format!("events: {}", events.len())), "{summary}");
+    assert!(summary.contains("lambda"), "summary must embed the per-lambda table:\n{summary}");
+    let flame = gapsafe::obs::analyze::flame(&events);
+    assert!(flame.contains("total"), "{flame}");
+
+    let _ = std::fs::remove_file(&path);
+}

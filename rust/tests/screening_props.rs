@@ -50,7 +50,7 @@ fn dynamic_active_set_monotone_within_lambda() {
     let mut rule = Rule::GapSafeDyn.build();
     let res = solve_fixed_lambda(&prob, lam, rule.as_mut(), &opts);
     assert!(res.converged);
-    let counts: Vec<usize> = res.screen_trace.iter().map(|t| t.2).collect();
+    let counts: Vec<usize> = res.screen_trace.iter().map(|t| t.active_after).collect();
     for w in counts.windows(2) {
         assert!(w[1] <= w[0], "active set grew within a lambda: {counts:?}");
     }

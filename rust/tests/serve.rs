@@ -44,6 +44,30 @@ fn call(port: u16, method: &str, path: &str, body: &str) -> (u16, Json) {
     (status, v)
 }
 
+/// One raw GET over a fresh connection, without assuming a JSON body:
+/// returns (status, content type, body text). `accept` sets an `Accept`
+/// header when given (the content-negotiation path of `/metrics`).
+fn call_raw(port: u16, target: &str, accept: Option<&str>) -> (u16, String, String) {
+    let mut s = TcpStream::connect(("127.0.0.1", port)).expect("connect");
+    let accept_line = accept.map(|a| format!("Accept: {a}\r\n")).unwrap_or_default();
+    let req = format!("GET {target} HTTP/1.1\r\nHost: t\r\n{accept_line}Content-Length: 0\r\n\r\n");
+    s.write_all(req.as_bytes()).unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap();
+    let status: u16 = raw
+        .strip_prefix("HTTP/1.1 ")
+        .and_then(|r| r.split_whitespace().next())
+        .and_then(|c| c.parse().ok())
+        .unwrap_or_else(|| panic!("bad response: {raw}"));
+    let head_end = raw.find("\r\n\r\n").expect("headers terminated");
+    let content_type = raw[..head_end]
+        .lines()
+        .find_map(|l| l.strip_prefix("Content-Type: "))
+        .unwrap_or("")
+        .to_string();
+    (status, content_type, raw[head_end + 4..].to_string())
+}
+
 /// The exact solver configuration the server pins for these parameters
 /// (mirrors `ModelKey::path_config`).
 fn direct_cfg(grid: usize, delta: f64, eps: f64) -> PathConfig {
@@ -184,6 +208,84 @@ fn end_to_end_fit_poll_predict_bitwise_and_warm_metrics() {
     assert!(count("registry_models") >= 2);
     let rate = m.get("cache_hit_rate").and_then(Json::as_f64).unwrap();
     assert!(rate > 0.0 && rate < 1.0, "hit rate {rate}");
+
+    stop.store(true, Ordering::Relaxed);
+    handle.join().unwrap();
+}
+
+/// Satellite: `/metrics` end to end over real TCP — Prometheus text
+/// exposition (query-param and Accept-header negotiation, counter and
+/// histogram line shapes, cumulative `le` ladders) and the JSON side's
+/// structurally monotone latency quantiles.
+#[test]
+fn metrics_prometheus_exposition_and_latency_quantiles() {
+    let (server, port) = start_server();
+    let stop = server.stop_handle();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+
+    // Traffic so the request histograms hold real samples.
+    for _ in 0..20 {
+        let (st, _) = call(port, "GET", "/healthz", "");
+        assert_eq!(st, 200);
+    }
+
+    // --- ?format=prometheus selects the text exposition ---
+    let (st, ct, body) = call_raw(port, "/metrics?format=prometheus", None);
+    assert_eq!(st, 200);
+    assert!(ct.starts_with("text/plain"), "content type: {ct}");
+    assert!(
+        body.contains("# TYPE gapsafe_http_requests_total counter"),
+        "missing counter TYPE line:\n{body}"
+    );
+    assert!(
+        body.contains("# TYPE gapsafe_request_duration_seconds histogram"),
+        "missing histogram TYPE line:\n{body}"
+    );
+    // the shared-name histogram emits its TYPE line exactly once
+    assert_eq!(body.matches("# TYPE gapsafe_request_duration_seconds histogram").count(), 1);
+    assert!(
+        body.contains("gapsafe_request_duration_seconds_bucket{endpoint=\"healthz\",le=\"+Inf\"}"),
+        "missing healthz +Inf bucket:\n{body}"
+    );
+    assert!(body.contains("gapsafe_request_duration_seconds_count{endpoint=\"healthz\"} "));
+    assert!(body.contains("gapsafe_uptime_seconds "));
+    assert!(body.contains("gapsafe_jobs_running "));
+    assert!(body.contains("gapsafe_kernel_backend{backend="));
+    // every sample line is `name{labels} value` with a parseable value
+    for line in body.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+        let val = line.rsplit(' ').next().unwrap();
+        assert!(val.parse::<f64>().is_ok(), "unparseable sample value in: {line}");
+    }
+    // cumulative le ladder of the healthz histogram never decreases
+    let mut last = 0u64;
+    for line in body
+        .lines()
+        .filter(|l| l.starts_with("gapsafe_request_duration_seconds_bucket{endpoint=\"healthz\""))
+    {
+        let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+        assert!(v >= last, "bucket ladder not cumulative: {line}");
+        last = v;
+    }
+    assert!(last >= 20, "healthz histogram missed samples: +Inf cum = {last}");
+
+    // --- Accept-header negotiation picks the same exposition ---
+    let (st, ct, body2) = call_raw(port, "/metrics", Some("text/plain"));
+    assert_eq!(st, 200);
+    assert!(ct.starts_with("text/plain"), "content type: {ct}");
+    assert!(body2.starts_with("# TYPE "), "not Prometheus text:\n{body2}");
+
+    // --- default stays JSON, with monotone latency quantiles ---
+    let (st, m) = call(port, "GET", "/metrics", "");
+    assert_eq!(st, 200);
+    let g = |k: &str| {
+        m.get(k).and_then(Json::as_f64).unwrap_or_else(|| panic!("missing {k}: {m:?}"))
+    };
+    assert!(g("request_seconds_count") >= 20.0);
+    let (p50, p99, p999) =
+        (g("request_seconds_p50"), g("request_seconds_p99"), g("request_seconds_p999"));
+    assert!(p50 > 0.0, "p50 must be positive with samples recorded");
+    assert!(p50 <= p99 && p99 <= p999, "quantiles not monotone: {p50} {p99} {p999}");
+    assert_eq!(g("jobs_running"), 0.0);
 
     stop.store(true, Ordering::Relaxed);
     handle.join().unwrap();
