@@ -1,0 +1,326 @@
+//! A small hand-rolled Rust lexer — just enough syntax for the audit
+//! lints in [`super::lints`], zero dependencies.
+//!
+//! The lexer understands exactly the constructs that would otherwise
+//! make naive text matching lie about source code:
+//!
+//! * line comments (`//`, `///`, `//!`) and **nested** block comments,
+//!   collected separately so lints can search them for `// SAFETY:` and
+//!   `// audit-allow(...)` pragmas without them shadowing real tokens;
+//! * string literals, including escapes, byte strings and raw strings
+//!   (`r"…"`, `r#"…"#` with any hash count) — their contents produce no
+//!   tokens, so an identifier *named* in a message cannot trip a lint;
+//! * char literals vs. lifetimes (`'a'` vs. `'a`);
+//! * identifiers, numbers, and single-char punctuation.
+//!
+//! Everything else (operators, generics, attributes) comes out as
+//! punctuation tokens; the lints do their own lightweight structural
+//! matching (attribute spans, fn bodies, statement prefixes) on top of
+//! this stream.
+
+/// Lexical class of a [`Tok`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Num,
+    /// Any string literal (normal, raw, byte). Contents are dropped.
+    Str,
+    /// A char literal. Contents are dropped.
+    Char,
+    /// A lifetime (`'a`). Text includes the leading quote.
+    Lifetime,
+    /// One punctuation character.
+    Punct,
+}
+
+/// One token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// One comment (line or block, doc or plain) with the 1-based line it
+/// *starts* on and its full text including the `//` / `/*` markers.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+}
+
+/// A lexed source file: the token stream plus the comment side channel.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+/// Lex `src`. Never fails: unterminated constructs consume to EOF, which
+/// is good enough for an auditor (rustc rejects such files anyway).
+pub fn lex(src: &str) -> Lexed {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            let start = i;
+            while i < n && cs[i] != '\n' {
+                i += 1;
+            }
+            out.comments.push(Comment { line, text: cs[start..i].iter().collect() });
+            continue;
+        }
+        // Block comment (Rust block comments nest).
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if cs[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if cs[i] == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if cs[i] == '*' && i + 1 < n && cs[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            out.comments.push(Comment { line: start_line, text: cs[start..i].iter().collect() });
+            continue;
+        }
+        // Raw (and raw byte) strings: r"…", r#"…"#, br##"…"##, …
+        if c == 'r' || c == 'b' {
+            let mut k = i;
+            if cs[k] == 'b' {
+                k += 1;
+            }
+            if k < n && cs[k] == 'r' {
+                k += 1;
+                let mut hashes = 0usize;
+                while k < n && cs[k] == '#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if k < n && cs[k] == '"' {
+                    let mut j = k + 1;
+                    while j < n {
+                        if cs[j] == '\n' {
+                            line += 1;
+                        }
+                        if cs[j] == '"'
+                            && j + hashes < n
+                            && cs[j + 1..j + 1 + hashes].iter().all(|&h| h == '#')
+                        {
+                            j += 1 + hashes;
+                            break;
+                        }
+                        j += 1;
+                    }
+                    out.toks.push(Tok { kind: TokKind::Str, text: String::new(), line });
+                    i = j;
+                    continue;
+                }
+            }
+        }
+        // Normal (and byte) strings.
+        if c == '"' || (c == 'b' && i + 1 < n && cs[i + 1] == '"') {
+            let mut j = i + if c == 'b' { 2 } else { 1 };
+            while j < n {
+                if cs[j] == '\\' {
+                    j += 2;
+                    continue;
+                }
+                if cs[j] == '\n' {
+                    line += 1;
+                }
+                if cs[j] == '"' {
+                    j += 1;
+                    break;
+                }
+                j += 1;
+            }
+            out.toks.push(Tok { kind: TokKind::Str, text: String::new(), line });
+            i = j;
+            continue;
+        }
+        // Char literal vs. lifetime.
+        if c == '\'' {
+            if i + 1 < n && (cs[i + 1].is_alphabetic() || cs[i + 1] == '_') {
+                // 'x' is a char literal iff a closing quote follows the
+                // ident-ish run ('a' vs. the lifetime 'a).
+                let mut j = i + 1;
+                while j < n && (cs[j].is_alphanumeric() || cs[j] == '_') {
+                    j += 1;
+                }
+                if j < n && cs[j] == '\'' {
+                    out.toks.push(Tok { kind: TokKind::Char, text: String::new(), line });
+                    i = j + 1;
+                } else {
+                    out.toks.push(Tok {
+                        kind: TokKind::Lifetime,
+                        text: cs[i..j].iter().collect(),
+                        line,
+                    });
+                    i = j;
+                }
+                continue;
+            }
+            // Escaped or non-alphabetic char literal: '\n', '\u{..}', '0'.
+            let mut j = i + 1;
+            if j < n && cs[j] == '\\' {
+                j += 2;
+                while j < n && cs[j] != '\'' {
+                    j += 1;
+                }
+                i = j + 1;
+            } else {
+                i = j + 2;
+            }
+            out.toks.push(Tok { kind: TokKind::Char, text: String::new(), line });
+            continue;
+        }
+        // Identifier / keyword.
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            let mut j = i;
+            while j < n && (cs[j].is_alphanumeric() || cs[j] == '_') {
+                j += 1;
+            }
+            out.toks.push(Tok { kind: TokKind::Ident, text: cs[start..j].iter().collect(), line });
+            i = j;
+            continue;
+        }
+        // Number (incl. 1e-6-style floats minus the sign, underscores,
+        // and suffixes; `..` is left to punctuation).
+        if c.is_ascii_digit() {
+            let start = i;
+            let mut j = i;
+            while j < n && (cs[j].is_alphanumeric() || cs[j] == '.' || cs[j] == '_') {
+                if cs[j] == '.' && j + 1 < n && cs[j + 1] == '.' {
+                    break;
+                }
+                j += 1;
+            }
+            out.toks.push(Tok { kind: TokKind::Num, text: cs[start..j].iter().collect(), line });
+            i = j;
+            continue;
+        }
+        out.toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn plain_tokens_and_lines() {
+        let lx = lex("fn main() {\n    let x = 1;\n}\n");
+        let fn_tok = &lx.toks[0];
+        assert_eq!(fn_tok.kind, TokKind::Ident);
+        assert_eq!(fn_tok.text, "fn");
+        assert_eq!(fn_tok.line, 1);
+        let x = lx.toks.iter().find(|t| t.text == "x").unwrap();
+        assert_eq!(x.line, 2);
+        let num = lx.toks.iter().find(|t| t.kind == TokKind::Num).unwrap();
+        assert_eq!(num.text, "1");
+    }
+
+    #[test]
+    fn string_contents_produce_no_tokens() {
+        // "unwrap" only appears inside string literals — no Ident token.
+        let ids = idents(r#"let msg = "please unwrap me"; call(msg);"#);
+        assert!(!ids.contains(&"unwrap".to_string()), "{ids:?}");
+        assert!(ids.contains(&"call".to_string()));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let src = "let a = r#\"has \"quotes\" and unwrap()\"#; next();";
+        let ids = idents(src);
+        assert!(!ids.contains(&"unwrap".to_string()), "{ids:?}");
+        assert!(ids.contains(&"next".to_string()));
+        // any hash count, and byte-raw too
+        let src2 = "let b = br##\"x \"# y\"##; tail();";
+        assert!(idents(src2).contains(&"tail".to_string()));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* outer /* inner unwrap() */ still comment */ fn f() {}";
+        let lx = lex(src);
+        assert_eq!(lx.comments.len(), 1);
+        assert!(lx.comments[0].text.contains("inner"));
+        let ids: Vec<_> = lx.toks.iter().filter(|t| t.kind == TokKind::Ident).collect();
+        assert_eq!(ids[0].text, "fn");
+    }
+
+    #[test]
+    fn line_comments_are_collected_with_lines() {
+        let src = "let a = 1; // first\n// SAFETY: fine\nlet b = 2;\n";
+        let lx = lex(src);
+        assert_eq!(lx.comments.len(), 2);
+        assert_eq!(lx.comments[0].line, 1);
+        assert_eq!(lx.comments[1].line, 2);
+        assert!(lx.comments[1].text.contains("SAFETY:"));
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let lx = lex("fn f<'a>(x: &'a str) { let c = 'a'; let d = '\\n'; let e = '0'; }");
+        let lifetimes: Vec<_> =
+            lx.toks.iter().filter(|t| t.kind == TokKind::Lifetime).collect();
+        assert_eq!(lifetimes.len(), 2, "{lifetimes:?}");
+        assert!(lifetimes.iter().all(|t| t.text == "'a"));
+        let chars = lx.toks.iter().filter(|t| t.kind == TokKind::Char).count();
+        assert_eq!(chars, 3);
+    }
+
+    #[test]
+    fn attributes_tokenize_structurally() {
+        let lx = lex("#[cfg(test)]\nmod tests {}\n#[target_feature(enable = \"avx2\")]\nunsafe fn g() {}");
+        let texts: Vec<_> = lx.toks.iter().map(|t| t.text.as_str()).collect();
+        assert!(texts.windows(2).any(|w| w == ["#", "["]));
+        assert!(texts.contains(&"target_feature"));
+        // the "avx2" literal is a Str token with no text
+        assert!(lx.toks.iter().any(|t| t.kind == TokKind::Str));
+    }
+
+    #[test]
+    fn multiline_strings_track_lines() {
+        let src = "let s = \"line one\nline two\";\nfinal_ident();";
+        let lx = lex(src);
+        let f = lx.toks.iter().find(|t| t.text == "final_ident").unwrap();
+        assert_eq!(f.line, 3);
+    }
+}

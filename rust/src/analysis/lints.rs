@@ -1,0 +1,404 @@
+//! The audit lint catalogue: six named, project-specific invariants
+//! checked over the token stream of [`super::lexer`].
+//!
+//! Each lint encodes a contract the runtime test suite can only observe
+//! *after* a violation has already changed behavior — here they are
+//! rejected at the source level. `docs/ANALYSIS.md` carries the full
+//! rationale per lint; short versions live on each check below.
+//!
+//! Scope notes that apply to every lint:
+//!
+//! * Tokens inside `#[cfg(test)]` / `#[test]` items are skipped — tests
+//!   legitimately unwrap, read clocks, and build hash maps.
+//! * String/char literal *contents* never produce tokens (see the
+//!   lexer), so messages naming forbidden identifiers don't fire.
+
+use super::lexer::{Lexed, Tok, TokKind};
+use super::Finding;
+
+/// Names of every lint, in reporting order. Pragmas must use one of
+/// these exact names.
+pub const LINT_NAMES: [&str; 6] = [
+    "float-determinism",
+    "simd-containment",
+    "trace-transparency",
+    "unsafe-hygiene",
+    "determinism",
+    "serve-no-panic",
+];
+
+/// How far above an `unsafe` token a `// SAFETY:` comment may sit
+/// (lines). Covers a comment above doc/attribute lines on fn items.
+const SAFETY_WINDOW: u32 = 4;
+
+/// Float methods whose results depend on libm / FMA contraction rather
+/// than pure IEEE-754 ops — forbidden outside `linalg/kernels/`, where
+/// the bitwise-parity contract is enforced by dedicated tests.
+const FLOAT_FORBIDDEN: [&str; 3] = ["mul_add", "to_degrees", "to_radians"];
+
+/// Run every lint over one lexed file. `rel` is the path relative to the
+/// source root, `/`-separated. Findings come back unsuppressed;
+/// [`super::audit_source`] applies `audit-allow` pragmas.
+pub fn run(rel: &str, lx: &Lexed) -> Vec<Finding> {
+    let toks = &lx.toks;
+    let tests = test_spans(toks);
+    let fns = fn_regions(toks);
+    let mut out: Vec<Finding> = Vec::new();
+
+    let in_kernels = rel.starts_with("linalg/kernels/");
+    let in_avx2 = rel == "linalg/kernels/avx2.rs";
+    let in_serve = rel.starts_with("serve/");
+    let det_scope =
+        rel.starts_with("solver/") || rel.starts_with("screening/") || rel == "problem.rs";
+    // obs/ reads clocks by design; serve/ stamps request deadlines and
+    // latency metrics unconditionally (that is its contract); util/ owns
+    // the sanctioned Stopwatch wrapper.
+    let clock_exempt =
+        rel.starts_with("obs/") || in_serve || rel.starts_with("util/");
+    let unsafe_allowed = in_kernels || rel == "obs/mod.rs";
+
+    let mut add = |lint: &'static str, line: u32, message: String| {
+        out.push(Finding { file: rel.to_string(), line, lint, message, suppressed: false });
+    };
+
+    for (idx, tok) in toks.iter().enumerate() {
+        if tok.kind != TokKind::Ident || in_spans(idx, &tests) {
+            continue;
+        }
+        let t = tok.text.as_str();
+
+        // float-determinism: keep every float op a plain IEEE-754
+        // mul/add/div so solver trajectories cannot drift between hosts
+        // or backends. FMA fusions are forbidden *everywhere* — even the
+        // AVX2 kernels must not fuse (bitwise parity with scalar).
+        if FLOAT_FORBIDDEN.contains(&t) && !in_kernels {
+            add(
+                "float-determinism",
+                tok.line,
+                format!("`{t}` outside linalg/kernels/ breaks the bitwise-reproducibility contract"),
+            );
+        }
+        if t.contains("fmadd") || t.contains("fmsub") || t.contains("fnmadd") {
+            add(
+                "float-determinism",
+                tok.line,
+                format!("FMA intrinsic `{t}` is forbidden everywhere: kernels must stay bit-identical to the scalar tree"),
+            );
+        }
+
+        // simd-containment: intrinsics live in kernels/avx2.rs only, and
+        // only inside #[target_feature]-gated fns the dispatch layer
+        // hands out after runtime detection.
+        if t.starts_with("_mm") && !in_kernels {
+            add(
+                "simd-containment",
+                tok.line,
+                format!("SIMD intrinsic `{t}` outside linalg/kernels/"),
+            );
+        }
+        if (t == "std" || t == "core")
+            && toks.get(idx + 1).is_some_and(|x| x.text == ":")
+            && toks.get(idx + 2).is_some_and(|x| x.text == ":")
+            && toks.get(idx + 3).is_some_and(|x| x.text == "arch")
+            && !in_kernels
+        {
+            add(
+                "simd-containment",
+                tok.line,
+                format!("`{t}::arch` outside linalg/kernels/"),
+            );
+        }
+        if t == "is_x86_feature_detected" && !in_kernels {
+            add(
+                "simd-containment",
+                tok.line,
+                "CPU feature detection outside linalg/kernels/ (use the dispatch table)".to_string(),
+            );
+        }
+        if t.starts_with("_mm") && in_avx2 {
+            // Inside a fn body the fn must carry #[target_feature];
+            // outside any fn body the token is a `use` import — fine.
+            if let Some(&(_, _, has_tf)) = fns
+                .iter()
+                .filter(|&&(s, e, _)| s <= idx && idx <= e)
+                .max_by_key(|&&(s, _, _)| s)
+            {
+                if !has_tf {
+                    add(
+                        "simd-containment",
+                        tok.line,
+                        format!("`{t}` in a fn without #[target_feature(enable = ...)]"),
+                    );
+                }
+            }
+        }
+
+        // trace-transparency: a raw clock read in solver code must be
+        // dominated by a tracing/timing guard in the same statement, so
+        // that with tracing off the solver performs no clock syscalls
+        // (the obs overhead contract: one relaxed load per region).
+        if !clock_exempt {
+            let is_clock = t == "SystemTime"
+                || (t == "Instant"
+                    && toks.get(idx + 1).is_some_and(|x| x.text == ":")
+                    && toks.get(idx + 2).is_some_and(|x| x.text == ":")
+                    && toks.get(idx + 3).is_some_and(|x| x.text == "now"));
+            if is_clock {
+                let pre = stmt_prefix(toks, idx);
+                let guarded = pre.first().is_some_and(|s| s == "use")
+                    || (pre.iter().any(|s| s == "tracing" || s == "timing")
+                        && pre.iter().any(|s| s == "then"))
+                    || pre.iter().any(|s| s == "enabled");
+                if !guarded {
+                    add(
+                        "trace-transparency",
+                        tok.line,
+                        format!("unguarded clock read `{t}` (gate with obs::enabled() / tracing.then)"),
+                    );
+                }
+            }
+        }
+
+        // unsafe-hygiene: every unsafe site carries a // SAFETY: comment
+        // and lives in a module allowlisted for unsafe code.
+        if t == "unsafe" {
+            if !unsafe_allowed {
+                add(
+                    "unsafe-hygiene",
+                    tok.line,
+                    "`unsafe` outside the allowlisted modules (linalg/kernels/, obs/mod.rs)"
+                        .to_string(),
+                );
+            }
+            let has_safety = lx.comments.iter().any(|c| {
+                c.text.contains("SAFETY:")
+                    && c.line <= tok.line
+                    && c.line + SAFETY_WINDOW >= tok.line
+            });
+            if !has_safety {
+                add(
+                    "unsafe-hygiene",
+                    tok.line,
+                    "`unsafe` without a `// SAFETY:` comment stating the invariant".to_string(),
+                );
+            }
+        }
+
+        // determinism: hash containers have a randomized iteration order
+        // that would leak into float accumulation order in solver code.
+        if det_scope && (t == "HashMap" || t == "HashSet") {
+            add(
+                "determinism",
+                tok.line,
+                format!("`{t}` in a float-order-sensitive module (use BTreeMap/Vec)"),
+            );
+        }
+
+        // serve-no-panic: nothing reachable from a request may panic —
+        // a panicking worker tears down the whole resident server.
+        if in_serve {
+            let next = toks.get(idx + 1).map(|x| x.text.as_str());
+            if (t == "unwrap" || t == "expect") && next == Some("(") {
+                add(
+                    "serve-no-panic",
+                    tok.line,
+                    format!("`{t}` reachable from the request path (return a 4xx/5xx JSON error)"),
+                );
+            }
+            if matches!(t, "panic" | "unreachable" | "todo" | "unimplemented") && next == Some("!")
+            {
+                add(
+                    "serve-no-panic",
+                    tok.line,
+                    format!("`{t}!` reachable from the request path"),
+                );
+            }
+        }
+    }
+    out
+}
+
+/// Token-index ranges covered by `#[cfg(test)]` / `#[test]` items.
+fn test_spans(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !(toks[i].text == "#" && toks.get(i + 1).is_some_and(|t| t.text == "[")) {
+            i += 1;
+            continue;
+        }
+        // Collect the attribute's identifiers up to its closing bracket.
+        let mut depth = 0i32;
+        let mut j = i + 1;
+        let mut idents: Vec<&str> = Vec::new();
+        while j < toks.len() {
+            match toks[j].text.as_str() {
+                "[" => depth += 1,
+                "]" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {
+                    if toks[j].kind == TokKind::Ident {
+                        idents.push(toks[j].text.as_str());
+                    }
+                }
+            }
+            j += 1;
+        }
+        let is_test = (idents.contains(&"cfg") && idents.contains(&"test"))
+            || idents == ["test"];
+        if is_test {
+            if let Some(end) = item_body_end(toks, j + 1) {
+                spans.push((i, end));
+                i = end + 1;
+                continue;
+            }
+        }
+        i = j + 1;
+    }
+    spans
+}
+
+/// From `start`, find the end of the next item: skip to the first `{` or
+/// `;` at bracket depth 0, then (for `{`) to its matching `}`. Returns
+/// the index of the closing token.
+fn item_body_end(toks: &[Tok], start: usize) -> Option<usize> {
+    let mut m = start;
+    let mut bd = 0i32;
+    while m < toks.len() {
+        match toks[m].text.as_str() {
+            "(" | "[" => bd += 1,
+            ")" | "]" => bd -= 1,
+            "{" | ";" if bd == 0 => break,
+            _ => {}
+        }
+        m += 1;
+    }
+    if m >= toks.len() {
+        return None;
+    }
+    if toks[m].text == ";" {
+        return Some(m);
+    }
+    let mut d = 0i32;
+    let mut e = m;
+    while e < toks.len() {
+        if toks[e].text == "{" {
+            d += 1;
+        } else if toks[e].text == "}" {
+            d -= 1;
+            if d == 0 {
+                return Some(e);
+            }
+        }
+        e += 1;
+    }
+    None
+}
+
+/// Body spans of every `fn`, with whether the fn carries a
+/// `#[target_feature(...)]` attribute. `(body_open, body_close, has_tf)`.
+fn fn_regions(toks: &[Tok]) -> Vec<(usize, usize, bool)> {
+    let mut regions = Vec::new();
+    for i in 0..toks.len() {
+        if !(toks[i].kind == TokKind::Ident && toks[i].text == "fn") {
+            continue;
+        }
+        // Scan backwards over qualifiers and attributes for
+        // #[target_feature].
+        let mut has_tf = false;
+        let mut j = i as i64 - 1;
+        loop {
+            if j < 0 {
+                break;
+            }
+            let ju = j as usize;
+            let t = toks[ju].text.as_str();
+            if toks[ju].kind == TokKind::Ident
+                && matches!(t, "pub" | "crate" | "unsafe" | "const" | "extern" | "async")
+            {
+                j -= 1;
+                continue;
+            }
+            if t == ")" || t == "]" {
+                // Match the bracketed group backwards: either an
+                // attribute `#[...]` or a visibility `pub(crate)`.
+                let close = t;
+                let open = if close == ")" { "(" } else { "[" };
+                let mut d = 0i32;
+                let mut saw_tf = false;
+                while j >= 0 {
+                    let tt = toks[j as usize].text.as_str();
+                    if tt == close {
+                        d += 1;
+                    } else if tt == open {
+                        d -= 1;
+                        if d == 0 {
+                            break;
+                        }
+                    } else if tt == "target_feature" {
+                        saw_tf = true;
+                    }
+                    j -= 1;
+                }
+                if close == "]" {
+                    if saw_tf {
+                        has_tf = true;
+                    }
+                    j -= 1; // past '['
+                    if j >= 0 && toks[j as usize].text == "#" {
+                        j -= 1;
+                    }
+                } else {
+                    j -= 1; // past '(' of pub(crate)
+                }
+                continue;
+            }
+            break;
+        }
+        // Forward: the fn's body braces (None for trait method decls).
+        if let Some(end) = item_body_end(toks, i) {
+            if toks[end].text == "}" {
+                // Find the opening brace that `end` matched.
+                let mut m = i;
+                let mut bd = 0i32;
+                while m < toks.len() {
+                    match toks[m].text.as_str() {
+                        "(" | "[" => bd += 1,
+                        ")" | "]" => bd -= 1,
+                        "{" if bd == 0 => break,
+                        _ => {}
+                    }
+                    m += 1;
+                }
+                regions.push((m, end, has_tf));
+            }
+        }
+    }
+    regions
+}
+
+/// Token texts from the start of the statement containing `idx` (the
+/// nearest `;`/`{`/`}` boundary) up to, not including, `idx`.
+fn stmt_prefix(toks: &[Tok], idx: usize) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut j = idx as i64 - 1;
+    while j >= 0 {
+        let t = &toks[j as usize].text;
+        if t == ";" || t == "{" || t == "}" {
+            break;
+        }
+        out.push(t.clone());
+        j -= 1;
+    }
+    out.reverse();
+    out
+}
+
+/// Is token `idx` inside any of `spans` (inclusive)?
+fn in_spans(idx: usize, spans: &[(usize, usize)]) -> bool {
+    spans.iter().any(|&(a, b)| a <= idx && idx <= b)
+}

@@ -1,0 +1,410 @@
+//! `gapsafe audit` — static enforcement of the repo's reproducibility,
+//! containment, and no-panic contracts (zero dependencies, std-only).
+//!
+//! The Gap Safe guarantee (a screening rule may never wrongly discard a
+//! variable) and this repo's stronger bitwise-transparency contracts are
+//! enforced at runtime by parity tests — but a parity test only fails
+//! *after* someone has introduced the drift. This module rejects the
+//! drift at the source level: a hand-rolled lexer ([`lexer`]) feeds six
+//! named lints ([`lints`]) that walk every file under `rust/src/`.
+//!
+//! # Lints
+//!
+//! | lint | contract |
+//! |---|---|
+//! | `float-determinism` | no `mul_add`/FMA/libm shortcuts outside `linalg/kernels/` |
+//! | `simd-containment` | intrinsics only in `kernels/avx2.rs`, inside `#[target_feature]` fns |
+//! | `trace-transparency` | clock reads in solver code must be tracing-guarded |
+//! | `unsafe-hygiene` | every `unsafe` carries `// SAFETY:` and lives in an allowlisted module |
+//! | `determinism` | no `HashMap`/`HashSet` in `solver/`, `screening/`, `problem.rs` |
+//! | `serve-no-panic` | no `unwrap`/`expect`/`panic!` reachable from the `serve/` request path |
+//!
+//! # Suppression
+//!
+//! A finding is suppressed by a pragma comment on the same line or the
+//! line directly above:
+//!
+//! ```text
+//! // audit-allow(determinism): keyed lookup only, never iterated
+//! ```
+//!
+//! The reason after the colon is mandatory; a pragma without one (or
+//! naming an unknown lint) is itself reported as `audit-pragma` and
+//! cannot be suppressed. `docs/ANALYSIS.md` has the full catalogue,
+//! rationale, and the dynamic-analysis legs (TSan, Miri) that cover what
+//! a lexer cannot see.
+
+pub mod lexer;
+pub mod lints;
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One audit finding, pinned to a file and line.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Path relative to the audited source root, `/`-separated.
+    pub file: String,
+    /// 1-based source line.
+    pub line: u32,
+    /// Lint name (one of [`lints::LINT_NAMES`] or `audit-pragma`).
+    pub lint: &'static str,
+    pub message: String,
+    /// True when an `audit-allow` pragma covers this finding.
+    pub suppressed: bool,
+}
+
+/// Result of auditing a tree: every finding plus the file count.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files: usize,
+}
+
+impl Report {
+    pub fn suppressed(&self) -> usize {
+        self.findings.iter().filter(|f| f.suppressed).count()
+    }
+
+    pub fn unsuppressed(&self) -> usize {
+        self.findings.len() - self.suppressed()
+    }
+
+    /// Machine-readable report (`gapsafe audit --format json`). Keys are
+    /// sorted and the serialisation is compact, so CI can grep
+    /// `"unsuppressed":0` as a hard gate.
+    pub fn to_json(&self) -> Json {
+        let findings: Vec<Json> = self
+            .findings
+            .iter()
+            .map(|f| {
+                Json::obj([
+                    ("file", Json::Str(f.file.clone())),
+                    ("line", Json::Num(f.line as f64)),
+                    ("lint", Json::Str(f.lint.to_string())),
+                    ("message", Json::Str(f.message.clone())),
+                    ("suppressed", Json::Bool(f.suppressed)),
+                ])
+            })
+            .collect();
+        Json::obj([
+            ("files", Json::Num(self.files as f64)),
+            ("findings", Json::Arr(findings)),
+            ("suppressed", Json::Num(self.suppressed() as f64)),
+            ("unsuppressed", Json::Num(self.unsuppressed() as f64)),
+        ])
+    }
+
+    /// Human-readable report (the default `gapsafe audit` output).
+    pub fn render_text(&self) -> String {
+        let mut s = String::new();
+        for f in &self.findings {
+            let tag = if f.suppressed { " [suppressed]" } else { "" };
+            s.push_str(&format!("{}:{}: {}: {}{}\n", f.file, f.line, f.lint, f.message, tag));
+        }
+        s.push_str(&format!(
+            "audit: {} file(s), {} finding(s), {} unsuppressed\n",
+            self.files,
+            self.findings.len(),
+            self.unsuppressed()
+        ));
+        s
+    }
+}
+
+/// Audit one file's source. `rel` is its path relative to the source
+/// root with `/` separators — the lint scopes key off it.
+pub fn audit_source(rel: &str, src: &str) -> Vec<Finding> {
+    let lx = lexer::lex(src);
+    let mut findings = lints::run(rel, &lx);
+
+    // Validate pragmas first: `audit-allow(<lint>): <reason>` must name
+    // a known lint and carry a non-empty reason.
+    let mut pragmas: Vec<(u32, String)> = Vec::new();
+    for c in &lx.comments {
+        let Some(pos) = c.text.find("audit-allow(") else { continue };
+        let rest = &c.text[pos + "audit-allow(".len()..];
+        let Some(close) = rest.find(')') else {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: c.line,
+                lint: "audit-pragma",
+                message: "malformed audit-allow pragma: missing ')'".to_string(),
+                suppressed: false,
+            });
+            continue;
+        };
+        let name = rest[..close].trim().to_string();
+        let after = rest[close + 1..].trim_start();
+        let reason_ok = after.starts_with(':') && !after[1..].trim().is_empty();
+        if !lints::LINT_NAMES.contains(&name.as_str()) {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: c.line,
+                lint: "audit-pragma",
+                message: format!("audit-allow names unknown lint `{name}`"),
+                suppressed: false,
+            });
+        } else if !reason_ok {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: c.line,
+                lint: "audit-pragma",
+                message: format!("audit-allow({name}) needs a `: <reason>`"),
+                suppressed: false,
+            });
+        } else {
+            pragmas.push((c.line, name));
+        }
+    }
+
+    // Apply suppression: a pragma on line L covers findings of its lint
+    // on line L (trailing comment) or L + 1 (comment above).
+    for f in &mut findings {
+        if f.lint == "audit-pragma" {
+            continue;
+        }
+        if pragmas.iter().any(|(l, name)| name == f.lint && (*l == f.line || *l + 1 == f.line)) {
+            f.suppressed = true;
+        }
+    }
+    findings.sort_by(|a, b| (&a.file, a.line, a.lint).cmp(&(&b.file, b.line, b.lint)));
+    findings
+}
+
+/// Audit every `.rs` file under `root` (deterministic sorted walk).
+pub fn audit_tree(root: &Path) -> Result<Report, String> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)
+        .map_err(|e| format!("audit: cannot walk {}: {e}", root.display()))?;
+    files.sort();
+    let mut report = Report::default();
+    for path in &files {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| format!("audit: cannot read {}: {e}", path.display()))?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/");
+        report.findings.extend(audit_source(&rel, &src));
+        report.files += 1;
+    }
+    report
+        .findings
+        .sort_by(|a, b| (&a.file, a.line, a.lint).cmp(&(&b.file, b.line, b.lint)));
+    Ok(report)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<_> =
+        std::fs::read_dir(dir)?.collect::<std::io::Result<Vec<_>>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let path = e.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hits(rel: &str, src: &str, lint: &str) -> Vec<Finding> {
+        audit_source(rel, src).into_iter().filter(|f| f.lint == lint).collect()
+    }
+
+    // --- one fixture per lint: a hit, and an audit-allow suppression ---
+
+    #[test]
+    fn float_determinism_fires_and_suppresses() {
+        let bad = "fn f(a: f64, b: f64, c: f64) -> f64 { a.mul_add(b, c) }";
+        let got = hits("solver/mod.rs", bad, "float-determinism");
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(!got[0].suppressed);
+        assert_eq!(got[0].line, 1);
+
+        let ok = "// audit-allow(float-determinism): documented exception\n\
+                  fn f(a: f64, b: f64, c: f64) -> f64 { a.mul_add(b, c) }";
+        let got = hits("solver/mod.rs", ok, "float-determinism");
+        assert_eq!(got.len(), 1);
+        assert!(got[0].suppressed);
+
+        // allowed inside the kernel engine
+        assert!(hits("linalg/kernels/scalar.rs", bad, "float-determinism").is_empty());
+    }
+
+    #[test]
+    fn fma_intrinsics_forbidden_even_in_kernels() {
+        let bad = "fn f() { let x = _mm256_fmadd_pd(a, b, c); }";
+        let got = hits("linalg/kernels/avx2.rs", bad, "float-determinism");
+        assert_eq!(got.len(), 1, "{got:?}");
+    }
+
+    #[test]
+    fn simd_containment_fires_and_suppresses() {
+        let bad = "fn f() { let v = _mm256_setzero_pd(); }";
+        let got = hits("solver/mod.rs", bad, "simd-containment");
+        assert_eq!(got.len(), 1, "{got:?}");
+
+        let ok = "fn f() {\n    // audit-allow(simd-containment): migration shim\n    let v = _mm256_setzero_pd();\n}";
+        let got = hits("solver/mod.rs", ok, "simd-containment");
+        assert_eq!(got.len(), 1);
+        assert!(got[0].suppressed);
+
+        // in avx2.rs an intrinsic requires #[target_feature] on the fn
+        let ungated = "fn f() { let v = _mm256_setzero_pd(); }";
+        let got = hits("linalg/kernels/avx2.rs", ungated, "simd-containment");
+        assert_eq!(got.len(), 1, "{got:?}");
+        let gated = "#[target_feature(enable = \"avx2\")]\nunsafe fn f() { let v = _mm256_setzero_pd(); }";
+        assert!(hits("linalg/kernels/avx2.rs", gated, "simd-containment").is_empty());
+        // item-level use imports are fine
+        let import = "use std::arch::x86_64::{_mm256_setzero_pd};";
+        assert!(hits("linalg/kernels/avx2.rs", import, "simd-containment").is_empty());
+    }
+
+    #[test]
+    fn trace_transparency_fires_and_suppresses() {
+        let bad = "fn f() { let t0 = Instant::now(); }";
+        let got = hits("solver/mod.rs", bad, "trace-transparency");
+        assert_eq!(got.len(), 1, "{got:?}");
+
+        let ok = "fn f() { let t0 = Instant::now(); // audit-allow(trace-transparency): coarse span\n}";
+        let got = hits("solver/mod.rs", ok, "trace-transparency");
+        assert_eq!(got.len(), 1);
+        assert!(got[0].suppressed);
+
+        // the sanctioned guard shapes pass
+        let guarded = "fn f() { let t0 = tracing.then(Instant::now); }";
+        assert!(hits("solver/mod.rs", guarded, "trace-transparency").is_empty());
+        let guarded2 = "fn f() { let t0 = crate::obs::enabled().then(Instant::now); }";
+        assert!(hits("solver/mod.rs", guarded2, "trace-transparency").is_empty());
+        let import = "use std::time::Instant;\nfn noop() {}";
+        assert!(hits("solver/mod.rs", import, "trace-transparency").is_empty());
+        // obs/, serve/ and util/ own clocks by contract
+        assert!(hits("obs/trace.rs", bad, "trace-transparency").is_empty());
+        assert!(hits("serve/http.rs", bad, "trace-transparency").is_empty());
+    }
+
+    #[test]
+    fn unsafe_hygiene_fires_and_suppresses() {
+        let bad = "fn f(p: *const f64) -> f64 { unsafe { *p } }";
+        let got = hits("solver/mod.rs", bad, "unsafe-hygiene");
+        // outside the allowlist AND missing // SAFETY:
+        assert_eq!(got.len(), 2, "{got:?}");
+
+        let ok = "// audit-allow(unsafe-hygiene): FFI shim pending rework\n\
+                  fn f(p: *const f64) -> f64 { unsafe { *p } }";
+        let got = hits("solver/mod.rs", ok, "unsafe-hygiene");
+        assert!(got.iter().all(|f| f.suppressed), "{got:?}");
+
+        // in an allowlisted module with a SAFETY comment: clean
+        let clean = "fn f(p: *const f64) -> f64 {\n    // SAFETY: p is valid per caller contract\n    unsafe { *p }\n}";
+        assert!(hits("linalg/kernels/avx2.rs", clean, "unsafe-hygiene").is_empty());
+        // allowlisted but uncommented still fires the comment check
+        let nocomment = "fn f(p: *const f64) -> f64 { unsafe { *p } }";
+        assert_eq!(hits("obs/mod.rs", nocomment, "unsafe-hygiene").len(), 1);
+    }
+
+    #[test]
+    fn determinism_fires_and_suppresses() {
+        let bad = "use std::collections::HashMap;\nfn f() { let m: HashMap<u32, f64> = HashMap::new(); }";
+        let got = hits("screening/mod.rs", bad, "determinism");
+        assert_eq!(got.len(), 3, "{got:?}"); // use + type + ctor
+
+        let ok = "fn f() {\n    // audit-allow(determinism): keyed lookups only, never iterated\n    let m: HashMap<u32, f64> = HashMap::new();\n}";
+        let got = hits("problem.rs", ok, "determinism");
+        assert_eq!(got.len(), 2);
+        assert!(got.iter().all(|f| f.suppressed));
+
+        // fine outside float-order-sensitive modules
+        assert!(hits("serve/jobs.rs", bad, "determinism").is_empty());
+    }
+
+    #[test]
+    fn serve_no_panic_fires_and_suppresses() {
+        let bad = "fn handler(req: &Request) -> Response { req.body.parse().unwrap() }";
+        let got = hits("serve/http.rs", bad, "serve-no-panic");
+        assert_eq!(got.len(), 1, "{got:?}");
+
+        let ok = "fn handler() {\n    // audit-allow(serve-no-panic): startup-only path, no client data\n    let x: u32 = \"7\".parse().unwrap();\n}";
+        let got = hits("serve/mod.rs", ok, "serve-no-panic");
+        assert_eq!(got.len(), 1);
+        assert!(got[0].suppressed);
+
+        let macros = "fn h() { panic!(\"boom\"); unreachable!() }";
+        assert_eq!(hits("serve/registry.rs", macros, "serve-no-panic").len(), 2);
+        // unwrap in non-serve code is out of scope
+        assert!(hits("solver/mod.rs", bad, "serve-no-panic").is_empty());
+        // field access `.expect` without call parens is not flagged,
+        // and neither is test code
+        let test_code = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { x.unwrap(); }\n}";
+        assert!(hits("serve/http.rs", test_code, "serve-no-panic").is_empty());
+    }
+
+    // --- engine-level behaviors ---
+
+    #[test]
+    fn test_code_is_exempt_from_all_lints() {
+        let src = "#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n    fn t() { let t0 = Instant::now(); let m = HashMap::new(); x.unwrap(); }\n}";
+        assert!(audit_source("solver/mod.rs", src).is_empty());
+        assert!(audit_source("serve/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn pragma_requires_known_lint_and_reason() {
+        let unknown = "// audit-allow(no-such-lint): whatever\nfn f() {}";
+        let got = hits("solver/mod.rs", unknown, "audit-pragma");
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(got[0].message.contains("unknown lint"));
+
+        let no_reason = "// audit-allow(determinism)\nfn f() {}";
+        let got = hits("solver/mod.rs", no_reason, "audit-pragma");
+        assert_eq!(got.len(), 1);
+        assert!(got[0].message.contains("reason"));
+
+        // a malformed pragma does not suppress
+        let src = "// audit-allow(determinism)\nfn f() { let m: HashMap<u32, u32> = HashMap::new(); }";
+        let det = hits("solver/mod.rs", src, "determinism");
+        assert!(det.iter().all(|f| !f.suppressed), "{det:?}");
+    }
+
+    #[test]
+    fn pragma_on_wrong_line_does_not_suppress() {
+        let src = "// audit-allow(determinism): too far away\n\nfn f() {\n    let m: HashMap<u32, u32> = HashMap::new();\n}";
+        let det = hits("solver/mod.rs", src, "determinism");
+        assert!(det.iter().all(|f| !f.suppressed), "{det:?}");
+    }
+
+    #[test]
+    fn report_counts_and_json_shape() {
+        let report = Report {
+            files: 2,
+            findings: audit_source("solver/mod.rs", "fn f() { let t0 = Instant::now(); }\n"),
+        };
+        assert_eq!(report.unsuppressed(), 1);
+        let js = report.to_json().to_string();
+        assert!(js.contains("\"unsuppressed\":1"), "{js}");
+        assert!(js.contains("\"lint\":\"trace-transparency\""), "{js}");
+        let text = report.render_text();
+        assert!(text.contains("solver/mod.rs:1: trace-transparency"), "{text}");
+    }
+
+    #[test]
+    fn findings_are_sorted_and_deterministic() {
+        let src = "fn a() { let t0 = Instant::now(); }\nfn b() { let m: HashMap<u32, u32> = HashMap::new(); }\n";
+        let f1 = audit_source("solver/mod.rs", src);
+        let f2 = audit_source("solver/mod.rs", src);
+        let lines1: Vec<_> = f1.iter().map(|f| (f.line, f.lint)).collect();
+        let lines2: Vec<_> = f2.iter().map(|f| (f.line, f.lint)).collect();
+        assert_eq!(lines1, lines2);
+        assert!(lines1.windows(2).all(|w| w[0] <= w[1]), "{lines1:?}");
+    }
+}

@@ -56,6 +56,12 @@
 //! cached solution (`POST /v1/fit`, `GET /v1/jobs/{id}`,
 //! `POST /v1/predict`, `GET /healthz`, `GET /metrics`).
 //!
+//! The contracts above are enforced at the source level by a built-in
+//! static-analysis pass ([`analysis`], `gapsafe audit`): six named lints
+//! (float-determinism, simd-containment, trace-transparency,
+//! unsafe-hygiene, determinism, serve-no-panic) walk the token stream of
+//! every file under `rust/src/` and gate CI — see `docs/ANALYSIS.md`.
+//!
 //! Quick start:
 //!
 //! ```no_run
@@ -72,6 +78,7 @@
 // lists through Alg. 1/2; these pedantic lints fight the domain style.
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
+pub mod analysis;
 pub mod coordinator;
 pub mod data;
 pub mod datafit;

@@ -39,6 +39,8 @@ fn assert_avx2() {
 }
 
 /// Horizontal sum in the scalar tree's fixed order: ((s0 + s1) + s2) + s3.
+// SAFETY: caller must run on an AVX2 CPU; touches only `acc` and a
+// stack array, so there are no pointer obligations.
 #[inline]
 #[target_feature(enable = "avx2")]
 unsafe fn hsum(acc: __m256d) -> f64 {
@@ -47,6 +49,8 @@ unsafe fn hsum(acc: __m256d) -> f64 {
     ((t[0] + t[1]) + t[2]) + t[3]
 }
 
+// SAFETY: caller must run on an AVX2 CPU. All raw loads are bounded by
+// the min-clamped `n` below, so they stay inside both slices.
 #[target_feature(enable = "avx2")]
 unsafe fn dot_body(a: &[f64], b: &[f64]) -> f64 {
     // min-clamped so the raw loads can never run past either slice even
@@ -71,9 +75,14 @@ unsafe fn dot_body(a: &[f64], b: &[f64]) -> f64 {
 pub(crate) fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     assert_avx2();
+    // SAFETY: AVX2 presence is guaranteed by the dispatch gate (this
+    // table is only selected after `is_x86_feature_detected!`) and
+    // re-asserted above in debug builds; the body clamps all loads.
     unsafe { dot_body(a, b) }
 }
 
+// SAFETY: caller must run on an AVX2 CPU. Loads and stores are bounded
+// by the min-clamped `n`, so they stay inside `x` and `y`.
 #[target_feature(enable = "avx2")]
 unsafe fn axpy_body(alpha: f64, x: &[f64], y: &mut [f64]) {
     let n = x.len().min(y.len());
@@ -95,9 +104,13 @@ unsafe fn axpy_body(alpha: f64, x: &[f64], y: &mut [f64]) {
 pub(crate) fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
     assert_avx2();
+    // SAFETY: AVX2 presence is guaranteed by the dispatch gate and
+    // re-asserted above in debug builds; the body clamps all accesses.
     unsafe { axpy_body(alpha, x, y) }
 }
 
+// SAFETY: caller must run on an AVX2 CPU. Loads and stores are bounded
+// by the min-clamped `n`, so they stay inside all three slices.
 #[target_feature(enable = "avx2")]
 unsafe fn sub_body(a: &[f64], b: &[f64], out: &mut [f64]) {
     let n = out.len().min(a.len()).min(b.len());
@@ -119,9 +132,14 @@ pub(crate) fn sub(a: &[f64], b: &[f64], out: &mut [f64]) {
     debug_assert_eq!(a.len(), b.len());
     debug_assert_eq!(a.len(), out.len());
     assert_avx2();
+    // SAFETY: AVX2 presence is guaranteed by the dispatch gate and
+    // re-asserted above in debug builds; the body clamps all accesses.
     unsafe { sub_body(a, b, out) }
 }
 
+// SAFETY: caller must run on an AVX2 CPU. The vector loop covers
+// `4 * (n / 4)` elements of `v` and the remainder loop uses safe slice
+// indexing, so every access is in bounds.
 #[target_feature(enable = "avx2")]
 unsafe fn soft_threshold_body(v: &mut [f64], tau: f64) {
     let n = v.len();
@@ -152,6 +170,8 @@ unsafe fn soft_threshold_body(v: &mut [f64], tau: f64) {
 
 pub(crate) fn soft_threshold(v: &mut [f64], tau: f64) {
     assert_avx2();
+    // SAFETY: AVX2 presence is guaranteed by the dispatch gate and
+    // re-asserted above in debug builds; the body clamps all accesses.
     unsafe { soft_threshold_body(v, tau) }
 }
 
@@ -159,6 +179,9 @@ pub(crate) fn soft_threshold(v: &mut [f64], tau: f64) {
 /// 256-bit load of `v`, quartering the `v` traffic of the column sweep.
 /// Each column still accumulates its own 4-lane tree, so every entry is
 /// bit-identical to `dot(X_j, v)`.
+// SAFETY: caller must run on an AVX2 CPU. Column pointers come from
+// `Mat::col` (each a live slice of `x.rows()` elements) and all raw
+// offsets are bounded by the min-clamped `n <= x.rows()`.
 #[target_feature(enable = "avx2")]
 unsafe fn xtv_body(x: &Mat, v: &[f64], out: &mut [f64]) {
     let n = x.rows().min(v.len());
@@ -208,6 +231,8 @@ unsafe fn xtv_body(x: &Mat, v: &[f64], out: &mut [f64]) {
 
 pub(crate) fn xtv(x: &Mat, v: &[f64], out: &mut [f64]) {
     assert_avx2();
+    // SAFETY: AVX2 presence is guaranteed by the dispatch gate and
+    // re-asserted above in debug builds; the body clamps all accesses.
     unsafe { xtv_body(x, v, out) }
 }
 
@@ -215,6 +240,9 @@ pub(crate) fn xtv(x: &Mat, v: &[f64], out: &mut [f64]) {
 /// 256-bit load/store of `out` serves four columns. Per element the four
 /// additions happen in tile order, which the caller keeps equal to the
 /// increasing-column order of the scalar axpy sweep — bit-identical.
+// SAFETY: caller must run on an AVX2 CPU and pass column pointers and
+// `po` that are each valid for `n` reads/writes; `gemv_body` derives
+// them from live `Mat` columns and the `out` slice with `n` min-clamped.
 #[target_feature(enable = "avx2")]
 unsafe fn gemv_tile4(tile: &[(*const f64, f64); 4], n: usize, po: *mut f64) {
     let chunks = n / 4;
@@ -249,6 +277,9 @@ unsafe fn gemv_tile4(tile: &[(*const f64, f64); 4], n: usize, po: *mut f64) {
 /// and flushed through [`gemv_tile4`]; the `< 4` leftover columns go
 /// through the plain AVX2 axpy. Column order — and therefore every
 /// per-element addition order — matches the scalar sweep exactly.
+// SAFETY: caller must run on an AVX2 CPU. Tile pointers are taken from
+// live `Mat` columns (valid for `x.rows() >= n` reads) immediately
+// before the flush, and `n` is min-clamped to `out.len()`.
 #[target_feature(enable = "avx2")]
 unsafe fn gemv_body(x: &Mat, b: &[f64], out: &mut [f64]) {
     out.iter_mut().for_each(|v| *v = 0.0);
@@ -276,6 +307,8 @@ unsafe fn gemv_body(x: &Mat, b: &[f64], out: &mut [f64]) {
 
 pub(crate) fn gemv(x: &Mat, b: &[f64], out: &mut [f64]) {
     assert_avx2();
+    // SAFETY: AVX2 presence is guaranteed by the dispatch gate and
+    // re-asserted above in debug builds; the body clamps all accesses.
     unsafe { gemv_body(x, b, out) }
 }
 
@@ -286,6 +319,8 @@ pub(crate) fn xtm(x: &Mat, v: &Mat, out: &mut Mat) {
     for k in 0..v.cols() {
         let vk = v.col(k);
         for j in 0..x.cols() {
+            // SAFETY: AVX2 presence is guaranteed by the dispatch gate
+            // and re-asserted above; `dot_body` clamps its loads.
             out[(j, k)] = unsafe { dot_body(x.col(j), vk) };
         }
     }
@@ -296,6 +331,9 @@ pub(crate) fn xtm(x: &Mat, v: &Mat, out: &mut Mat) {
 /// `v` stay scalar (bounds-checked like the scalar kernel — AVX2 gathers
 /// would skip the check and are microcoded-slow on most cores anyway);
 /// the win is the four independent mul/add chains in one register.
+// SAFETY: caller must run on an AVX2 CPU. `val` loads are bounded by the
+// min-clamped `n`; `v[idx[..]]` gathers use safe (bounds-checked)
+// indexing exactly like the scalar kernel.
 #[target_feature(enable = "avx2")]
 unsafe fn gather_dot_body(idx: &[usize], val: &[f64], v: &[f64]) -> f64 {
     let n = idx.len().min(val.len());
@@ -318,5 +356,7 @@ unsafe fn gather_dot_body(idx: &[usize], val: &[f64], v: &[f64]) -> f64 {
 pub(crate) fn gather_dot(idx: &[usize], val: &[f64], v: &[f64]) -> f64 {
     debug_assert_eq!(idx.len(), val.len());
     assert_avx2();
+    // SAFETY: AVX2 presence is guaranteed by the dispatch gate and
+    // re-asserted above in debug builds; the body clamps all accesses.
     unsafe { gather_dot_body(idx, val, v) }
 }

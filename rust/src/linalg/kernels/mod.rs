@@ -196,10 +196,15 @@ static ACTIVE: AtomicPtr<Kernels> = AtomicPtr::new(std::ptr::null_mut());
 /// cannot run (a forced-but-unsupported backend silently falling back
 /// would fake coverage in CI parity legs; use `auto` for best-supported).
 pub fn active() -> &'static Kernels {
+    // Ordering: Relaxed suffices here (unlike the obs sink's
+    // Acquire/Release pair) because every candidate pointee is a
+    // compile-time `static` — fully initialized before `main`, immutable
+    // forever — so no writes need to be ordered before the publication.
     let p = ACTIVE.load(Ordering::Relaxed);
     if !p.is_null() {
-        // Tables are 'static and the pointer is only ever set to one of
-        // them, so dereferencing is always valid.
+        // SAFETY: tables are `'static` and immutable, and the pointer is
+        // only ever set to one of them (see `init_from_env` / `select`),
+        // so a non-null pointer always dereferences to a live table.
         return unsafe { &*p };
     }
     init_from_env()
@@ -219,6 +224,8 @@ fn init_from_env() -> &'static Kernels {
             // A racing initializer resolves the same environment to the
             // same table, so last-write-wins is benign.
             let t = table(kind).expect("resolve() only returns runnable backends");
+            // Ordering: Relaxed store — the pointee is an immutable
+            // `static`, so there is nothing to publish ahead of it.
             ACTIVE.store(t as *const Kernels as *mut Kernels, Ordering::Relaxed);
             t
         }
@@ -251,6 +258,8 @@ pub fn resolve(spec: &str) -> Result<BackendKind, String> {
 pub fn select(kind: BackendKind) -> Result<BackendKind, String> {
     match table(kind) {
         Some(t) => {
+            // Ordering: Relaxed store — same immutable-static argument
+            // as `init_from_env`.
             ACTIVE.store(t as *const Kernels as *mut Kernels, Ordering::Relaxed);
             Ok(kind)
         }

@@ -13,6 +13,7 @@
 //!   gapsafe selftest  [--artifacts artifacts/]   (PJRT vs native gap check)
 //!   gapsafe artifacts [--artifacts artifacts/]   (list + validate manifest)
 //!   gapsafe lmax      --task ... --data ...
+//!   gapsafe audit     [--src rust/src] [--format text|json]   (static-analysis lint gate)
 
 use gapsafe::coordinator::cv::{kfold_cv, CvConfig};
 use gapsafe::coordinator::{active_fraction_experiment, report, time_to_convergence, BatchRunner};
@@ -51,6 +52,7 @@ fn main() -> ExitCode {
         "artifacts" => cmd_artifacts(&opts),
         "lmax" => cmd_lmax(&opts),
         "trace" => cmd_trace(rest, &opts),
+        "audit" => cmd_audit(&opts),
         "help" | "--help" | "-h" => {
             usage();
             Ok(())
@@ -81,6 +83,7 @@ fn usage() {
            artifacts  list + validate the AOT artifact manifest\n\
            lmax       print lambda_max for a (task, data) pair\n\
            trace      analyze a --trace-out JSONL file (summarize | lambda-table | flame)\n\
+           audit      static-analysis lint pass over rust/src (exit 1 on findings)\n\
            help       this text\n\
          common flags:\n\
            --task lasso|group-lasso|sgl[:tau]|logreg|multitask|multinomial|poisson\n\
@@ -113,7 +116,10 @@ fn usage() {
                       endpoints: GET /healthz | GET /metrics | POST /v1/fit\n\
                                  GET /v1/jobs/<id> | POST /v1/predict   (docs/SERVING.md)\n\
            selftest/artifacts: --artifacts artifacts (manifest dir)\n\
-           trace:     --in trace.jsonl (a file produced by --trace-out)"
+           trace:     --in trace.jsonl (a file produced by --trace-out)\n\
+           audit:     --src rust/src (source root)   --format text|json\n\
+                      lints: float-determinism simd-containment trace-transparency\n\
+                             unsafe-hygiene determinism serve-no-panic (docs/ANALYSIS.md)"
     );
 }
 
@@ -282,6 +288,44 @@ fn cmd_trace(rest: &[String], o: &Flags) -> Result<(), String> {
     };
     println!("{out}");
     Ok(())
+}
+
+/// `gapsafe audit [--src DIR] [--format text|json]`: run the static
+/// invariant lints over the source tree; non-zero exit on any
+/// unsuppressed finding (the CI hard gate — see `docs/ANALYSIS.md`).
+fn cmd_audit(o: &Flags) -> Result<(), String> {
+    let root = match o.get("src") {
+        Some(p) => PathBuf::from(p),
+        None => default_src_root()?,
+    };
+    let report = gapsafe::analysis::audit_tree(&root)?;
+    match flag(o, "format", "text") {
+        "json" => println!("{}", report.to_json()),
+        "text" => print!("{}", report.render_text()),
+        other => return Err(format!("unknown --format '{other}' (text | json)")),
+    }
+    let unsuppressed = report.unsuppressed();
+    if unsuppressed > 0 {
+        return Err(format!("audit: {unsuppressed} unsuppressed finding(s)"));
+    }
+    Ok(())
+}
+
+/// Where the crate sources live when `--src` is not given: `rust/src`
+/// from the repo root, `src` from the crate dir, else the build-time
+/// manifest dir (works for `cargo run` from anywhere on the CI host).
+fn default_src_root() -> Result<PathBuf, String> {
+    for cand in ["rust/src", "src"] {
+        let p = PathBuf::from(cand);
+        if p.is_dir() {
+            return Ok(p);
+        }
+    }
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src");
+    if manifest.is_dir() {
+        return Ok(manifest);
+    }
+    Err("audit: cannot locate the source tree (pass --src <dir>)".to_string())
 }
 
 fn cmd_serve(o: &Flags) -> Result<(), String> {

@@ -51,6 +51,12 @@ static SINK: AtomicPtr<Box<dyn Sink>> = AtomicPtr::new(std::ptr::null_mut());
 /// leaking trades a few bytes for not needing hazard pointers.
 pub fn install(sink: Box<dyn Sink>) {
     let ptr = Box::into_raw(Box::new(sink));
+    // Ordering: the Release half publishes the fully-constructed sink —
+    // every write that built it happens-before any emitter's Acquire
+    // load in `emit` (a Relaxed publish could let a concurrent emitter
+    // call `record` on a half-initialized sink). The Acquire half orders
+    // this thread after the previous sink's publication, keeping
+    // install/uninstall sequences coherent.
     SINK.swap(ptr, Ordering::AcqRel);
 }
 
@@ -58,6 +64,9 @@ pub fn install(sink: Box<dyn Sink>) {
 /// is leaked, not dropped — see [`install`]. Intended for tests; callers
 /// that need the sink's data should keep their own `Arc` into it.
 pub fn uninstall() {
+    // Ordering: AcqRel for symmetry with `install` — publishing null
+    // needs no Release, but the Acquire half synchronizes with the
+    // prior install so the swap cannot be reordered ahead of it.
     SINK.swap(std::ptr::null_mut(), Ordering::AcqRel);
 }
 
@@ -66,16 +75,23 @@ pub fn uninstall() {
 /// false.
 #[inline]
 pub fn enabled() -> bool {
+    // Ordering: Relaxed is enough for a null-check — the pointer is
+    // never dereferenced here, so no pointee writes need to be visible.
+    // `emit` re-loads with Acquire before any dereference.
     !SINK.load(Ordering::Relaxed).is_null()
 }
 
 /// Deliver an event to the installed sink, if any.
 #[inline]
 pub fn emit(ev: &Event) {
+    // Ordering: Acquire pairs with the Release half of `install`'s swap,
+    // so the sink's construction happens-before this dereference.
     let p = SINK.load(Ordering::Acquire);
     if !p.is_null() {
-        // Safety: `p` came from Box::into_raw in `install` and is never
-        // freed (replaced sinks leak), so it is valid for the process.
+        // SAFETY: `p` came from `Box::into_raw` in `install` and is never
+        // freed (replaced sinks leak by design), so a non-null pointer is
+        // valid for the life of the process; the Acquire load above makes
+        // the pointee's initialization visible.
         unsafe { (*p).record(ev) }
     }
 }

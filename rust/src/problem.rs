@@ -95,6 +95,10 @@ impl Problem {
     /// available cores, 1 = serial). Safe to call on a shared `&Problem`.
     pub fn set_screen_threads(&self, threads: usize) {
         let t = crate::solver::parallel::effective_threads(threads);
+        // Ordering: Relaxed — a standalone tuning knob with no attached
+        // data; sweeps that race a concurrent set see either the old or
+        // the new count, both of which are valid (and bitwise-identical
+        // in output, since thread count never changes results).
         self.screen_threads.store(t.max(1), Ordering::Relaxed);
     }
 

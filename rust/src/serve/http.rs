@@ -248,6 +248,10 @@ where
     crate::solver::parallel::run_workers(threads, |_| {
         let mut idle_sleep = ACCEPT_POLL_MIN;
         loop {
+            // Ordering: Relaxed is enough for a one-way latch. The flag
+            // carries no payload to synchronize — workers only need to
+            // *eventually* observe `true`, and the bounded accept-poll
+            // sleep guarantees the load is retried within ACCEPT_POLL_MAX.
             if stop.load(Ordering::Relaxed) {
                 break;
             }

@@ -15,7 +15,7 @@
 //! queue accepts work forever instead of fanning out one finite batch.
 
 use super::registry::{FitKind, ModelKey, Registry};
-use super::Metrics;
+use super::{lock_ok, wait_ok, wait_timeout_ok, Metrics};
 use crate::obs;
 
 use std::collections::{HashMap, VecDeque};
@@ -152,7 +152,7 @@ impl JobQueue {
 
     /// Enqueue a fit; returns the job id immediately.
     pub fn submit(&self, key: ModelKey) -> u64 {
-        let mut st = self.inner.state.lock().unwrap();
+        let mut st = lock_ok(&self.inner.state);
         let id = st.next_id;
         st.next_id += 1;
         st.jobs.insert(
@@ -175,14 +175,14 @@ impl JobQueue {
 
     /// Snapshot a job.
     pub fn status(&self, id: u64) -> Option<JobRecord> {
-        self.inner.state.lock().unwrap().jobs.get(&id).cloned()
+        lock_ok(&self.inner.state).jobs.get(&id).cloned()
     }
 
     /// Block until the job reaches a terminal state (or `timeout`
     /// elapses); returns the final snapshot.
     pub fn wait(&self, id: u64, timeout: Duration) -> Option<JobRecord> {
         let deadline = Instant::now() + timeout;
-        let mut st = self.inner.state.lock().unwrap();
+        let mut st = lock_ok(&self.inner.state);
         loop {
             match st.jobs.get(&id) {
                 None => return None,
@@ -195,24 +195,21 @@ impl JobQueue {
             if now >= deadline {
                 return st.jobs.get(&id).cloned();
             }
-            let (guard, _res) = self.inner.cv.wait_timeout(st, deadline - now).unwrap();
+            let (guard, _res) = wait_timeout_ok(&self.inner.cv, st, deadline - now);
             st = guard;
         }
     }
 
     /// Jobs waiting to start (the `/metrics` queue-depth gauge).
     pub fn depth(&self) -> usize {
-        self.inner.state.lock().unwrap().queue.len()
+        lock_ok(&self.inner.state).queue.len()
     }
 
     /// Jobs currently executing on a worker (the `jobs_running` gauge).
     /// A scan over the (retention-bounded) job table — cheap enough for a
     /// metrics poll.
     pub fn running(&self) -> usize {
-        self.inner
-            .state
-            .lock()
-            .unwrap()
+        lock_ok(&self.inner.state)
             .jobs
             .values()
             .filter(|r| r.state == JobState::Running)
@@ -222,7 +219,7 @@ impl JobQueue {
     /// Stop accepting work and join the workers (in-flight jobs finish).
     pub fn shutdown(&mut self) {
         {
-            let mut st = self.inner.state.lock().unwrap();
+            let mut st = lock_ok(&self.inner.state);
             st.shutdown = true;
         }
         self.inner.cv.notify_all();
@@ -242,7 +239,7 @@ fn worker_loop(inner: &Inner) {
     loop {
         // Pull the next job (or exit on shutdown with an empty queue).
         let (id, key) = {
-            let mut st = inner.state.lock().unwrap();
+            let mut st = lock_ok(&inner.state);
             loop {
                 if let Some(id) = st.queue.pop_front() {
                     // Queued jobs are never pruned (only finished ones),
@@ -257,12 +254,12 @@ fn worker_loop(inner: &Inner) {
                 if st.shutdown {
                     return;
                 }
-                st = inner.cv.wait(st).unwrap();
+                st = wait_ok(&inner.cv, st);
             }
         };
         // Solve without holding the queue lock.
         let result = inner.registry.fit(&key);
-        let mut st = inner.state.lock().unwrap();
+        let mut st = lock_ok(&inner.state);
         if let Some(rec) = st.jobs.get_mut(&id) {
             rec.finished = Some(Instant::now());
             let ok = result.is_ok();

@@ -49,8 +49,34 @@ use registry::{FitKind, ModelKey, Registry};
 
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError, WaitTimeoutResult};
 use std::time::{Duration, Instant};
+
+/// Lock a mutex, recovering from poisoning instead of panicking.
+///
+/// A resident server must not let one panicked worker turn every later
+/// request into a `lock().unwrap()` panic (the serve-no-panic audit lint
+/// forbids that). Recovery is sound for all serve-side state: each
+/// critical section leaves the guarded data structurally consistent at
+/// every await-free step (inserts/removes complete before the panic can
+/// propagate), so the data a poisoned lock guards is still usable.
+pub(crate) fn lock_ok<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`Condvar::wait`] with the same poison recovery as [`lock_ok`].
+pub(crate) fn wait_ok<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`Condvar::wait_timeout`] with the same poison recovery as [`lock_ok`].
+pub(crate) fn wait_timeout_ok<'a, T>(
+    cv: &Condvar,
+    g: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(g, dur).unwrap_or_else(PoisonError::into_inner)
+}
 
 /// How long `/v1/fit` with `"wait": true` may park an HTTP worker before
 /// handing the client back a still-running (202) job snapshot to poll.
@@ -63,6 +89,12 @@ const WAIT_FIT_TIMEOUT: Duration = Duration::from_secs(60);
 /// lock-free latency histograms (see [`LogHistogram`]): recording is a
 /// handful of relaxed atomic adds, so it stays on even without a trace
 /// sink — quantiles must be there *before* anyone turns tracing on.
+///
+/// Ordering: every counter here is read and written with `Relaxed`.
+/// The counters are independent monotone statistics — nothing ever
+/// branches on cross-counter consistency, and `/metrics` readers are
+/// content with any valid interleaving of concurrent increments, so no
+/// happens-before edge (Acquire/Release) is required or implied.
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub http_requests: AtomicU64,

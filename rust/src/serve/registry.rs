@@ -30,7 +30,7 @@
 //! + path betas); eviction never removes in-flight fits or the entry just
 //! inserted.
 
-use super::Metrics;
+use super::{lock_ok, wait_ok, Metrics};
 use crate::data::load_spec;
 use crate::linalg::Mat;
 use crate::penalty::ActiveSet;
@@ -355,7 +355,7 @@ impl Registry {
         let sw = crate::obs::enabled().then(Stopwatch::start);
         let seed: Option<Arc<FittedModel>>;
         {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_ok(&self.state);
             loop {
                 st.tick += 1;
                 let tick = st.tick;
@@ -375,7 +375,7 @@ impl Registry {
                         return Ok((model, FitKind::Hit));
                     }
                     Some(Entry::Pending) => {
-                        st = self.cv.wait(st).unwrap();
+                        st = wait_ok(&self.cv, st);
                     }
                     None => {
                         seed = best_seed(&st, key);
@@ -392,7 +392,7 @@ impl Registry {
         let mut guard = PendingGuard { reg: self, canon: &canon, armed: true };
         let built = self.build_model(key, seed.as_deref());
         guard.armed = false; // normal paths below publish or clear the claim
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_ok(&self.state);
         match built {
             Ok(model) => {
                 let model = Arc::new(model);
@@ -433,7 +433,7 @@ impl Registry {
 
     /// Fetch a fitted artifact by canonical key (no solving).
     pub fn get(&self, canon: &str) -> Option<Arc<FittedModel>> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_ok(&self.state);
         st.tick += 1;
         let tick = st.tick;
         match st.entries.get_mut(canon) {
@@ -446,7 +446,7 @@ impl Registry {
     }
 
     pub fn stats(&self) -> RegistryStats {
-        let st = self.state.lock().unwrap();
+        let st = lock_ok(&self.state);
         let models = st.entries.values().filter(|e| matches!(e, Entry::Done(_))).count();
         let pending = st.entries.len() - models;
         RegistryStats {
@@ -614,10 +614,12 @@ pub fn solve_path_seeded(prob: &Problem, cfg: &PathConfig, seed: &FittedModel) -
             None => true,
             Some(p) => log_dist(clam, lam) < log_dist(p.lam, lam),
         };
-        let seeded_prev = if cache_closer {
-            make_prev(prob, &seed.path.betas[ci], clam)
-        } else {
-            prev.clone().expect("prev exists when cache is not closer")
+        // `cache_closer` is true whenever `prev` is None, so the fallback
+        // arm is unreachable; it re-seeds from the cache rather than
+        // panicking on a serving thread (serve-no-panic).
+        let seeded_prev = match (cache_closer, prev.clone()) {
+            (false, Some(p)) => p,
+            _ => make_prev(prob, &seed.path.betas[ci], clam),
         };
         // Phase 1 (Eq. 22): restricted to the seed's support.
         let support = support_active(prob, &seeded_prev.beta);

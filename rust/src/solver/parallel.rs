@@ -94,6 +94,10 @@ where
     std::thread::scope(|s| {
         for _ in 0..threads {
             s.spawn(|| loop {
+                // Ordering: Relaxed — fetch_add is already a single
+                // atomic RMW, so every worker gets a unique index; the
+                // claimed item itself is handed over by the slot Mutex,
+                // which supplies the happens-before edge for its data.
                 let i = cursor.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;

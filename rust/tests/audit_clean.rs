@@ -1,0 +1,38 @@
+//! The audit gate, as a test: the shipped source tree must produce zero
+//! unsuppressed findings from `gapsafe::analysis` — the same invariant CI
+//! enforces through the `gapsafe audit` exit code, pinned here so a plain
+//! `cargo test` catches a violation without the CLI in the loop.
+
+use gapsafe::analysis;
+use std::path::Path;
+
+#[test]
+fn source_tree_audits_clean() {
+    let root = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/src"));
+    let report = analysis::audit_tree(root).expect("audit walk failed");
+    assert!(report.files > 0, "audit walked no files — wrong root?");
+    let dirty: Vec<String> = report
+        .findings
+        .iter()
+        .filter(|f| !f.suppressed)
+        .map(|f| format!("{}:{} [{}] {}", f.file, f.line, f.lint, f.message))
+        .collect();
+    assert!(
+        dirty.is_empty(),
+        "unsuppressed audit findings in the tree:\n{}",
+        dirty.join("\n")
+    );
+}
+
+#[test]
+fn audit_json_reports_zero_unsuppressed() {
+    // CI greps `"unsuppressed":0` out of `gapsafe audit --format json`;
+    // keep the exact serialized shape honest.
+    let root = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/src"));
+    let report = analysis::audit_tree(root).expect("audit walk failed");
+    let json = report.to_json().to_string();
+    assert!(
+        json.contains("\"unsuppressed\":0"),
+        "JSON gate key missing or non-zero: {json}"
+    );
+}

@@ -1,0 +1,122 @@
+//! Interleaving stress for the process-global trace sink
+//! ([`gapsafe::obs`]): emitters hammer `enabled()` / `emit()` while other
+//! threads race `install()` / `uninstall()` swaps of the `AtomicPtr`.
+//!
+//! The sink is process-global state, so these scenarios live in their own
+//! integration binary (`obs_trace.rs` owns the sink in *its* process) and
+//! run as ONE `#[test]` — Rust runs tests in a binary concurrently, and
+//! two tests toggling the global sink would race each other, not the
+//! code under test.
+//!
+//! What a failure looks like:
+//! * a torn install (Relaxed publish) lets an emitter call `record` on a
+//!   half-constructed sink — the per-sink canary below would read a bad
+//!   value, and the nightly TSan leg flags the unsynchronized write;
+//! * a freed sink (if replaced sinks were dropped instead of leaked)
+//!   turns the emit-side dereference into a use-after-free — Miri / TSan
+//!   territory, exercised here by constant re-installation under load.
+
+use gapsafe::obs::{self, Event, Sink};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// A sink whose construction is made visible: `canary` is written last in
+/// the constructor, so an emitter that observes a half-published sink
+/// reads 0 instead of `CANARY`.
+struct CountingSink {
+    hits: Arc<AtomicU64>,
+    torn: Arc<AtomicU64>,
+    canary: u64,
+}
+
+const CANARY: u64 = 0x5afe_5afe_5afe_5afe;
+
+impl CountingSink {
+    fn new(hits: Arc<AtomicU64>, torn: Arc<AtomicU64>) -> Self {
+        CountingSink { hits, torn, canary: CANARY }
+    }
+}
+
+impl Sink for CountingSink {
+    fn record(&self, _ev: &Event) {
+        if self.canary != CANARY {
+            self.torn.fetch_add(1, Ordering::Relaxed);
+        }
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[test]
+fn sink_install_emit_uninstall_races_are_safe() {
+    let hits = Arc::new(AtomicU64::new(0));
+    let torn = Arc::new(AtomicU64::new(0));
+
+    // Phase 1: emitters vs. togglers, all racing the one AtomicPtr.
+    let emitters = 4;
+    let per_emitter = 20_000;
+    let toggles = 2_000;
+    std::thread::scope(|s| {
+        for _ in 0..emitters {
+            s.spawn(|| {
+                for i in 0..per_emitter {
+                    // Exercise both the guarded fast path real call sites
+                    // use and the bare emit (must also be sound: enabled()
+                    // can go stale between the check and the emit).
+                    if i % 2 == 0 {
+                        if obs::enabled() {
+                            obs::emit(&Event::Request {
+                                endpoint: "stress",
+                                status: 200,
+                                secs: 0.0,
+                            });
+                        }
+                    } else {
+                        obs::emit(&Event::Request {
+                            endpoint: "stress",
+                            status: 200,
+                            secs: 0.0,
+                        });
+                    }
+                }
+            });
+        }
+        for t in 0..2usize {
+            let hits = Arc::clone(&hits);
+            let torn = Arc::clone(&torn);
+            s.spawn(move || {
+                for i in 0..toggles {
+                    if (i + t) % 3 == 0 {
+                        obs::uninstall();
+                    } else {
+                        obs::install(Box::new(CountingSink::new(
+                            Arc::clone(&hits),
+                            Arc::clone(&torn),
+                        )));
+                    }
+                }
+            });
+        }
+    });
+    assert_eq!(torn.load(Ordering::Relaxed), 0, "emitter saw a half-published sink");
+    let racy_hits = hits.load(Ordering::Relaxed);
+    assert!(
+        racy_hits <= (emitters * per_emitter) as u64,
+        "more records than emits: {racy_hits}"
+    );
+
+    // Phase 2: quiesced sanity — a freshly installed sink sees exactly
+    // the events emitted after it, and none after uninstall.
+    obs::uninstall();
+    let before = hits.load(Ordering::Relaxed);
+    obs::install(Box::new(CountingSink::new(Arc::clone(&hits), Arc::clone(&torn))));
+    assert!(obs::enabled());
+    for _ in 0..10 {
+        obs::emit(&Event::Request { endpoint: "stress", status: 200, secs: 0.0 });
+    }
+    assert_eq!(hits.load(Ordering::Relaxed), before + 10);
+    obs::uninstall();
+    assert!(!obs::enabled());
+    obs::emit(&Event::Request { endpoint: "stress", status: 200, secs: 0.0 });
+    assert_eq!(hits.load(Ordering::Relaxed), before + 10, "emit after uninstall recorded");
+    assert_eq!(torn.load(Ordering::Relaxed), 0);
+}
