@@ -1,0 +1,57 @@
+//! Audit-engine benchmark: wall time of a full `audit_tree` pass over
+//! `rust/src/` — lexing, item parsing, the crate-wide call graph, all
+//! nine lints, and suppression.
+//!
+//! The audit runs on every CI push and as a pre-commit habit, so its
+//! cost is a developer-facing latency budget: a whole-crate pass should
+//! stay well under a second. The findings count is recorded alongside
+//! the timing so a regression in either direction (lint suddenly silent,
+//! or suddenly noisy) shows up in the same artifact.
+//!
+//! Records results/BENCH_audit.json (see docs/BENCHMARKS.md).
+
+#[path = "common.rs"]
+mod common;
+
+use gapsafe::analysis::audit_tree;
+use std::path::PathBuf;
+
+fn main() {
+    let smoke = common::smoke();
+    common::banner(
+        "audit",
+        "full static-analysis pass over rust/src (lexer + parser + call graph + 9 lints)",
+    );
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src");
+
+    // Correctness gate before timing: the shipped tree must audit clean,
+    // and two passes must agree (the engine is deterministic).
+    let first = audit_tree(&root).expect("audit_tree");
+    let second = audit_tree(&root).expect("audit_tree");
+    assert_eq!(first.unsuppressed(), 0, "shipped tree must audit clean:\n{}", first.render_text());
+    assert_eq!(first.render_text(), second.render_text(), "audit must be deterministic");
+    println!(
+        "clean: {} files, {} finding(s) (all suppressed)",
+        first.files,
+        first.findings.len()
+    );
+
+    let reps = common::reps(if smoke { 3 } else { 10 });
+    let (mean, min) = common::time_it(reps, || {
+        let report = audit_tree(&root).expect("audit_tree");
+        std::hint::black_box(report.unsuppressed());
+    });
+    println!("audit_tree: mean {:.1} ms, min {:.1} ms over {reps} reps", mean * 1e3, min * 1e3);
+
+    common::record_bench_json(
+        "audit",
+        &[
+            ("seconds_mean", mean),
+            ("seconds_min", min),
+            ("files", first.files as f64),
+            ("findings", first.findings.len() as f64),
+            ("suppressed", first.suppressed() as f64),
+            ("unsuppressed", first.unsuppressed() as f64),
+        ],
+    );
+}

@@ -1,0 +1,398 @@
+//! A conservative, over-approximating call graph over the whole crate,
+//! built from [`super::parser`] output.
+//!
+//! # Approximation contract
+//!
+//! The graph may only ever have *extra* edges, never missing ones, for
+//! calls that target crate-local fns (see `docs/ANALYSIS.md`):
+//!
+//! * A bare call `foo(..)` or method call `x.foo(..)` links to **every**
+//!   crate fn named `foo`, regardless of type — name-based resolution
+//!   without type inference over-approximates dynamic dispatch and
+//!   trait impls by construction.
+//! * A path call `a::b::foo(..)` links to every crate fn whose
+//!   qualified path ends with the written segments, after expanding the
+//!   file's `use` aliases and the `crate`/`self`/`super`/`Self`
+//!   prefixes. If no crate fn matches the full suffix, the call is
+//!   external (std or a primitive method) and contributes no edge.
+//! * Calls through fn pointers / closures and macro-generated calls are
+//!   *not* resolved — lints downstream must not rely on the graph for
+//!   std-level panics (the panic lint separately inspects panic-family
+//!   tokens in every reachable body, which covers `unwrap()` regardless
+//!   of resolution).
+//!
+//! Everything is ordered: nodes in (file, source) order, edges sorted by
+//! (callee, line), BFS in queue order over sorted edges — two builds of
+//! the same tree are byte-identical.
+
+use super::lexer::TokKind;
+use super::parser::ParsedFile;
+use std::collections::BTreeMap;
+
+/// One fn in the crate-wide graph.
+#[derive(Debug, Clone)]
+pub struct Node {
+    /// Index into the `files` slice the graph was built from.
+    pub file_idx: usize,
+    /// File path relative to the source root.
+    pub file: String,
+    /// Bare fn name.
+    pub name: String,
+    /// Crate-qualified path (`serve::registry::Registry::fit`).
+    pub qual: String,
+    /// `impl`/`trait` owner, if any (for `Self::` resolution).
+    pub owner: Option<String>,
+    /// 1-based line of the `fn` keyword.
+    pub line: u32,
+    /// Token span of the body in the owning file, braces inclusive.
+    pub body: (usize, usize),
+    pub is_test: bool,
+}
+
+/// Outgoing edge: resolved callee node plus the call site's line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Edge {
+    pub callee: usize,
+    pub line: u32,
+}
+
+#[derive(Debug)]
+pub struct CallGraph {
+    pub nodes: Vec<Node>,
+    /// `edges[i]` — sorted, deduped outgoing edges of `nodes[i]`.
+    pub edges: Vec<Vec<Edge>>,
+    /// bare name → node indices (ascending), for shadow checks.
+    by_name: BTreeMap<String, Vec<usize>>,
+}
+
+/// Keywords that look like `ident (` but are not calls.
+const NON_CALL: [&str; 12] = [
+    "if", "while", "for", "match", "return", "loop", "fn", "move", "in", "as", "let", "else",
+];
+
+impl CallGraph {
+    /// Build the graph over every fn in `files`.
+    pub fn build(files: &[ParsedFile]) -> CallGraph {
+        let mut nodes: Vec<Node> = Vec::new();
+        for (fi, pf) in files.iter().enumerate() {
+            for f in &pf.fns {
+                nodes.push(Node {
+                    file_idx: fi,
+                    file: pf.rel.clone(),
+                    name: f.name.clone(),
+                    qual: f.qual.clone(),
+                    owner: f.owner.clone(),
+                    line: f.line,
+                    body: f.body,
+                    is_test: f.is_test,
+                });
+            }
+        }
+        let mut by_name: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for (i, n) in nodes.iter().enumerate() {
+            by_name.entry(n.name.clone()).or_default().push(i);
+        }
+        let qual_segs: Vec<Vec<&str>> =
+            nodes.iter().map(|n| n.qual.split("::").collect()).collect();
+
+        let mut edges: Vec<Vec<Edge>> = vec![Vec::new(); nodes.len()];
+        for (i, n) in nodes.iter().enumerate() {
+            let pf = &files[n.file_idx];
+            let toks = &pf.lexed.toks;
+            let (lo, hi) = n.body;
+            for j in lo..=hi.min(toks.len() - 1) {
+                if toks[j].kind != TokKind::Ident || NON_CALL.contains(&toks[j].text.as_str()) {
+                    continue;
+                }
+                // `name(` directly, or `name::<T>(` with a turbofish.
+                let direct = toks.get(j + 1).is_some_and(|t| t.text == "(");
+                let turbofish = !direct
+                    && toks.get(j + 1).is_some_and(|t| t.text == ":")
+                    && toks.get(j + 2).is_some_and(|t| t.text == ":")
+                    && toks.get(j + 3).is_some_and(|t| t.text == "<")
+                    && {
+                        let mut d = 0i32;
+                        let mut m = j + 3;
+                        loop {
+                            match toks.get(m).map(|t| t.text.as_str()) {
+                                Some("<") => d += 1,
+                                Some(">") => {
+                                    d -= 1;
+                                    if d == 0 {
+                                        break toks.get(m + 1).is_some_and(|t| t.text == "(");
+                                    }
+                                }
+                                Some(_) => {}
+                                None => break false,
+                            }
+                            m += 1;
+                        }
+                    };
+                if !direct && !turbofish {
+                    continue;
+                }
+                // Walk the `a :: b :: name` path backwards from `name`.
+                let mut segs: Vec<String> = vec![toks[j].text.clone()];
+                let mut k = j;
+                while k >= 3
+                    && toks[k - 1].text == ":"
+                    && toks[k - 2].text == ":"
+                    && toks[k - 3].kind == TokKind::Ident
+                {
+                    segs.insert(0, toks[k - 3].text.clone());
+                    k -= 3;
+                }
+                // `<T as Trait>::name` / turbofish land here with a `>`
+                // before the `::`; treat as a bare name (conservative).
+                let candidates: Vec<usize> = if segs.len() == 1 {
+                    by_name.get(&segs[0]).cloned().unwrap_or_default()
+                } else {
+                    resolve_path(&segs, n, pf, &qual_segs, &by_name)
+                };
+                for c in candidates {
+                    edges[i].push(Edge { callee: c, line: toks[j].line });
+                }
+            }
+            edges[i].sort_by_key(|e| (e.callee, e.line));
+            edges[i].dedup();
+        }
+        CallGraph { nodes, edges, by_name }
+    }
+
+    /// Does any crate fn carry this bare name? (Used by the panic lint
+    /// to tell crate-local `expect`-alikes from std's panicking ones.)
+    pub fn has_fn_named(&self, name: &str) -> bool {
+        self.by_name.contains_key(name)
+    }
+
+    /// BFS over non-test fns from `roots` (deterministic: queue order
+    /// over edges already sorted by callee). `parent[v]` is the BFS
+    /// predecessor, `None` for roots and unreached nodes.
+    pub fn reach_from(&self, roots: &[usize]) -> Reach {
+        let mut visited = vec![false; self.nodes.len()];
+        let mut parent: Vec<Option<usize>> = vec![None; self.nodes.len()];
+        let mut queue: std::collections::VecDeque<usize> = Default::default();
+        for &r in roots {
+            if !visited[r] && !self.nodes[r].is_test {
+                visited[r] = true;
+                queue.push_back(r);
+            }
+        }
+        while let Some(v) = queue.pop_front() {
+            for e in &self.edges[v] {
+                let c = e.callee;
+                if !visited[c] && !self.nodes[c].is_test {
+                    visited[c] = true;
+                    parent[c] = Some(v);
+                    queue.push_back(c);
+                }
+            }
+        }
+        Reach { visited, parent }
+    }
+}
+
+/// Resolve a multi-segment path call from fn `n` in file `pf`:
+/// expand `use` aliases and `crate`/`self`/`super`/`Self`, then match
+/// crate fns whose qualified path ends with the written segments.
+fn resolve_path(
+    segs: &[String],
+    n: &Node,
+    pf: &ParsedFile,
+    qual_segs: &[Vec<&str>],
+    by_name: &BTreeMap<String, Vec<usize>>,
+) -> Vec<usize> {
+    let mut segs: Vec<String> = segs.to_vec();
+    // `use` alias on the leading segment (`sync::lock_ok` after
+    // `use crate::util::sync;`).
+    if let Some((_, path)) = pf.uses.iter().find(|(alias, _)| *alias == segs[0]) {
+        segs.splice(0..1, path.iter().cloned());
+    }
+    // Normalize the leading keyword, if any (it only appears once).
+    match segs.first().map(String::as_str) {
+        Some("crate") => {
+            segs.remove(0);
+        }
+        Some("self") => {
+            segs.remove(0);
+            for (d, m) in pf.mod_path.iter().enumerate() {
+                segs.insert(d, m.clone());
+            }
+        }
+        Some("super") => {
+            segs.remove(0);
+            let mut path = pf.mod_path.clone();
+            path.pop();
+            // further `super`s pop further
+            while segs.first().is_some_and(|s| s == "super") {
+                segs.remove(0);
+                path.pop();
+            }
+            for (d, m) in path.iter().enumerate() {
+                segs.insert(d, m.clone());
+            }
+        }
+        Some("Self") => match &n.owner {
+            Some(o) => segs[0] = o.clone(),
+            None => {
+                segs.remove(0);
+            }
+        },
+        _ => {}
+    }
+    let Some(name) = segs.last() else { return Vec::new() };
+    let Some(cands) = by_name.get(name) else { return Vec::new() };
+    let want: Vec<&str> = segs.iter().map(String::as_str).collect();
+    cands
+        .iter()
+        .copied()
+        .filter(|&c| qual_segs[c].ends_with(&want))
+        .collect()
+}
+
+/// Result of a reachability walk.
+#[derive(Debug)]
+pub struct Reach {
+    pub visited: Vec<bool>,
+    pub parent: Vec<Option<usize>>,
+}
+
+impl Reach {
+    /// The BFS chain root → .. → `v` as node indices.
+    pub fn chain(&self, v: usize) -> Vec<usize> {
+        let mut chain = vec![v];
+        let mut cur = v;
+        while let Some(p) = self.parent[cur] {
+            chain.push(p);
+            cur = p;
+        }
+        chain.reverse();
+        chain
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parser::parse;
+    use super::*;
+
+    fn graph(files: &[(&str, &str)]) -> (Vec<ParsedFile>, CallGraph) {
+        let parsed: Vec<ParsedFile> =
+            files.iter().map(|(rel, src)| parse(rel, src)).collect();
+        let g = CallGraph::build(&parsed);
+        (parsed, g)
+    }
+
+    fn idx(g: &CallGraph, qual: &str) -> usize {
+        g.nodes.iter().position(|n| n.qual == qual).unwrap_or_else(|| {
+            panic!("no node {qual}; have {:?}", g.nodes.iter().map(|n| &n.qual).collect::<Vec<_>>())
+        })
+    }
+
+    fn callees(g: &CallGraph, from: &str) -> Vec<String> {
+        g.edges[idx(g, from)].iter().map(|e| g.nodes[e.callee].qual.clone()).collect()
+    }
+
+    #[test]
+    fn bare_and_path_calls_resolve() {
+        let (_, g) = graph(&[
+            ("serve/mod.rs", "pub fn serve() { crate::solver::solve(); helper(); }\nfn helper() {}"),
+            ("solver/mod.rs", "pub fn solve() { inner_step(); }\nfn inner_step() {}"),
+        ]);
+        assert_eq!(callees(&g, "serve::serve"), vec!["serve::helper", "solver::solve"]);
+        assert_eq!(callees(&g, "solver::solve"), vec!["solver::inner_step"]);
+    }
+
+    #[test]
+    fn method_calls_link_to_every_same_named_fn() {
+        // The adversarial case from ISSUE.md: two types with a method
+        // of the same name — a call through either receiver must be
+        // conservatively linked to BOTH impls.
+        let src = "struct A; struct B;\n\
+                   impl A { fn run(&self) {} }\n\
+                   impl B { fn run(&self) { panic!(\"b\") } }\n\
+                   fn go(a: &A) { a.run(); }";
+        let (_, g) = graph(&[("solver/mod.rs", src)]);
+        assert_eq!(
+            callees(&g, "solver::go"),
+            vec!["solver::A::run", "solver::B::run"],
+            "method call must over-approximate to both candidates"
+        );
+    }
+
+    #[test]
+    fn unmatched_paths_are_external() {
+        let (_, g) = graph(&[(
+            "solver/mod.rs",
+            "fn f() { std::mem::take(&mut x); Vec::new(); y.unwrap(); }",
+        )]);
+        assert!(callees(&g, "solver::f").is_empty());
+    }
+
+    #[test]
+    fn self_and_use_alias_resolution() {
+        let files = [
+            (
+                "serve/registry.rs",
+                "use crate::util::sync::lock_ok;\n\
+                 struct Registry;\n\
+                 impl Registry {\n\
+                   fn fit(&self) { Self::validate(); lock_ok(); }\n\
+                   fn validate() {}\n\
+                 }",
+            ),
+            ("util/sync.rs", "pub fn lock_ok() {}"),
+        ];
+        let (_, g) = graph(&files);
+        assert_eq!(
+            callees(&g, "serve::registry::Registry::fit"),
+            vec!["serve::registry::Registry::validate", "util::sync::lock_ok"]
+        );
+    }
+
+    #[test]
+    fn reachability_skips_tests_and_yields_chains() {
+        let files = [
+            ("serve/mod.rs", "pub fn entry() { crate::solver::solve(); }"),
+            (
+                "solver/mod.rs",
+                "pub fn solve() { helper(); }\nfn helper() {}\nfn dead() { helper(); }\n\
+                 #[cfg(test)]\nmod tests {\n  #[test]\n  fn t() { super::dead(); }\n}",
+            ),
+        ];
+        let (_, g) = graph(&files);
+        let roots: Vec<usize> = (0..g.nodes.len())
+            .filter(|&i| g.nodes[i].file.starts_with("serve/") && !g.nodes[i].is_test)
+            .collect();
+        let r = g.reach_from(&roots);
+        assert!(r.visited[idx(&g, "solver::helper")]);
+        assert!(!r.visited[idx(&g, "solver::dead")], "only a test calls dead()");
+        let chain: Vec<String> =
+            r.chain(idx(&g, "solver::helper")).iter().map(|&i| g.nodes[i].qual.clone()).collect();
+        assert_eq!(chain, vec!["serve::entry", "solver::solve", "solver::helper"]);
+    }
+
+    #[test]
+    fn two_walks_are_byte_identical() {
+        let files = [
+            ("serve/mod.rs", "pub fn entry() { a(); b(); }"),
+            ("solver/mod.rs", "pub fn a() { b(); }\npub fn b() { a(); }"),
+        ];
+        let parsed: Vec<ParsedFile> =
+            files.iter().map(|(rel, src)| parse(rel, src)).collect();
+        let g1 = CallGraph::build(&parsed);
+        let g2 = CallGraph::build(&parsed);
+        let dump = |g: &CallGraph| {
+            let mut s = String::new();
+            for (i, n) in g.nodes.iter().enumerate() {
+                s.push_str(&format!("{i} {} <- {:?}\n", n.qual, g.edges[i]));
+            }
+            s
+        };
+        assert_eq!(dump(&g1), dump(&g2));
+        let roots = [0usize];
+        let r1 = g1.reach_from(&roots);
+        let r2 = g2.reach_from(&roots);
+        assert_eq!(format!("{:?}", r1), format!("{:?}", r2));
+    }
+}

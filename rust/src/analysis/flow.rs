@@ -1,0 +1,573 @@
+//! Cross-file, call-graph-aware lints: `panic-reachability` and
+//! `lock-order`. Both run over the whole parsed crate at once (unlike
+//! the per-file lints in [`super::lints`]) and both over-approximate —
+//! see the contract in [`super::callgraph`] and `docs/ANALYSIS.md`.
+
+use super::callgraph::CallGraph;
+use super::lexer::{Tok, TokKind};
+use super::parser::ParsedFile;
+use super::Finding;
+use std::collections::BTreeMap;
+
+/// Run both cross-file lints. Findings come back unsuppressed;
+/// [`super::audit_sources`] applies pragmas afterwards.
+pub fn run(files: &[ParsedFile], graph: &CallGraph) -> Vec<Finding> {
+    let mut out = Vec::new();
+    panic_reachability(files, graph, &mut out);
+    lock_order(files, graph, &mut out);
+    out
+}
+
+// ---------------------------------------------------------------------
+// panic-reachability
+// ---------------------------------------------------------------------
+
+/// Panic-family macros: `name!(..)`.
+const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+
+/// The transitive closure of `serve-no-panic`: starting from every
+/// non-test fn in `serve/` (the HTTP entry points and everything the
+/// router can invoke), walk the conservative call graph and flag
+/// panic-family tokens in every reachable fn *outside* `serve/`
+/// (`serve/` itself stays covered — once, not twice — by the per-file
+/// `serve-no-panic` lint). The finding carries the full BFS call chain
+/// so the report shows *why* the solver-side `unwrap` is a server
+/// liability.
+fn panic_reachability(files: &[ParsedFile], graph: &CallGraph, out: &mut Vec<Finding>) {
+    let roots: Vec<usize> = (0..graph.nodes.len())
+        .filter(|&i| graph.nodes[i].file.starts_with("serve/") && !graph.nodes[i].is_test)
+        .collect();
+    if roots.is_empty() {
+        return;
+    }
+    let reach = graph.reach_from(&roots);
+    for (v, node) in graph.nodes.iter().enumerate() {
+        if !reach.visited[v] || node.file.starts_with("serve/") {
+            continue;
+        }
+        let toks = &files[node.file_idx].lexed.toks;
+        let (lo, hi) = node.body;
+        for j in lo..=hi.min(toks.len().saturating_sub(1)) {
+            if toks[j].kind != TokKind::Ident {
+                continue;
+            }
+            let t = toks[j].text.as_str();
+            let next = toks.get(j + 1).map(|x| x.text.as_str());
+            let is_panic = if (t == "unwrap" || t == "expect") && next == Some("(") {
+                // A crate-local fn of the same name shadows the std
+                // panicking method: the call is then an ordinary edge
+                // whose target body is scanned on its own.
+                !graph.has_fn_named(t)
+            } else {
+                PANIC_MACROS.contains(&t) && next == Some("!")
+            };
+            if !is_panic {
+                continue;
+            }
+            let chain = render_chain(graph, &reach.chain(v));
+            let shape = if next == Some("!") { format!("{t}!") } else { format!("{t}()") };
+            out.push(Finding {
+                file: node.file.clone(),
+                line: toks[j].line,
+                lint: "panic-reachability",
+                message: format!(
+                    "`{shape}` in `{}` is reachable from a serve/ entry point \
+                     (chain: {chain}) — a panic here tears down the server",
+                    node.qual
+                ),
+                suppressed: false,
+            });
+        }
+    }
+}
+
+/// `root -> .. -> leaf` as qualified names; long chains elide the
+/// middle so messages stay one line.
+fn render_chain(graph: &CallGraph, chain: &[usize]) -> String {
+    let quals: Vec<&str> = chain.iter().map(|&i| graph.nodes[i].qual.as_str()).collect();
+    if quals.len() <= 6 {
+        quals.join(" -> ")
+    } else {
+        format!(
+            "{} -> {} -> .. {} hops .. -> {} -> {}",
+            quals[0],
+            quals[1],
+            quals.len() - 4,
+            quals[quals.len() - 2],
+            quals[quals.len() - 1]
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
+// lock-order
+// ---------------------------------------------------------------------
+
+/// One lock acquisition inside a fn body.
+struct Acq {
+    /// Token index of the acquisition call.
+    idx: usize,
+    line: u32,
+    /// Normalized lock identity (dotted receiver path, `self.` stripped,
+    /// indices collapsed to `[_]`).
+    id: String,
+    /// Last token index at which the guard is conservatively live.
+    live_end: usize,
+}
+
+/// Where one ordered pair `first -> second` was observed.
+#[derive(Clone)]
+struct PairSite {
+    file: String,
+    /// Line of the *second* acquisition (taken while the first is held).
+    line: u32,
+    first_line: u32,
+    fn_qual: String,
+}
+
+/// Per-fn lock-acquisition sequences feed a global lock-order graph;
+/// any cycle in that graph is a potential deadlock: two threads can
+/// each hold one lock of the cycle and block on the next. Guard
+/// liveness is over-approximated (a `let`-bound guard lives to the end
+/// of its block unless `drop(guard)` intervenes; a temporary guard to
+/// the end of its statement), and lock identity is syntactic — both
+/// choices only ever *add* edges.
+fn lock_order(files: &[ParsedFile], graph: &CallGraph, out: &mut Vec<Finding>) {
+    let mut edges: BTreeMap<(String, String), PairSite> = BTreeMap::new();
+
+    for node in &graph.nodes {
+        if node.is_test {
+            continue;
+        }
+        let pf = &files[node.file_idx];
+        let toks = &pf.lexed.toks;
+        let has_rwlock = toks.iter().any(|t| t.kind == TokKind::Ident && t.text == "RwLock");
+        let (lo, hi) = node.body;
+        let hi = hi.min(toks.len().saturating_sub(1));
+        let mut acqs: Vec<Acq> = Vec::new();
+        for j in lo..=hi {
+            if toks[j].kind != TokKind::Ident
+                || !toks.get(j + 1).is_some_and(|t| t.text == "(")
+            {
+                continue;
+            }
+            let t = toks[j].text.as_str();
+            let id = if t == "lock_ok" {
+                // lock_ok(&self.inner.state) — identity from the argument.
+                receiver_forward(toks, j + 2)
+            } else if t == "lock" || (has_rwlock && (t == "read" || t == "write")) {
+                // x.lock() — identity from the receiver, if the token
+                // before the name is the method dot.
+                if j >= 2 && toks[j - 1].text == "." {
+                    receiver_backward(toks, j - 2)
+                } else {
+                    None
+                }
+            } else {
+                None
+            };
+            let Some(id) = id else { continue };
+            let live_end = guard_live_end(toks, j, hi);
+            acqs.push(Acq { idx: j, line: toks[j].line, id, live_end });
+        }
+
+        for a in 0..acqs.len() {
+            for b in (a + 1)..acqs.len() {
+                if acqs[b].idx > acqs[a].live_end {
+                    break;
+                }
+                if acqs[a].id == acqs[b].id {
+                    out.push(Finding {
+                        file: node.file.clone(),
+                        line: acqs[b].line,
+                        lint: "lock-order",
+                        message: format!(
+                            "`{}` re-acquired in `{}` while already held since line {} \
+                             — std::sync locks are not reentrant (self-deadlock)",
+                            acqs[b].id, node.qual, acqs[a].line
+                        ),
+                        suppressed: false,
+                    });
+                    continue;
+                }
+                edges
+                    .entry((acqs[a].id.clone(), acqs[b].id.clone()))
+                    .or_insert_with(|| PairSite {
+                        file: node.file.clone(),
+                        line: acqs[b].line,
+                        first_line: acqs[a].line,
+                        fn_qual: node.qual.clone(),
+                    });
+            }
+        }
+    }
+
+    // Global cycle check: flag every edge whose reverse direction is
+    // reachable in the order graph (each such site is one constituent
+    // of a deadlock cycle, so each gets its own finding).
+    let mut adj: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for (from, to) in edges.keys() {
+        adj.entry(from.as_str()).or_default().push(to.as_str());
+    }
+    for ((from, to), site) in &edges {
+        let Some(path) = order_path(&adj, to, from) else { continue };
+        // Witness: where the first reverse step was observed.
+        let witness = edges
+            .get(&(to.clone(), path[1].to_string()))
+            .map(|w| format!(" (reverse order at {}:{} in `{}`)", w.file, w.line, w.fn_qual))
+            .unwrap_or_default();
+        let cycle: Vec<&str> =
+            std::iter::once(from.as_str()).chain(path.iter().copied()).collect();
+        out.push(Finding {
+            file: site.file.clone(),
+            line: site.line,
+            lint: "lock-order",
+            message: format!(
+                "lock-order cycle: `{}` (line {}) is held while acquiring `{}` in `{}`, \
+                 but the lock-order graph also orders {} — potential deadlock{}",
+                from,
+                site.first_line,
+                to,
+                site.fn_qual,
+                cycle.join(" -> "),
+                witness
+            ),
+            suppressed: false,
+        });
+    }
+}
+
+/// Shortest path `from -> .. -> to` in the order graph (BFS over sorted
+/// adjacency), as lock ids including both endpoints. `None` if
+/// unreachable.
+fn order_path<'a>(
+    adj: &BTreeMap<&'a str, Vec<&'a str>>,
+    from: &'a str,
+    to: &str,
+) -> Option<Vec<&'a str>> {
+    let mut parent: BTreeMap<&str, &str> = BTreeMap::new();
+    let mut queue = std::collections::VecDeque::from([from]);
+    parent.insert(from, from);
+    while let Some(v) = queue.pop_front() {
+        if v == to {
+            let mut path = vec![v];
+            let mut cur = v;
+            while parent[cur] != cur {
+                cur = parent[cur];
+                path.push(cur);
+            }
+            path.reverse();
+            return Some(path);
+        }
+        for &w in adj.get(v).into_iter().flatten() {
+            parent.entry(w).or_insert_with(|| {
+                queue.push_back(w);
+                v
+            });
+        }
+    }
+    None
+}
+
+/// Identity of `lock_ok(&self.a.b[i])`'s argument, scanning forward
+/// from just past the `(`.
+fn receiver_forward(toks: &[Tok], mut j: usize) -> Option<String> {
+    while toks.get(j).is_some_and(|t| t.text == "&" || t.text == "mut") {
+        j += 1;
+    }
+    let mut segs: Vec<String> = Vec::new();
+    loop {
+        match toks.get(j) {
+            Some(t) if t.kind == TokKind::Ident => {
+                segs.push(t.text.clone());
+                j += 1;
+            }
+            _ => break,
+        }
+        match toks.get(j).map(|t| t.text.as_str()) {
+            Some(".") => j += 1,
+            Some("[") => {
+                let mut d = 0i32;
+                while let Some(t) = toks.get(j) {
+                    if t.text == "[" {
+                        d += 1;
+                    } else if t.text == "]" {
+                        d -= 1;
+                        if d == 0 {
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+                segs.push("[_]".to_string());
+                j += 1;
+                if toks.get(j).is_some_and(|t| t.text == ".") {
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            _ => break,
+        }
+    }
+    normalize_id(segs)
+}
+
+/// Identity of the receiver of `recv.lock()`, scanning backward from
+/// the token before the method dot.
+fn receiver_backward(toks: &[Tok], end: usize) -> Option<String> {
+    let mut segs: Vec<String> = Vec::new();
+    let mut j = end as i64;
+    loop {
+        if j < 0 {
+            break;
+        }
+        let ju = j as usize;
+        if toks[ju].text == "]" {
+            let mut d = 0i32;
+            while j >= 0 {
+                let t = toks[j as usize].text.as_str();
+                if t == "]" {
+                    d += 1;
+                } else if t == "[" {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                }
+                j -= 1;
+            }
+            segs.push("[_]".to_string());
+            j -= 1;
+            if !(j >= 0 && toks[j as usize].kind == TokKind::Ident) {
+                break;
+            }
+            continue;
+        }
+        if toks[ju].kind == TokKind::Ident {
+            segs.push(toks[ju].text.clone());
+            if ju >= 1 && toks[ju - 1].text == "." {
+                j -= 2;
+                continue;
+            }
+        }
+        break;
+    }
+    segs.reverse();
+    normalize_id(segs)
+}
+
+/// Join segments, dropping a leading `self` (so `self.state` in a
+/// method and `state` on a local borrow of the same field agree).
+fn normalize_id(mut segs: Vec<String>) -> Option<String> {
+    if segs.first().is_some_and(|s| s == "self") {
+        segs.remove(0);
+    }
+    if segs.is_empty() || segs == ["[_]"] {
+        return None;
+    }
+    Some(segs.join("."))
+}
+
+/// Last token index at which the guard produced at `idx` is
+/// conservatively live: end of the enclosing block for `let`-bound
+/// guards (or the `drop(name)` that releases it early), end of the
+/// statement for temporaries.
+fn guard_live_end(toks: &[Tok], idx: usize, hi: usize) -> usize {
+    // Is the containing statement a `let`?
+    let mut b = idx as i64 - 1;
+    while b >= 0 {
+        let t = toks[b as usize].text.as_str();
+        if t == ";" || t == "{" || t == "}" {
+            break;
+        }
+        b -= 1;
+    }
+    let mut first_ident = None;
+    for t in toks.iter().take(idx).skip((b + 1).max(0) as usize) {
+        if t.kind == TokKind::Ident {
+            first_ident = Some(t.text.as_str());
+            break;
+        }
+    }
+    let let_bound = first_ident == Some("let");
+    // Guard name: first ident after `let`, skipping `mut` (patterns like
+    // `let Some(x) = ..` yield a non-name — drop() tracking then simply
+    // never fires, which only extends liveness, i.e. stays conservative).
+    let guard_name: Option<String> = if let_bound {
+        let mut j = (b + 1).max(0) as usize;
+        let mut name = None;
+        let mut seen_let = false;
+        while j < idx {
+            if toks[j].kind == TokKind::Ident {
+                match toks[j].text.as_str() {
+                    "let" => seen_let = true,
+                    "mut" => {}
+                    other if seen_let => {
+                        name = Some(other.to_string());
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        name
+    } else {
+        None
+    };
+
+    let mut depth = 0i32;
+    let mut stmt_end: Option<usize> = None;
+    let mut j = idx;
+    while j <= hi {
+        let t = toks[j].text.as_str();
+        match t {
+            "{" | "(" | "[" => depth += 1,
+            "}" | ")" | "]" => {
+                if depth == 0 && t == "}" {
+                    // enclosing block closes here
+                    return if let_bound { j } else { stmt_end.unwrap_or(j) };
+                }
+                depth -= 1;
+            }
+            ";" if depth == 0 => {
+                if !let_bound {
+                    return j;
+                }
+                stmt_end.get_or_insert(j);
+            }
+            "drop" if toks[j].kind == TokKind::Ident && let_bound => {
+                let dropped = toks.get(j + 1).is_some_and(|t| t.text == "(")
+                    && toks.get(j + 2).map(|t| Some(&t.text) == guard_name.as_ref())
+                        == Some(true)
+                    && toks.get(j + 3).is_some_and(|t| t.text == ")");
+                if dropped {
+                    return j;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    hi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parser::{parse, ParsedFile};
+    use super::*;
+
+    fn findings(files: &[(&str, &str)]) -> Vec<Finding> {
+        let parsed: Vec<ParsedFile> =
+            files.iter().map(|(rel, src)| parse(rel, src)).collect();
+        let graph = CallGraph::build(&parsed);
+        run(&parsed, &graph)
+    }
+
+    #[test]
+    fn seeded_panic_outside_serve_is_caught_with_chain() {
+        // The ISSUE.md acceptance fixture: a panic in a serve-reachable
+        // callee *outside* serve/ must be caught, with the chain shown.
+        let got = findings(&[
+            ("serve/http.rs", "pub fn handle() { crate::solver::solve(); }"),
+            ("solver/mod.rs", "pub fn solve() { step(); }\nfn step() { x.unwrap(); }"),
+        ]);
+        let hits: Vec<_> = got.iter().filter(|f| f.lint == "panic-reachability").collect();
+        assert_eq!(hits.len(), 1, "{got:?}");
+        assert_eq!(hits[0].file, "solver/mod.rs");
+        assert_eq!(hits[0].line, 2);
+        assert!(
+            hits[0].message.contains("serve::http::handle -> solver::solve -> solver::step"),
+            "chain missing: {}",
+            hits[0].message
+        );
+    }
+
+    #[test]
+    fn unreachable_panics_and_serve_files_are_not_double_reported() {
+        let got = findings(&[
+            ("serve/http.rs", "pub fn handle() { helper(); }\nfn helper() {}"),
+            // never called from serve/: out of reach
+            ("solver/mod.rs", "pub fn offline() { x.unwrap(); }"),
+        ]);
+        assert!(got.iter().all(|f| f.lint != "panic-reachability"), "{got:?}");
+
+        // a panic inside serve/ itself belongs to serve-no-panic only
+        let got = findings(&[("serve/http.rs", "pub fn handle() { x.unwrap(); }")]);
+        assert!(got.iter().all(|f| f.lint != "panic-reachability"), "{got:?}");
+    }
+
+    #[test]
+    fn panic_macros_count_and_tests_do_not() {
+        let got = findings(&[
+            ("serve/http.rs", "pub fn handle() { crate::solver::go(); }"),
+            (
+                "solver/mod.rs",
+                "pub fn go() { if bad { panic!(\"boom\") } }\n\
+                 #[cfg(test)]\nmod tests {\n  #[test]\n  fn t() { go(); x.unwrap(); }\n}",
+            ),
+        ]);
+        let hits: Vec<_> = got.iter().filter(|f| f.lint == "panic-reachability").collect();
+        assert_eq!(hits.len(), 1, "{got:?}");
+        assert!(hits[0].message.contains("panic!"), "{}", hits[0].message);
+    }
+
+    #[test]
+    fn inverted_two_mutex_order_is_a_cycle() {
+        // The ISSUE.md acceptance fixture: fn a takes A then B, fn b
+        // takes B then A.
+        let src = "use crate::util::sync::lock_ok;\n\
+                   fn a(x: &S) {\n  let g1 = lock_ok(&x.alpha);\n  let g2 = lock_ok(&x.beta);\n}\n\
+                   fn b(x: &S) {\n  let g1 = lock_ok(&x.beta);\n  let g2 = lock_ok(&x.alpha);\n}";
+        let got = findings(&[("solver/parallel.rs", src)]);
+        let hits: Vec<_> = got.iter().filter(|f| f.lint == "lock-order").collect();
+        assert_eq!(hits.len(), 2, "one finding per direction: {got:?}");
+        assert!(hits[0].message.contains("cycle"), "{}", hits[0].message);
+        assert!(
+            hits.iter().any(|f| f.line == 4) && hits.iter().any(|f| f.line == 8),
+            "anchored at the second acquisition of each fn: {hits:?}"
+        );
+        assert!(
+            hits.iter().any(|f| f.message.contains("reverse order at")),
+            "counterpart site cited: {hits:?}"
+        );
+    }
+
+    #[test]
+    fn consistent_order_and_dropped_guards_are_clean() {
+        // Same order in both fns: no cycle.
+        let consistent = "fn a(x: &S) { let g1 = lock_ok(&x.alpha); let g2 = lock_ok(&x.beta); }\n\
+                          fn b(x: &S) { let g1 = lock_ok(&x.alpha); let g2 = lock_ok(&x.beta); }";
+        let got = findings(&[("serve/jobs.rs", consistent)]);
+        assert!(got.iter().all(|f| f.lint != "lock-order"), "{got:?}");
+
+        // drop() between inverted acquisitions: never held together.
+        let dropped = "fn a(x: &S) { let g1 = lock_ok(&x.alpha); drop(g1); let g2 = lock_ok(&x.beta); }\n\
+                       fn b(x: &S) { let g1 = lock_ok(&x.beta); drop(g1); let g2 = lock_ok(&x.alpha); }";
+        let got = findings(&[("serve/jobs.rs", dropped)]);
+        assert!(got.iter().all(|f| f.lint != "lock-order"), "{got:?}");
+    }
+
+    #[test]
+    fn method_lock_receivers_and_self_normalize() {
+        // `self.state.lock()` in one fn and `lock_ok(&self.state)` in
+        // another must agree on the identity `state`.
+        let src = "impl R {\n\
+                     fn a(&self) { let g = self.state.lock(); let h = lock_ok(&self.aux); }\n\
+                     fn b(&self) { let g = lock_ok(&self.aux); let h = lock_ok(&self.state); }\n\
+                   }";
+        let got = findings(&[("serve/registry.rs", src)]);
+        let hits: Vec<_> = got.iter().filter(|f| f.lint == "lock-order").collect();
+        assert_eq!(hits.len(), 2, "state->aux vs aux->state: {got:?}");
+    }
+
+    #[test]
+    fn reacquiring_a_held_lock_is_flagged() {
+        let src = "fn a(x: &S) { let g1 = lock_ok(&x.state); let g2 = lock_ok(&x.state); }";
+        let got = findings(&[("serve/jobs.rs", src)]);
+        let hits: Vec<_> = got.iter().filter(|f| f.lint == "lock-order").collect();
+        assert_eq!(hits.len(), 1, "{got:?}");
+        assert!(hits[0].message.contains("not reentrant"), "{}", hits[0].message);
+    }
+}

@@ -1,5 +1,8 @@
-//! The audit lint catalogue: six named, project-specific invariants
-//! checked over the token stream of [`super::lexer`].
+//! The audit lint catalogue: the single registry of every named lint,
+//! plus the seven per-file lints checked over the token stream of
+//! [`super::lexer`]. The two cross-file lints (`panic-reachability`,
+//! `lock-order`) are registered here but implemented in [`super::flow`]
+//! on top of the call graph.
 //!
 //! Each lint encodes a contract the runtime test suite can only observe
 //! *after* a violation has already changed behavior — here they are
@@ -16,16 +19,77 @@
 use super::lexer::{Lexed, Tok, TokKind};
 use super::Finding;
 
-/// Names of every lint, in reporting order. Pragmas must use one of
-/// these exact names.
-pub const LINT_NAMES: [&str; 6] = [
-    "float-determinism",
-    "simd-containment",
-    "trace-transparency",
-    "unsafe-hygiene",
-    "determinism",
-    "serve-no-panic",
+/// One registered lint: its pragma/CLI name and a one-line contract
+/// (surfaced as the SARIF rule description and in `--help`).
+#[derive(Debug, Clone, Copy)]
+pub struct LintSpec {
+    pub name: &'static str,
+    pub summary: &'static str,
+}
+
+/// The single lint registry. Everything else — pragma validation,
+/// `--lint` filtering, SARIF rule metadata, docs — derives from this
+/// table, so adding a lint here cannot desync the names.
+pub const LINTS: [LintSpec; 9] = [
+    LintSpec {
+        name: "float-determinism",
+        summary: "no mul_add/FMA/libm shortcuts outside linalg/kernels/ \
+                  (bitwise-reproducibility contract)",
+    },
+    LintSpec {
+        name: "simd-containment",
+        summary: "SIMD intrinsics only in kernels/avx2.rs, inside \
+                  #[target_feature] fns behind the dispatch table",
+    },
+    LintSpec {
+        name: "trace-transparency",
+        summary: "clock reads in solver code must be tracing-guarded \
+                  (zero syscalls with tracing off)",
+    },
+    LintSpec {
+        name: "unsafe-hygiene",
+        summary: "every unsafe block carries // SAFETY: and lives in an \
+                  allowlisted module",
+    },
+    LintSpec {
+        name: "determinism",
+        summary: "no HashMap/HashSet in float-order-sensitive modules \
+                  (solver/, screening/, problem.rs)",
+    },
+    LintSpec {
+        name: "serve-no-panic",
+        summary: "no unwrap/expect/panic! in serve/ itself (the request \
+                  path returns JSON errors)",
+    },
+    LintSpec {
+        name: "screening-soundness",
+        summary: "sphere radii outside datafit/ must route through \
+                  DataFit::gap_safe_radius, not ad-hoc sqrt(2*gap/..) \
+                  arithmetic",
+    },
+    LintSpec {
+        name: "panic-reachability",
+        summary: "no panic-family call transitively reachable from a \
+                  serve/ entry point, crate-wide (call-graph closure)",
+    },
+    LintSpec {
+        name: "lock-order",
+        summary: "lock acquisition order must be globally acyclic across \
+                  all functions (deadlock freedom)",
+    },
 ];
+
+/// Names of every lint, in reporting order, derived from [`LINTS`].
+/// Pragmas must use one of these exact names.
+pub const LINT_NAMES: [&str; LINTS.len()] = {
+    let mut names = [""; LINTS.len()];
+    let mut i = 0;
+    while i < LINTS.len() {
+        names[i] = LINTS[i].name;
+        i += 1;
+    }
+    names
+};
 
 /// How far above an `unsafe` token a `// SAFETY:` comment may sit
 /// (lines). Covers a comment above doc/attribute lines on fn items.
@@ -194,8 +258,34 @@ pub fn run(rel: &str, lx: &Lexed) -> Vec<Finding> {
             );
         }
 
-        // serve-no-panic: nothing reachable from a request may panic —
-        // a panicking worker tears down the whole resident server.
+        // screening-soundness: the Gap Safe sphere radius is a proof
+        // obligation — its validity depends on the datafit's curvature
+        // bound, so the *only* place allowed to spell the radius formula
+        // is the DataFit impl. Ad-hoc `sqrt(2.0 * gap / ..)` arithmetic
+        // in screening/solver code silently breaks the safety proof the
+        // moment a datafit without a global bound (Poisson) is plugged
+        // in. Everything outside datafit/ must route through
+        // `DataFit::gap_safe_radius`.
+        if det_scope && t == "sqrt" {
+            let stmt = stmt_tokens(toks, idx);
+            let names = |p: fn(&str) -> bool| stmt.iter().any(|s| p(s));
+            let routed = names(|s| s == "gap_safe_radius");
+            let gapish = names(|s| s.starts_with("gap"));
+            if gapish && !routed {
+                add(
+                    "screening-soundness",
+                    tok.line,
+                    "ad-hoc Gap Safe radius arithmetic (sqrt over a duality gap) — \
+                     route through DataFit::gap_safe_radius"
+                        .to_string(),
+                );
+            }
+        }
+
+        // serve-no-panic: nothing in serve/ itself may panic — a
+        // panicking worker tears down the whole resident server. The
+        // transitive version of this contract (callees *outside* serve/)
+        // is `panic-reachability` in super::flow.
         if in_serve {
             let next = toks.get(idx + 1).map(|x| x.text.as_str());
             if (t == "unwrap" || t == "expect") && next == Some("(") {
@@ -215,11 +305,63 @@ pub fn run(rel: &str, lx: &Lexed) -> Vec<Finding> {
             }
         }
     }
+
+    // screening-soundness, staged form: `2.0 * gap / ..` radius
+    // arithmetic built up without a `sqrt` in the same statement still
+    // spells the radius formula outside the datafit (the sqrt-bearing
+    // statement is caught above; this catches the split-across-lets
+    // variant at its source).
+    if det_scope {
+        for (idx, tok) in toks.iter().enumerate() {
+            if tok.kind != TokKind::Num
+                || !(tok.text == "2.0" || tok.text == "2")
+                || in_spans(idx, &tests)
+            {
+                continue;
+            }
+            let times_gap = toks.get(idx + 1).is_some_and(|x| x.text == "*")
+                && toks.get(idx + 2).is_some_and(|x| {
+                    x.kind == TokKind::Ident && x.text.starts_with("gap")
+                });
+            if !times_gap {
+                continue;
+            }
+            let stmt = stmt_tokens(toks, idx);
+            if stmt.iter().any(|s| s == "gap_safe_radius" || s == "sqrt") {
+                continue; // routed, or already reported via the sqrt form
+            }
+            add(
+                "screening-soundness",
+                tok.line,
+                "ad-hoc Gap Safe radius arithmetic (`2 * gap` scaling) — \
+                 route through DataFit::gap_safe_radius"
+                    .to_string(),
+            );
+        }
+    }
     out
 }
 
+/// Token texts of the whole statement containing `idx`: from the
+/// nearest `;`/`{`/`}` boundary on the left to the nearest on the right.
+fn stmt_tokens(toks: &[Tok], idx: usize) -> Vec<String> {
+    let mut stmt = stmt_prefix(toks, idx);
+    let mut j = idx;
+    while j < toks.len() {
+        let t = &toks[j].text;
+        if j > idx && (t == ";" || t == "{" || t == "}") {
+            break;
+        }
+        stmt.push(t.clone());
+        j += 1;
+    }
+    stmt
+}
+
 /// Token-index ranges covered by `#[cfg(test)]` / `#[test]` items.
-fn test_spans(toks: &[Tok]) -> Vec<(usize, usize)> {
+/// Shared with [`super::parser`] so the call graph agrees with the
+/// per-file lints about what counts as test code.
+pub(super) fn test_spans(toks: &[Tok]) -> Vec<(usize, usize)> {
     let mut spans = Vec::new();
     let mut i = 0usize;
     while i < toks.len() {
@@ -265,7 +407,7 @@ fn test_spans(toks: &[Tok]) -> Vec<(usize, usize)> {
 /// From `start`, find the end of the next item: skip to the first `{` or
 /// `;` at bracket depth 0, then (for `{`) to its matching `}`. Returns
 /// the index of the closing token.
-fn item_body_end(toks: &[Tok], start: usize) -> Option<usize> {
+pub(super) fn item_body_end(toks: &[Tok], start: usize) -> Option<usize> {
     let mut m = start;
     let mut bd = 0i32;
     while m < toks.len() {
@@ -399,6 +541,6 @@ fn stmt_prefix(toks: &[Tok], idx: usize) -> Vec<String> {
 }
 
 /// Is token `idx` inside any of `spans` (inclusive)?
-fn in_spans(idx: usize, spans: &[(usize, usize)]) -> bool {
+pub(super) fn in_spans(idx: usize, spans: &[(usize, usize)]) -> bool {
     spans.iter().any(|&(a, b)| a <= idx && idx <= b)
 }

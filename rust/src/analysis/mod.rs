@@ -5,10 +5,14 @@
 //! variable) and this repo's stronger bitwise-transparency contracts are
 //! enforced at runtime by parity tests — but a parity test only fails
 //! *after* someone has introduced the drift. This module rejects the
-//! drift at the source level: a hand-rolled lexer ([`lexer`]) feeds six
-//! named lints ([`lints`]) that walk every file under `rust/src/`.
+//! drift at the source level: a hand-rolled lexer ([`lexer`]) feeds an
+//! item parser ([`parser`]) and a conservative crate-wide call graph
+//! ([`callgraph`]); seven per-file lints ([`lints`]) and two
+//! call-graph-aware lints ([`flow`]) walk every file under `rust/src/`.
 //!
 //! # Lints
+//!
+//! The registry is the single [`lints::LINTS`] table; the nine entries:
 //!
 //! | lint | contract |
 //! |---|---|
@@ -17,7 +21,14 @@
 //! | `trace-transparency` | clock reads in solver code must be tracing-guarded |
 //! | `unsafe-hygiene` | every `unsafe` carries `// SAFETY:` and lives in an allowlisted module |
 //! | `determinism` | no `HashMap`/`HashSet` in `solver/`, `screening/`, `problem.rs` |
-//! | `serve-no-panic` | no `unwrap`/`expect`/`panic!` reachable from the `serve/` request path |
+//! | `serve-no-panic` | no `unwrap`/`expect`/`panic!` in `serve/` itself |
+//! | `screening-soundness` | radius math outside `datafit/` routes through `DataFit::gap_safe_radius` |
+//! | `panic-reachability` | no panic-family call transitively reachable from a `serve/` entry point |
+//! | `lock-order` | the global lock-acquisition-order graph stays acyclic |
+//!
+//! Reports render as text, compact JSON, or SARIF 2.1.0
+//! (`gapsafe audit --format sarif`), and `--lint a,b` narrows a run to
+//! named lints.
 //!
 //! # Suppression
 //!
@@ -34,8 +45,11 @@
 //! rationale, and the dynamic-analysis legs (TSan, Miri) that cover what
 //! a lexer cannot see.
 
+pub mod callgraph;
+pub mod flow;
 pub mod lexer;
 pub mod lints;
+pub mod parser;
 
 use crate::util::json::Json;
 use std::path::{Path, PathBuf};
@@ -95,6 +109,89 @@ impl Report {
         ])
     }
 
+    /// SARIF 2.1.0 report (`gapsafe audit --format sarif`): one run,
+    /// rule metadata straight from the [`lints::LINTS`] registry, one
+    /// result per finding, suppressed findings carried as
+    /// `suppressions: [{kind: "inSource"}]` so SARIF viewers show them
+    /// greyed out instead of dropping them.
+    pub fn to_sarif(&self) -> Json {
+        let mut rules: Vec<Json> = lints::LINTS
+            .iter()
+            .map(|l| {
+                Json::obj([
+                    ("id", Json::Str(l.name.to_string())),
+                    ("shortDescription", Json::obj([("text", Json::Str(l.summary.to_string()))])),
+                ])
+            })
+            .collect();
+        rules.push(Json::obj([
+            ("id", Json::Str("audit-pragma".to_string())),
+            (
+                "shortDescription",
+                Json::obj([(
+                    "text",
+                    Json::Str("audit-allow pragmas must name a known lint and carry a reason".to_string()),
+                )]),
+            ),
+        ]));
+        let results: Vec<Json> = self
+            .findings
+            .iter()
+            .map(|f| {
+                let location = Json::obj([(
+                    "physicalLocation",
+                    Json::obj([
+                        ("artifactLocation", Json::obj([("uri", Json::Str(f.file.clone()))])),
+                        ("region", Json::obj([("startLine", Json::Num(f.line as f64))])),
+                    ]),
+                )]);
+                let mut fields: Vec<(&str, Json)> = vec![
+                    ("level", Json::Str("error".to_string())),
+                    ("locations", Json::Arr(vec![location])),
+                    ("message", Json::obj([("text", Json::Str(f.message.clone()))])),
+                    ("ruleId", Json::Str(f.lint.to_string())),
+                ];
+                if f.suppressed {
+                    fields.push((
+                        "suppressions",
+                        Json::Arr(vec![Json::obj([("kind", Json::Str("inSource".to_string()))])]),
+                    ));
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        let driver = Json::obj([
+            ("name", Json::Str("gapsafe-audit".to_string())),
+            ("rules", Json::Arr(rules)),
+            ("version", Json::Str(env!("CARGO_PKG_VERSION").to_string())),
+        ]);
+        Json::obj([
+            (
+                "$schema",
+                Json::Str(
+                    "https://raw.githubusercontent.com/oasis-tcs/sarif-spec/master/Schemata/sarif-schema-2.1.0.json"
+                        .to_string(),
+                ),
+            ),
+            (
+                "runs",
+                Json::Arr(vec![Json::obj([
+                    ("results", Json::Arr(results)),
+                    ("tool", Json::obj([("driver", driver)])),
+                ])]),
+            ),
+            ("version", Json::Str("2.1.0".to_string())),
+        ])
+    }
+
+    /// Keep only findings of the named lints (`--lint a,b`).
+    /// `audit-pragma` findings always survive: a malformed pragma must
+    /// not become invisible just because its lint was filtered out.
+    pub fn retain_lints(&mut self, names: &[String]) {
+        self.findings
+            .retain(|f| f.lint == "audit-pragma" || names.iter().any(|n| n == f.lint));
+    }
+
     /// Human-readable report (the default `gapsafe audit` output).
     pub fn render_text(&self) -> String {
         let mut s = String::new();
@@ -112,64 +209,82 @@ impl Report {
     }
 }
 
-/// Audit one file's source. `rel` is its path relative to the source
-/// root with `/` separators — the lint scopes key off it.
+/// Audit one file's source in isolation. `rel` is its path relative to
+/// the source root with `/` separators — the lint scopes key off it.
+/// Cross-file lints see a one-file crate, which is exactly what the
+/// fixture tests want; real runs go through [`audit_sources`] /
+/// [`audit_tree`].
 pub fn audit_source(rel: &str, src: &str) -> Vec<Finding> {
-    let lx = lexer::lex(src);
-    let mut findings = lints::run(rel, &lx);
+    audit_sources(&[(rel.to_string(), src.to_string())]).findings
+}
 
-    // Validate pragmas first: `audit-allow(<lint>): <reason>` must name
-    // a known lint and carry a non-empty reason.
-    let mut pragmas: Vec<(u32, String)> = Vec::new();
-    for c in &lx.comments {
-        let Some(pos) = c.text.find("audit-allow(") else { continue };
-        let rest = &c.text[pos + "audit-allow(".len()..];
-        let Some(close) = rest.find(')') else {
-            findings.push(Finding {
-                file: rel.to_string(),
-                line: c.line,
-                lint: "audit-pragma",
-                message: "malformed audit-allow pragma: missing ')'".to_string(),
-                suppressed: false,
-            });
-            continue;
-        };
-        let name = rest[..close].trim().to_string();
-        let after = rest[close + 1..].trim_start();
-        let reason_ok = after.starts_with(':') && !after[1..].trim().is_empty();
-        if !lints::LINT_NAMES.contains(&name.as_str()) {
-            findings.push(Finding {
-                file: rel.to_string(),
-                line: c.line,
-                lint: "audit-pragma",
-                message: format!("audit-allow names unknown lint `{name}`"),
-                suppressed: false,
-            });
-        } else if !reason_ok {
-            findings.push(Finding {
-                file: rel.to_string(),
-                line: c.line,
-                lint: "audit-pragma",
-                message: format!("audit-allow({name}) needs a `: <reason>`"),
-                suppressed: false,
-            });
-        } else {
-            pragmas.push((c.line, name));
-        }
+/// Audit a set of files as one crate: per-file lints on each file, then
+/// the call-graph lints across all of them, then pragma validation and
+/// suppression. Findings are sorted by (file, line, lint).
+pub fn audit_sources(files: &[(String, String)]) -> Report {
+    let parsed: Vec<parser::ParsedFile> =
+        files.iter().map(|(rel, src)| parser::parse(rel, src)).collect();
+    let mut findings = Vec::new();
+    for pf in &parsed {
+        findings.extend(lints::run(&pf.rel, &pf.lexed));
     }
+    let graph = callgraph::CallGraph::build(&parsed);
+    findings.extend(flow::run(&parsed, &graph));
 
-    // Apply suppression: a pragma on line L covers findings of its lint
-    // on line L (trailing comment) or L + 1 (comment above).
-    for f in &mut findings {
-        if f.lint == "audit-pragma" {
-            continue;
+    // Validate pragmas per file: `audit-allow(<lint>): <reason>` must
+    // name a known lint and carry a non-empty reason. A valid pragma on
+    // line L suppresses findings of its lint (from any lint layer) on
+    // line L (trailing comment) or L + 1 (comment above) of that file.
+    for pf in &parsed {
+        let mut pragmas: Vec<(u32, String)> = Vec::new();
+        for c in &pf.lexed.comments {
+            let Some(pos) = c.text.find("audit-allow(") else { continue };
+            let rest = &c.text[pos + "audit-allow(".len()..];
+            let Some(close) = rest.find(')') else {
+                findings.push(Finding {
+                    file: pf.rel.clone(),
+                    line: c.line,
+                    lint: "audit-pragma",
+                    message: "malformed audit-allow pragma: missing ')'".to_string(),
+                    suppressed: false,
+                });
+                continue;
+            };
+            let name = rest[..close].trim().to_string();
+            let after = rest[close + 1..].trim_start();
+            let reason_ok = after.starts_with(':') && !after[1..].trim().is_empty();
+            if !lints::LINT_NAMES.contains(&name.as_str()) {
+                findings.push(Finding {
+                    file: pf.rel.clone(),
+                    line: c.line,
+                    lint: "audit-pragma",
+                    message: format!("audit-allow names unknown lint `{name}`"),
+                    suppressed: false,
+                });
+            } else if !reason_ok {
+                findings.push(Finding {
+                    file: pf.rel.clone(),
+                    line: c.line,
+                    lint: "audit-pragma",
+                    message: format!("audit-allow({name}) needs a `: <reason>`"),
+                    suppressed: false,
+                });
+            } else {
+                pragmas.push((c.line, name));
+            }
         }
-        if pragmas.iter().any(|(l, name)| name == f.lint && (*l == f.line || *l + 1 == f.line)) {
-            f.suppressed = true;
+        for f in &mut findings {
+            if f.lint == "audit-pragma" || f.file != pf.rel {
+                continue;
+            }
+            if pragmas.iter().any(|(l, name)| name == f.lint && (*l == f.line || *l + 1 == f.line))
+            {
+                f.suppressed = true;
+            }
         }
     }
     findings.sort_by(|a, b| (&a.file, a.line, a.lint).cmp(&(&b.file, b.line, b.lint)));
-    findings
+    Report { findings, files: files.len() }
 }
 
 /// Audit every `.rs` file under `root` (deterministic sorted walk).
@@ -178,7 +293,7 @@ pub fn audit_tree(root: &Path) -> Result<Report, String> {
     collect_rs_files(root, &mut files)
         .map_err(|e| format!("audit: cannot walk {}: {e}", root.display()))?;
     files.sort();
-    let mut report = Report::default();
+    let mut sources: Vec<(String, String)> = Vec::with_capacity(files.len());
     for path in &files {
         let src = std::fs::read_to_string(path)
             .map_err(|e| format!("audit: cannot read {}: {e}", path.display()))?;
@@ -189,13 +304,9 @@ pub fn audit_tree(root: &Path) -> Result<Report, String> {
             .map(|c| c.as_os_str().to_string_lossy().into_owned())
             .collect::<Vec<_>>()
             .join("/");
-        report.findings.extend(audit_source(&rel, &src));
-        report.files += 1;
+        sources.push((rel, src));
     }
-    report
-        .findings
-        .sort_by(|a, b| (&a.file, a.line, a.lint).cmp(&(&b.file, b.line, b.lint)));
-    Ok(report)
+    Ok(audit_sources(&sources))
 }
 
 fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
@@ -406,5 +517,114 @@ mod tests {
         let lines2: Vec<_> = f2.iter().map(|f| (f.line, f.lint)).collect();
         assert_eq!(lines1, lines2);
         assert!(lines1.windows(2).all(|w| w[0] <= w[1]), "{lines1:?}");
+    }
+
+    #[test]
+    fn screening_soundness_fires_and_suppresses() {
+        // the sqrt-bearing form
+        let bad = "fn radius(gap: f64, lam: f64) -> f64 { (2.0 * gap / 3.0).sqrt() / lam }";
+        let got = hits("screening/mod.rs", bad, "screening-soundness");
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(!got[0].suppressed);
+
+        let ok = "// audit-allow(screening-soundness): reference impl for the parity test\n\
+                  fn radius(gap: f64, lam: f64) -> f64 { (2.0 * gap / 3.0).sqrt() / lam }";
+        let got = hits("screening/mod.rs", ok, "screening-soundness");
+        assert_eq!(got.len(), 1);
+        assert!(got[0].suppressed);
+
+        // the staged form without a sqrt in the same statement
+        let staged = "fn f(gap: f64, g: f64) { let r2 = 2.0 * gap / g; use_it(r2); }";
+        assert_eq!(hits("solver/mod.rs", staged, "screening-soundness").len(), 1);
+
+        // routed through the trait: clean
+        let routed = "fn f(prob: &P) -> f64 { prob.fit.gap_safe_radius(gap, lam, &theta) }";
+        assert!(hits("screening/gap_safe.rs", routed, "screening-soundness").is_empty());
+        // sqrt without a gap operand: clean
+        let norm = "fn f(x: &[f64]) -> f64 { x.iter().map(|v| v * v).sum::<f64>().sqrt() }";
+        assert!(hits("solver/mod.rs", norm, "screening-soundness").is_empty());
+        // the datafit owns the formula
+        assert!(hits("datafit/poisson.rs", bad, "screening-soundness").is_empty());
+        // out-of-scope modules are exempt
+        assert!(hits("obs/trace.rs", bad, "screening-soundness").is_empty());
+    }
+
+    #[test]
+    fn cross_file_lints_run_and_suppress_through_audit_sources() {
+        let serve = ("serve/http.rs".to_string(), "pub fn handle() { crate::solver::solve(); }".to_string());
+        let solver = (
+            "solver/mod.rs".to_string(),
+            "pub fn solve() { x.unwrap(); }".to_string(),
+        );
+        let report = audit_sources(&[serve.clone(), solver]);
+        let hit: Vec<_> =
+            report.findings.iter().filter(|f| f.lint == "panic-reachability").collect();
+        assert_eq!(hit.len(), 1, "{:?}", report.findings);
+        assert_eq!(hit[0].file, "solver/mod.rs");
+        assert!(hit[0].message.contains("serve::http::handle"), "{}", hit[0].message);
+
+        // pragma at the panic site (in the *callee's* file) suppresses
+        let solver_ok = (
+            "solver/mod.rs".to_string(),
+            "pub fn solve() {\n    // audit-allow(panic-reachability): startup-only, no request data\n    x.unwrap();\n}".to_string(),
+        );
+        let report = audit_sources(&[serve, solver_ok]);
+        let hit: Vec<_> =
+            report.findings.iter().filter(|f| f.lint == "panic-reachability").collect();
+        assert_eq!(hit.len(), 1);
+        assert!(hit[0].suppressed, "{:?}", hit[0]);
+        assert_eq!(report.unsuppressed(), 0);
+    }
+
+    #[test]
+    fn lock_order_suppresses_via_pragma() {
+        let src = "fn a(x: &S) { let g1 = lock_ok(&x.alpha);\n    // audit-allow(lock-order): fixture proves the suppression path\n    let g2 = lock_ok(&x.beta); }\n\
+                   fn b(x: &S) {\n    let g1 = lock_ok(&x.beta);\n    // audit-allow(lock-order): fixture proves the suppression path\n    let g2 = lock_ok(&x.alpha); }";
+        let got = hits("serve/jobs.rs", src, "lock-order");
+        assert_eq!(got.len(), 2, "{got:?}");
+        assert!(got.iter().all(|f| f.suppressed), "{got:?}");
+    }
+
+    #[test]
+    fn sarif_output_is_well_formed() {
+        let mut report = Report {
+            files: 1,
+            findings: audit_source(
+                "solver/mod.rs",
+                "fn f() { let t0 = Instant::now(); // audit-allow(trace-transparency): fixture\n}\nfn g() { let t1 = Instant::now(); }\n",
+            ),
+        };
+        let s = report.to_sarif().to_string();
+        assert!(s.contains("\"version\":\"2.1.0\""), "{s}");
+        assert!(s.contains("sarif-schema-2.1.0.json"), "{s}");
+        assert!(s.contains("\"name\":\"gapsafe-audit\""), "{s}");
+        assert!(s.contains("\"ruleId\":\"trace-transparency\""), "{s}");
+        assert!(s.contains("\"uri\":\"solver/mod.rs\""), "{s}");
+        assert!(s.contains("\"startLine\":1"), "{s}");
+        // the suppressed finding carries an inSource suppression object
+        assert!(s.contains("\"suppressions\":[{\"kind\":\"inSource\"}]"), "{s}");
+        // rule metadata is emitted for every registered lint + audit-pragma
+        for name in lints::LINT_NAMES {
+            assert!(s.contains(&format!("\"id\":\"{name}\"")), "missing rule {name}");
+        }
+        assert!(s.contains("\"id\":\"audit-pragma\""), "{s}");
+        // SARIF round-trips through the crate's own JSON parser
+        assert!(crate::util::json::Json::parse(&s).is_ok());
+
+        // filtering keeps pragma findings but drops everything else
+        report.retain_lints(&["determinism".to_string()]);
+        assert!(report.findings.iter().all(|f| f.lint == "audit-pragma"), "{:?}", report.findings);
+    }
+
+    #[test]
+    fn lint_names_derive_from_the_registry() {
+        assert_eq!(lints::LINT_NAMES.len(), lints::LINTS.len());
+        for (name, spec) in lints::LINT_NAMES.iter().zip(lints::LINTS.iter()) {
+            assert_eq!(*name, spec.name);
+            assert!(!spec.summary.is_empty());
+        }
+        assert!(lints::LINT_NAMES.contains(&"panic-reachability"));
+        assert!(lints::LINT_NAMES.contains(&"lock-order"));
+        assert!(lints::LINT_NAMES.contains(&"screening-soundness"));
     }
 }

@@ -1,0 +1,426 @@
+//! Lightweight item parser on top of [`super::lexer`]: modules, `fn`
+//! items with bracket-matched body spans, `impl`/`trait` owners, and
+//! `use` aliases — just enough structure for the conservative call graph
+//! in [`super::callgraph`].
+//!
+//! This is *not* a Rust parser. It recovers exactly the shape the
+//! cross-file lints need — which fn owns which token range, what its
+//! crate-qualified path is, and how local names map to paths — and it is
+//! deliberately forgiving: anything it cannot classify becomes an
+//! anonymous scope, which can only make the call graph *more*
+//! conservative (see the approximation contract in `docs/ANALYSIS.md`).
+
+use super::lexer::{lex, Lexed, TokKind};
+use super::lints::{in_spans, item_body_end, test_spans};
+
+/// One `fn` item with its bracket-matched body span.
+#[derive(Debug, Clone)]
+pub struct FnItem {
+    /// Bare name (`fit`).
+    pub name: String,
+    /// Crate-qualified path (`serve::registry::Registry::fit`): the
+    /// module path implied by the file, inline modules, then the
+    /// `impl`/`trait` owner when there is one.
+    pub qual: String,
+    /// `impl`/`trait` owner type name, if any.
+    pub owner: Option<String>,
+    /// 1-based line of the `fn` keyword.
+    pub line: u32,
+    /// Token-index range of the body, inclusive of both braces.
+    pub body: (usize, usize),
+    /// Inside a `#[cfg(test)]` / `#[test]` item.
+    pub is_test: bool,
+}
+
+/// A parsed file: the lexed stream plus its item structure.
+#[derive(Debug)]
+pub struct ParsedFile {
+    /// Path relative to the source root, `/`-separated.
+    pub rel: String,
+    pub lexed: Lexed,
+    /// Module path implied by `rel` (`serve/jobs.rs` → `["serve", "jobs"]`).
+    pub mod_path: Vec<String>,
+    /// Every fn item, in source order.
+    pub fns: Vec<FnItem>,
+    /// `use` aliases visible in this file: local name → full segment
+    /// path as written (globs and `use ... as _` are skipped).
+    pub uses: Vec<(String, Vec<String>)>,
+}
+
+/// Module path implied by a file's location under the source root.
+fn mod_path_of(rel: &str) -> Vec<String> {
+    let mut segs: Vec<String> =
+        rel.trim_end_matches(".rs").split('/').map(str::to_string).collect();
+    if segs.last().is_some_and(|s| s == "mod") {
+        segs.pop();
+    }
+    if segs.len() == 1 && (segs[0] == "lib" || segs[0] == "main") {
+        segs.clear();
+    }
+    segs
+}
+
+/// Scope a `{` opens: a named module/owner, or anything else.
+#[derive(Debug, Clone)]
+enum Scope {
+    Mod(String),
+    Owner(String),
+    Anon,
+}
+
+/// Parse one file. Never fails: unparseable stretches degrade to
+/// anonymous scopes and missing items, not errors.
+pub fn parse(rel: &str, src: &str) -> ParsedFile {
+    let lexed = lex(src);
+    let toks = &lexed.toks;
+    let tests = test_spans(toks);
+    let mod_path = mod_path_of(rel);
+
+    // First pass: map each scope-opening `{` to the scope it opens, by
+    // scanning item headers (`mod N {`, `impl ... {`, `trait N ... {`).
+    let mut scope_at: Vec<Option<Scope>> = vec![None; toks.len()];
+    for i in 0..toks.len() {
+        if toks[i].kind != TokKind::Ident {
+            continue;
+        }
+        match toks[i].text.as_str() {
+            "mod" => {
+                // `mod name {` (file modules `mod name;` open nothing).
+                if toks.get(i + 1).is_some_and(|t| t.kind == TokKind::Ident)
+                    && toks.get(i + 2).is_some_and(|t| t.text == "{")
+                {
+                    scope_at[i + 2] = Some(Scope::Mod(toks[i + 1].text.clone()));
+                }
+            }
+            "trait" => {
+                if let Some(name_tok) = toks.get(i + 1).filter(|t| t.kind == TokKind::Ident) {
+                    if let Some(open) = header_body_open(toks, i + 2) {
+                        scope_at[open] = Some(Scope::Owner(name_tok.text.clone()));
+                    }
+                }
+            }
+            "impl" => {
+                // Only item-position `impl` (skip `-> impl Trait` and
+                // `(impl Trait` argument types).
+                let prev = i.checked_sub(1).map(|p| toks[p].text.as_str());
+                let item_pos = match prev {
+                    None | Some(";") | Some("{") | Some("}") | Some("]") => true,
+                    Some("unsafe") | Some("pub") => true,
+                    _ => false,
+                };
+                if !item_pos {
+                    continue;
+                }
+                if let Some((owner, open)) = impl_owner(toks, i + 1) {
+                    scope_at[open] = Some(Scope::Owner(owner));
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // Second pass: walk the brace structure, collecting fns and uses.
+    let mut stack: Vec<Scope> = Vec::new();
+    let mut fns: Vec<FnItem> = Vec::new();
+    let mut uses: Vec<(String, Vec<String>)> = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        let t = &toks[i];
+        match t.text.as_str() {
+            "{" => stack.push(scope_at[i].clone().unwrap_or(Scope::Anon)),
+            "}" => {
+                stack.pop();
+            }
+            "fn" if t.kind == TokKind::Ident => {
+                if let Some(name_tok) = toks.get(i + 1).filter(|t| t.kind == TokKind::Ident) {
+                    if let Some(end) = item_body_end(toks, i + 2) {
+                        if toks[end].text == "}" {
+                            let open = body_open_for(toks, i + 2, end);
+                            let mut mods: Vec<&str> =
+                                mod_path.iter().map(String::as_str).collect();
+                            let mut owner: Option<String> = None;
+                            for s in &stack {
+                                match s {
+                                    Scope::Mod(m) => mods.push(m),
+                                    Scope::Owner(o) => owner = Some(o.clone()),
+                                    Scope::Anon => {}
+                                }
+                            }
+                            let mut qual_segs: Vec<String> =
+                                mods.iter().map(|s| s.to_string()).collect();
+                            if let Some(o) = &owner {
+                                qual_segs.push(o.clone());
+                            }
+                            qual_segs.push(name_tok.text.clone());
+                            fns.push(FnItem {
+                                name: name_tok.text.clone(),
+                                qual: qual_segs.join("::"),
+                                owner,
+                                line: t.line,
+                                body: (open, end),
+                                is_test: in_spans(i, &tests) || in_spans(end, &tests),
+                            });
+                        }
+                    }
+                }
+            }
+            "use" if t.kind == TokKind::Ident => {
+                i = parse_use(toks, i + 1, &mut uses);
+                continue;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+
+    ParsedFile { rel: rel.to_string(), lexed, mod_path, fns, uses }
+}
+
+/// Find the `{` that opens an item body declared at `start`, skipping
+/// bounds/generics (`(`/`[` bracketed groups never contain a body brace).
+fn header_body_open(toks: &[super::lexer::Tok], start: usize) -> Option<usize> {
+    let mut bd = 0i32;
+    let mut m = start;
+    while m < toks.len() {
+        match toks[m].text.as_str() {
+            "(" | "[" => bd += 1,
+            ")" | "]" => bd -= 1,
+            "{" if bd == 0 => return Some(m),
+            ";" if bd == 0 => return None,
+            _ => {}
+        }
+        m += 1;
+    }
+    None
+}
+
+/// From the token after `impl`, extract the implemented-on type name and
+/// the index of the body `{`. Handles `impl<T> Type<T>`,
+/// `impl Trait for Type`, `&`/`dyn`/`mut` sigils, and `->` inside
+/// generic bounds (`impl<F: Fn(usize) -> f64> ...`).
+fn impl_owner(toks: &[super::lexer::Tok], start: usize) -> Option<(String, usize)> {
+    let mut angle = 0i32;
+    let mut bd = 0i32;
+    let mut after_for = false;
+    let mut first: Option<String> = None;
+    let mut first_after_for: Option<String> = None;
+    let mut m = start;
+    while m < toks.len() {
+        let txt = toks[m].text.as_str();
+        match txt {
+            "(" | "[" => bd += 1,
+            ")" | "]" => bd -= 1,
+            "<" => angle += 1,
+            ">" => {
+                // `->` does not close a generic angle.
+                if !(m > 0 && toks[m - 1].text == "-") {
+                    angle -= 1;
+                }
+            }
+            "{" if bd == 0 && angle <= 0 => {
+                let owner = if after_for { first_after_for } else { first };
+                return owner.map(|o| (o, m));
+            }
+            ";" if bd == 0 && angle <= 0 => return None,
+            "for" if bd == 0 && angle <= 0 => after_for = true,
+            _ => {
+                if toks[m].kind == TokKind::Ident
+                    && bd == 0
+                    && angle <= 0
+                    && !matches!(txt, "dyn" | "mut" | "where" | "Send" | "Sync" | "unsafe")
+                {
+                    if after_for {
+                        first_after_for.get_or_insert_with(|| txt.to_string());
+                    } else {
+                        first.get_or_insert_with(|| txt.to_string());
+                    }
+                }
+            }
+        }
+        m += 1;
+    }
+    None
+}
+
+/// The `{` a fn body's closing brace `end` matches, scanning from the
+/// signature at `start`.
+fn body_open_for(toks: &[super::lexer::Tok], start: usize, end: usize) -> usize {
+    let mut bd = 0i32;
+    let mut m = start;
+    while m < end {
+        match toks[m].text.as_str() {
+            "(" | "[" => bd += 1,
+            ")" | "]" => bd -= 1,
+            "{" if bd == 0 => return m,
+            _ => {}
+        }
+        m += 1;
+    }
+    end
+}
+
+/// Parse one `use` declaration starting after the `use` keyword; pushes
+/// `(alias, path)` pairs and returns the index just past the closing `;`.
+fn parse_use(
+    toks: &[super::lexer::Tok],
+    start: usize,
+    out: &mut Vec<(String, Vec<String>)>,
+) -> usize {
+    fn tree(
+        toks: &[super::lexer::Tok],
+        mut i: usize,
+        prefix: &[String],
+        out: &mut Vec<(String, Vec<String>)>,
+    ) -> usize {
+        let mut path: Vec<String> = prefix.to_vec();
+        loop {
+            let Some(t) = toks.get(i) else { return i };
+            match t.text.as_str() {
+                "{" => {
+                    // group: recurse per comma-separated subtree
+                    i += 1;
+                    loop {
+                        i = tree(toks, i, &path, out);
+                        match toks.get(i).map(|t| t.text.as_str()) {
+                            Some(",") => i += 1,
+                            Some("}") => return i + 1,
+                            _ => return i,
+                        }
+                    }
+                }
+                "*" => return i + 1, // glob: unsupported, skipped
+                ":" => i += 1,       // path separator (lexed as two ':')
+                "as" => {
+                    // rename: alias is the next ident
+                    if let Some(alias) = toks.get(i + 1) {
+                        if alias.kind == TokKind::Ident && alias.text != "_" {
+                            out.push((alias.text.clone(), path.clone()));
+                        }
+                        return i + 2;
+                    }
+                    return i + 1;
+                }
+                _ if t.kind == TokKind::Ident => {
+                    path.push(t.text.clone());
+                    i += 1;
+                    // end of a leaf path?
+                    match toks.get(i).map(|t| t.text.as_str()) {
+                        Some(":") => {}
+                        Some("as") => {}
+                        _ => {
+                            if let Some(last) = path.last() {
+                                out.push((last.clone(), path.clone()));
+                            }
+                            return i;
+                        }
+                    }
+                }
+                _ => return i,
+            }
+        }
+    }
+    let mut i = tree(toks, start, &[], out);
+    // consume through the terminating `;`
+    while i < toks.len() && toks[i].text != ";" {
+        i += 1;
+    }
+    i + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quals(rel: &str, src: &str) -> Vec<String> {
+        parse(rel, src).fns.iter().map(|f| f.qual.clone()).collect()
+    }
+
+    #[test]
+    fn mod_paths_from_file_location() {
+        assert_eq!(mod_path_of("serve/jobs.rs"), vec!["serve", "jobs"]);
+        assert_eq!(mod_path_of("serve/mod.rs"), vec!["serve"]);
+        assert!(mod_path_of("lib.rs").is_empty());
+        assert!(mod_path_of("main.rs").is_empty());
+        assert_eq!(mod_path_of("problem.rs"), vec!["problem"]);
+    }
+
+    #[test]
+    fn free_fns_and_inline_modules() {
+        let src = "fn top() {}\nmod inner {\n    pub fn nested() {}\n}";
+        assert_eq!(quals("util/mod.rs", src), vec!["util::top", "util::inner::nested"]);
+    }
+
+    #[test]
+    fn impl_and_trait_owners() {
+        let src = "struct Registry;\n\
+                   impl Registry {\n    pub fn fit(&self) {}\n}\n\
+                   trait DataFit: Send + Sync {\n    fn gamma(&self) -> f64 { 1.0 }\n}\n\
+                   impl DataFit for Registry {\n    fn gamma(&self) -> f64 { 2.0 }\n}";
+        assert_eq!(
+            quals("serve/registry.rs", src),
+            vec![
+                "serve::registry::Registry::fit",
+                "serve::registry::DataFit::gamma",
+                "serve::registry::Registry::gamma",
+            ]
+        );
+    }
+
+    #[test]
+    fn generic_impl_headers_and_lifetimes() {
+        let src = "impl<'a, T: Fn(usize) -> f64> Wrapper<'a, T> {\n    fn call(&self) {}\n}\n\
+                   impl Drop for Guard<'_> {\n    fn drop(&mut self) {}\n}";
+        assert_eq!(quals("solver/mod.rs", src), vec![
+            "solver::Wrapper::call",
+            "solver::Guard::drop",
+        ]);
+    }
+
+    #[test]
+    fn return_position_impl_is_not_an_owner() {
+        let src = "fn make() -> impl Iterator<Item = usize> { 0..3 }\nfn after() {}";
+        assert_eq!(quals("lib.rs", src), vec!["make", "after"]);
+    }
+
+    #[test]
+    fn body_spans_cover_the_braces() {
+        let src = "fn f() { inner(); }";
+        let pf = parse("lib.rs", src);
+        let f = &pf.fns[0];
+        assert_eq!(pf.lexed.toks[f.body.0].text, "{");
+        assert_eq!(pf.lexed.toks[f.body.1].text, "}");
+        let names: Vec<_> = pf.lexed.toks[f.body.0..=f.body.1]
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(names, vec!["inner"]);
+    }
+
+    #[test]
+    fn trait_method_decls_without_bodies_are_skipped() {
+        let src = "trait T {\n    fn decl(&self);\n    fn with_default(&self) {}\n}";
+        assert_eq!(quals("lib.rs", src), vec!["T::with_default"]);
+    }
+
+    #[test]
+    fn test_items_are_marked() {
+        let src = "fn prod() {}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {}\n}";
+        let pf = parse("lib.rs", src);
+        assert_eq!(pf.fns.len(), 2);
+        assert!(!pf.fns[0].is_test);
+        assert!(pf.fns[1].is_test);
+    }
+
+    #[test]
+    fn use_trees_flatten_to_aliases() {
+        let src = "use crate::util::sync::{lock_ok, wait_ok as wok};\nuse std::sync::Mutex;\nfn f() {}";
+        let pf = parse("lib.rs", src);
+        let find = |a: &str| {
+            pf.uses.iter().find(|(alias, _)| alias == a).map(|(_, p)| p.join("::"))
+        };
+        assert_eq!(find("lock_ok").as_deref(), Some("crate::util::sync::lock_ok"));
+        assert_eq!(find("wok").as_deref(), Some("crate::util::sync::wait_ok"));
+        assert_eq!(find("Mutex").as_deref(), Some("std::sync::Mutex"));
+    }
+}

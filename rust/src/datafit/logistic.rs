@@ -35,8 +35,8 @@ impl DataFit for Logistic {
         1
     }
 
-    fn gamma(&self) -> f64 {
-        4.0
+    fn gamma(&self) -> Option<f64> {
+        Some(4.0)
     }
 
     fn loss(&self, z: &Mat) -> f64 {

@@ -43,7 +43,13 @@ pub trait DataFit: Send + Sync {
     fn q(&self) -> usize;
 
     /// gamma: each f_i has 1/gamma-Lipschitz gradient (Table 1 row 4).
-    fn gamma(&self) -> f64;
+    /// `None` when no *global* curvature bound exists (Poisson/KL — e^z
+    /// is not globally Lipschitz); such fits must override
+    /// [`DataFit::gap_safe_radius`] with a locally valid bound, and the
+    /// default radius fails *open* (infinite radius, screens nothing)
+    /// rather than unsafely (gamma = infinity would yield radius 0 and
+    /// discard coordinates without a certificate).
+    fn gamma(&self) -> Option<f64>;
 
     /// F at linear predictor Z = X B.
     fn loss(&self, z: &Mat) -> f64;
@@ -64,7 +70,13 @@ pub trait DataFit: Send + Sync {
     /// "Locally bounded duals" section of the `screening` module docs.
     fn gap_safe_radius(&self, gap: f64, lam: f64, theta: &Mat) -> f64 {
         let _ = theta;
-        (2.0 * gap / self.gamma()).sqrt() / lam
+        match self.gamma() {
+            Some(g) => (2.0 * gap / g).sqrt() / lam,
+            // No global bound: an infinite sphere contains every feasible
+            // dual point, so the sphere test discards nothing — safe for
+            // any fit that forgot to override with a local bound.
+            None => f64::INFINITY,
+        }
     }
 
     /// Per-coordinate Lipschitz factor: L_j = lipschitz_scale() * ||X_j||^2.

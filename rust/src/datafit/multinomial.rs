@@ -60,8 +60,8 @@ impl DataFit for Multinomial {
         self.y.cols()
     }
 
-    fn gamma(&self) -> f64 {
-        1.0 // Table 1 (the softmax gradient is 1-Lipschitz w.r.t. ||.||_2)
+    fn gamma(&self) -> Option<f64> {
+        Some(1.0) // Table 1 (the softmax gradient is 1-Lipschitz w.r.t. ||.||_2)
     }
 
     fn loss(&self, z: &Mat) -> f64 {

@@ -63,12 +63,12 @@ impl DataFit for Poisson {
     }
 
     /// No global curvature bound exists (e^z is not globally Lipschitz):
-    /// every radius must go through [`Poisson::gap_safe_radius`]. Fail
-    /// loudly rather than let a forgotten call site fall back to the
-    /// global formula — with gamma = infinity it would yield radius 0 and
-    /// screen *unsafely*.
-    fn gamma(&self) -> f64 {
-        panic!("the Poisson fit has no global gamma; use gap_safe_radius (local bound)")
+    /// every radius must go through [`Poisson::gap_safe_radius`]. `None`
+    /// makes a forgotten call site fall back to an *infinite* default
+    /// radius (screens nothing — safe), never to the gamma = infinity
+    /// radius-0 formula that would screen unsafely.
+    fn gamma(&self) -> Option<f64> {
+        None
     }
 
     fn loss(&self, z: &Mat) -> f64 {

@@ -40,8 +40,8 @@ impl DataFit for Quadratic {
         self.y.cols()
     }
 
-    fn gamma(&self) -> f64 {
-        1.0
+    fn gamma(&self) -> Option<f64> {
+        Some(1.0)
     }
 
     fn loss(&self, z: &Mat) -> f64 {

@@ -192,9 +192,12 @@ static ACTIVE: AtomicPtr<Kernels> = AtomicPtr::new(std::ptr::null_mut());
 ///
 /// # Panics
 ///
-/// Panics when `GAPSAFE_KERNEL` names an unknown backend or one this host
-/// cannot run (a forced-but-unsupported backend silently falling back
-/// would fake coverage in CI parity legs; use `auto` for best-supported).
+/// When `GAPSAFE_KERNEL` names an unknown backend or one this host cannot
+/// run, the lazy initializer falls back to the scalar backend (with a
+/// stderr note) — this function is reachable from the resident serve
+/// path, where a panic poisons the pool. CLI entry points call
+/// [`validate_env`] first, so a forced-but-unsupported backend still
+/// aborts a run before any work (fail-fast for CI parity legs).
 pub fn active() -> &'static Kernels {
     // Ordering: Relaxed suffices here (unlike the obs sink's
     // Acquire/Release pair) because every candidate pointee is a
@@ -219,17 +222,36 @@ pub fn active_kind() -> BackendKind {
 fn init_from_env() -> &'static Kernels {
     let spec = std::env::var("GAPSAFE_KERNEL").unwrap_or_default();
     let spec = if spec.is_empty() { "auto".to_string() } else { spec };
-    match resolve(&spec) {
-        Ok(kind) => {
-            // A racing initializer resolves the same environment to the
-            // same table, so last-write-wins is benign.
-            let t = table(kind).expect("resolve() only returns runnable backends");
-            // Ordering: Relaxed store — the pointee is an immutable
-            // `static`, so there is nothing to publish ahead of it.
-            ACTIVE.store(t as *const Kernels as *mut Kernels, Ordering::Relaxed);
-            t
+    // A racing initializer resolves the same environment to the same
+    // table, so last-write-wins is benign. A bad spec falls back to the
+    // portable scalar backend with a loud stderr note instead of
+    // panicking: `active()` is reachable from the resident serve path,
+    // and CLI entry points reject a bad spec up front via
+    // [`validate_env`], so the fallback only shields embedders.
+    let t = match resolve(&spec) {
+        Ok(kind) => table(kind).unwrap_or_else(scalar_table),
+        Err(e) => {
+            eprintln!("GAPSAFE_KERNEL: {e}; falling back to the scalar backend");
+            scalar_table()
         }
-        Err(e) => panic!("GAPSAFE_KERNEL: {e}"),
+    };
+    // Ordering: Relaxed store — the pointee is an immutable `static`, so
+    // there is nothing to publish ahead of it.
+    ACTIVE.store(t as *const Kernels as *mut Kernels, Ordering::Relaxed);
+    t
+}
+
+/// Fail-fast validation of `GAPSAFE_KERNEL` for process entry points: a
+/// forced-but-unsupported backend must abort a CLI run *before* any work
+/// (silent fallback would fake coverage in CI parity legs), while the
+/// lazy [`active`] initializer — reachable from the resident server —
+/// degrades to scalar instead of panicking mid-request.
+pub fn validate_env() -> Result<(), String> {
+    match std::env::var("GAPSAFE_KERNEL") {
+        Ok(spec) if !spec.is_empty() => {
+            resolve(&spec).map(|_| ()).map_err(|e| format!("GAPSAFE_KERNEL: {e}"))
+        }
+        _ => Ok(()),
     }
 }
 

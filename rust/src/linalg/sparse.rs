@@ -41,7 +41,11 @@ impl Csc {
             assert!(c < cols && r < rows, "triplet out of bounds");
             if last == Some((c, r)) {
                 // Same (col, row) as the previously emitted entry: merge.
-                *values.last_mut().unwrap() += v;
+                // (`last` is only Some right after a push, so the slot
+                // exists; if-let instead of unwrap keeps this panic-free.)
+                if let Some(tail) = values.last_mut() {
+                    *tail += v;
+                }
             } else {
                 indptr[c + 1] += 1;
                 indices.push(r);
@@ -51,7 +55,7 @@ impl Csc {
             // An exactly-cancelled merge (or an explicitly zero triplet)
             // must not leave a structural zero behind, or nnz() would
             // disagree with the dense rebuild this doc comment promises.
-            if *values.last().unwrap() == 0.0 {
+            if values.last().copied() == Some(0.0) {
                 values.pop();
                 indices.pop();
                 indptr[c + 1] -= 1;

@@ -13,7 +13,8 @@
 //!   gapsafe selftest  [--artifacts artifacts/]   (PJRT vs native gap check)
 //!   gapsafe artifacts [--artifacts artifacts/]   (list + validate manifest)
 //!   gapsafe lmax      --task ... --data ...
-//!   gapsafe audit     [--src rust/src] [--format text|json]   (static-analysis lint gate)
+//!   gapsafe audit     [--src rust/src] [--format text|json|sarif] [--lint a,b]
+//!                     (static-analysis lint gate: per-file + call-graph lints)
 
 use gapsafe::coordinator::cv::{kfold_cv, CvConfig};
 use gapsafe::coordinator::{active_fraction_experiment, report, time_to_convergence, BatchRunner};
@@ -37,7 +38,12 @@ fn main() -> ExitCode {
         return ExitCode::FAILURE;
     };
     let opts = parse_flags(rest);
-    let setup = apply_kernel_flag(&opts).and_then(|()| apply_trace_flag(&opts));
+    // Fail fast on a bad GAPSAFE_KERNEL before any work: the lazy kernel
+    // initializer itself degrades to scalar (it is serve-reachable and
+    // must not panic), so the CLI owns the strict check.
+    let setup = gapsafe::linalg::kernels::validate_env()
+        .and_then(|()| apply_kernel_flag(&opts))
+        .and_then(|()| apply_trace_flag(&opts));
     let r = setup.and_then(|()| match cmd.as_str() {
         "path" => cmd_path(&opts),
         "solve" => cmd_solve(&opts),
@@ -117,9 +123,12 @@ fn usage() {
                                  GET /v1/jobs/<id> | POST /v1/predict   (docs/SERVING.md)\n\
            selftest/artifacts: --artifacts artifacts (manifest dir)\n\
            trace:     --in trace.jsonl (a file produced by --trace-out)\n\
-           audit:     --src rust/src (source root)   --format text|json\n\
+           audit:     --src rust/src (source root)   --format text|json|sarif\n\
+                      --lint a,b (run only the named lints)\n\
                       lints: float-determinism simd-containment trace-transparency\n\
-                             unsafe-hygiene determinism serve-no-panic (docs/ANALYSIS.md)"
+                             unsafe-hygiene determinism serve-no-panic\n\
+                             screening-soundness panic-reachability lock-order\n\
+                             (docs/ANALYSIS.md has the catalogue + call-graph contract)"
     );
 }
 
@@ -290,19 +299,37 @@ fn cmd_trace(rest: &[String], o: &Flags) -> Result<(), String> {
     Ok(())
 }
 
-/// `gapsafe audit [--src DIR] [--format text|json]`: run the static
-/// invariant lints over the source tree; non-zero exit on any
-/// unsuppressed finding (the CI hard gate — see `docs/ANALYSIS.md`).
+/// `gapsafe audit [--src DIR] [--format text|json|sarif] [--lint a,b]`:
+/// run the static invariant lints over the source tree; non-zero exit
+/// on any unsuppressed finding (the CI hard gate — see
+/// `docs/ANALYSIS.md`).
 fn cmd_audit(o: &Flags) -> Result<(), String> {
     let root = match o.get("src") {
         Some(p) => PathBuf::from(p),
         None => default_src_root()?,
     };
-    let report = gapsafe::analysis::audit_tree(&root)?;
+    let mut report = gapsafe::analysis::audit_tree(&root)?;
+    if let Some(spec) = o.get("lint") {
+        let names: Vec<String> =
+            spec.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect();
+        if names.is_empty() {
+            return Err("audit: --lint needs at least one lint name".to_string());
+        }
+        for n in &names {
+            if !gapsafe::analysis::lints::LINT_NAMES.contains(&n.as_str()) {
+                return Err(format!(
+                    "audit: unknown lint '{n}' (have: {})",
+                    gapsafe::analysis::lints::LINT_NAMES.join(", ")
+                ));
+            }
+        }
+        report.retain_lints(&names);
+    }
     match flag(o, "format", "text") {
         "json" => println!("{}", report.to_json()),
+        "sarif" => println!("{}", report.to_sarif()),
         "text" => print!("{}", report.render_text()),
-        other => return Err(format!("unknown --format '{other}' (text | json)")),
+        other => return Err(format!("unknown --format '{other}' (text | json | sarif)")),
     }
     let unsuppressed = report.unsuppressed();
     if unsuppressed > 0 {
@@ -590,7 +617,7 @@ fn cmd_fig(o: &Flags, fig: u8) -> Result<(), String> {
             Task::SparseGroupLasso { tau: 0.4 },
             2.5,
         ),
-        _ => unreachable!(),
+        other => return Err(format!("fig: no figure {other} (have fig3..fig6)")),
     };
     let prob = build_problem(ds, task)?;
     let n_lambdas = flag_grid(o, if small { 30 } else { 100 })?;

@@ -107,7 +107,9 @@ impl LogHistogram {
                 return self.bounds[i.min(self.bounds.len() - 1)];
             }
         }
-        *self.bounds.last().unwrap()
+        // The bounds ladder is a non-empty constant; 0.0 (not a panic)
+        // backstops the impossible empty case at a serve-reachable site.
+        self.bounds.last().copied().unwrap_or(0.0)
     }
 
     /// Append this histogram in Prometheus text exposition format:

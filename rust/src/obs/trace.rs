@@ -2,6 +2,7 @@
 //! in-memory collector for tests.
 
 use super::{Event, Sink};
+use crate::util::sync::lock_ok;
 use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::sync::Mutex;
@@ -25,7 +26,10 @@ impl FileSink {
 impl Sink for FileSink {
     fn record(&self, ev: &Event) {
         let line = format!("{}\n", ev.to_json());
-        let mut out = self.out.lock().unwrap();
+        // Poison recovery: a panicked emitter must not silence every
+        // later event — the file is line-buffered, so the guarded writer
+        // is consistent at any unwind point.
+        let mut out = lock_ok(&self.out);
         let _ = out.write_all(line.as_bytes());
         let _ = out.flush();
     }
@@ -45,13 +49,13 @@ impl CollectSink {
     }
 
     pub fn take(&self) -> Vec<Event> {
-        std::mem::take(&mut self.events.lock().unwrap())
+        std::mem::take(&mut lock_ok(&self.events))
     }
 }
 
 impl Sink for CollectSink {
     fn record(&self, ev: &Event) {
-        self.events.lock().unwrap().push(ev.clone());
+        lock_ok(&self.events).push(ev.clone());
     }
 }
 

@@ -30,7 +30,11 @@ pub fn epsilon_norm(x: &[f64], eps: f64) -> f64 {
     if eps >= 1.0 {
         return a.iter().map(|v| v * v).sum::<f64>().sqrt();
     }
-    a.sort_by(|p, q| q.partial_cmp(p).unwrap()); // descending
+    // Descending. The Equal fallback fires only for NaN entries — the
+    // stable sort then leaves them in place and the quadratic below
+    // yields NaN anyway — and keeps the comparator total (panic-free)
+    // without perturbing the order of non-NaN magnitudes.
+    a.sort_by(|p, q| q.partial_cmp(p).unwrap_or(std::cmp::Ordering::Equal));
     let ome = 1.0 - eps;
     let (mut s, mut q) = (0.0_f64, 0.0_f64);
     for k in 1..=a.len() {

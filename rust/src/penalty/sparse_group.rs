@@ -174,7 +174,10 @@ impl Penalty for SparseGroup {
         norms: &GroupNorms,
         active: &mut ActiveSet,
     ) -> (usize, usize) {
-        let sgl = stats.sgl.as_ref().expect("SGL stats required");
+        // Stats produced by any other penalty lack the SGL block; screen
+        // nothing (always safe) instead of unwrapping — the pairing is a
+        // caller invariant, not something a sphere test should die on.
+        let Some(sgl) = stats.sgl.as_ref() else { return (0, 0) };
         let (mut kg, mut kf) = (0, 0);
         for g in 0..self.groups.len() {
             if !active.group[g] {

@@ -897,7 +897,7 @@ mod tests {
             assert_eq!(r0.dual.to_bits(), r1.dual.to_bits());
         }
         // the reported (gap, radius) pair stays consistent (Thm. 2 input)
-        let want_r = (2.0 * r1.gap / prob.fit.gamma()).sqrt() / lam;
+        let want_r = (2.0 * r1.gap / prob.fit.gamma().unwrap()).sqrt() / lam;
         assert!((r1.radius - want_r).abs() < 1e-12);
     }
 

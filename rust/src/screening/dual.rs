@@ -253,7 +253,9 @@ impl DualPoint {
                 self.last_choice = "refined";
                 (theta, corr, best_d)
             }
-            DualStrategy::Rescale => unreachable!("handled above"),
+            // Already early-returned above; keep the arm equivalent (hand
+            // the fresh candidate through) instead of a reachable panic.
+            DualStrategy::Rescale => (theta_new, corr_new, dual_new),
         }
     }
 }

@@ -49,34 +49,15 @@ use registry::{FitKind, ModelKey, Registry};
 
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError, WaitTimeoutResult};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// Lock a mutex, recovering from poisoning instead of panicking.
-///
-/// A resident server must not let one panicked worker turn every later
-/// request into a `lock().unwrap()` panic (the serve-no-panic audit lint
-/// forbids that). Recovery is sound for all serve-side state: each
-/// critical section leaves the guarded data structurally consistent at
-/// every await-free step (inserts/removes complete before the panic can
-/// propagate), so the data a poisoned lock guards is still usable.
-pub(crate) fn lock_ok<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(PoisonError::into_inner)
-}
-
-/// [`Condvar::wait`] with the same poison recovery as [`lock_ok`].
-pub(crate) fn wait_ok<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
-    cv.wait(g).unwrap_or_else(PoisonError::into_inner)
-}
-
-/// [`Condvar::wait_timeout`] with the same poison recovery as [`lock_ok`].
-pub(crate) fn wait_timeout_ok<'a, T>(
-    cv: &Condvar,
-    g: MutexGuard<'a, T>,
-    dur: Duration,
-) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
-    cv.wait_timeout(g, dur).unwrap_or_else(PoisonError::into_inner)
-}
+// Poison-recovering lock/wait helpers now live in `util::sync` so the
+// parallel solver pool and trace sinks share them; re-exported here to
+// keep the historical `serve::lock_ok` paths working. A resident server
+// must not let one panicked worker turn every later request into a
+// `lock().unwrap()` panic (the serve-no-panic audit lint forbids that).
+pub(crate) use crate::util::sync::{lock_ok, wait_ok, wait_timeout_ok};
 
 /// How long `/v1/fit` with `"wait": true` may park an HTTP worker before
 /// handing the client back a still-running (202) job snapshot to poll.

@@ -223,7 +223,13 @@ pub fn solve_fixed_lambda_with(
         // inactive group whose dual-norm statistic exceeds 1 was wrongly
         // discarded; reactivate and resume.
         if converged && rule.needs_kkt_check() && kkt_round < opts.max_kkt_rounds {
-            let theta = &last.as_ref().unwrap().theta;
+            let theta = match last.as_ref() {
+                // Unreachable — the fill block above guarantees a pass —
+                // but a break (skip the KKT recheck) degrades gracefully
+                // where an unwrap would panic mid-path.
+                None => break,
+                Some(res) => &res.theta,
+            };
             let full = ActiveSet::full(prob.pen.groups());
             let stats = prob.stats_for_center(theta, &full);
             let mut violated = false;
@@ -257,7 +263,20 @@ pub fn solve_fixed_lambda_with(
         break;
     }
 
-    let res = last.expect("at least one gap pass");
+    // Every 'outer iteration records a gap pass before it can break, so
+    // the fallback arm never runs; computing a genuine pass there (rather
+    // than unwrapping) keeps the solver panic-free at a serve-reachable
+    // site without changing any recorded trajectory.
+    let res = match last {
+        Some(res) => res,
+        None => {
+            let z = state.z(prob);
+            let res = prob.gap_pass_dual(&beta, &z, lam, &active, state.view(), &mut dual_pt);
+            gap_trace.push(res.gap);
+            gap_passes += 1;
+            res
+        }
+    };
     if let Some(t0) = t_solve {
         obs::emit(&obs::Event::SolveSpan {
             lam,

@@ -35,10 +35,11 @@ use super::{solve_fixed_lambda_with, SolveOptions};
 use crate::obs;
 use crate::problem::Problem;
 use crate::screening::PrevSolution;
+use crate::util::sync::lock_ok;
 use crate::util::Stopwatch;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, PoisonError};
 
 /// Resolve a requested thread count: `0` means "use all available cores".
 pub fn effective_threads(requested: usize) -> usize {
@@ -102,15 +103,28 @@ where
                 if i >= n {
                     break;
                 }
-                let item = slots[i].lock().unwrap().take().expect("item claimed twice");
+                // The cursor hands out each index exactly once, so the
+                // slot always holds the item; an empty slot (impossible
+                // unless the claim protocol itself is broken) is skipped
+                // rather than unwrapped — the length check below would
+                // then surface the loss loudly in debug builds.
+                let Some(item) = lock_ok(&slots[i]).take() else { continue };
                 let r = f(i, item);
-                *out[i].lock().unwrap() = Some(r);
+                *lock_ok(&out[i]) = Some(r);
             });
         }
     });
-    out.into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worker dropped an item"))
-        .collect()
+    // A worker panic propagates at the scope join above, so reaching this
+    // point means every index was claimed and completed; poison recovery
+    // (rather than unwrap) keeps the collection itself panic-free.
+    let mut results = Vec::with_capacity(n);
+    for m in out {
+        if let Some(r) = m.into_inner().unwrap_or_else(PoisonError::into_inner) {
+            results.push(r);
+        }
+    }
+    debug_assert_eq!(results.len(), n, "parallel_map dropped an item");
+    results
 }
 
 /// Run `threads` long-lived scoped workers and join them all: each worker

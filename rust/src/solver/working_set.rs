@@ -134,7 +134,22 @@ pub fn solve_working_set(
         ws_size = ((ws_size as f64 * opts.growth).ceil() as usize).min(ng);
     }
 
-    let mut res = result.expect("at least one round");
+    // `max_rounds == 0` (or a degenerate config) is the one way the loop
+    // body never runs; fall back to a direct full-problem solve instead
+    // of unwrapping — same contract, no reachable panic.
+    let mut res = match result {
+        Some(res) => res,
+        None => solve_fixed_lambda_with(
+            prob,
+            lam,
+            lam_max,
+            Some(&beta),
+            None,
+            &mut rule,
+            None,
+            &opts.inner,
+        ),
+    };
     // Final certification on the full problem (fresh point, like the
     // round passes above — Thm. 2 needs nothing stronger here).
     let z = prob.predict(&beta);

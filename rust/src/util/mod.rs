@@ -3,6 +3,7 @@
 
 pub mod json;
 pub mod prng;
+pub mod sync;
 
 use std::time::Instant;
 

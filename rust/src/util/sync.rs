@@ -1,0 +1,66 @@
+//! Poison-recovering synchronization helpers, shared by every resident
+//! or pooled component (`serve`, the parallel solver pool, trace sinks).
+//!
+//! A poisoned mutex means some thread panicked while holding the guard —
+//! it says nothing about the guarded data once every critical section
+//! leaves its structure consistent at each unwind point. Components that
+//! must outlive a single worker panic (the HTTP server, the scoped solver
+//! pool joining its results) recover the guard instead of converting one
+//! panic into a cascade of `lock().unwrap()` panics; the panic itself
+//! still surfaces where it belongs (scope join, worker respawn, 5xx).
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Lock a mutex, recovering from poisoning instead of panicking.
+///
+/// Recovery is sound wherever each critical section leaves the guarded
+/// data structurally consistent at every step a panic can interrupt
+/// (inserts/removes complete before user code that could panic runs).
+/// Every call site in this crate maintains that discipline; the
+/// `panic-reachability` audit lint keeps new call sites honest.
+pub fn lock_ok<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`Condvar::wait`] with the same poison recovery as [`lock_ok`].
+pub fn wait_ok<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`Condvar::wait_timeout`] with the same poison recovery as [`lock_ok`].
+pub fn wait_timeout_ok<'a, T>(
+    cv: &Condvar,
+    g: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(g, dur).unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_ok_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7usize));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_ok(&m), 7);
+    }
+
+    #[test]
+    fn wait_timeout_ok_times_out() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let g = lock_ok(&m);
+        let (_g, res) = wait_timeout_ok(&cv, g, Duration::from_millis(1));
+        assert!(res.timed_out());
+    }
+}

@@ -93,7 +93,7 @@ fn global_gamma_radii_are_bitwise_the_historical_formula() {
         let beta0 = Mat::zeros(prob.p(), prob.q());
         let z0 = prob.predict(&beta0);
         let at0 = prob.gap_pass(&beta0, &z0, lam, &active);
-        let want0 = (2.0 * at0.gap / prob.fit.gamma()).sqrt() / lam;
+        let want0 = (2.0 * at0.gap / prob.fit.gamma().unwrap()).sqrt() / lam;
         assert_eq!(
             at0.radius.to_bits(),
             want0.to_bits(),
@@ -106,7 +106,7 @@ fn global_gamma_radii_are_bitwise_the_historical_formula() {
         let part = solve_fixed_lambda(&prob, lam, &mut none, &opts);
         let z = prob.predict(&part.beta);
         let mid = prob.gap_pass(&part.beta, &z, lam, &active);
-        let want = (2.0 * mid.gap / prob.fit.gamma()).sqrt() / lam;
+        let want = (2.0 * mid.gap / prob.fit.gamma().unwrap()).sqrt() / lam;
         assert_eq!(
             mid.radius.to_bits(),
             want.to_bits(),
