@@ -1,0 +1,145 @@
+//! Provenance-ledger overhead benchmark: the same `solve_path` run three
+//! ways — no trace sink at all, a JSONL [`FileSink`] with ledger event
+//! emission turned off (`obs::ledger::set_emit(false)`: span tracing only),
+//! and the full ledger (sphere centers, per-column kill records, per-solve
+//! certificates).
+//!
+//! The contract (see `gapsafe::obs::ledger`): ledger ids and counters are
+//! unconditional, but event construction — including the O(n q) dual-point
+//! copies in `SphereCenter` / `Certificate` — only happens when a sink is
+//! installed *and* emission is on. All three configurations must produce
+//! bitwise-identical paths (asserted before timing anything); the bench
+//! then prices the two observability tiers against the silent baseline.
+//!
+//! Records results/BENCH_ledger.json (see docs/BENCHMARKS.md).
+
+#[path = "common.rs"]
+mod common;
+
+use gapsafe::data::synth;
+use gapsafe::obs;
+use gapsafe::obs::ledger;
+use gapsafe::obs::trace::FileSink;
+use gapsafe::solver::path::{solve_path, PathConfig};
+use gapsafe::{build_problem, Task};
+
+fn assert_bitwise_equal(
+    a: &gapsafe::solver::path::PathResult,
+    b: &gapsafe::solver::path::PathResult,
+    what: &str,
+) {
+    assert_eq!(a.betas.len(), b.betas.len(), "{what}: path length changed");
+    for (t, (ba, bb)) in a.betas.iter().zip(&b.betas).enumerate() {
+        for j in 0..ba.rows() {
+            for c in 0..ba.cols() {
+                assert_eq!(
+                    ba[(j, c)].to_bits(),
+                    bb[(j, c)].to_bits(),
+                    "{what}: beta diverged at lambda {t}, ({j},{c})"
+                );
+            }
+        }
+    }
+    for (t, (pa, pb)) in a.points.iter().zip(&b.points).enumerate() {
+        assert_eq!(pa.gap.to_bits(), pb.gap.to_bits(), "{what}: gap diverged at lambda {t}");
+        assert_eq!(pa.epochs, pb.epochs, "{what}: epochs diverged at lambda {t}");
+    }
+}
+
+fn main() {
+    let smoke = common::smoke();
+    let full = common::full_size();
+    let (n, p) = if smoke {
+        (24, 200)
+    } else if full {
+        (72, 7000)
+    } else {
+        (48, 2000)
+    };
+    common::banner(
+        "ledger",
+        "solve_path silent vs span tracing (ledger off) vs the full provenance \
+         ledger (all three must be bitwise identical before timing starts)",
+    );
+    let ds = synth::leukemia_like_scaled(n, p, 42, false);
+    let prob = build_problem(ds, Task::Lasso).unwrap();
+    let cfg = PathConfig {
+        n_lambdas: if smoke { 10 } else { 40 },
+        delta: 2.5,
+        eps: 1e-6,
+        max_epochs: 10_000,
+        ..Default::default()
+    };
+    let trace_path =
+        std::env::temp_dir().join(format!("gapsafe_bench_ledger_{}.jsonl", std::process::id()));
+    let trace_str = trace_path.to_string_lossy().to_string();
+
+    // --- bit-equality gate across all three configurations ---
+    obs::uninstall();
+    ledger::set_emit(true);
+    let base = solve_path(&prob, &cfg);
+    obs::install(Box::new(FileSink::create(&trace_str).unwrap()));
+    ledger::set_emit(false);
+    let spans_only = solve_path(&prob, &cfg);
+    ledger::set_emit(true);
+    let with_ledger = solve_path(&prob, &cfg);
+    obs::uninstall();
+    assert_bitwise_equal(&base, &spans_only, "spans-only tracing");
+    assert_bitwise_equal(&base, &with_ledger, "full ledger");
+
+    // Ledger volume of one traced path, from the trace the gate just wrote
+    // (both runs share the file; ledger kinds only come from the second).
+    let count_kind = |text: &str, kind: &str| {
+        let needle = format!("\"type\":\"{kind}\"");
+        text.lines().filter(|l| l.contains(&needle)).count()
+    };
+    let text = std::fs::read_to_string(&trace_path).unwrap_or_default();
+    let n_centers = count_kind(&text, "sphere_center");
+    let n_cols = count_kind(&text, "screen_col");
+    let n_certs = count_kind(&text, "certificate");
+    let trace_bytes = text.len();
+    println!(
+        "bitwise gate passed (ledger volume: {n_centers} centers, {n_cols} kill \
+         records, {n_certs} certificates, {trace_bytes} trace bytes)"
+    );
+    assert!(n_certs >= cfg.n_lambdas, "every solve must leave a certificate");
+
+    // --- timing ---
+    let reps = common::reps(3);
+    let (_, t_off) = common::time_it(reps, || {
+        std::hint::black_box(solve_path(&prob, &cfg));
+    });
+    obs::install(Box::new(FileSink::create(&trace_str).unwrap()));
+    ledger::set_emit(false);
+    let (_, t_spans) = common::time_it(reps, || {
+        std::hint::black_box(solve_path(&prob, &cfg));
+    });
+    ledger::set_emit(true);
+    let (_, t_ledger) = common::time_it(reps, || {
+        std::hint::black_box(solve_path(&prob, &cfg));
+    });
+    obs::uninstall();
+    let _ = std::fs::remove_file(&trace_path);
+
+    let pct = |t: f64| 100.0 * (t - t_off) / t_off.max(1e-12);
+    println!(
+        "no sink {t_off:.4}s  spans-only {t_spans:.4}s ({:+.2}%)  \
+         full ledger {t_ledger:.4}s ({:+.2}%)",
+        pct(t_spans),
+        pct(t_ledger)
+    );
+    common::record_bench_json(
+        "ledger",
+        &[
+            ("seconds_no_sink", t_off),
+            ("seconds_spans_only", t_spans),
+            ("seconds_full_ledger", t_ledger),
+            ("spans_only_overhead_pct", pct(t_spans)),
+            ("full_ledger_overhead_pct", pct(t_ledger)),
+            ("sphere_centers_per_path", n_centers as f64),
+            ("screen_cols_per_path", n_cols as f64),
+            ("certificates_per_path", n_certs as f64),
+            ("trace_bytes_per_path", trace_bytes as f64),
+        ],
+    );
+}

@@ -193,10 +193,31 @@ pub fn identification_epoch(prob: &Problem, rule: Rule, lam: f64, eps: f64) -> O
         ..Default::default()
     };
     let res = solve_fixed_lambda_with(prob, lam, lam_max, None, None, r.as_mut(), None, &opts);
-    if !res.converged {
+    identification_epoch_from(&res, opts.eps)
+}
+
+/// Trace-scan half of [`identification_epoch`], over a finished solve.
+/// `res.converged` is only set inside the epoch loop; a solve whose gap
+/// already certifies the tolerance at the fallback pass (epoch budget
+/// exhausted before the first screening event) counts too.
+pub(crate) fn identification_epoch_from(
+    res: &crate::solver::SolveResult,
+    eps: f64,
+) -> Option<usize> {
+    if !(res.converged || res.gap <= eps) {
         return None;
     }
-    let final_active = res.screen_trace.last()?.active_after;
+    // The exit active set is the certified final support superset — the
+    // same set the solve's ledger certificate records. Reading it from
+    // `screen_trace.last()` was wrong twice over: the trace is absent
+    // entirely on the zero-gap-pass path, and its last entry understates
+    // the final set when the last KKT round reactivated groups after the
+    // pass was recorded.
+    let final_active = res.active.n_active_feats();
+    if res.screen_trace.is_empty() {
+        // No screening event ever ran: the initial set was already final.
+        return Some(0);
+    }
     // first epoch index whose trace entry already equals the final count
     res.screen_trace
         .iter()
@@ -279,5 +300,23 @@ mod tests {
         let lam = 0.3 * prob.lambda_max();
         let e = identification_epoch(&prob, Rule::GapSafeDyn, lam, 1e-10);
         assert!(e.is_some());
+    }
+
+    #[test]
+    fn identification_survives_zero_gap_pass_solves() {
+        // Regression: a solve whose epoch budget runs out before the first
+        // screening event has an *empty* screen_trace but a perfectly
+        // certified exit active set; `screen_trace.last()?` used to turn
+        // that into a silent None.
+        let ds = synth::leukemia_like_scaled(20, 30, 3, false);
+        let prob = build_problem(ds, Task::Lasso).unwrap();
+        let lam = 0.9 * prob.lambda_max();
+        let opts = SolveOptions { max_epochs: 0, eps: 1e30, ..Default::default() };
+        let mut rule = Rule::GapSafeDyn.build();
+        let res = crate::solver::solve_fixed_lambda(&prob, lam, rule.as_mut(), &opts);
+        assert!(res.screen_trace.is_empty(), "budget-0 solve recorded a pass");
+        assert_eq!(identification_epoch_from(&res, opts.eps), Some(0));
+        // and an unconverged, uncertified solve still reports None
+        assert_eq!(identification_epoch_from(&res, -1.0), None);
     }
 }

@@ -32,6 +32,18 @@ pub enum FitKind {
     Poisson,
 }
 
+impl FitKind {
+    /// Stable lowercase label (ledger certificates, trace tooling).
+    pub fn label(self) -> &'static str {
+        match self {
+            FitKind::Quadratic => "quadratic",
+            FitKind::Logistic => "logistic",
+            FitKind::Multinomial => "multinomial",
+            FitKind::Poisson => "poisson",
+        }
+    }
+}
+
 /// A smooth, separable data-fitting term.
 pub trait DataFit: Send + Sync {
     fn kind(&self) -> FitKind;

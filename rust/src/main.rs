@@ -88,7 +88,8 @@ fn usage() {
            selftest   PJRT-vs-native duality-gap consistency check\n\
            artifacts  list + validate the AOT artifact manifest\n\
            lmax       print lambda_max for a (task, data) pair\n\
-           trace      analyze a --trace-out JSONL file (summarize | lambda-table | flame)\n\
+           trace      analyze a --trace-out JSONL file (summarize | lambda-table | flame),\n\
+                      or re-check its screening ledger against the data (verify)\n\
            audit      static-analysis lint pass over rust/src (exit 1 on findings)\n\
            help       this text\n\
          common flags:\n\
@@ -123,6 +124,9 @@ fn usage() {
                                  GET /v1/jobs/<id> | POST /v1/predict   (docs/SERVING.md)\n\
            selftest/artifacts: --artifacts artifacts (manifest dir)\n\
            trace:     --in trace.jsonl (a file produced by --trace-out)\n\
+                      --strict (hard-error on a truncated trailing trace line)\n\
+                      verify: --task/--data/--datafit/--seed/--small pick the dataset\n\
+                      the trace was recorded against; exit 1 on any violation\n\
            audit:     --src rust/src (source root)   --format text|json|sarif\n\
                       --lint a,b (run only the named lints)\n\
                       lints: float-determinism simd-containment trace-transparency\n\
@@ -272,8 +276,11 @@ fn apply_trace_flag(o: &Flags) -> Result<(), String> {
     Ok(())
 }
 
-/// `gapsafe trace [summarize|lambda-table|flame] --in <trace.jsonl>`:
-/// offline analysis of a `--trace-out` file.
+/// `gapsafe trace [summarize|lambda-table|flame|verify] --in <trace.jsonl>`:
+/// offline analysis of a `--trace-out` file. `verify` additionally needs
+/// the data the trace was recorded against (`--task`/`--data`/`--datafit`
+/// /`--seed`/`--small`, same resolution as `path`) and exits nonzero if
+/// any recorded screening decision fails its independent re-check.
 fn cmd_trace(rest: &[String], o: &Flags) -> Result<(), String> {
     let mode = rest
         .first()
@@ -284,14 +291,28 @@ fn cmd_trace(rest: &[String], o: &Flags) -> Result<(), String> {
         .get("in")
         .map(String::as_str)
         .ok_or("trace needs --in <trace.jsonl> (write one with --trace-out)")?;
-    let events = gapsafe::obs::analyze::load(path)?;
+    let strict = o.contains_key("strict");
+    let events = gapsafe::obs::analyze::load_opts(path, strict)?;
     let out = match mode {
         "summarize" => gapsafe::obs::analyze::summarize(&events),
         "lambda-table" => gapsafe::obs::analyze::lambda_table(&events),
         "flame" => gapsafe::obs::analyze::flame(&events),
+        "verify" => {
+            let seed = flag_usize(o, "seed", 42)? as u64;
+            let small = o.contains_key("small");
+            let (task, data) = flag_task_data(o, "lasso", "synth:leukemia")?;
+            let ds = load_spec(&data, seed, small)?;
+            let prob = build_problem(ds, task)?;
+            let rep = gapsafe::obs::analyze::verify(&events, &prob);
+            let text = rep.render();
+            if !rep.ok() {
+                return Err(format!("trace verify FAILED:\n{text}"));
+            }
+            text
+        }
         other => {
             return Err(format!(
-                "unknown trace mode '{other}' (summarize | lambda-table | flame)"
+                "unknown trace mode '{other}' (summarize | lambda-table | flame | verify)"
             ))
         }
     };

@@ -1,26 +1,57 @@
 //! Trace analysis: turn a `--trace-out` JSONL file back into answers
-//! ("where did the time go", "what did screening buy, per lambda").
-//! Backs the `gapsafe trace summarize|lambda-table|flame` subcommand.
+//! ("where did the time go", "what did screening buy, per lambda") and —
+//! via [`verify`] — re-check every screening decision the ledger recorded
+//! against the raw design matrix. Backs the
+//! `gapsafe trace summarize|lambda-table|flame|verify` subcommands.
 
+use crate::linalg::sparse::Design;
+use crate::penalty::{PenaltyKind, SCREEN_MARGIN};
+use crate::problem::Problem;
 use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Load a JSONL trace ([`load_opts`] with `strict = false`): a single
+/// truncated *trailing* line (the common artifact of a killed writer) is
+/// dropped with a loud warning; any earlier malformed line is still a
+/// hard error.
+pub fn load(path: &str) -> Result<Vec<Json>, String> {
+    load_opts(path, false)
+}
 
 /// Load a JSONL trace. Every line must parse through the crate's own
-/// JSON layer — a malformed line is a hard error (this is also the CI
-/// well-formedness gate for trace files), with its line number.
-pub fn load(path: &str) -> Result<Vec<Json>, String> {
+/// JSON layer and carry a `"type"` tag — a malformed line is a hard
+/// error (this is also the CI well-formedness gate for trace files),
+/// with its line number. The one exception: when `strict` is false, a
+/// malformed *final* line is tolerated (a process killed mid-write
+/// leaves exactly one partial trailing line) — it is dropped with a
+/// warning on stderr; `strict = true` (CLI `--strict`) restores the
+/// hard error.
+pub fn load_opts(path: &str, strict: bool) -> Result<Vec<Json>, String> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| format!("cannot read trace file {path}: {e}"))?;
+    let lines: Vec<(usize, &str)> =
+        text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty()).collect();
     let mut events = Vec::new();
-    for (i, line) in text.lines().enumerate() {
-        if line.trim().is_empty() {
-            continue;
+    for (k, &(i, line)) in lines.iter().enumerate() {
+        let parsed = Json::parse(line)
+            .map_err(|e| format!("{path}:{}: malformed trace line: {e}", i + 1))
+            .and_then(|ev| {
+                if ev.get("type").and_then(|t| t.as_str()).is_none() {
+                    Err(format!("{path}:{}: trace line has no \"type\" tag", i + 1))
+                } else {
+                    Ok(ev)
+                }
+            });
+        match parsed {
+            Ok(ev) => events.push(ev),
+            Err(e) if !strict && k + 1 == lines.len() => {
+                eprintln!(
+                    "warning: dropped 1 truncated trailing trace line ({e}); \
+                     pass --strict to make this fatal"
+                );
+            }
+            Err(e) => return Err(e),
         }
-        let ev = Json::parse(line)
-            .map_err(|e| format!("{path}:{}: malformed trace line: {e}", i + 1))?;
-        if ev.get("type").and_then(|t| t.as_str()).is_none() {
-            return Err(format!("{path}:{}: trace line has no \"type\" tag", i + 1));
-        }
-        events.push(ev);
     }
     Ok(events)
 }
@@ -52,6 +83,9 @@ struct LamRow {
     link_secs: f64,
     total_secs: f64,
     kkt: usize,
+    /// Provenance-ledger events recorded at this lambda (sphere centers,
+    /// screened columns, reactivations, certificates).
+    ledger: usize,
 }
 
 /// Aggregate solve spans and gap passes by lambda (keyed on the exact
@@ -86,6 +120,16 @@ fn lambda_rows(events: &[Json]) -> Vec<LamRow> {
         let r = &mut rows[i].1;
         r.initial = r.initial.max(before);
     }
+    for ev in events {
+        if matches!(
+            ev.get("type").and_then(|t| t.as_str()),
+            Some("sphere_center") | Some("screen_col") | Some("reactivate")
+                | Some("certificate")
+        ) {
+            let i = row(num(ev, "lam"), &mut rows);
+            rows[i].1.ledger += 1;
+        }
+    }
     rows.into_iter().map(|(_, r)| r).collect()
 }
 
@@ -99,9 +143,9 @@ pub fn lambda_table(events: &[Json]) -> String {
         return out;
     }
     out.push_str(&format!(
-        "{:>12} {:>7} {:>6} {:>7} {:>6} {:>9} {:>9} {:>9} {:>9} {:>5} {:>4}\n",
+        "{:>12} {:>7} {:>6} {:>7} {:>6} {:>9} {:>9} {:>9} {:>9} {:>5} {:>7} {:>4}\n",
         "lambda", "epochs", "passes", "active", "scr%", "cd_s", "gap_s", "link_s", "total_s",
-        "kkt", "conv"
+        "kkt", "ledger", "conv"
     ));
     for r in &rows {
         let scr = if r.initial > 0 {
@@ -110,7 +154,8 @@ pub fn lambda_table(events: &[Json]) -> String {
             0.0
         };
         out.push_str(&format!(
-            "{:>12.6e} {:>7} {:>6} {:>7} {:>5.1}% {:>9.4} {:>9.4} {:>9.4} {:>9.4} {:>5} {:>4}\n",
+            "{:>12.6e} {:>7} {:>6} {:>7} {:>5.1}% {:>9.4} {:>9.4} {:>9.4} {:>9.4} {:>5} \
+             {:>7} {:>4}\n",
             r.lam,
             r.epochs,
             r.passes,
@@ -121,6 +166,7 @@ pub fn lambda_table(events: &[Json]) -> String {
             r.link_secs,
             r.total_secs,
             r.kkt,
+            r.ledger,
             if r.converged { "yes" } else { "NO" }
         ));
     }
@@ -198,6 +244,32 @@ pub fn summarize(events: &[Json]) -> String {
         out.push('\n');
         out.push_str(&flame(events));
     }
+    // provenance-ledger rollup, when the trace carries one
+    let n_cols = typed(events, "screen_col").count();
+    let n_centers = typed(events, "sphere_center").count();
+    let n_react = typed(events, "reactivate").count();
+    let n_certs = typed(events, "certificate").count();
+    if n_cols + n_centers + n_react + n_certs > 0 {
+        out.push_str(&format!(
+            "\nledger: {n_cols} screen_col, {n_centers} sphere_center, {n_react} reactivate, \
+             {n_certs} certificate(s)\n"
+        ));
+        let mut per: Vec<(String, usize)> = Vec::new();
+        for ev in typed(events, "screen_col") {
+            let r = ev.get("rule").and_then(|v| v.as_str()).unwrap_or("?").to_string();
+            match per.iter_mut().find(|(name, _)| *name == r) {
+                Some((_, c)) => *c += 1,
+                None => per.push((r, 1)),
+            }
+        }
+        if !per.is_empty() {
+            out.push_str("screened columns by rule:\n");
+            for (r, c) in &per {
+                out.push_str(&format!("  {r:>16} x{c}\n"));
+            }
+        }
+        out.push_str("(re-check every kill with `gapsafe trace verify --in <trace> ...`)\n");
+    }
     // serve-side aggregates, when the trace came from `serve --trace-out`
     let mut endpoints: Vec<(String, usize, f64)> = Vec::new();
     for ev in typed(events, "request") {
@@ -234,6 +306,682 @@ pub fn summarize(events: &[Json]) -> String {
         }
     }
     out
+}
+
+// ---------------------------------------------------------------------------
+// Offline safety-certificate verifier (`gapsafe trace verify`).
+//
+// Re-checks every provenance-ledger record against the raw design matrix
+// with a deliberately *decoupled* implementation: plain serial dot
+// products over `Design` columns, local soft-thresholding, local radius
+// formulas — none of the kernel engine, solver, or production screening
+// code paths. If the solver's screening ever discarded a column it should
+// not have, the recomputation here disagrees and the CLI exits nonzero.
+// ---------------------------------------------------------------------------
+
+/// Comparison tolerance between a recomputed statistic and its recorded
+/// value: absorbs kernel-vs-naive summation-order noise (~1e-13 relative)
+/// while still catching any real corruption.
+const VERIFY_TOL: f64 = 1e-6;
+
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= VERIFY_TOL * (1.0 + a.abs().max(b.abs()))
+}
+
+/// Is the sphere inequality `stat + r*norm < thresh` satisfied up to
+/// tolerance? Non-finite left-hand sides (NaN radius on a non-strong
+/// record, corrupted fields) fail — a kill must have a finite argument.
+fn sound(stat: f64, r: f64, norm: f64, thresh: f64) -> bool {
+    let lhs = stat + r * norm;
+    lhs.is_finite() && lhs < thresh + VERIFY_TOL * (1.0 + lhs.abs())
+}
+
+/// f64 field access where absent/null (the JSON image of NaN) maps to NaN
+/// instead of 0.0 — the ledger serializes the strong rule's radius-free
+/// records that way.
+fn fnum(ev: &Json, key: &str) -> f64 {
+    ev.get(key).and_then(|v| v.as_f64()).unwrap_or(f64::NAN)
+}
+
+fn f64_arr(ev: &Json, key: &str) -> Option<Vec<f64>> {
+    match ev.get(key)? {
+        Json::Arr(xs) => Some(xs.iter().map(|x| x.as_f64().unwrap_or(f64::NAN)).collect()),
+        _ => None,
+    }
+}
+
+fn usize_arr(ev: &Json, key: &str) -> Option<Vec<usize>> {
+    match ev.get(key)? {
+        Json::Arr(xs) => xs.iter().map(|x| x.as_usize()).collect(),
+        _ => None,
+    }
+}
+
+/// Serial dot of design column j with an n-vector — deliberately NOT
+/// `Design::col_dot`, which routes through the SIMD kernel engine the
+/// verifier must stay independent of.
+fn naive_col_dot(x: &Design, j: usize, v: &[f64]) -> f64 {
+    match x {
+        Design::Dense(m) => m.col(j).iter().zip(v).map(|(a, b)| a * b).sum(),
+        Design::Sparse(s) => {
+            let (rows, vals) = s.col(j);
+            rows.iter().zip(vals).map(|(&r, &a)| a * v[r]).sum()
+        }
+    }
+}
+
+fn naive_col_norm(x: &Design, j: usize) -> f64 {
+    match x {
+        Design::Dense(m) => m.col(j).iter().map(|a| a * a).sum::<f64>().sqrt(),
+        Design::Sparse(s) => s.col(j).1.iter().map(|a| a * a).sum::<f64>().sqrt(),
+    }
+}
+
+/// ||X_g^T Theta||_F by naive per-column dots (`theta` column-major n*q).
+fn naive_group_frob(x: &Design, feats: &[usize], theta: &[f64], n: usize, q: usize) -> f64 {
+    let mut s = 0.0;
+    for &j in feats {
+        for c in 0..q {
+            let d = naive_col_dot(x, j, &theta[c * n..(c + 1) * n]);
+            s += d * d;
+        }
+    }
+    s.sqrt()
+}
+
+/// Local soft-threshold (no dependence on the linalg helpers).
+fn soft(v: f64, t: f64) -> f64 {
+    if v > t {
+        v - t
+    } else if v < -t {
+        v + t
+    } else {
+        0.0
+    }
+}
+
+/// Everything `verify` counted and found. `violations` empty = the trace
+/// is certified against the data.
+#[derive(Debug, Default)]
+pub struct VerifyReport {
+    pub certificates: usize,
+    pub sphere_centers: usize,
+    pub screen_cols: usize,
+    pub reactivations: usize,
+    pub violations: Vec<String>,
+}
+
+impl VerifyReport {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "checked {} certificate(s), {} screened column(s) at {} sphere center(s), \
+             {} reactivation(s)\n",
+            self.certificates, self.screen_cols, self.sphere_centers, self.reactivations
+        );
+        if self.ok() {
+            out.push_str(
+                "VERIFIED: every recorded screening decision re-checks against the data\n",
+            );
+        } else {
+            out.push_str(&format!("{} VIOLATION(S):\n", self.violations.len()));
+            for v in &self.violations {
+                out.push_str("  ");
+                out.push_str(v);
+                out.push('\n');
+            }
+        }
+        out
+    }
+}
+
+/// Dual-ball feasibility Omega^D(X^T theta) <= 1 of a recorded dual
+/// point, rebuilt from first principles per penalty family (for SGL via
+/// the Prop. 7 ball characterization ||S_tau(X_g^T theta)||_2 <=
+/// (1-tau) w_g, which avoids the production epsilon-norm code entirely).
+fn ball_violation(prob: &Problem, theta: &[f64], tag: &str) -> Option<String> {
+    let (n, q) = (prob.n(), prob.q());
+    let groups = prob.pen.groups();
+    match prob.pen.kind() {
+        PenaltyKind::L1 => {
+            for j in 0..prob.p() {
+                let s = naive_group_frob(&prob.x, &[j], theta, n, q);
+                if s > 1.0 + VERIFY_TOL {
+                    return Some(format!(
+                        "{tag}: dual point infeasible: |x_{j}^T theta| = {s:e} > 1"
+                    ));
+                }
+            }
+        }
+        PenaltyKind::GroupL2 => {
+            for g in 0..groups.len() {
+                let s = naive_group_frob(&prob.x, groups.feats(g), theta, n, q)
+                    / prob.pen.group_weight(g);
+                if s > 1.0 + VERIFY_TOL {
+                    return Some(format!(
+                        "{tag}: dual point infeasible: ||X_g^T theta|| / w_g = {s:e} > 1 \
+                         (group {g})"
+                    ));
+                }
+            }
+        }
+        PenaltyKind::SparseGroup => {
+            let tau = prob.pen.tau().unwrap_or(1.0);
+            for g in 0..groups.len() {
+                let w = prob.pen.group_weight(g);
+                let mut stsq = 0.0;
+                for &j in groups.feats(g) {
+                    let t = soft(naive_col_dot(&prob.x, j, &theta[..n]), tau);
+                    stsq += t * t;
+                }
+                let lhs = stsq.sqrt();
+                let rhs = (1.0 - tau) * w;
+                if lhs > rhs + VERIFY_TOL * (1.0 + rhs) {
+                    return Some(format!(
+                        "{tag}: dual point infeasible: ||S_tau(X_g^T theta)|| = {lhs:e} > \
+                         (1-tau) w_g = {rhs:e} (group {g})"
+                    ));
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Datafit-side feasibility of a recorded dual point. Only Poisson
+/// constrains it: v_i = y_i - lam*theta_i must be nonnegative for the KL
+/// conjugate (logistic/multinomial duals clamp into their domain, so any
+/// ball-feasible theta already yields a valid bound there).
+fn domain_violation(prob: &Problem, lam: f64, theta: &[f64], tag: &str) -> Option<String> {
+    if prob.fit.kind().label() != "poisson" {
+        return None;
+    }
+    for (i, (&yi, &ti)) in prob.fit.targets().as_slice().iter().zip(theta).enumerate() {
+        let v = yi - lam * ti;
+        if v < -VERIFY_TOL * (1.0 + yi.abs()) {
+            return Some(format!(
+                "{tag}: dual point outside KL domain: y_{i} - lam*theta_{i} = {v:e} < 0"
+            ));
+        }
+    }
+    None
+}
+
+/// The Gap Safe radius the recorded (gap, lam, theta) induce, rebuilt
+/// locally: sqrt(2 gap / gamma) / lam with gamma = 1 (quadratic,
+/// multinomial) or 4 (logistic); Poisson uses the locally bounded form
+/// (gap + sqrt(gap^2 + 2 gap v_max)) / lam with v_max = max_i (y_i -
+/// lam theta_i)_+.
+fn expected_radius(fit: &str, gap: f64, lam: f64, theta: &[f64], y: &[f64]) -> Option<f64> {
+    let gap = gap.max(0.0);
+    match fit {
+        "quadratic" | "multinomial" => Some((2.0 * gap).sqrt() / lam),
+        "logistic" => Some((2.0 * gap / 4.0).sqrt() / lam),
+        "poisson" => {
+            let mut v_max = 0.0_f64;
+            for (&yi, &ti) in y.iter().zip(theta) {
+                v_max = v_max.max(yi - lam * ti);
+            }
+            Some((gap + (gap * gap + 2.0 * gap * v_max).sqrt()) / lam)
+        }
+        _ => None,
+    }
+}
+
+/// Re-check a provenance ledger against the raw design: every
+/// [`crate::obs::Event::ScreenCol`] must satisfy its sphere inequality at
+/// its recorded center with a recomputed statistic, every
+/// [`crate::obs::Event::Certificate`]'s dual point must be feasible with
+/// a radius that matches its gap, and replaying each solve's kill /
+/// reactivation stream from its initial set must land exactly on the
+/// certified final support.
+pub fn verify(events: &[Json], prob: &Problem) -> VerifyReport {
+    let mut rep = VerifyReport::default();
+    let (n, q, p) = (prob.n(), prob.q(), prob.p());
+    let groups = prob.pen.groups();
+    let ng = groups.len();
+    let kind = prob.pen.kind();
+    let tau_opt = prob.pen.tau();
+    let x = &prob.x;
+
+    // --- sphere centers, indexed by cid -----------------------------------
+    let mut centers: BTreeMap<u64, (&Json, Vec<f64>)> = BTreeMap::new();
+    for ev in typed(events, "sphere_center") {
+        rep.sphere_centers += 1;
+        let cid = unum(ev, "cid") as u64;
+        if unum(ev, "n") != n || unum(ev, "q") != q {
+            rep.violations.push(format!(
+                "sphere_center cid={cid}: dual shape {}x{} does not match data {n}x{q}",
+                unum(ev, "n"),
+                unum(ev, "q")
+            ));
+            continue;
+        }
+        let theta = match f64_arr(ev, "theta") {
+            Some(t) if t.len() == n * q => t,
+            _ => {
+                rep.violations
+                    .push(format!("sphere_center cid={cid}: theta missing or wrong length"));
+                continue;
+            }
+        };
+        let site = ev.get("site").and_then(|s| s.as_str()).unwrap_or("?");
+        let rule = ev.get("rule").and_then(|s| s.as_str()).unwrap_or("?");
+        let radius = fnum(ev, "radius");
+        let tag = format!("sphere_center cid={cid} rule={rule}");
+        if site == "strong" {
+            if !radius.is_nan() {
+                rep.violations.push(format!("{tag}: strong site with a sphere radius"));
+            }
+        } else {
+            if !(radius.is_finite() && radius >= 0.0) {
+                rep.violations.push(format!("{tag}: non-finite sphere radius {radius}"));
+            }
+            // Gap Safe spheres are only safe at a *feasible* center (the
+            // gap-radius bound needs D(theta) on the dual domain); the
+            // DST3/El Ghaoui geometric spheres carry their own arguments
+            // and may legitimately use out-of-ball centers.
+            if rule.contains("gap") {
+                if let Some(v) = ball_violation(prob, &theta, &tag) {
+                    rep.violations.push(v);
+                }
+                if let Some(v) = domain_violation(prob, fnum(ev, "lam"), &theta, &tag) {
+                    rep.violations.push(v);
+                }
+            }
+        }
+        if centers.insert(cid, (ev, theta)).is_some() {
+            rep.violations.push(format!("sphere_center cid={cid}: duplicate cid"));
+        }
+    }
+
+    // --- every screened column, re-tested at its recorded center ---------
+    for ev in typed(events, "screen_col") {
+        rep.screen_cols += 1;
+        let sid = unum(ev, "sid") as u64;
+        let cid = unum(ev, "cid") as u64;
+        let j = unum(ev, "j");
+        let g = unum(ev, "group");
+        let test = ev.get("test").and_then(|t| t.as_str()).unwrap_or("?");
+        let tag = format!("screen_col sid={sid} cid={cid} j={j} test={test}");
+        if j >= p || g >= ng || groups.group_of(j) != g {
+            rep.violations
+                .push(format!("{tag}: column/group indices out of range or mismatched"));
+            continue;
+        }
+        let stat = fnum(ev, "stat");
+        let norm = fnum(ev, "norm");
+        let radius = fnum(ev, "radius");
+        let thresh = fnum(ev, "thresh");
+        let margin = fnum(ev, "margin");
+        let Some((cev, theta)) = centers.get(&cid) else {
+            rep.violations.push(format!("{tag}: no sphere_center with this cid"));
+            continue;
+        };
+        let cev: &Json = cev;
+        if unum(cev, "sid") as u64 != sid
+            || fnum(cev, "lam").to_bits() != fnum(ev, "lam").to_bits()
+            || unum(cev, "epoch") != unum(ev, "epoch")
+        {
+            rep.violations
+                .push(format!("{tag}: sid/lam/epoch disagree with its sphere_center"));
+        }
+        let c_rad = fnum(cev, "radius");
+        if radius.to_bits() != c_rad.to_bits() && !(radius.is_nan() && c_rad.is_nan()) {
+            rep.violations
+                .push(format!("{tag}: radius {radius:e} != sphere radius {c_rad:e}"));
+        }
+        // bookkeeping: recorded margin must be thresh - stat - r*norm
+        // (radius-free for the strong heuristic).
+        let margin_want =
+            if radius.is_nan() { thresh - stat } else { thresh - stat - radius * norm };
+        if !close(margin, margin_want) {
+            rep.violations.push(format!(
+                "{tag}: margin {margin:e} inconsistent with thresh - stat - r*norm = \
+                 {margin_want:e}"
+            ));
+        }
+        let feats = groups.feats(g);
+        match test {
+            "l1" => {
+                let stat_re = naive_group_frob(x, &[j], theta, n, q);
+                let norm_re = naive_col_norm(x, j);
+                if !close(stat_re, stat) {
+                    rep.violations.push(format!(
+                        "{tag}: recorded stat {stat:e}, recomputed |x_j^T theta| = {stat_re:e}"
+                    ));
+                }
+                if !close(norm_re, norm) {
+                    rep.violations.push(format!(
+                        "{tag}: recorded norm {norm:e}, recomputed ||x_j|| = {norm_re:e}"
+                    ));
+                }
+                if !close(thresh, 1.0 - SCREEN_MARGIN) {
+                    rep.violations
+                        .push(format!("{tag}: l1 threshold {thresh:e} is not 1 - margin"));
+                }
+                if !sound(stat_re, radius, norm_re, thresh) {
+                    rep.violations.push(format!(
+                        "{tag}: UNSAFE kill: |x_j^T theta| + r*||x_j|| = {:e} >= {thresh:e}",
+                        stat_re + radius * norm_re
+                    ));
+                }
+            }
+            "group" => {
+                let w = prob.pen.group_weight(g);
+                let stat_re = naive_group_frob(x, feats, theta, n, q) / w;
+                if !close(stat_re, stat) {
+                    rep.violations.push(format!(
+                        "{tag}: recorded stat {stat:e}, recomputed ||X_g^T theta||/w_g = \
+                         {stat_re:e}"
+                    ));
+                }
+                if !close(thresh, 1.0 - SCREEN_MARGIN) {
+                    rep.violations
+                        .push(format!("{tag}: group threshold {thresh:e} is not 1 - margin"));
+                }
+                // The recorded slope is a spectral-norm *estimate*; it is
+                // safe iff it upper-bounds sigma_max, which pins it into
+                // [max_j ||x_j||, Frobenius].
+                let col2: Vec<f64> = feats.iter().map(|&f| naive_col_norm(x, f)).collect();
+                let maxc = col2.iter().cloned().fold(0.0, f64::max);
+                let frob = col2.iter().map(|c| c * c).sum::<f64>().sqrt();
+                let spec = norm * w;
+                if spec < maxc * (1.0 - VERIFY_TOL) - VERIFY_TOL
+                    || spec > frob * (1.0 + VERIFY_TOL) + VERIFY_TOL
+                {
+                    rep.violations.push(format!(
+                        "{tag}: recorded operator norm {spec:e} outside safe window \
+                         [{maxc:e}, {frob:e}]"
+                    ));
+                }
+                if !sound(stat_re, radius, norm, thresh) {
+                    rep.violations.push(format!(
+                        "{tag}: UNSAFE group kill: stat + r*norm = {:e} >= {thresh:e}",
+                        stat_re + radius * norm
+                    ));
+                }
+            }
+            "sgl-group" => {
+                let (Some(tau), true) = (tau_opt, q == 1) else {
+                    rep.violations
+                        .push(format!("{tag}: SGL record but the penalty is not SGL"));
+                    continue;
+                };
+                let w = prob.pen.group_weight(g);
+                let mut stsq = 0.0;
+                let mut ma = 0.0_f64;
+                for &f in feats {
+                    let d = naive_col_dot(x, f, &theta[..n]);
+                    ma = ma.max(d.abs());
+                    let t = soft(d, tau);
+                    stsq += t * t;
+                }
+                let st_norm = stsq.sqrt();
+                let stat_re = if ma > tau { st_norm } else { ma - tau };
+                if !close(stat_re, stat) {
+                    rep.violations.push(format!(
+                        "{tag}: recorded stat {stat:e}, recomputed SGL group stat = {stat_re:e}"
+                    ));
+                }
+                if !close(thresh, (1.0 - tau) * w - SCREEN_MARGIN) {
+                    rep.violations.push(format!(
+                        "{tag}: SGL group threshold {thresh:e} is not (1-tau) w_g - margin"
+                    ));
+                }
+                let col2: Vec<f64> = feats.iter().map(|&f| naive_col_norm(x, f)).collect();
+                let maxc = col2.iter().cloned().fold(0.0, f64::max);
+                let frob = col2.iter().map(|c| c * c).sum::<f64>().sqrt();
+                if norm < maxc * (1.0 - VERIFY_TOL) - VERIFY_TOL
+                    || norm > frob * (1.0 + VERIFY_TOL) + VERIFY_TOL
+                {
+                    rep.violations.push(format!(
+                        "{tag}: recorded operator norm {norm:e} outside safe window \
+                         [{maxc:e}, {frob:e}]"
+                    ));
+                }
+                // the exact two-branch test of Prop. 8 at the recorded radius
+                let rx = radius * norm;
+                let t_g = if ma > tau { st_norm + rx } else { (ma + rx - tau).max(0.0) };
+                if !(t_g.is_finite() && t_g < thresh + VERIFY_TOL * (1.0 + t_g.abs())) {
+                    rep.violations.push(format!(
+                        "{tag}: UNSAFE group kill: T_g = {t_g:e} >= {thresh:e}"
+                    ));
+                }
+            }
+            "sgl-feat" => {
+                let (Some(tau), true) = (tau_opt, q == 1) else {
+                    rep.violations
+                        .push(format!("{tag}: SGL record but the penalty is not SGL"));
+                    continue;
+                };
+                let stat_re = naive_col_dot(x, j, &theta[..n]).abs();
+                let norm_re = naive_col_norm(x, j);
+                if !close(stat_re, stat) {
+                    rep.violations.push(format!(
+                        "{tag}: recorded stat {stat:e}, recomputed |x_j^T theta| = {stat_re:e}"
+                    ));
+                }
+                if !close(norm_re, norm) {
+                    rep.violations.push(format!(
+                        "{tag}: recorded norm {norm:e}, recomputed ||x_j|| = {norm_re:e}"
+                    ));
+                }
+                if !close(thresh, tau - SCREEN_MARGIN) {
+                    rep.violations.push(format!(
+                        "{tag}: SGL feature threshold {thresh:e} is not tau - margin"
+                    ));
+                }
+                if !sound(stat_re, radius, norm_re, thresh) {
+                    rep.violations.push(format!(
+                        "{tag}: UNSAFE feature kill: |x_j^T theta| + r*||x_j|| = {:e} >= \
+                         {thresh:e}",
+                        stat_re + radius * norm_re
+                    ));
+                }
+            }
+            "strong" => {
+                // Heuristic site: no sphere, no safety claim — verify the
+                // recorded statistic is faithful and its inequality held.
+                if !radius.is_nan() {
+                    rep.violations.push(format!("{tag}: strong record with a radius"));
+                }
+                let stat_re = match kind {
+                    PenaltyKind::L1 => naive_group_frob(x, &[j], theta, n, q),
+                    PenaltyKind::GroupL2 => {
+                        naive_group_frob(x, feats, theta, n, q) / prob.pen.group_weight(g)
+                    }
+                    PenaltyKind::SparseGroup => {
+                        let tau = tau_opt.unwrap_or(1.0);
+                        let w = prob.pen.group_weight(g);
+                        let mut stsq = 0.0;
+                        let mut ma = 0.0_f64;
+                        for &f in feats {
+                            let d = naive_col_dot(x, f, &theta[..n]);
+                            ma = ma.max(d.abs());
+                            let t = soft(d, tau);
+                            stsq += t * t;
+                        }
+                        if tau < 1.0 && w > 0.0 {
+                            stsq.sqrt() / ((1.0 - tau) * w)
+                        } else {
+                            ma
+                        }
+                    }
+                };
+                if !close(stat_re, stat) {
+                    rep.violations.push(format!(
+                        "{tag}: recorded strong stat {stat:e}, recomputed {stat_re:e}"
+                    ));
+                }
+                if !(stat < thresh) {
+                    rep.violations
+                        .push(format!("{tag}: strong kill with stat {stat:e} >= {thresh:e}"));
+                }
+            }
+            other => {
+                rep.violations.push(format!("{tag}: unknown test kind {other:?}"));
+            }
+        }
+    }
+
+    // --- certificates + per-solve support replay --------------------------
+    let mut certs: BTreeMap<u64, &Json> = BTreeMap::new();
+    for ev in typed(events, "certificate") {
+        rep.certificates += 1;
+        let sid = unum(ev, "sid") as u64;
+        if certs.insert(sid, ev).is_some() {
+            rep.violations.push(format!("certificate sid={sid}: duplicate certificate"));
+        }
+    }
+    // ordered kill/reactivation stream per solve (file order is emission
+    // order: the ledger is append-only and a solve is single-threaded)
+    let mut streams: BTreeMap<u64, Vec<&Json>> = BTreeMap::new();
+    for ev in events {
+        match ev.get("type").and_then(|t| t.as_str()) {
+            Some("screen_col") => {
+                streams.entry(unum(ev, "sid") as u64).or_default().push(ev);
+            }
+            Some("reactivate") => {
+                rep.reactivations += 1;
+                streams.entry(unum(ev, "sid") as u64).or_default().push(ev);
+            }
+            _ => {}
+        }
+    }
+    for &sid in streams.keys() {
+        if sid == 0 {
+            rep.violations
+                .push("ledger events with sid=0 (emitted outside any solve)".to_string());
+        } else if !certs.contains_key(&sid) {
+            rep.violations
+                .push(format!("solve sid={sid} screened columns but left no certificate"));
+        }
+    }
+    for (&sid, &cert) in &certs {
+        let tag = format!("certificate sid={sid}");
+        if unum(cert, "n") != n || unum(cert, "q") != q || unum(cert, "p") != p {
+            rep.violations.push(format!(
+                "{tag}: shape (n={}, q={}, p={}) does not match data (n={n}, q={q}, p={p})",
+                unum(cert, "n"),
+                unum(cert, "q"),
+                unum(cert, "p")
+            ));
+            continue;
+        }
+        let fit = cert.get("fit").and_then(|f| f.as_str()).unwrap_or("?");
+        if fit != prob.fit.kind().label() {
+            rep.violations.push(format!(
+                "{tag}: datafit {fit:?} does not match data ({:?})",
+                prob.fit.kind().label()
+            ));
+            continue;
+        }
+        let lam = fnum(cert, "lam");
+        let gap = fnum(cert, "gap");
+        let radius = fnum(cert, "radius");
+        if !(lam > 0.0 && lam.is_finite()) {
+            rep.violations.push(format!("{tag}: bad lambda {lam}"));
+            continue;
+        }
+        if !(gap >= -1e-9) {
+            rep.violations.push(format!("{tag}: negative duality gap {gap:e}"));
+        }
+        let theta = match f64_arr(cert, "theta") {
+            Some(t) if t.len() == n * q && t.iter().all(|v| v.is_finite()) => t,
+            _ => {
+                rep.violations
+                    .push(format!("{tag}: theta missing, wrong length, or non-finite"));
+                continue;
+            }
+        };
+        if let Some(v) = ball_violation(prob, &theta, &tag) {
+            rep.violations.push(v);
+        }
+        if let Some(v) = domain_violation(prob, lam, &theta, &tag) {
+            rep.violations.push(v);
+        }
+        match expected_radius(fit, gap, lam, &theta, prob.fit.targets().as_slice()) {
+            Some(want) => {
+                if !close(radius, want) {
+                    rep.violations.push(format!(
+                        "{tag}: recorded radius {radius:e}, but gap {gap:e} induces {want:e}"
+                    ));
+                }
+            }
+            None => rep.violations.push(format!("{tag}: unknown datafit label {fit:?}")),
+        }
+        // replay the kill/reactivation stream from the initial set and
+        // compare with the certified final support
+        let Some(support) = usize_arr(cert, "support") else {
+            rep.violations.push(format!("{tag}: support missing or malformed"));
+            continue;
+        };
+        let initial = match cert.get("initial") {
+            None | Some(Json::Null) => None,
+            Some(_) => match usize_arr(cert, "initial") {
+                Some(idx) => Some(idx),
+                None => {
+                    rep.violations.push(format!("{tag}: initial set malformed"));
+                    continue;
+                }
+            },
+        };
+        let mut act = vec![initial.is_none(); p];
+        if let Some(idx) = &initial {
+            for &f in idx {
+                if f < p {
+                    act[f] = true;
+                } else {
+                    rep.violations
+                        .push(format!("{tag}: initial feature {f} out of range"));
+                }
+            }
+        }
+        for &sev in streams.get(&sid).map(|v| v.as_slice()).unwrap_or(&[]) {
+            match sev.get("type").and_then(|t| t.as_str()) {
+                Some("screen_col") => {
+                    let f = unum(sev, "j");
+                    if f < p {
+                        if !act[f] {
+                            rep.violations.push(format!(
+                                "{tag}: replay screened column {f} while it was already \
+                                 inactive"
+                            ));
+                        }
+                        act[f] = false;
+                    }
+                }
+                Some("reactivate") => {
+                    let g = unum(sev, "group");
+                    if g < ng {
+                        for &f in groups.feats(g) {
+                            act[f] = true;
+                        }
+                    } else {
+                        rep.violations
+                            .push(format!("{tag}: reactivated group {g} out of range"));
+                    }
+                }
+                _ => {}
+            }
+        }
+        let replayed: Vec<usize> = (0..p).filter(|&f| act[f]).collect();
+        let mut want = support.clone();
+        want.sort_unstable();
+        if replayed != want {
+            rep.violations.push(format!(
+                "{tag}: support replay mismatch: certificate lists {} feature(s), replaying \
+                 the ledger gives {}",
+                support.len(),
+                replayed.len()
+            ));
+        }
+    }
+    rep
 }
 
 #[cfg(test)]
@@ -321,15 +1069,259 @@ mod tests {
     }
 
     #[test]
-    fn load_rejects_malformed_lines_with_line_number() {
+    fn loader_is_lenient_only_for_the_trailing_line() {
         let path =
             std::env::temp_dir().join(format!("gapsafe_trace_bad_{}.jsonl", std::process::id()));
-        std::fs::write(&path, "{\"type\":\"kkt\"}\nnot json\n").unwrap();
+        // malformed NON-trailing line: always a hard error, with line number
+        std::fs::write(&path, "not json\n{\"type\":\"kkt\"}\n").unwrap();
         let err = load(path.to_str().unwrap()).unwrap_err();
-        assert!(err.contains(":2:"), "error should carry line number: {err}");
-        std::fs::write(&path, "{\"type\":\"kkt\"}\n{\"no_tag\":1}\n").unwrap();
+        assert!(err.contains(":1:"), "error should carry line number: {err}");
+        // truncated trailing line (killed writer): dropped by default...
+        std::fs::write(&path, "{\"type\":\"kkt\"}\n{\"type\":\"so").unwrap();
+        let evs = load(path.to_str().unwrap()).unwrap();
+        assert_eq!(evs.len(), 1, "one good event should survive");
+        // ...but fatal under --strict, with its line number
+        let err = load_opts(path.to_str().unwrap(), true).unwrap_err();
+        assert!(err.contains(":2:"), "{err}");
+        // a non-trailing line without a type tag is also always fatal
+        std::fs::write(&path, "{\"no_tag\":1}\n{\"type\":\"kkt\"}\n").unwrap();
         let err = load(path.to_str().unwrap()).unwrap_err();
         assert!(err.contains("type"), "{err}");
         let _ = std::fs::remove_file(&path);
+    }
+
+    // ---- offline verifier -------------------------------------------------
+
+    use crate::data::synth;
+    use crate::problem::Problem;
+    use crate::{build_problem, Task};
+
+    /// A hand-built, internally consistent one-solve Lasso ledger: theta
+    /// is the (feasible) lambda_max dual point, the gap is chosen so the
+    /// induced radius screens some but not all columns, and every field
+    /// is derived with the same naive arithmetic the verifier re-checks
+    /// with — so the trace verifies cleanly until a test corrupts it.
+    fn lasso_fixture() -> (Problem, f64, f64, f64, Vec<f64>) {
+        let ds = synth::leukemia_like_scaled(20, 30, 3, false);
+        let prob = build_problem(ds, Task::Lasso).unwrap();
+        let lmax = prob.lambda_max();
+        let lam = 0.9 * lmax;
+        let theta: Vec<f64> =
+            prob.fit.targets().as_slice().iter().map(|v| v / lmax).collect();
+        let radius = 0.05;
+        let gap = 0.5 * (radius * lam) * (radius * lam);
+        (prob, lam, gap, radius, theta)
+    }
+
+    fn fixture_events(
+        prob: &Problem,
+        lam: f64,
+        gap: f64,
+        radius: f64,
+        theta: &[f64],
+    ) -> (Vec<Json>, usize) {
+        let (n, p) = (prob.n(), prob.p());
+        let thresh = 1.0 - SCREEN_MARGIN;
+        let mut evs = vec![Event::SphereCenter {
+            sid: 1,
+            cid: 2,
+            lam,
+            epoch: 0,
+            rule: "gap-dyn",
+            site: "dyn",
+            radius,
+            n,
+            q: 1,
+            theta: theta.to_vec(),
+        }
+        .to_json()];
+        let mut support = Vec::new();
+        let mut kills = 0;
+        for j in 0..p {
+            let stat = naive_col_dot(&prob.x, j, theta).abs();
+            let norm = naive_col_norm(&prob.x, j);
+            if stat + radius * norm < thresh {
+                kills += 1;
+                evs.push(
+                    Event::ScreenCol {
+                        sid: 1,
+                        cid: 2,
+                        lam,
+                        epoch: 0,
+                        rule: "gap-dyn",
+                        test: "l1",
+                        j,
+                        group: j,
+                        stat,
+                        norm,
+                        radius,
+                        thresh,
+                        margin: thresh - stat - radius * norm,
+                    }
+                    .to_json(),
+                );
+            } else {
+                support.push(j);
+            }
+        }
+        evs.push(
+            Event::Certificate {
+                sid: 1,
+                lam,
+                gap,
+                radius,
+                n,
+                q: 1,
+                p,
+                theta: theta.to_vec(),
+                support,
+                initial: None,
+                rule: "gap-dyn",
+                fit: "quadratic",
+            }
+            .to_json(),
+        );
+        (evs, kills)
+    }
+
+    #[test]
+    fn verify_accepts_a_consistent_synthetic_ledger() {
+        let (prob, lam, gap, radius, theta) = lasso_fixture();
+        let (evs, kills) = fixture_events(&prob, lam, gap, radius, &theta);
+        assert!(
+            kills >= 1 && kills < prob.p(),
+            "fixture should screen some but not all columns, got {kills}"
+        );
+        let rep = verify(&evs, &prob);
+        assert!(rep.ok(), "unexpected violations: {:#?}", rep.violations);
+        assert_eq!(rep.certificates, 1);
+        assert_eq!(rep.screen_cols, kills);
+        assert!(rep.render().contains("VERIFIED"));
+    }
+
+    fn tamper(evs: &mut [Json], idx: usize, key: &str, v: f64) {
+        if let Json::Obj(m) = &mut evs[idx] {
+            m.insert(key.to_string(), Json::Num(v));
+        }
+    }
+
+    #[test]
+    fn verify_flags_hand_corrupted_traces() {
+        let (prob, lam, gap, radius, theta) = lasso_fixture();
+        let (evs, kills) = fixture_events(&prob, lam, gap, radius, &theta);
+        assert!(kills >= 1);
+        let last = evs.len() - 1; // the certificate
+        let thresh = 1.0 - SCREEN_MARGIN;
+
+        // (a) a lied-about correlation statistic on the first kill
+        let mut bad = evs.clone();
+        tamper(&mut bad, 1, "stat", 0.0);
+        let rep = verify(&bad, &prob);
+        assert!(rep.violations.iter().any(|v| v.contains("stat")), "{:#?}", rep.violations);
+
+        // (b) an *unsafe* kill — the lambda_max column, whose true
+        // statistic fails the sphere test, recorded faithfully: only the
+        // independent re-test can reject it
+        let mut bad = evs.clone();
+        let j_max = (0..prob.p())
+            .max_by(|&a, &b| {
+                let sa = naive_col_dot(&prob.x, a, &theta).abs();
+                let sb = naive_col_dot(&prob.x, b, &theta).abs();
+                sa.partial_cmp(&sb).unwrap()
+            })
+            .unwrap();
+        let stat = naive_col_dot(&prob.x, j_max, &theta).abs();
+        let norm = naive_col_norm(&prob.x, j_max);
+        bad.push(
+            Event::ScreenCol {
+                sid: 1,
+                cid: 2,
+                lam,
+                epoch: 0,
+                rule: "gap-dyn",
+                test: "l1",
+                j: j_max,
+                group: j_max,
+                stat,
+                norm,
+                radius,
+                thresh,
+                margin: thresh - stat - radius * norm,
+            }
+            .to_json(),
+        );
+        let rep = verify(&bad, &prob);
+        assert!(rep.violations.iter().any(|v| v.contains("UNSAFE")), "{:#?}", rep.violations);
+
+        // (c) a support lie: the certificate claims a screened column is
+        // still active
+        let mut bad = evs.clone();
+        let killed_j = bad[1].get("j").and_then(|v| v.as_usize()).unwrap();
+        if let Json::Obj(m) = &mut bad[last] {
+            if let Some(Json::Arr(sup)) = m.get_mut("support") {
+                sup.push(Json::Num(killed_j as f64));
+            }
+        }
+        let rep = verify(&bad, &prob);
+        assert!(rep.violations.iter().any(|v| v.contains("replay")), "{:#?}", rep.violations);
+
+        // (d) an infeasible certificate dual point
+        let mut bad = evs.clone();
+        let blown: Vec<f64> = theta.iter().map(|t| 3.0 * t).collect();
+        if let Json::Obj(m) = &mut bad[last] {
+            m.insert("theta".to_string(), Json::arr_f64(&blown));
+        }
+        let rep = verify(&bad, &prob);
+        assert!(
+            rep.violations.iter().any(|v| v.contains("infeasible")),
+            "{:#?}",
+            rep.violations
+        );
+
+        // (e) a radius that does not match the recorded gap
+        let mut bad = evs.clone();
+        tamper(&mut bad, last, "radius", 2.0 * radius);
+        let rep = verify(&bad, &prob);
+        assert!(rep.violations.iter().any(|v| v.contains("radius")), "{:#?}", rep.violations);
+    }
+
+    #[test]
+    fn verify_checks_poisson_local_radius_and_domain() {
+        let ds = synth::poisson_like(16, 12, 5);
+        let prob = build_problem(ds, Task::Poisson).unwrap();
+        let lam = 0.7 * prob.lambda_max();
+        // theta = 0 is always dual-feasible for KL (v_i = y_i >= 0)
+        let theta = vec![0.0; prob.n()];
+        let gap = 0.01;
+        let v_max =
+            prob.fit.targets().as_slice().iter().cloned().fold(0.0_f64, f64::max);
+        let radius = (gap + (gap * gap + 2.0 * gap * v_max).sqrt()) / lam;
+        let cert = |r: f64, th: &[f64]| {
+            Event::Certificate {
+                sid: 1,
+                lam,
+                gap,
+                radius: r,
+                n: prob.n(),
+                q: 1,
+                p: prob.p(),
+                theta: th.to_vec(),
+                support: (0..prob.p()).collect(),
+                initial: None,
+                rule: "gap-dyn",
+                fit: "poisson",
+            }
+            .to_json()
+        };
+        let rep = verify(&[cert(radius, &theta)], &prob);
+        assert!(rep.ok(), "{:#?}", rep.violations);
+        // a quadratic-style radius is wrong for KL and must be flagged
+        let wrong = (2.0 * gap).sqrt() / lam;
+        let rep = verify(&[cert(wrong, &theta)], &prob);
+        assert!(rep.violations.iter().any(|v| v.contains("radius")), "{:#?}", rep.violations);
+        // a dual point with y - lam*theta < 0 is outside the KL domain
+        let infeasible = vec![1e3; prob.n()];
+        let rep = verify(&[cert(radius, &infeasible)], &prob);
+        assert!(rep.violations.iter().any(|v| v.contains("domain")), "{:#?}", rep.violations);
     }
 }

@@ -1,0 +1,208 @@
+//! Screening provenance ledger: identity + counters for the certificate
+//! trail.
+//!
+//! The ledger gives every fixed-lambda solve a process-unique id (`sid`)
+//! and every sphere application that discards columns a center id
+//! (`cid`), so the JSONL events written by the tracing layer —
+//! [`super::Event::SphereCenter`], [`super::Event::ScreenCol`],
+//! [`super::Event::Reactivate`], [`super::Event::Certificate`] — can be
+//! re-assembled into per-solve kill/repair histories by the offline
+//! verifier (`gapsafe trace verify`).
+//!
+//! Identity flows through a **thread-local** context, not through solver
+//! signatures: a fixed-lambda solve runs its screening decisions on the
+//! calling thread (the screening fan-out parallelizes the correlation
+//! sweep, never the kill loop), so [`begin_solve`] + [`set_epoch`] from
+//! the solver are enough for every sphere site to stamp its events via
+//! [`current`]. The scope guard restores the previous context on drop,
+//! which keeps nested solves (working-set outer/inner, KKT repair
+//! re-entry) correctly attributed.
+//!
+//! Everything here is ids and monotonic counters — no clocks, and nothing
+//! read back into solver arithmetic, preserving the bitwise-transparency
+//! contract of the tracing layer.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// Process-wide id source for solves (`sid`) and sphere centers (`cid`).
+/// Starts at 1 so 0 can mean "no context" in the events themselves.
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Allocate a fresh ledger id (relaxed: ids only need uniqueness).
+pub fn next_id() -> u64 {
+    NEXT_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Master switch for ledger *event emission* (ids and counters always
+/// run). Lets the ledger bench separate PR 7 span-tracing cost from the
+/// per-column provenance cost with the same sink installed.
+static EMIT: AtomicBool = AtomicBool::new(true);
+
+/// Enable/disable ledger event emission (spans still trace).
+pub fn set_emit(on: bool) {
+    EMIT.store(on, Ordering::Relaxed);
+}
+
+/// Should ledger events be emitted? Callers combine this with
+/// [`super::enabled`]; both are relaxed loads.
+#[inline]
+pub fn emit_enabled() -> bool {
+    EMIT.load(Ordering::Relaxed)
+}
+
+#[derive(Clone, Copy)]
+struct Ctx {
+    sid: u64,
+    lam: f64,
+    epoch: usize,
+}
+
+thread_local! {
+    static CTX: Cell<Option<Ctx>> = const { Cell::new(None) };
+}
+
+/// Scope guard for one fixed-lambda solve; restores the outer context on
+/// drop so nested solves stay correctly attributed.
+pub struct SolveScope {
+    prev: Option<Ctx>,
+}
+
+impl Drop for SolveScope {
+    fn drop(&mut self) {
+        CTX.with(|c| c.set(self.prev));
+    }
+}
+
+/// Enter a solve: allocates its `sid` and makes (sid, lam, epoch=0) the
+/// thread's current ledger context until the returned scope drops.
+pub fn begin_solve(lam: f64) -> (u64, SolveScope) {
+    let sid = next_id();
+    let prev = CTX.with(|c| c.replace(Some(Ctx { sid, lam, epoch: 0 })));
+    (sid, SolveScope { prev })
+}
+
+/// Update the epoch stamp for subsequent screening events in this solve.
+pub fn set_epoch(epoch: usize) {
+    CTX.with(|c| {
+        if let Some(mut ctx) = c.get() {
+            ctx.epoch = epoch;
+            c.set(Some(ctx));
+        }
+    });
+}
+
+/// The current (sid, lam, epoch), or (0, NaN, 0) outside any solve (a
+/// direct `sphere_screen` call from a test, say).
+pub fn current() -> (u64, f64, usize) {
+    match CTX.with(|c| c.get()) {
+        Some(ctx) => (ctx.sid, ctx.lam, ctx.epoch),
+        None => (0, f64::NAN, 0),
+    }
+}
+
+/// The fixed per-rule label set for the screened-columns counters (the
+/// `Rule` zoo labels; "other" catches anything new until it is added).
+pub const RULE_LABELS: [&str; 10] = [
+    "no-screening",
+    "static-gap",
+    "static-elghaoui",
+    "dst3",
+    "bonnefoy",
+    "gap-seq",
+    "gap-dyn",
+    "gap-full",
+    "strong",
+    "other",
+];
+
+const ZERO: AtomicU64 = AtomicU64::new(0);
+/// Monotonic per-rule screened-column totals (Prometheus counter
+/// semantics; never reset, survive across solves and serve requests).
+static SCREENED: [AtomicU64; RULE_LABELS.len()] = [ZERO; RULE_LABELS.len()];
+/// Total columns entering solves (denominator for `screened_fraction`).
+static COLS_SEEN: AtomicU64 = AtomicU64::new(0);
+
+fn rule_slot(rule: &str) -> usize {
+    RULE_LABELS.iter().position(|r| *r == rule).unwrap_or(RULE_LABELS.len() - 1)
+}
+
+/// Record `n` columns screened out by `rule`.
+pub fn count_screened(rule: &str, n: usize) {
+    if n > 0 {
+        SCREENED[rule_slot(rule)].fetch_add(n as u64, Ordering::Relaxed);
+    }
+}
+
+/// Record `p` columns entering a fixed-lambda solve.
+pub fn count_cols(p: usize) {
+    COLS_SEEN.fetch_add(p as u64, Ordering::Relaxed);
+}
+
+/// Per-rule screened totals, in [`RULE_LABELS`] order (zeros included so
+/// the Prometheus family keeps a stable label set).
+pub fn screened_by_rule() -> Vec<(&'static str, u64)> {
+    RULE_LABELS
+        .iter()
+        .enumerate()
+        .map(|(i, r)| (*r, SCREENED[i].load(Ordering::Relaxed)))
+        .collect()
+}
+
+/// Total screened columns / total columns entering solves (0 before any
+/// solve ran).
+pub fn screened_fraction() -> f64 {
+    let cols = COLS_SEEN.load(Ordering::Relaxed);
+    if cols == 0 {
+        return 0.0;
+    }
+    let screened: u64 = SCREENED.iter().map(|c| c.load(Ordering::Relaxed)).sum();
+    screened as f64 / cols as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solve_scopes_nest_and_restore() {
+        assert_eq!(current().0, 0);
+        let (sid_outer, _outer) = begin_solve(0.5);
+        assert_eq!(current().0, sid_outer);
+        set_epoch(7);
+        assert_eq!(current().2, 7);
+        {
+            let (sid_inner, _inner) = begin_solve(0.25);
+            assert_ne!(sid_inner, sid_outer);
+            assert_eq!(current(), (sid_inner, 0.25, 0));
+        }
+        // inner scope dropped: outer context (including its epoch) is back
+        let (sid, lam, epoch) = current();
+        assert_eq!((sid, epoch), (sid_outer, 7));
+        assert_eq!(lam, 0.5);
+        drop(_outer);
+        assert_eq!(current().0, 0);
+    }
+
+    #[test]
+    fn ids_are_unique_and_nonzero() {
+        let a = next_id();
+        let b = next_id();
+        assert!(a > 0 && b > a);
+    }
+
+    #[test]
+    fn counters_accumulate_and_fraction_is_bounded() {
+        // Other tests share the process-globals; only check monotonicity.
+        let before = screened_by_rule();
+        count_cols(100);
+        count_screened("gap-seq", 40);
+        count_screened("not-a-rule", 2); // lands in "other"
+        let after = screened_by_rule();
+        let get = |v: &[(&str, u64)], r: &str| v.iter().find(|(n, _)| *n == r).unwrap().1;
+        assert_eq!(get(&after, "gap-seq") - get(&before, "gap-seq"), 40);
+        assert_eq!(get(&after, "other") - get(&before, "other"), 2);
+        let f = screened_fraction();
+        assert!(f.is_finite() && f >= 0.0, "fraction out of range: {f}");
+    }
+}

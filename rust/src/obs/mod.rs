@@ -14,6 +14,13 @@
 //!   Prometheus text exposition — see `serve`).
 //! * **Analysis** — [`analyze`] renders per-lambda tables and phase
 //!   breakdowns from a JSONL trace (`gapsafe trace summarize|...`).
+//! * **Provenance ledger** — [`ledger`] stamps every solve and sphere
+//!   application with process-unique ids; the screening sites append
+//!   [`Event::SphereCenter`] / [`Event::ScreenCol`] /
+//!   [`Event::Reactivate`] records and every solve ends with an
+//!   [`Event::Certificate`], making each discarded column's safety
+//!   argument re-checkable offline (`gapsafe trace verify`, see
+//!   [`analyze::verify`]).
 //!
 //! # Overhead and transparency contract
 //!
@@ -27,6 +34,7 @@
 //! with and without a sink).
 
 pub mod analyze;
+pub mod ledger;
 pub mod metrics;
 pub mod trace;
 
@@ -168,6 +176,90 @@ pub enum Event {
     Predict { key: String, t: usize, secs: f64 },
     /// One background fit job, with the queueing delay made visible.
     Job { id: u64, queue_secs: f64, run_secs: f64, ok: bool },
+    /// Provenance ledger: the sphere center (dual point) a batch of
+    /// [`Event::ScreenCol`] kills was tested against; `cid` links them.
+    /// Written only when a sphere application actually discarded columns.
+    SphereCenter {
+        /// Ledger id of the enclosing fixed-lambda solve.
+        sid: u64,
+        /// Ledger id of this sphere application.
+        cid: u64,
+        lam: f64,
+        /// CD epochs completed when the sphere was applied.
+        epoch: usize,
+        /// Screening-rule label (`Rule::label`).
+        rule: &'static str,
+        /// Emission site: "seq" (pre-solve sphere), "dyn" (gap-pass
+        /// sphere), "strong" (heuristic pre-solve intersect — no sphere).
+        site: &'static str,
+        /// Safe sphere radius (NaN -> null for the strong heuristic).
+        radius: f64,
+        n: usize,
+        q: usize,
+        /// Column-major n*q dual point, bitwise through the JSON layer.
+        theta: Vec<f64>,
+    },
+    /// Provenance ledger: one discarded column, with the exact inequality
+    /// that killed it: `stat + radius*norm < thresh`.
+    ScreenCol {
+        sid: u64,
+        /// Links to the [`Event::SphereCenter`] this kill was tested at.
+        cid: u64,
+        lam: f64,
+        epoch: usize,
+        rule: &'static str,
+        /// Which test fired: "l1" | "group" | "sgl-group" | "sgl-feat" |
+        /// "strong".
+        test: &'static str,
+        /// Full design column index.
+        j: usize,
+        /// Group index the column belongs to.
+        group: usize,
+        /// The correlation statistic, e.g. |x_j^T theta| for l1.
+        stat: f64,
+        /// The matching column/group operator norm.
+        norm: f64,
+        radius: f64,
+        /// Kill threshold (1 - SCREEN_MARGIN for l1, per-test otherwise).
+        thresh: f64,
+        /// Slack: thresh - stat - radius*norm (>= 0 for a sound kill).
+        margin: f64,
+    },
+    /// Provenance ledger: one group brought back by a KKT repair round.
+    Reactivate {
+        sid: u64,
+        lam: f64,
+        round: usize,
+        group: usize,
+        /// Features the group contributes back to the active set.
+        feats: usize,
+        /// The violating dual statistic that triggered the repair.
+        stat: f64,
+    },
+    /// Provenance ledger: per-solve safety certificate — the final dual
+    /// point (bitwise), its gap/radius, and the support the solver ended
+    /// with.
+    Certificate {
+        sid: u64,
+        lam: f64,
+        gap: f64,
+        /// Gap Safe radius at the final dual point.
+        radius: f64,
+        n: usize,
+        q: usize,
+        /// Total design columns (so `initial: None` can mean "all p").
+        p: usize,
+        /// Column-major n*q final dual point, bitwise.
+        theta: Vec<f64>,
+        /// Final active (unscreened) feature indices.
+        support: Vec<usize>,
+        /// Feature indices active when the solve started; None = all p.
+        initial: Option<Vec<usize>>,
+        rule: &'static str,
+        /// Datafit label: "quadratic" | "logistic" | "multinomial" |
+        /// "poisson".
+        fit: &'static str,
+    },
 }
 
 impl Event {
@@ -186,6 +278,10 @@ impl Event {
             Event::Fit { .. } => "fit",
             Event::Predict { .. } => "predict",
             Event::Job { .. } => "job",
+            Event::SphereCenter { .. } => "sphere_center",
+            Event::ScreenCol { .. } => "screen_col",
+            Event::Reactivate { .. } => "reactivate",
+            Event::Certificate { .. } => "certificate",
         }
     }
 
@@ -305,6 +401,84 @@ impl Event {
                 ("run_secs", Json::Num(*run_secs)),
                 ("ok", Json::Bool(*ok)),
             ]),
+            Event::SphereCenter { sid, cid, lam, epoch, rule, site, radius, n, q, theta } => {
+                Json::obj(vec![
+                    ("sid", Json::Num(*sid as f64)),
+                    ("cid", Json::Num(*cid as f64)),
+                    ("lam", Json::Num(*lam)),
+                    ("epoch", Json::Num(*epoch as f64)),
+                    ("rule", Json::Str((*rule).to_string())),
+                    ("site", Json::Str((*site).to_string())),
+                    ("radius", Json::Num(*radius)),
+                    ("n", Json::Num(*n as f64)),
+                    ("q", Json::Num(*q as f64)),
+                    ("theta", Json::arr_f64(theta)),
+                ])
+            }
+            Event::ScreenCol {
+                sid,
+                cid,
+                lam,
+                epoch,
+                rule,
+                test,
+                j,
+                group,
+                stat,
+                norm,
+                radius,
+                thresh,
+                margin,
+            } => Json::obj(vec![
+                ("sid", Json::Num(*sid as f64)),
+                ("cid", Json::Num(*cid as f64)),
+                ("lam", Json::Num(*lam)),
+                ("epoch", Json::Num(*epoch as f64)),
+                ("rule", Json::Str((*rule).to_string())),
+                ("test", Json::Str((*test).to_string())),
+                ("j", Json::Num(*j as f64)),
+                ("group", Json::Num(*group as f64)),
+                ("stat", Json::Num(*stat)),
+                ("norm", Json::Num(*norm)),
+                ("radius", Json::Num(*radius)),
+                ("thresh", Json::Num(*thresh)),
+                ("margin", Json::Num(*margin)),
+            ]),
+            Event::Reactivate { sid, lam, round, group, feats, stat } => Json::obj(vec![
+                ("sid", Json::Num(*sid as f64)),
+                ("lam", Json::Num(*lam)),
+                ("round", Json::Num(*round as f64)),
+                ("group", Json::Num(*group as f64)),
+                ("feats", Json::Num(*feats as f64)),
+                ("stat", Json::Num(*stat)),
+            ]),
+            Event::Certificate { sid, lam, gap, radius, n, q, p, theta, support, initial, rule, fit } => {
+                Json::obj(vec![
+                    ("sid", Json::Num(*sid as f64)),
+                    ("lam", Json::Num(*lam)),
+                    ("gap", Json::Num(*gap)),
+                    ("radius", Json::Num(*radius)),
+                    ("n", Json::Num(*n as f64)),
+                    ("q", Json::Num(*q as f64)),
+                    ("p", Json::Num(*p as f64)),
+                    ("theta", Json::arr_f64(theta)),
+                    (
+                        "support",
+                        Json::Arr(support.iter().map(|&j| Json::Num(j as f64)).collect()),
+                    ),
+                    (
+                        "initial",
+                        match initial {
+                            None => Json::Null,
+                            Some(idx) => {
+                                Json::Arr(idx.iter().map(|&j| Json::Num(j as f64)).collect())
+                            }
+                        },
+                    ),
+                    ("rule", Json::Str((*rule).to_string())),
+                    ("fit", Json::Str((*fit).to_string())),
+                ])
+            }
         };
         if let Json::Obj(map) = &mut obj {
             map.insert("type".to_string(), Json::Str(self.kind().to_string()));
@@ -364,6 +538,48 @@ mod tests {
             Event::Fit { key: "k".into(), kind: "cold", secs: 1.0, epochs: 100 },
             Event::Predict { key: "k".into(), t: 9, secs: 1e-4 },
             Event::Job { id: 3, queue_secs: 0.01, run_secs: 1.0, ok: true },
+            Event::SphereCenter {
+                sid: 7,
+                cid: 8,
+                lam: 0.5,
+                epoch: 3,
+                rule: "gap-full",
+                site: "dyn",
+                radius: 0.2,
+                n: 2,
+                q: 1,
+                theta: vec![0.1, -0.2],
+            },
+            Event::ScreenCol {
+                sid: 7,
+                cid: 8,
+                lam: 0.5,
+                epoch: 3,
+                rule: "gap-full",
+                test: "l1",
+                j: 11,
+                group: 11,
+                stat: 0.4,
+                norm: 1.0,
+                radius: 0.2,
+                thresh: 1.0 - 1e-11,
+                margin: 0.4,
+            },
+            Event::Reactivate { sid: 7, lam: 0.5, round: 1, group: 4, feats: 3, stat: 1.01 },
+            Event::Certificate {
+                sid: 7,
+                lam: 0.5,
+                gap: 1e-9,
+                radius: 1e-4,
+                n: 2,
+                q: 1,
+                p: 20,
+                theta: vec![0.1, -0.2],
+                support: vec![0, 11],
+                initial: None,
+                rule: "gap-full",
+                fit: "quadratic",
+            },
         ];
         for ev in &events {
             let j = ev.to_json();

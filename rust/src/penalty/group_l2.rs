@@ -6,7 +6,7 @@
 //! q > 1: the block of feature j is the row B_{j,:}.
 
 use super::{
-    ActiveSet, GroupNorms, Groups, Penalty, PenaltyKind, ScreenStats,
+    ActiveSet, GroupNorms, Groups, KillRecord, Penalty, PenaltyKind, ScreenStats,
 };
 use crate::linalg::sparse::Design;
 use crate::linalg::{block_soft_threshold, norm2, Mat};
@@ -52,6 +52,10 @@ impl Penalty for GroupL2 {
 
     fn groups(&self) -> &Groups {
         &self.groups
+    }
+
+    fn group_weight(&self, g: usize) -> f64 {
+        self.weights[g]
     }
 
     fn value(&self, beta: &Mat) -> f64 {
@@ -127,6 +131,7 @@ impl Penalty for GroupL2 {
         r: f64,
         norms: &GroupNorms,
         active: &mut ActiveSet,
+        mut ledger: Option<&mut Vec<KillRecord>>,
     ) -> (usize, usize) {
         let mut kg = 0;
         let mut kf = 0;
@@ -136,6 +141,20 @@ impl Penalty for GroupL2 {
                 kf += self.groups.feats(g).len();
                 active.kill_group(&self.groups, g);
                 kg += 1;
+                if let Some(recs) = ledger.as_deref_mut() {
+                    // One record per feature the group kill removed; the
+                    // group-level test values are shared by all of them.
+                    for &j in self.groups.feats(g) {
+                        recs.push(KillRecord {
+                            j,
+                            group: g,
+                            test: "group",
+                            stat: stats.group_dual[g],
+                            norm: norms.op[g],
+                            thresh,
+                        });
+                    }
+                }
             }
         }
         (kg, kf)

@@ -4,7 +4,7 @@
 //! with q > 1 belong to `GroupL2` (multi-task, Sec. 4.5).
 
 use super::{
-    ActiveSet, GroupNorms, Groups, Penalty, PenaltyKind, ScreenStats,
+    ActiveSet, GroupNorms, Groups, KillRecord, Penalty, PenaltyKind, ScreenStats,
 };
 use crate::linalg::sparse::Design;
 use crate::linalg::{norm1, st, Mat};
@@ -67,6 +67,7 @@ impl Penalty for L1 {
         r: f64,
         norms: &GroupNorms,
         active: &mut ActiveSet,
+        mut ledger: Option<&mut Vec<KillRecord>>,
     ) -> (usize, usize) {
         let mut killed = 0;
         let thresh = 1.0 - super::SCREEN_MARGIN;
@@ -75,6 +76,16 @@ impl Penalty for L1 {
                 active.group[j] = false;
                 active.feat[j] = false;
                 killed += 1;
+                if let Some(recs) = ledger.as_deref_mut() {
+                    recs.push(KillRecord {
+                        j,
+                        group: j,
+                        test: "l1",
+                        stat: stats.group_dual[j],
+                        norm: norms.op[j],
+                        thresh,
+                    });
+                }
             }
         }
         (killed, killed)
@@ -119,8 +130,13 @@ mod tests {
         // j2 -> 0.99 + 0.1*sqrt(0.5) ~ 1.06 (keep)
         let corr = Mat::col_vec(&[0.95, 0.2, 0.99]);
         let stats = pen.stats(&corr, &active);
-        let (kg, kf) = pen.sphere_screen(&stats, 0.1, &norms, &mut active);
+        let mut recs = Vec::new();
+        let (kg, kf) = pen.sphere_screen(&stats, 0.1, &norms, &mut active, Some(&mut recs));
         assert_eq!((kg, kf), (1, 1));
         assert!(active.group[0] && !active.group[1] && active.group[2]);
+        // the ledger carries the exact test that fired
+        assert_eq!(recs.len(), 1);
+        assert_eq!((recs[0].j, recs[0].test), (1, "l1"));
+        assert!(recs[0].stat + 0.1 * recs[0].norm < recs[0].thresh);
     }
 }

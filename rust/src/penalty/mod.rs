@@ -201,6 +201,27 @@ pub fn scatter_block(beta: &mut Mat, feats: &[usize], block: &[f64]) {
     }
 }
 
+/// Provenance of one screened-out feature: the exact inequality
+/// `stat + r*norm < thresh` (per `test` kind) that discarded column `j`.
+/// Collected by [`Penalty::sphere_screen`] when the caller passes a
+/// ledger, and turned into `obs::Event::ScreenCol` records by the
+/// screening layer.
+#[derive(Debug, Clone)]
+pub struct KillRecord {
+    /// Full design column index.
+    pub j: usize,
+    /// Group the column belongs to.
+    pub group: usize,
+    /// Which test fired: "l1" | "group" | "sgl-group" | "sgl-feat".
+    pub test: &'static str,
+    /// Correlation statistic at the sphere center.
+    pub stat: f64,
+    /// Matching operator/column norm (the sphere-test slope).
+    pub norm: f64,
+    /// Kill threshold the strict inequality was checked against.
+    pub thresh: f64,
+}
+
 /// Group-decomposable sparsity-enforcing norm (Sec. 2.1).
 pub trait Penalty: Send + Sync {
     fn kind(&self) -> PenaltyKind;
@@ -226,18 +247,30 @@ pub trait Penalty: Send + Sync {
 
     /// Apply the sphere test with center stats `stats` and radius `r`,
     /// deactivating groups/features in `active`. Returns (groups killed,
-    /// features killed).
+    /// features killed). When `ledger` is given, one [`KillRecord`] per
+    /// discarded feature is appended with the exact test that killed it
+    /// (provenance for `gapsafe trace verify`); passing `None` keeps the
+    /// hot path allocation-free.
     fn sphere_screen(
         &self,
         stats: &ScreenStats,
         r: f64,
         norms: &GroupNorms,
         active: &mut ActiveSet,
+        ledger: Option<&mut Vec<KillRecord>>,
     ) -> (usize, usize);
 
     /// The l1 trade-off for SGL; None otherwise.
     fn tau(&self) -> Option<f64> {
         None
+    }
+
+    /// The weight w_g of group g (1.0 for unweighted penalties). Exposed
+    /// as plain data so the offline certificate verifier
+    /// (`obs::analyze::verify`) can rebuild every sphere-test threshold
+    /// without touching the production screening code.
+    fn group_weight(&self, _g: usize) -> f64 {
+        1.0
     }
 }
 

@@ -11,7 +11,7 @@
 
 use super::epsilon_norm::epsilon_norm;
 use super::{
-    ActiveSet, GroupNorms, Groups, Penalty, PenaltyKind, ScreenStats, SglStats,
+    ActiveSet, GroupNorms, Groups, KillRecord, Penalty, PenaltyKind, ScreenStats, SglStats,
 };
 use crate::linalg::sparse::Design;
 use crate::linalg::{block_soft_threshold, st, Mat};
@@ -75,6 +75,10 @@ impl Penalty for SparseGroup {
 
     fn tau(&self) -> Option<f64> {
         Some(self.tau)
+    }
+
+    fn group_weight(&self, g: usize) -> f64 {
+        self.weights[g]
     }
 
     fn value(&self, beta: &Mat) -> f64 {
@@ -173,6 +177,7 @@ impl Penalty for SparseGroup {
         r: f64,
         norms: &GroupNorms,
         active: &mut ActiveSet,
+        mut ledger: Option<&mut Vec<KillRecord>>,
     ) -> (usize, usize) {
         // Stats produced by any other penalty lack the SGL block; screen
         // nothing (always safe) instead of unwrapping — the pairing is a
@@ -190,7 +195,31 @@ impl Penalty for SparseGroup {
             } else {
                 (sgl.max_abs[g] + rx - self.tau).max(0.0)
             };
-            if t_g < (1.0 - self.tau) * self.weights[g] - super::SCREEN_MARGIN {
+            let thresh_g = (1.0 - self.tau) * self.weights[g] - super::SCREEN_MARGIN;
+            if t_g < thresh_g {
+                if let Some(recs) = ledger.as_deref_mut() {
+                    // A kill needs thresh_g > 0, so the max(., 0) clamp of
+                    // the second branch never changes the inequality:
+                    // recording the unclamped statistic keeps the record
+                    // in `stat + r*norm < thresh` form for both branches.
+                    let stat = if sgl.max_abs[g] > self.tau {
+                        sgl.st_norm[g]
+                    } else {
+                        sgl.max_abs[g] - self.tau
+                    };
+                    for &j in self.groups.feats(g) {
+                        if active.feat[j] {
+                            recs.push(KillRecord {
+                                j,
+                                group: g,
+                                test: "sgl-group",
+                                stat,
+                                norm: norms.spectral[g],
+                                thresh: thresh_g,
+                            });
+                        }
+                    }
+                }
                 kf += active_feats_in(active, self.groups.feats(g));
                 active.kill_group(&self.groups, g);
                 kg += 1;
@@ -203,6 +232,16 @@ impl Penalty for SparseGroup {
                 {
                     active.feat[j] = false;
                     kf += 1;
+                    if let Some(recs) = ledger.as_deref_mut() {
+                        recs.push(KillRecord {
+                            j,
+                            group: g,
+                            test: "sgl-feat",
+                            stat: sgl.feat_abs[j],
+                            norm: norms.col2[j],
+                            thresh: self.tau - super::SCREEN_MARGIN,
+                        });
+                    }
                 }
             }
         }
@@ -324,10 +363,22 @@ mod tests {
         // inside group 0, feature 1 weak -> feature-killed.
         let corr = Mat::col_vec(&[1.2, 0.1, 0.01, 0.02]);
         let stats = p.stats(&corr, &active);
-        let (kg, kf) = p.sphere_screen(&stats, 0.05, &norms, &mut active);
+        let mut recs = Vec::new();
+        let (kg, kf) = p.sphere_screen(&stats, 0.05, &norms, &mut active, Some(&mut recs));
         assert_eq!(kg, 1);
         assert!(kf >= 2, "kf={kf}");
         assert!(active.group[0] && !active.group[1]);
         assert!(active.feat[0] && !active.feat[1]);
+        // ledger reconciliation: one record per killed feature, and every
+        // record's inequality really holds with the recorded numbers
+        assert_eq!(recs.len(), kf);
+        for rec in &recs {
+            assert!(
+                rec.stat + 0.05 * rec.norm < rec.thresh,
+                "unsound record {rec:?}"
+            );
+        }
+        assert!(recs.iter().any(|r| r.test == "sgl-group"));
+        assert!(recs.iter().any(|r| r.test == "sgl-feat"));
     }
 }

@@ -641,7 +641,8 @@ mod tests {
         let z = prob.predict(&beta);
         let mut active = ActiveSet::full(prob.pen.groups());
         let res = prob.gap_pass(&beta, &z, lam, &active);
-        let (kg, _) = prob.pen.sphere_screen(&res.stats, res.radius, &prob.norms, &mut active);
+        let (kg, _) =
+            prob.pen.sphere_screen(&res.stats, res.radius, &prob.norms, &mut active, None);
         // Need at least one screen for the test to be meaningful.
         assert!(kg > 0, "no screening happened; pick another seed");
         let res2 = prob.gap_pass(&beta, &z, lam, &active);

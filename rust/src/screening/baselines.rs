@@ -61,7 +61,7 @@ impl ScreeningRule for StaticGapRule {
         let radius = prob.fit.gap_safe_radius(gap, lam, &theta_max);
         let full = ActiveSet::full(prob.pen.groups());
         let stats = prob.stats_for_center(&theta_max, &full);
-        let (kg, _) = apply_sphere(prob, &stats, radius, active);
+        let (kg, _) = apply_sphere(prob, &stats, radius, &theta_max, self.name(), "seq", active);
         self.screened_groups += kg;
     }
 
@@ -132,7 +132,7 @@ impl ScreeningRule for StaticElGhaouiRule {
         let radius = (1.0 / lam - 1.0 / lam_max).abs() * y.frob_sq().sqrt();
         let full = ActiveSet::full(prob.pen.groups());
         let stats = prob.stats_for_center(&center, &full);
-        let (kg, _) = apply_sphere(prob, &stats, radius, active);
+        let (kg, _) = apply_sphere(prob, &stats, radius, &center, self.name(), "seq", active);
         self.screened_groups += kg;
     }
 
@@ -144,8 +144,9 @@ impl ScreeningRule for StaticElGhaouiRule {
 /// (Sec. 3.3 / 3.6). Non-converging: the radius is bounded below by
 /// ||y/lambda - theta_hat|| (Remark 10).
 pub struct DynamicBonnefoyRule {
-    /// Stats of the fixed center, cached per lambda.
-    cached: Option<(f64, ScreenStats)>,
+    /// The fixed center y/lambda and its stats, cached per lambda (the
+    /// center itself is kept for the provenance ledger).
+    cached: Option<(f64, Mat, ScreenStats)>,
     pub screened_groups: usize,
 }
 
@@ -182,7 +183,8 @@ impl ScreeningRule for DynamicBonnefoyRule {
         let mut center = y.clone();
         center.as_mut_slice().iter_mut().for_each(|v| *v /= lam);
         let full = ActiveSet::full(prob.pen.groups());
-        self.cached = Some((lam, prob.stats_for_center(&center, &full)));
+        let stats = prob.stats_for_center(&center, &full);
+        self.cached = Some((lam, center, stats));
     }
 
     fn on_gap_pass(
@@ -192,7 +194,7 @@ impl ScreeningRule for DynamicBonnefoyRule {
         gap: &GapResult,
         active: &mut ActiveSet,
     ) {
-        let Some((clam, stats)) = &self.cached else { return };
+        let Some((clam, center, stats)) = &self.cached else { return };
         if (*clam - lam).abs() > 1e-15 {
             return;
         }
@@ -203,8 +205,10 @@ impl ScreeningRule for DynamicBonnefoyRule {
             let d = yi / lam - ti;
             rsq += d * d;
         }
+        let center = center.clone();
         let stats = stats.clone();
-        let (kg, _) = apply_sphere(prob, &stats, rsq.sqrt(), active);
+        let (kg, _) =
+            apply_sphere(prob, &stats, rsq.sqrt(), &center, self.name(), "dyn", active);
         self.screened_groups += kg;
     }
 }
@@ -226,6 +230,9 @@ pub struct Dst3Rule {
 
 struct Cache {
     lam: f64,
+    /// The sphere center (projection theta_c, or y/lambda for the
+    /// Bonnefoy fallback), kept for the provenance ledger.
+    center: Mat,
     stats: ScreenStats,
     /// ||y/lambda - theta_c||^2 (0 for the Bonnefoy fallback).
     shift_sq: f64,
@@ -305,12 +312,9 @@ impl ScreeningRule for Dst3Rule {
         if !supported || lam_max_val <= 0.0 {
             // Bonnefoy fallback: center y/lambda.
             let center = Mat::col_vec(&yl);
-            self.cached = Some(Cache {
-                lam,
-                stats: prob.stats_for_center(&center, &full),
-                shift_sq: 0.0,
-                projected: false,
-            });
+            let stats = prob.stats_for_center(&center, &full);
+            self.cached =
+                Some(Cache { lam, center, stats, shift_sq: 0.0, projected: false });
             return;
         }
         // theta_c = y/lam - ((<y/lam, eta> - 1) / ||eta||^2) eta
@@ -322,12 +326,8 @@ impl ScreeningRule for Dst3Rule {
         }
         let shift_sq = coef * coef * ee; // ||y/lam - theta_c||^2
         let center = Mat::col_vec(&center);
-        self.cached = Some(Cache {
-            lam,
-            stats: prob.stats_for_center(&center, &full),
-            shift_sq,
-            projected: true,
-        });
+        let stats = prob.stats_for_center(&center, &full);
+        self.cached = Some(Cache { lam, center, stats, shift_sq, projected: true });
     }
 
     fn on_gap_pass(
@@ -349,8 +349,10 @@ impl ScreeningRule for Dst3Rule {
             dist_sq += d * d;
         }
         let r_sq = if cache.projected { (dist_sq - cache.shift_sq).max(0.0) } else { dist_sq };
+        let center = cache.center.clone();
         let stats = cache.stats.clone();
-        let (kg, _) = apply_sphere(prob, &stats, r_sq.sqrt(), active);
+        let (kg, _) =
+            apply_sphere(prob, &stats, r_sq.sqrt(), &center, self.name(), "dyn", active);
         self.screened_groups += kg;
     }
 }

@@ -78,7 +78,7 @@ impl ScreeningRule for GapSafeRule {
         // computed over all groups.
         let full = ActiveSet::full(prob.pen.groups());
         let stats = prob.stats_for_center(&prev.theta, &full);
-        let (kg, kf) = apply_sphere(prob, &stats, radius, active);
+        let (kg, kf) = apply_sphere(prob, &stats, radius, &prev.theta, self.name(), "seq", active);
         self.screened_groups += kg;
         self.screened_feats += kf;
     }
@@ -95,7 +95,8 @@ impl ScreeningRule for GapSafeRule {
         }
         // Dynamic sphere (Eq. 19-21): the solver already produced the
         // rescaled dual point and the Gap Safe radius in `gap`.
-        let (kg, kf) = apply_sphere(prob, &gap.stats, gap.radius, active);
+        let (kg, kf) =
+            apply_sphere(prob, &gap.stats, gap.radius, &gap.theta, self.name(), "dyn", active);
         self.screened_groups += kg;
         self.screened_feats += kf;
     }

@@ -366,14 +366,68 @@ impl ScreeningRule for NoScreening {
 }
 
 /// Shared helper: apply a sphere test given precomputed center stats and a
-/// radius, returning kills.
+/// radius, returning kills. This is the single choke point every sphere
+/// site goes through, so it also owns the provenance ledger: when a trace
+/// sink is installed, each application that discards columns emits one
+/// `SphereCenter` (the dual point `center`, bitwise) plus one `ScreenCol`
+/// per discarded feature carrying the exact inequality that fired —
+/// re-checkable offline by `gapsafe trace verify`. `site` labels the
+/// emission point ("seq" pre-solve, "dyn" gap pass). Screened-column
+/// counters for `/metrics` are bumped regardless of tracing. Nothing here
+/// feeds back into the screening decision — sink on/off stays
+/// bitwise-transparent.
 pub(crate) fn apply_sphere(
     prob: &Problem,
     stats: &ScreenStats,
     radius: f64,
+    center: &Mat,
+    rule: &'static str,
+    site: &'static str,
     active: &mut ActiveSet,
 ) -> (usize, usize) {
-    prob.pen.sphere_screen(stats, radius, &prob.norms, active)
+    use crate::obs::{self, ledger, Event};
+    if !(obs::enabled() && ledger::emit_enabled()) {
+        let (kg, kf) = prob.pen.sphere_screen(stats, radius, &prob.norms, active, None);
+        ledger::count_screened(rule, kf);
+        return (kg, kf);
+    }
+    let mut recs = Vec::new();
+    let (kg, kf) = prob.pen.sphere_screen(stats, radius, &prob.norms, active, Some(&mut recs));
+    ledger::count_screened(rule, kf);
+    if !recs.is_empty() {
+        let (sid, lam, epoch) = ledger::current();
+        let cid = ledger::next_id();
+        obs::emit(&Event::SphereCenter {
+            sid,
+            cid,
+            lam,
+            epoch,
+            rule,
+            site,
+            radius,
+            n: center.rows(),
+            q: center.cols(),
+            theta: center.as_slice().to_vec(),
+        });
+        for rec in recs {
+            obs::emit(&Event::ScreenCol {
+                sid,
+                cid,
+                lam,
+                epoch,
+                rule,
+                test: rec.test,
+                j: rec.j,
+                group: rec.group,
+                stat: rec.stat,
+                norm: rec.norm,
+                radius,
+                thresh: rec.thresh,
+                margin: rec.thresh - rec.stat - radius * rec.norm,
+            });
+        }
+    }
+    (kg, kf)
 }
 
 #[cfg(test)]

@@ -14,6 +14,7 @@
 //! ([`super::ScreeningRule::needs_kkt_check`]).
 
 use super::{apply_sphere, PrevSolution, ScreeningRule};
+use crate::obs::{self, ledger, Event};
 use crate::penalty::ActiveSet;
 use crate::problem::{GapResult, Problem};
 
@@ -73,9 +74,61 @@ impl ScreeningRule for StrongRule {
             return;
         }
         let strong = Self::strong_active_set(prob, prev, lam);
+        let before_mask = active.group.clone();
         let before = active.n_active_groups();
         active.intersect(&strong);
-        self.screened_groups += before - active.n_active_groups();
+        let killed = before - active.n_active_groups();
+        self.screened_groups += killed;
+        // Provenance: the strong discard is a heuristic, not a certificate,
+        // so its records carry `test: "strong"` and a NaN radius — the
+        // offline verifier re-checks them for *faithfulness* (the recorded
+        // correlation really is below the strong threshold), not safety.
+        let kf: usize = (0..prob.n_groups())
+            .filter(|&g| before_mask[g] && !active.group[g])
+            .map(|g| prob.pen.groups().feats(g).len())
+            .sum();
+        ledger::count_screened("strong", kf);
+        if killed > 0 && obs::enabled() && ledger::emit_enabled() {
+            let full = ActiveSet::full(prob.pen.groups());
+            let stats = prob.stats_for_center(&prev.theta, &full);
+            let thresh = (2.0 * lam - prev.lam) / prev.lam;
+            let (sid, _, epoch) = ledger::current();
+            let cid = ledger::next_id();
+            obs::emit(&Event::SphereCenter {
+                sid,
+                cid,
+                lam,
+                epoch,
+                rule: "strong",
+                site: "strong",
+                radius: f64::NAN,
+                n: prev.theta.rows(),
+                q: prev.theta.cols(),
+                theta: prev.theta.as_slice().to_vec(),
+            });
+            for g in 0..prob.n_groups() {
+                if !(before_mask[g] && !active.group[g]) {
+                    continue;
+                }
+                for &j in prob.pen.groups().feats(g) {
+                    obs::emit(&Event::ScreenCol {
+                        sid,
+                        cid,
+                        lam,
+                        epoch,
+                        rule: "strong",
+                        test: "strong",
+                        j,
+                        group: g,
+                        stat: stats.group_dual[g],
+                        norm: prob.norms.op[g],
+                        radius: f64::NAN,
+                        thresh,
+                        margin: thresh - stats.group_dual[g],
+                    });
+                }
+            }
+        }
     }
 
     fn on_gap_pass(
@@ -87,7 +140,8 @@ impl ScreeningRule for StrongRule {
     ) {
         // Safe dynamic screening on top (cheap, and guarantees convergence
         // of the active set even when the strong guess was too aggressive).
-        let (kg, _) = apply_sphere(prob, &gap.stats, gap.radius, active);
+        let (kg, _) =
+            apply_sphere(prob, &gap.stats, gap.radius, &gap.theta, self.name(), "dyn", active);
         self.screened_groups += kg;
     }
 

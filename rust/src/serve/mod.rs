@@ -497,6 +497,19 @@ fn handle_metrics(state: &ServerState, req: &Request) -> Response {
         ("registry_pending".into(), Json::Num(reg.pending as f64)),
         ("registry_bytes".into(), Json::Num(reg.bytes as f64)),
         ("registry_cap_bytes".into(), Json::Num(reg.cap_bytes as f64)),
+        // Screening provenance ledger (obs::ledger): process-wide columns
+        // screened per rule and the overall screened fraction — how much
+        // work Gap Safe spheres saved across every fit this server ran.
+        ("screened_fraction".into(), Json::Num(crate::obs::ledger::screened_fraction())),
+        (
+            "screened_columns".into(),
+            Json::obj(
+                crate::obs::ledger::screened_by_rule()
+                    .into_iter()
+                    .map(|(rule, v)| (rule.to_string(), Json::Num(v as f64)))
+                    .collect::<Vec<_>>(),
+            ),
+        ),
     ];
     // Latency quantiles: derived from the same histograms the Prometheus
     // view exposes raw, so `p50 <= p99 <= p999` holds structurally.
@@ -542,6 +555,11 @@ fn render_prometheus(state: &ServerState) -> String {
     counter(&mut out, "gapsafe_jobs_failed_total", c(&m.jobs_failed));
     counter(&mut out, "gapsafe_solver_epochs_total", c(&m.epochs_total));
     counter(&mut out, "gapsafe_solver_epochs_saved_total", c(&m.epochs_saved));
+    // Screening ledger: one counter family, fixed rule label set.
+    let _ = writeln!(out, "# TYPE gapsafe_screened_columns_total counter");
+    for (rule, v) in crate::obs::ledger::screened_by_rule() {
+        let _ = writeln!(out, "gapsafe_screened_columns_total{{rule=\"{rule}\"}} {v}");
+    }
     let gauge = |out: &mut String, name: &str, v: f64| {
         let _ = writeln!(out, "# TYPE {name} gauge\n{name} {v}");
     };
@@ -552,6 +570,7 @@ fn render_prometheus(state: &ServerState) -> String {
     gauge(&mut out, "gapsafe_registry_pending", reg.pending as f64);
     gauge(&mut out, "gapsafe_registry_bytes", reg.bytes as f64);
     gauge(&mut out, "gapsafe_registry_cap_bytes", reg.cap_bytes as f64);
+    gauge(&mut out, "gapsafe_screened_fraction", crate::obs::ledger::screened_fraction());
     let _ = writeln!(
         out,
         "# TYPE gapsafe_kernel_backend gauge\ngapsafe_kernel_backend{{backend=\"{}\"}} 1",

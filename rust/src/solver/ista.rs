@@ -13,7 +13,7 @@ use crate::screening::dual::DualPoint;
 use crate::screening::ScreeningRule;
 
 use super::{ScreenEvent, SolveOptions, SolveResult};
-use crate::obs;
+use crate::obs::{self, ledger};
 
 /// Global Lipschitz constant of grad F: scale * ||X||_2^2 via power iteration
 /// over all (active) columns.
@@ -34,6 +34,10 @@ pub fn solve_fista(
     let (p, q) = (prob.p(), prob.q());
     let lam_max = prob.lambda_max();
     let mut active = ActiveSet::full(prob.pen.groups());
+    // Provenance ledger: FISTA solves get their own sid/certificate just
+    // like CD (screening — and its audit trail — is solver-agnostic).
+    ledger::count_cols(p);
+    let (sid, _ledger_scope) = ledger::begin_solve(lam);
     rule.begin_lambda(prob, lam, lam_max, None, &mut active);
     // Poisson has no global Lipschitz gradient: `l` is only a trial
     // constant there, validated per step by Beck-Teboulle backtracking
@@ -59,6 +63,7 @@ pub fn solve_fista(
 
     for k in 0..opts.max_epochs {
         if k % opts.screen_every == 0 {
+            ledger::set_epoch(epochs);
             let t_pass = tracing.then(std::time::Instant::now);
             let z = prob.predict(&beta);
             let res = prob.gap_pass_dual(&beta, &z, lam, &active, None, &mut dual_pt);
@@ -173,6 +178,23 @@ pub fn solve_fista(
             r
         }
     };
+    if tracing && ledger::emit_enabled() {
+        let support: Vec<usize> = (0..p).filter(|&j| active.feat[j]).collect();
+        obs::emit(&obs::Event::Certificate {
+            sid,
+            lam,
+            gap: res.gap,
+            radius: res.radius,
+            n: res.theta.rows(),
+            q: res.theta.cols(),
+            p,
+            theta: res.theta.as_slice().to_vec(),
+            support,
+            initial: None,
+            rule: rule.name(),
+            fit: prob.fit.kind().label(),
+        });
+    }
     SolveResult {
         z: prob.predict(&beta),
         beta,

@@ -12,7 +12,7 @@ use crate::datafit::{DataFit, FitKind};
 use crate::linalg::compact::CompactDesign;
 use crate::linalg::sparse::Design;
 use crate::linalg::Mat;
-use crate::obs;
+use crate::obs::{self, ledger};
 use crate::penalty::{gather_block, scatter_block, ActiveSet};
 use crate::problem::{GapResult, Problem};
 use crate::screening::dual::{DualPoint, DualStrategy};
@@ -129,13 +129,29 @@ pub fn solve_fixed_lambda_with(
         Some(a) => a.clone(),
         None => ActiveSet::full(prob.pen.groups()),
     };
-    rule.begin_lambda(prob, lam, lam_max, prev, &mut active);
-    zero_screened(prob, &mut beta, &active);
     // Tracing (obs): captured once per solve. When false, no clock is
     // read and no event is built anywhere below; when true, timing values
     // never feed solver arithmetic — tracing is bitwise-transparent
     // (pinned by rust/tests/obs_trace.rs).
     let tracing = obs::enabled();
+    // Provenance ledger (obs::ledger): this solve's sid becomes the
+    // thread-local context every sphere site stamps its events with; the
+    // scope guard restores the outer context on drop (working-set outer /
+    // inner nesting). Ids and counters are not conditional on tracing —
+    // only event emission is.
+    ledger::count_cols(p);
+    let (sid, _ledger_scope) = ledger::begin_solve(lam);
+    let ledger_on = tracing && ledger::emit_enabled();
+    // What the final certificate records as the starting active set
+    // (None = the full design, the common case).
+    let initial: Option<Vec<usize>> = match init_active {
+        Some(a) if ledger_on && a.n_active_feats() < p => {
+            Some((0..p).filter(|&j| a.feat[j]).collect())
+        }
+        _ => None,
+    };
+    rule.begin_lambda(prob, lam, lam_max, prev, &mut active);
+    zero_screened(prob, &mut beta, &active);
     let t_solve = tracing.then(Instant::now);
     let mut t_cd = 0.0f64;
     let mut t_gap = 0.0f64;
@@ -158,6 +174,7 @@ pub fn solve_fixed_lambda_with(
     'outer: loop {
         for k in 0..opts.max_epochs {
             if k % opts.screen_every == 0 {
+                ledger::set_epoch(epochs);
                 let t_pass = tracing.then(Instant::now);
                 let z = state.z(prob);
                 let res = prob.gap_pass_dual(&beta, &z, lam, &active, state.view(), &mut dual_pt);
@@ -243,6 +260,16 @@ pub fn solve_fixed_lambda_with(
                     violated = true;
                     kkt_violations += 1;
                     reactivated += 1;
+                    if ledger_on {
+                        obs::emit(&obs::Event::Reactivate {
+                            sid,
+                            lam,
+                            round: kkt_round + 1,
+                            group: g,
+                            feats: prob.pen.groups().feats(g).len(),
+                            stat: stats.group_dual[g],
+                        });
+                    }
                 }
             }
             if violated {
@@ -277,6 +304,26 @@ pub fn solve_fixed_lambda_with(
             res
         }
     };
+    if ledger_on {
+        // Final safety certificate: the dual point, gap, radius and
+        // support that `gapsafe trace verify` re-checks against the raw
+        // design with an independent sphere-test implementation.
+        let support: Vec<usize> = (0..p).filter(|&j| active.feat[j]).collect();
+        obs::emit(&obs::Event::Certificate {
+            sid,
+            lam,
+            gap: res.gap,
+            radius: res.radius,
+            n: res.theta.rows(),
+            q: res.theta.cols(),
+            p,
+            theta: res.theta.as_slice().to_vec(),
+            support,
+            initial,
+            rule: rule.name(),
+            fit: prob.fit.kind().label(),
+        });
+    }
     if let Some(t0) = t_solve {
         obs::emit(&obs::Event::SolveSpan {
             lam,

@@ -9,10 +9,16 @@
 //! toggling the global sink would race each other's solves.
 
 use gapsafe::data::synth;
+use gapsafe::linalg::sparse::{Csc, Design};
 use gapsafe::obs;
-use gapsafe::obs::trace::FileSink;
+use gapsafe::obs::trace::{CollectSink, FileSink};
+use gapsafe::problem::Problem;
+use gapsafe::screening::Rule;
 use gapsafe::solver::path::{solve_path, PathConfig};
+use gapsafe::solver::{solve_fixed_lambda, SolveOptions};
+use gapsafe::util::json::Json;
 use gapsafe::{build_problem, Task};
+use std::collections::BTreeMap;
 
 #[test]
 fn tracing_is_bitwise_transparent_and_jsonl_round_trips() {
@@ -79,5 +85,147 @@ fn tracing_is_bitwise_transparent_and_jsonl_round_trips() {
     let flame = gapsafe::obs::analyze::flame(&events);
     assert!(flame.contains("total"), "{flame}");
 
+    // 4. The provenance ledger rode along: every solve left a certificate,
+    //    and the screening that visibly shrank the path's active sets left
+    //    per-column kill records tied to recorded sphere centers.
+    assert_eq!(count("certificate"), count("solve"), "one certificate per solve");
+    assert!(count("sphere_center") >= 1, "no sphere centers recorded");
+    assert!(count("screen_col") >= 1, "no per-column kill records");
+    assert!(summary.contains("ledger:"), "summary must roll the ledger up:\n{summary}");
+
+    // 5. The offline verifier accepts the genuine trace end to end: every
+    //    recorded kill re-passes its sphere test against the raw design,
+    //    every certificate's dual point is feasible, and support replay
+    //    matches.
+    let rep = gapsafe::obs::analyze::verify(&events, &prob);
+    assert!(rep.ok(), "verifier rejected a genuine trace:\n{}", rep.render());
+    assert_eq!(rep.certificates, count("certificate"));
+    assert_eq!(rep.screen_cols, count("screen_col"));
+    assert_eq!(rep.sphere_centers, count("sphere_center"));
+
+    // 6. ...and rejects a hand-corrupted copy of the same trace: lie about
+    //    one kill's recorded statistic and the re-check must fail (this is
+    //    exactly the CI hard gate's failure mode).
+    let mut bad = events.clone();
+    let idx = bad
+        .iter()
+        .position(|e| e.get("type").and_then(|t| t.as_str()) == Some("screen_col"))
+        .expect("trace has a screen_col to corrupt");
+    if let Json::Obj(m) = &mut bad[idx] {
+        m.insert("stat".to_string(), Json::Num(-3.0));
+    }
+    let rep_bad = gapsafe::obs::analyze::verify(&bad, &prob);
+    assert!(!rep_bad.ok(), "verifier accepted a corrupted trace");
+    assert!(
+        rep_bad.render().contains("VIOLATION"),
+        "corrupted-trace report must list violations:\n{}",
+        rep_bad.render()
+    );
+
     let _ = std::fs::remove_file(&path);
+
+    // 7. Ledger/solver reconciliation, across every datafit and both
+    //    design storages: within each solve, what a gap pass reports as
+    //    screened (active_before - active_after) must equal the number of
+    //    ScreenCol records stamped with that pass's epoch, and the
+    //    certificate's support must equal the solver's final active set.
+    let mut quadratic_dense_kills = 0usize;
+    for sparse in [false, true] {
+        let tag = if sparse { "csc" } else { "dense" };
+        let sparsify = |mut ds: gapsafe::data::Dataset| {
+            if sparse {
+                ds.x = Design::Sparse(Csc::from_dense(&ds.x.to_dense()));
+            }
+            ds
+        };
+        let cases: Vec<(String, Problem)> = vec![
+            (
+                format!("quadratic/{tag}"),
+                build_problem(sparsify(synth::leukemia_like_scaled(24, 80, 11, false)), Task::Lasso)
+                    .unwrap(),
+            ),
+            (
+                format!("logistic/{tag}"),
+                build_problem(sparsify(synth::leukemia_like_scaled(24, 60, 12, true)), Task::Logreg)
+                    .unwrap(),
+            ),
+            (
+                format!("multinomial/{tag}"),
+                build_problem(sparsify(synth::multinomial_like(24, 30, 3, 13).0), Task::Multinomial)
+                    .unwrap(),
+            ),
+            (
+                format!("poisson/{tag}"),
+                build_problem(sparsify(synth::poisson_like(20, 40, 14)), Task::Poisson).unwrap(),
+            ),
+        ];
+        for (label, prob) in &cases {
+            let kills = reconcile_one_solve(prob, label);
+            if label.starts_with("quadratic/dense") {
+                quadratic_dense_kills = kills;
+            }
+        }
+    }
+    assert!(quadratic_dense_kills > 0, "reconciliation exercised zero kills — test has no teeth");
+}
+
+/// Solve one lambda with a `CollectSink` installed and reconcile the typed
+/// ledger events against the solver's own `screen_trace` and final active
+/// set. Returns the number of kill records seen (so the caller can assert
+/// the harness actually exercised screening somewhere).
+fn reconcile_one_solve(prob: &Problem, label: &str) -> usize {
+    let sink = CollectSink::new();
+    let handle = sink.events.clone();
+    obs::install(Box::new(sink));
+    let lam = 0.3 * prob.lambda_max();
+    let mut rule = Rule::GapSafeDyn.build();
+    let opts = SolveOptions { eps: 1e-8, ..Default::default() };
+    let res = solve_fixed_lambda(prob, lam, rule.as_mut(), &opts);
+    obs::uninstall();
+    let evs: Vec<obs::Event> = std::mem::take(&mut *handle.lock().unwrap());
+
+    let mut site_of: BTreeMap<u64, &'static str> = BTreeMap::new();
+    // epoch -> ScreenCol records from the dynamic (gap-pass) sphere site
+    let mut dyn_kills: BTreeMap<usize, usize> = BTreeMap::new();
+    let mut total_kills = 0usize;
+    let mut cert_support: Option<Vec<usize>> = None;
+    for ev in &evs {
+        match ev {
+            obs::Event::SphereCenter { cid, site, .. } => {
+                site_of.insert(*cid, *site);
+            }
+            obs::Event::ScreenCol { cid, epoch, .. } => {
+                total_kills += 1;
+                match site_of.get(cid).copied() {
+                    Some("dyn") => *dyn_kills.entry(*epoch).or_insert(0) += 1,
+                    Some(_) => {} // pre-solve (seq/strong) kills precede pass 0
+                    None => panic!("({label}) screen_col references unknown center {cid}"),
+                }
+            }
+            obs::Event::Certificate { support, .. } => {
+                assert!(cert_support.is_none(), "({label}) more than one certificate");
+                cert_support = Some(support.clone());
+            }
+            _ => {}
+        }
+    }
+
+    for se in &res.screen_trace {
+        let want = se.active_before - se.active_after;
+        let got = dyn_kills.remove(&se.epoch).unwrap_or(0);
+        assert_eq!(
+            got, want,
+            "({label}) gap pass at epoch {}: solver screened {want}, ledger recorded {got}",
+            se.epoch
+        );
+    }
+    assert!(
+        dyn_kills.is_empty(),
+        "({label}) dyn kill records at epochs with no gap pass: {dyn_kills:?}"
+    );
+
+    let support = cert_support.unwrap_or_else(|| panic!("({label}) solve left no certificate"));
+    let want: Vec<usize> = (0..prob.p()).filter(|&j| res.active.feat[j]).collect();
+    assert_eq!(support, want, "({label}) certificate support != final active set");
+    total_kills
 }

@@ -495,3 +495,92 @@ fn multinomial_path_with_screening() {
     assert!(res.points.iter().all(|p| p.converged), "{:?}",
         res.points.iter().map(|p| p.gap).collect::<Vec<_>>());
 }
+
+/// Provenance ledger at the penalty layer, sink-free: handing
+/// `sphere_screen` a kill-record buffer must (a) not change a single
+/// screening decision, (b) produce exactly one record per killed feature
+/// (matching the active-set diff), and (c) record only sound inequalities
+/// `stat + r * norm < thresh`. Runs the full datafit x dense/CSC matrix
+/// without touching the process-global trace sink.
+#[test]
+fn kill_records_match_active_set_diff_and_hold_inequalities() {
+    const TRIALS: u64 = 40;
+    for fit in FitFam::ALL {
+        for sparse in [false, true] {
+            let design = if sparse { "csc" } else { "dense" };
+            let combo = format!("killrec_{}_{}", fit.label(), design);
+            let salt = fit.salt() ^ if sparse { 0x0B5E_0000 } else { 0 };
+            check_property(&combo, TRIALS, |seed_rng| {
+                let mut rng = Prng::new(seed_rng.next_u64() ^ salt);
+                let prob = random_problem(fit, sparse, &mut rng);
+                let lmax = prob.lambda_max();
+                if !(lmax.is_finite() && lmax > 0.0) {
+                    return Err(format!("degenerate lambda_max {lmax}"));
+                }
+                let lam = (0.2 + 0.6 * rng.uniform()) * lmax;
+                // A partial solve gives a genuine dual point and a radius
+                // small enough that the sphere usually kills something.
+                let opts = SolveOptions { eps: 1e-6, max_epochs: 300, ..Default::default() };
+                let mut none = NoScreening;
+                let res = solve_fixed_lambda(&prob, lam, &mut none, &opts);
+                let full = ActiveSet::full(prob.pen.groups());
+                let gp = prob.gap_pass(&res.beta, &res.z, lam, &full);
+                if !(gp.radius.is_finite() && gp.radius >= 0.0) {
+                    return Err(format!("bad radius {}", gp.radius));
+                }
+                let mut with_recs = full.clone();
+                let mut without = full.clone();
+                let mut recs = Vec::new();
+                let killed_with = prob.pen.sphere_screen(
+                    &gp.stats,
+                    gp.radius,
+                    &prob.norms,
+                    &mut with_recs,
+                    Some(&mut recs),
+                );
+                let killed_without =
+                    prob.pen.sphere_screen(&gp.stats, gp.radius, &prob.norms, &mut without, None);
+                if killed_with != killed_without {
+                    return Err(format!(
+                        "ledger changed screening: {killed_with:?} vs {killed_without:?}"
+                    ));
+                }
+                if with_recs.feat != without.feat || with_recs.group != without.group {
+                    return Err("ledger changed the resulting active set".to_string());
+                }
+                let killed: Vec<usize> =
+                    (0..prob.p()).filter(|&j| !with_recs.feat[j]).collect();
+                if recs.len() != killed.len() || recs.len() != killed_with.1 {
+                    return Err(format!(
+                        "record count {} != killed features {} (reported {})",
+                        recs.len(),
+                        killed.len(),
+                        killed_with.1
+                    ));
+                }
+                let mut rec_js: Vec<usize> = recs.iter().map(|r| r.j).collect();
+                rec_js.sort_unstable();
+                if rec_js != killed {
+                    return Err(format!("recorded columns {rec_js:?} != killed {killed:?}"));
+                }
+                for r in &recs {
+                    if prob.pen.groups().group_of(r.j) != r.group {
+                        return Err(format!("record for column {} names group {}", r.j, r.group));
+                    }
+                    if !(r.stat.is_finite() && r.norm.is_finite() && r.thresh.is_finite()) {
+                        return Err(format!("non-finite record for column {}: {r:?}", r.j));
+                    }
+                    // Both SGL branches record the unclamped statistic, so
+                    // the linear form is sound for every test kind.
+                    if r.stat + gp.radius * r.norm >= r.thresh {
+                        return Err(format!(
+                            "unsound record for column {}: {} + {} * {} >= {}",
+                            r.j, r.stat, gp.radius, r.norm, r.thresh
+                        ));
+                    }
+                }
+                Ok(())
+            });
+        }
+    }
+}

@@ -251,6 +251,17 @@ fn metrics_prometheus_exposition_and_latency_quantiles() {
     assert!(body.contains("gapsafe_uptime_seconds "));
     assert!(body.contains("gapsafe_jobs_running "));
     assert!(body.contains("gapsafe_kernel_backend{backend="));
+    // screening provenance ledger: the per-rule counter family and the
+    // process-wide screened fraction are part of the exposition
+    assert!(
+        body.contains("# TYPE gapsafe_screened_columns_total counter"),
+        "missing screened counter TYPE line:\n{body}"
+    );
+    assert!(
+        body.contains("gapsafe_screened_columns_total{rule=\"gap-dyn\"} "),
+        "missing per-rule screened sample:\n{body}"
+    );
+    assert!(body.contains("gapsafe_screened_fraction "), "missing screened fraction:\n{body}");
     // every sample line is `name{labels} value` with a parseable value
     for line in body.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
         let val = line.rsplit(' ').next().unwrap();
@@ -286,6 +297,14 @@ fn metrics_prometheus_exposition_and_latency_quantiles() {
     assert!(p50 > 0.0, "p50 must be positive with samples recorded");
     assert!(p50 <= p99 && p99 <= p999, "quantiles not monotone: {p50} {p99} {p999}");
     assert_eq!(g("jobs_running"), 0.0);
+    // the JSON view carries the same ledger rollup
+    let frac = g("screened_fraction");
+    assert!((0.0..=1.0).contains(&frac), "screened_fraction out of range: {frac}");
+    let by_rule = m.get("screened_columns").expect("screened_columns object");
+    assert!(
+        by_rule.get("gap-dyn").and_then(Json::as_f64).is_some(),
+        "screened_columns missing per-rule entry: {by_rule:?}"
+    );
 
     stop.store(true, Ordering::Relaxed);
     handle.join().unwrap();
